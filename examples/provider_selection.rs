@@ -1,0 +1,83 @@
+//! Provider selection under a tight budget: compare how each optimizer
+//! family spends 22 evaluations on one workload, and which provider each
+//! one commits to.
+//!
+//! ```bash
+//! cargo run --release --example provider_selection
+//! ```
+
+use multicloud::dataset::objective::{LookupObjective, MeasureMode, Objective};
+use multicloud::dataset::{OfflineDataset, Target};
+use multicloud::domain::Config;
+use multicloud::optimizers::{by_name, SearchContext};
+use multicloud::runtime::{artifact_dir, ArtifactBackend};
+use multicloud::surrogate::{Backend, NativeBackend};
+use multicloud::util::rng::Rng;
+
+/// Objective wrapper recording which provider every evaluation went to.
+struct Recording<'a> {
+    inner: LookupObjective<'a>,
+    providers: Vec<usize>,
+}
+
+impl multicloud::dataset::objective::Objective for Recording<'_> {
+    fn eval(&mut self, cfg: &Config) -> f64 {
+        self.providers.push(cfg.provider);
+        self.inner.eval(cfg)
+    }
+
+    fn evals(&self) -> usize {
+        self.inner.evals()
+    }
+}
+
+fn main() {
+    let ds = OfflineDataset::generate(2022, 5);
+    let backend: Box<dyn Backend + Send + Sync> = match ArtifactBackend::load(&artifact_dir(None))
+    {
+        Ok(b) => Box::new(b),
+        Err(_) => Box::new(NativeBackend),
+    };
+
+    let workload_id = "spectral_clustering:buzz";
+    let w = ds.workload_index(workload_id).unwrap();
+    let target = Target::Time;
+    let budget = 22;
+
+    let (best_id, best_val) = ds.true_min(w, target);
+    let grid = ds.domain.full_grid();
+    println!("workload {workload_id}, target {}", target.name());
+    println!(
+        "true optimum: {} at {:.1}s\n",
+        grid[best_id].label(&ds.domain),
+        best_val
+    );
+    println!(
+        "{:<16} {:>8}  {:<30}  {}",
+        "method", "regret", "chosen (provider)", "evals per provider [aws azure gcp]"
+    );
+
+    for method in ["rs", "cherrypick-x1", "cherrypick-x3", "smac", "hyperopt", "rb", "cb-cherrypick", "cb-rbfopt"]
+    {
+        let opt = by_name(method).unwrap();
+        let ctx = SearchContext { domain: &ds.domain, target, backend: backend.as_ref() };
+        let mut rec = Recording {
+            inner: LookupObjective::new(&ds, w, target, MeasureMode::SingleDraw, 11),
+            providers: Vec::new(),
+        };
+        let res = opt.run(&ctx, &mut rec, budget, &mut Rng::new(5));
+        let mut counts = [0usize; 3];
+        for &p in &rec.providers {
+            counts[p] += 1;
+        }
+        let chosen_gt = rec.inner.ground_truth(&res.best_config);
+        println!(
+            "{:<16} {:>7.3}  {:<30}  {:?}",
+            method,
+            (chosen_gt - best_val) / best_val,
+            res.best_config.label(&ds.domain),
+            counts
+        );
+    }
+    println!("\n(bandit methods concentrate evaluations on one provider; x3 splits evenly)");
+}

@@ -1,0 +1,72 @@
+//! Quickstart: optimize one recurring workload across three clouds.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Generates the offline benchmark dataset, loads the PJRT artifacts if
+//! present (else native surrogates), runs CloudBandit with the paper's
+//! default budget, and prints the recommended deployment.
+
+use multicloud::coordinator::experiment::{run_trial, TrialSpec};
+use multicloud::dataset::objective::{LookupObjective, MeasureMode};
+use multicloud::dataset::{OfflineDataset, Target};
+use multicloud::optimizers::{by_name, SearchContext};
+use multicloud::runtime::{artifact_dir, ArtifactBackend};
+use multicloud::surrogate::{Backend, NativeBackend};
+use multicloud::util::rng::Rng;
+
+fn main() {
+    // 1. The offline benchmark dataset: 30 workloads x 88 multi-cloud
+    //    configurations x 5 repeated measurements (simulated substrate —
+    //    DESIGN.md §Substitutions).
+    let ds = OfflineDataset::generate(2022, 5);
+    println!(
+        "dataset: {} workloads x {} configurations",
+        ds.workload_count(),
+        ds.domain.size()
+    );
+
+    // 2. Surrogate backend: AOT-compiled PJRT artifacts when available.
+    let backend: Box<dyn Backend + Send + Sync> = match ArtifactBackend::load(&artifact_dir(None))
+    {
+        Ok(b) => {
+            println!("backend: PJRT artifacts (pool of {})", b.pool_size());
+            Box::new(b)
+        }
+        Err(e) => {
+            println!("backend: native ({e})");
+            Box::new(NativeBackend)
+        }
+    };
+
+    // 3. Optimize: which cloud + configuration minimizes the cost of
+    //    retraining XGBoost on the santander dataset every hour?
+    let workload = ds.workload_index("xgboost:santander").unwrap();
+    let target = Target::Cost;
+    let budget = 33;
+
+    let opt = by_name("cb-rbfopt").unwrap();
+    let ctx = SearchContext { domain: &ds.domain, target, backend: backend.as_ref() };
+    let mut obj = LookupObjective::new(&ds, workload, target, MeasureMode::SingleDraw, 1);
+    let result = opt.run(&ctx, &mut obj, budget, &mut Rng::new(7));
+
+    println!("\nCloudBandit (RBFOpt component), budget {budget}:");
+    println!("  recommended : {}", result.best_config.label(&ds.domain));
+    println!("  est. cost   : ${:.4} per run", obj.ground_truth(&result.best_config));
+    let (_, best) = ds.true_min(workload, target);
+    println!("  true optimum: ${best:.4} per run");
+    println!("  search spend: ${:.4} (one-time)", obj.total_expense());
+
+    // 4. The same thing through the coordinator's trial API (what the
+    //    figures and the TCP service use).
+    let spec = TrialSpec {
+        method: "cb-rbfopt".into(),
+        workload,
+        target,
+        budget,
+        seed: 7,
+    };
+    let trial = run_trial(&ds, backend.as_ref(), &spec);
+    println!("\ncoordinator trial: regret {:.4} after {} evaluations", trial.regret, trial.evals);
+}

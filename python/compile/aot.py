@@ -1,0 +1,117 @@
+"""AOT lowering: JAX (L2, calling the L1 Pallas kernels) -> HLO text.
+
+The interchange format is HLO *text*, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published `xla` 0.1.6 crate links) rejects
+(`proto.id() <= INT_MAX`).  The text parser reassigns ids, so text
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Run from the ``python/`` directory (the Makefile does this):
+
+    python -m compile.aot --out-dir ../artifacts
+
+Python runs exactly once, at build time; the Rust binary only ever touches
+``artifacts/``.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+# The RBF solve path runs in f64 inside the graph (model.rbf_forward);
+# without x64 enabled jax would silently truncate it back to f32.
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+MANIFEST_VERSION = 2
+
+
+def to_hlo_text(fn, example_args) -> str:
+    """Lower a jax function to HLO text via stablehlo -> XlaComputation."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# The exported entry signatures drop the unused candidate mask (XLA would
+# dead-code-eliminate the parameter anyway, silently shifting the argument
+# list under the Rust runtime): (x_obs, y, mask, cands, hyp).
+def _gp_entry(x, y, mask, cands, hyp):
+    return model.gp_forward(x, y, mask, cands, None, hyp)
+
+
+def _rbf_entry(x, y, mask, cands, hyp):
+    return model.rbf_forward(x, y, mask, cands, None, hyp)
+
+
+def _drop_cmask(args):
+    a = list(args)
+    return tuple(a[:4] + a[5:])
+
+
+GRAPHS = {
+    "gp_matern52": (
+        _gp_entry,
+        lambda: _drop_cmask(model.gp_example_args()),
+        ["mean", "std", "ei", "pi", "neg_lcb", "lml"],
+        5,  # hyp length
+    ),
+    "rbf_cubic": (
+        _rbf_entry,
+        lambda: _drop_cmask(model.rbf_example_args()),
+        ["pred", "mindist"],
+        1,
+    ),
+}
+
+
+def build(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "n_max": model.N_MAX,
+        "m_max": model.M_MAX,
+        "d": model.D,
+        "jitter": model.JITTER,
+        "graphs": {},
+    }
+    for name, (fn, args_fn, outputs, hyp_len) in GRAPHS.items():
+        text = to_hlo_text(fn, args_fn())
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["graphs"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": ["x_obs", "y", "mask", "cands", "hyp"],
+            "outputs": outputs,
+            "hyp_len": hyp_len,
+            "hlo_bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} bytes)")
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    # Kept for Makefile compatibility with single-file invocations.
+    p.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    a = p.parse_args()
+    out_dir = os.path.dirname(a.out) if a.out else a.out_dir
+    build(out_dir or ".")
+
+
+if __name__ == "__main__":
+    main()

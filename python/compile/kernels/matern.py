@@ -1,0 +1,136 @@
+"""L1 Pallas kernels: block-tiled pairwise covariance matrices.
+
+The per-iteration hot-spot of every BO-family optimizer in the paper is
+building the Gram matrix of the observed configurations and the
+cross-covariance against the full candidate grid.  These kernels compute
+
+  * ``pairwise_sqdist``  — squared euclidean distances,
+  * ``matern52_gram``    — Matern-5/2 covariance (CherryPick / Bilal / RB /
+                           CloudBandit's GP component), and
+  * ``cubic_rbf_gram``   — cubic RBF basis matrix (RBFOpt-lite component),
+
+tiled over (TILE_N x TILE_M) output blocks.  Each grid step loads one
+(TILE_N, d) tile of ``a`` and one (TILE_M, d) tile of ``b`` into VMEM, runs
+the contraction on the MXU (``a @ b.T`` at f32), and applies the radial
+transform as fused elementwise VPU work on the output tile.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation): the paper targets
+CPU clouds, not accelerators, so there is no CUDA idiom to port — but the
+kernels are still written the TPU way: BlockSpecs express the HBM->VMEM
+schedule, the contraction depth is the (zero-padded) feature dimension, and
+all shapes are padded to tile multiples by the wrappers.  ``interpret=True``
+is mandatory here: the CPU PJRT plugin cannot execute Mosaic custom-calls,
+and the AOT path (python/compile/aot.py) embeds these kernels in the HLO
+artifacts executed by the Rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output tile size. 96 (= N_MAX = M_MAX in model.py) is 3 tiles per side.
+TILE = 32
+
+
+def _sqdist_block(a_ref, b_ref):
+    """Squared distances between an a-tile and a b-tile (both in VMEM)."""
+    a = a_ref[...]
+    b = b_ref[...]
+    a2 = jnp.sum(a * a, axis=1)[:, None]
+    b2 = jnp.sum(b * b, axis=1)[None, :]
+    # MXU contraction: (TILE, d) x (d, TILE), accumulated at operand width.
+    ab = jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())), preferred_element_type=a.dtype
+    )
+    return jnp.maximum(a2 + b2 - 2.0 * ab, 0.0)
+
+
+def _sqdist_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = _sqdist_block(a_ref, b_ref).astype(o_ref.dtype)
+
+
+def _matern52_kernel(a_ref, b_ref, hyp_ref, o_ref):
+    d2 = _sqdist_block(a_ref, b_ref)
+    ls = hyp_ref[0, 0]
+    sv = hyp_ref[0, 1]
+    u = jnp.sqrt(5.0 * d2) / ls
+    k = sv * (1.0 + u + u * u / 3.0) * jnp.exp(-u)
+    o_ref[...] = k.astype(o_ref.dtype)
+
+
+def _cubic_kernel(a_ref, b_ref, o_ref):
+    d2 = _sqdist_block(a_ref, b_ref)
+    o_ref[...] = (jnp.sqrt(d2) * d2).astype(o_ref.dtype)
+
+
+def _pad_rows(x, mult):
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, x.shape[1]), x.dtype)], axis=0)
+    return x, n
+
+
+def _tiled_call(kernel, a, b, extra=None, extra_spec=None):
+    """Run a 2-operand (+ optional scalar operand) tile kernel over a grid."""
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    assert a.ndim == 2 and b.ndim == 2 and a.shape[1] == b.shape[1]
+    dtype = jnp.result_type(a.dtype, b.dtype)
+    a, n = _pad_rows(a.astype(dtype), TILE)
+    b, m = _pad_rows(b.astype(dtype), TILE)
+    d = a.shape[1]
+    grid = (a.shape[0] // TILE, b.shape[0] // TILE)
+    in_specs = [
+        pl.BlockSpec((TILE, d), lambda i, j: (i, 0)),
+        pl.BlockSpec((TILE, d), lambda i, j: (j, 0)),
+    ]
+    args = [a, b]
+    if extra is not None:
+        in_specs.append(extra_spec)
+        args.append(extra)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((TILE, TILE), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a.shape[0], b.shape[0]), dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(*args)
+    return out[:n, :m]
+
+
+def pairwise_sqdist(a, b):
+    """[n, d] x [m, d] -> [n, m] squared euclidean distances (Pallas)."""
+    return _tiled_call(_sqdist_kernel, a, b)
+
+
+def matern52_gram(a, b, lengthscale, signal_var):
+    """[n, d] x [m, d] -> [n, m] Matern-5/2 covariance matrix (Pallas).
+
+    ``lengthscale`` and ``signal_var`` may be python floats or traced
+    scalars; they ride along as a (1, 2) operand so a single AOT artifact
+    serves every hyperparameter setting.
+    """
+    a = jnp.asarray(a)
+    dtype = jnp.result_type(a.dtype, jnp.asarray(b).dtype)
+    hyp = jnp.stack(
+        [jnp.asarray(lengthscale, dtype), jnp.asarray(signal_var, dtype)]
+    ).reshape(1, 2)
+    spec = pl.BlockSpec((1, 2), lambda i, j: (0, 0))
+    return _tiled_call(_matern52_kernel, a, b, extra=hyp, extra_spec=spec)
+
+
+def cubic_rbf_gram(a, b):
+    """[n, d] x [m, d] -> [n, m] cubic RBF basis phi(r) = r^3 (Pallas)."""
+    return _tiled_call(_cubic_kernel, a, b)
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_tile_bytes(d, dtype_bytes=4):
+    """Structural VMEM footprint of one grid step (see DESIGN.md §Perf)."""
+    operands = 2 * TILE * d * dtype_bytes
+    out = TILE * TILE * dtype_bytes
+    return operands + out

@@ -1,0 +1,241 @@
+"""L2: fixed-shape surrogate compute graphs, AOT-lowered for the Rust runtime.
+
+Two graphs are exported (see ``aot.py``):
+
+  * ``gp_forward``  — masked Matern-5/2 Gaussian-process posterior over the
+    candidate grid + EI / PI / LCB acquisition scores + log marginal
+    likelihood.  This is the per-iteration hot path of CherryPick, the
+    Bilal et al. schemes, Rising Bandits' component optimizer and
+    CloudBandit's GP component.
+  * ``rbf_forward`` — cubic-RBF (constant tail) interpolant values over the
+    candidate grid + distance-to-nearest-observation, the two ingredients of
+    RBFOpt-lite's score.
+
+AOT contract (must match rust/src/runtime/artifacts.rs):
+  shapes are fixed at N_MAX observations / M_MAX candidates / D features,
+  with 0/1 masks for the live rows.  Padded observations are given unit
+  diagonal, zero cross-covariance and zero target, which leaves the
+  posterior of live rows exactly unchanged (proved in test_model.py by the
+  padding-invariance test).
+
+Everything here must lower to *plain HLO ops*: the standalone XLA runtime
+used by the `xla` crate (xla_extension 0.5.1) cannot resolve jaxlib's
+LAPACK custom-calls, so Cholesky / triangular solves are implemented as
+fori_loop kernels and the normal CDF uses an erf-free polynomial
+approximation (Abramowitz & Stegun 7.1.26, |err| < 7.5e-8).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.kernels.matern import cubic_rbf_gram, matern52_gram, pairwise_sqdist
+
+# ---------------------------------------------------------------------------
+# AOT shape contract. rust/src/domain/encoding.rs mirrors these constants.
+N_MAX = 96   # max observations (largest paper budget is 88)
+M_MAX = 96   # max candidates (full multi-cloud grid is 88)
+D = 20       # flattened one-hot encoding of the hierarchical domain
+N_RBF = N_MAX + 1  # RBF saddle system: N_MAX centres + constant tail
+
+JITTER = 1e-5
+
+
+def norm_cdf(z):
+    """Standard normal CDF via A&S 7.1.26 erf approximation (plain HLO)."""
+    x = z / jnp.sqrt(2.0).astype(z.dtype)
+    sign = jnp.sign(x)
+    x = jnp.abs(x)
+    t = 1.0 / (1.0 + 0.3275911 * x)
+    poly = t * (
+        0.254829592
+        + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429)))
+    )
+    erf = sign * (1.0 - poly * jnp.exp(-x * x))
+    return 0.5 * (1.0 + erf)
+
+
+def norm_pdf(z):
+    return jnp.exp(-0.5 * z * z) / jnp.sqrt(2.0 * jnp.pi).astype(z.dtype)
+
+
+def cholesky_scan(a):
+    """Right-looking Cholesky as a fori_loop (lowers to plain HLO).
+
+    a must be symmetric positive definite. O(n) loop steps, each a rank-1
+    vectorized update, so the lowered module is a single while-loop.
+    """
+    n = a.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, carry):
+        a_, l_ = carry
+        d = jnp.sqrt(a_[j, j])
+        col = jnp.where(idx >= j, a_[:, j] / d, 0.0)
+        l_ = l_.at[:, j].set(col)
+        a_ = a_ - jnp.outer(col, col)
+        return (a_, l_)
+
+    _, l = lax.fori_loop(0, n, body, (a, jnp.zeros_like(a)))
+    return l
+
+
+def solve_lower(l, b):
+    """Forward substitution L y = b, b: [n] or [n, m] (plain HLO)."""
+    n = l.shape[0]
+    y0 = jnp.zeros_like(b)
+
+    def body(i, y):
+        yi = (b[i] - l[i, :] @ y) / l[i, i]
+        return y.at[i].set(yi)
+
+    return lax.fori_loop(0, n, body, y0)
+
+
+def solve_upper_t(l, b):
+    """Back substitution L^T x = b given lower-triangular L (plain HLO)."""
+    n = l.shape[0]
+    x0 = jnp.zeros_like(b)
+
+    def body(k, x):
+        i = n - 1 - k
+        xi = (b[i] - l[:, i] @ x) / l[i, i]
+        return x.at[i].set(xi)
+
+    return lax.fori_loop(0, n, body, x0)
+
+
+def gp_forward(x_obs, y, mask, cands, cmask, hyp):
+    """Masked GP posterior + acquisitions over the candidate grid.
+
+    Args (all f32):
+      x_obs [N_MAX, D]  observed configurations (padded rows arbitrary)
+      y     [N_MAX]     observed losses, standardized by the caller;
+                        padded entries must be 0
+      mask  [N_MAX]     1.0 for live observations, 0.0 for padding
+      cands [M_MAX, D]  candidate configurations
+      cmask [M_MAX]     candidate mask (outputs at padded rows are junk;
+                        the Rust side masks the argmax)
+      hyp   [5]         lengthscale, signal_var, noise_var, best_y, kappa
+
+    Returns tuple:
+      mean [M_MAX], std [M_MAX], ei [M_MAX], pi [M_MAX], neg_lcb [M_MAX],
+      lml [1]  (log marginal likelihood of the live observations)
+
+    All acquisition outputs are oriented maximize-is-better for a
+    minimization objective.
+    """
+    x_obs, y, mask, cands, hyp = (
+        jnp.asarray(v, jnp.float32) for v in (x_obs, y, mask, cands, hyp)
+    )
+    ls, sv, noise, best_y, kappa = hyp[0], hyp[1], hyp[2], hyp[3], hyp[4]
+
+    y = y * mask
+    kxx = matern52_gram(x_obs, x_obs, ls, sv)  # Pallas (L1)
+    kxx = kxx * mask[:, None] * mask[None, :]
+    # Live diagonal: sv + noise + jitter. Padded diagonal: 1 (unit row).
+    diag = mask * (noise + JITTER) + (1.0 - mask)
+    kxx = kxx + jnp.diag(diag) - jnp.diag(jnp.diag(kxx) * (1.0 - mask))
+
+    l = cholesky_scan(kxx)
+    alpha = solve_upper_t(l, solve_lower(l, y))
+
+    kxc = matern52_gram(x_obs, cands, ls, sv) * mask[:, None]  # [N, M]
+    mean = kxc.T @ alpha
+    v = solve_lower(l, kxc)  # [N, M]
+    var = jnp.maximum(sv - jnp.sum(v * v, axis=0), 1e-12)
+    std = jnp.sqrt(var)
+
+    imp = best_y - mean
+    z = imp / std
+    ei = imp * norm_cdf(z) + std * norm_pdf(z)
+    pi = norm_cdf(z)
+    neg_lcb = -(mean - kappa * std)
+
+    n_live = jnp.sum(mask)
+    quad = -0.5 * jnp.dot(y, alpha)
+    # Padded rows have L_ii = 1 -> log 0, so the logdet needs no masking.
+    logdet = -jnp.sum(jnp.log(jnp.diagonal(l)))
+    lml = quad + logdet - 0.5 * n_live * jnp.log(2.0 * jnp.pi)
+
+    return mean, std, ei, pi, neg_lcb, lml.reshape(1)
+
+
+def rbf_forward(x_obs, y, mask, cands, cmask, hyp):
+    """Cubic-RBF (constant tail) interpolant + min-distance, masked.
+
+    Solves the (N_MAX+1) saddle system
+        [ Phi + lam*I   1 ] [c ]   [y]
+        [ 1^T           0 ] [d0] = [0]
+    restricted to live rows (padded rows are unit rows), via normal
+    equations + the scan Cholesky.  The saddle matrix is symmetric
+    indefinite with condition ~1e7, so the squared system demands f64:
+    the solve path is cast to f64 inside the graph (the AOT interface
+    stays f32; XLA CPU executes f64 natively).  Validated against a
+    float64 saddle oracle in test_model.py.
+
+    Args: as ``gp_forward``; hyp [1] = lam (ridge on the live diagonal).
+    Returns tuple: pred [M_MAX], mindist [M_MAX].
+    """
+    x_obs, y, mask, cands, hyp = (
+        jnp.asarray(v, jnp.float32) for v in (x_obs, y, mask, cands, hyp)
+    )
+    lam = hyp[0]
+    y = y * mask
+
+    f64 = jnp.float64
+    mask64 = mask.astype(f64)
+    phi = cubic_rbf_gram(x_obs, x_obs).astype(f64)  # Pallas (L1)
+    phi = phi * mask64[:, None] * mask64[None, :] + jnp.diag(lam.astype(f64) * mask64)
+
+    a = jnp.zeros((N_RBF, N_RBF), f64)
+    a = a.at[:N_MAX, :N_MAX].set(phi)
+    a = a.at[:N_MAX, N_MAX].set(mask64)
+    a = a.at[N_MAX, :N_MAX].set(mask64)
+    # Unit rows for padded centres so the system stays non-singular.
+    dead = jnp.concatenate([1.0 - mask64, jnp.zeros((1,), f64)])
+    a = a + jnp.diag(dead)
+
+    rhs = jnp.concatenate([y.astype(f64), jnp.zeros((1,), f64)])
+
+    ata = a.T @ a + 1e-10 * jnp.eye(N_RBF, dtype=f64)
+    atb = a.T @ rhs
+    l = cholesky_scan(ata)
+    z = solve_upper_t(l, solve_lower(l, atb))
+    coef, d0 = z[:N_MAX] * mask64, z[N_MAX]
+
+    phi_c = cubic_rbf_gram(x_obs, cands).astype(f64) * mask64[:, None]  # [N, M]
+    pred = (phi_c.T @ coef + d0).astype(jnp.float32)
+
+    d2 = pairwise_sqdist(x_obs, cands)  # Pallas (L1)
+    big = jnp.float32(1e30)
+    d2 = jnp.where(mask[:, None] > 0.5, d2, big)
+    mindist = jnp.sqrt(jnp.min(d2, axis=0))
+
+    return pred, mindist
+
+
+def gp_example_args():
+    s = jax.ShapeDtypeStruct
+    f = jnp.float32
+    return (
+        s((N_MAX, D), f),
+        s((N_MAX,), f),
+        s((N_MAX,), f),
+        s((M_MAX, D), f),
+        s((M_MAX,), f),
+        s((5,), f),
+    )
+
+
+def rbf_example_args():
+    s = jax.ShapeDtypeStruct
+    f = jnp.float32
+    return (
+        s((N_MAX, D), f),
+        s((N_MAX,), f),
+        s((N_MAX,), f),
+        s((M_MAX, D), f),
+        s((M_MAX,), f),
+        s((1,), f),
+    )

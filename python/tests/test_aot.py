@@ -1,0 +1,58 @@
+"""AOT lowering smoke tests: the artifacts the Rust runtime will load.
+
+Checks that lowering is deterministic, emits plain HLO (no jaxlib LAPACK
+custom-calls — the standalone XLA runtime cannot resolve them), and that
+the entry signatures match the manifest contract consumed by
+rust/src/runtime/artifacts.rs.
+"""
+
+import json
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def lowered():
+    return {
+        name: aot.to_hlo_text(fn, args_fn())
+        for name, (fn, args_fn, _, _) in aot.GRAPHS.items()
+    }
+
+
+def test_lowering_emits_entry(lowered):
+    for name, text in lowered.items():
+        assert "ENTRY" in text, name
+        assert len(text) > 1000, name
+
+
+def test_no_custom_calls(lowered):
+    """xla_extension 0.5.1 cannot resolve jaxlib custom-call targets."""
+    for name, text in lowered.items():
+        assert "custom-call" not in text, name
+
+
+def test_entry_signatures(lowered):
+    n, m, d = model.N_MAX, model.M_MAX, model.D
+    gp = lowered["gp_matern52"]
+    assert f"f32[{n},{d}]" in gp and f"f32[{m}]" in gp and "f32[5]" in gp
+    rbf = lowered["rbf_cubic"]
+    assert f"f32[{n},{d}]" in rbf and "f32[1]" in rbf
+
+
+def test_lowering_deterministic():
+    fn, args_fn, _, _ = aot.GRAPHS["gp_matern52"]
+    assert aot.to_hlo_text(fn, args_fn()) == aot.to_hlo_text(fn, args_fn())
+
+
+def test_build_manifest(tmp_path):
+    manifest = aot.build(str(tmp_path))
+    on_disk = json.loads((tmp_path / "manifest.json").read_text())
+    assert on_disk == json.loads(json.dumps(manifest))
+    assert on_disk["n_max"] == model.N_MAX
+    assert on_disk["m_max"] == model.M_MAX
+    assert on_disk["d"] == model.D
+    for name, g in on_disk["graphs"].items():
+        assert (tmp_path / g["file"]).stat().st_size == g["hlo_bytes"]
+        assert g["inputs"] == ["x_obs", "y", "mask", "cands", "hyp"]

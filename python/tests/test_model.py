@@ -1,0 +1,188 @@
+"""L2 correctness: the AOT surrogate graphs vs independent float64 oracles.
+
+The key property proved here is *padding invariance*: the fixed-shape masked
+graphs produce exactly the posterior / interpolant of the live rows, no
+matter what garbage sits in the padded rows. This is what makes the AOT
+contract (one compiled executable for all observation counts) sound.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+jax.config.update("jax_enable_x64", True)
+
+N, M, D = model.N_MAX, model.M_MAX, model.D
+
+
+def pad_inputs(rng, n_live, garbage=0.0):
+    """Random live rows + controllable garbage in the padded region."""
+    x = np.zeros((N, D), np.float32)
+    y = np.zeros((N,), np.float32)
+    mask = np.zeros((N,), np.float32)
+    x[:n_live] = rng.standard_normal((n_live, D))
+    y[:n_live] = rng.standard_normal(n_live)
+    mask[:n_live] = 1.0
+    x[n_live:] = garbage
+    c = rng.standard_normal((M, D)).astype(np.float32)
+    cmask = np.ones((M,), np.float32)
+    return x, y, mask, c, cmask
+
+
+def gp_oracle(x, y, c, ls, sv, noise):
+    """Plain float64 numpy GP posterior + lml (no masking, no padding)."""
+    def matern(a, b):
+        d2 = ((a[:, None, :] - b[None, :, :]) ** 2).sum(-1)
+        u = np.sqrt(5.0 * d2) / ls
+        return sv * (1 + u + u * u / 3) * np.exp(-u)
+
+    kxx = matern(x, x) + (noise + model.JITTER) * np.eye(len(x))
+    l = np.linalg.cholesky(kxx)
+    alpha = np.linalg.solve(l.T, np.linalg.solve(l, y))
+    kxc = matern(x, c)
+    mean = kxc.T @ alpha
+    v = np.linalg.solve(l, kxc)
+    var = np.maximum(sv - (v * v).sum(0), 1e-12)
+    lml = (
+        -0.5 * y @ alpha
+        - np.log(np.diag(l)).sum()
+        - 0.5 * len(x) * np.log(2 * np.pi)
+    )
+    return mean, np.sqrt(var), lml
+
+
+HYP = np.array([1.3, 2.0, 1e-2, 0.0, 2.0], np.float32)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_live=st.integers(2, 40), seed=st.integers(0, 2**31 - 1))
+def test_gp_matches_float64_oracle(n_live, seed):
+    rng = np.random.default_rng(seed)
+    x, y, mask, c, cmask = pad_inputs(rng, n_live)
+    hyp = HYP.copy()
+    hyp[3] = float(y[:n_live].min())
+    mean, std, ei, pi, neg_lcb, lml = model.gp_forward(x, y, mask, c, cmask, hyp)
+    om, os_, olml = gp_oracle(
+        x[:n_live].astype(np.float64),
+        y[:n_live].astype(np.float64),
+        c.astype(np.float64),
+        hyp[0], hyp[1], hyp[2],
+    )
+    np.testing.assert_allclose(mean, om, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(std, os_, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(float(lml[0]), olml, rtol=2e-3, atol=2e-2)
+
+
+def test_gp_padding_invariance():
+    """Garbage in padded rows must not change any live output."""
+    rng = np.random.default_rng(7)
+    n_live = 17
+    outs = []
+    for garbage in (0.0, 123.0):
+        rng2 = np.random.default_rng(7)
+        x, y, mask, c, cmask = pad_inputs(rng2, n_live, garbage=garbage)
+        y[n_live:] = 0.0  # contract: padded targets are zero
+        outs.append(model.gp_forward(x, y, mask, c, cmask, HYP))
+    for a, b in zip(*outs):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_gp_acquisition_formulas():
+    """EI/PI/LCB recomputed from the returned mean/std must agree."""
+    rng = np.random.default_rng(3)
+    x, y, mask, c, cmask = pad_inputs(rng, 12)
+    hyp = HYP.copy()
+    hyp[3] = float(y.min())
+    mean, std, ei, pi, neg_lcb, _ = model.gp_forward(x, y, mask, c, cmask, hyp)
+    mean, std = np.asarray(mean, np.float64), np.asarray(std, np.float64)
+    from scipy.stats import norm  # float64 oracle
+
+    z = (hyp[3] - mean) / std
+    np.testing.assert_allclose(ei, (hyp[3] - mean) * norm.cdf(z) + std * norm.pdf(z),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(pi, norm.cdf(z), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(neg_lcb, -(mean - hyp[4] * std), rtol=1e-4, atol=1e-4)
+
+
+def test_gp_posterior_contracts_at_observed_points():
+    """Posterior at an observed point: mean ~ y, std ~ sqrt(noise)-ish."""
+    rng = np.random.default_rng(11)
+    x, y, mask, c, cmask = pad_inputs(rng, 20)
+    c[:20] = x[:20]  # candidates coincide with observations
+    hyp = np.array([1.0, 1.0, 1e-6, 0.0, 2.0], np.float32)
+    mean, std, *_ = model.gp_forward(x, y, mask, c, cmask, hyp)
+    np.testing.assert_allclose(mean[:20], y[:20], atol=5e-3)
+    assert float(jnp.max(std[:20])) < 0.05
+
+
+def test_norm_cdf_accuracy():
+    from scipy.stats import norm
+
+    z = np.linspace(-6, 6, 241)
+    got = model.norm_cdf(jnp.asarray(z))
+    np.testing.assert_allclose(got, norm.cdf(z), atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(2, 40), seed=st.integers(0, 2**31 - 1))
+def test_cholesky_scan_matches_numpy(n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n))
+    spd = a @ a.T + n * np.eye(n)
+    l = model.cholesky_scan(jnp.asarray(spd))
+    np.testing.assert_allclose(l, np.linalg.cholesky(spd), rtol=1e-8, atol=1e-8)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(2, 30), m=st.integers(1, 5), seed=st.integers(0, 2**31 - 1))
+def test_triangular_solves_match_numpy(n, m, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n))
+    spd = a @ a.T + n * np.eye(n)
+    l = np.linalg.cholesky(spd)
+    b = rng.standard_normal((n, m))
+    y = model.solve_lower(jnp.asarray(l), jnp.asarray(b))
+    np.testing.assert_allclose(l @ np.asarray(y), b, rtol=1e-8, atol=1e-8)
+    x = model.solve_upper_t(jnp.asarray(l), jnp.asarray(b))
+    np.testing.assert_allclose(l.T @ np.asarray(x), b, rtol=1e-8, atol=1e-8)
+
+
+def test_rbf_interpolates_training_targets():
+    """With tiny ridge, the interpolant passes (close to) the data."""
+    rng = np.random.default_rng(5)
+    n_live = 15
+    x, y, mask, c, cmask = pad_inputs(rng, n_live)
+    c[:n_live] = x[:n_live]
+    pred, mindist = model.rbf_forward(x, y, mask, c, cmask,
+                                      np.array([1e-6], np.float32))
+    np.testing.assert_allclose(pred[:n_live], y[:n_live], atol=5e-2)
+    np.testing.assert_allclose(mindist[:n_live], 0.0, atol=1e-2)
+
+
+def test_rbf_padding_invariance():
+    rng = np.random.default_rng(9)
+    outs = []
+    for garbage in (0.0, 55.0):
+        rng2 = np.random.default_rng(9)
+        x, y, mask, c, cmask = pad_inputs(rng2, 10, garbage=garbage)
+        y[10:] = 0.0
+        outs.append(model.rbf_forward(x, y, mask, c, cmask,
+                                      np.array([1e-4], np.float32)))
+    for a, b in zip(*outs):
+        np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3)
+
+
+def test_rbf_mindist_matches_bruteforce():
+    rng = np.random.default_rng(13)
+    n_live = 8
+    x, y, mask, c, cmask = pad_inputs(rng, n_live)
+    _, mindist = model.rbf_forward(x, y, mask, c, cmask,
+                                   np.array([1e-4], np.float32))
+    want = np.sqrt(
+        (((c[:, None, :] - x[None, :n_live, :]) ** 2).sum(-1)).min(1)
+    )
+    np.testing.assert_allclose(mindist, want, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,45 @@
+//! Bench target for Figure 3 (F3 in DESIGN.md §4): regret of the
+//! hierarchical AutoML methods + CloudBandit vs budget, both targets.
+//!
+//! Regenerates the figure end-to-end on a reduced seed count (override
+//! with BENCH_SEEDS; the paper uses 50 — `multicloud figures --fig3
+//! --seeds 50` reproduces it at full scale) and reports wall-clock +
+//! trial throughput.
+
+use multicloud::benchkit::Suite;
+use multicloud::coordinator::experiment::RegretGrid;
+use multicloud::dataset::{OfflineDataset, BOTH_TARGETS};
+use multicloud::report::figures;
+use multicloud::surrogate::NativeBackend;
+
+const METHODS: [&str; 8] = [
+    "rs",
+    "cherrypick-x1",
+    "cherrypick-x3",
+    "smac",
+    "hyperopt",
+    "rb",
+    "cb-cherrypick",
+    "cb-rbfopt",
+];
+
+fn main() {
+    let seeds: usize =
+        std::env::var("BENCH_SEEDS").ok().and_then(|v| v.parse().ok()).unwrap_or(3);
+    let ds = OfflineDataset::generate(2022, 5);
+    let backend = NativeBackend;
+
+    let mut grid = RegretGrid::new(&ds, &backend);
+    grid.methods = METHODS.iter().map(|m| m.to_string()).collect();
+    grid.seeds = seeds;
+
+    let trials = METHODS.len() * 8 * 30 * seeds * 2;
+    let t0 = std::time::Instant::now();
+    let curves = grid.run();
+    let elapsed = t0.elapsed();
+
+    println!("{}", figures::regret_ascii("fig3 (bench-scale)", &curves, &BOTH_TARGETS));
+    let mut suite = Suite::new("fig3 — end-to-end regeneration");
+    suite.record("fig3 grid (trials)", elapsed.as_nanos() as f64, trials as f64);
+    suite.finish();
+}

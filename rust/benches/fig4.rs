@@ -1,0 +1,43 @@
+//! Bench target for Figure 4 (F4 in DESIGN.md §4): production savings
+//! box plots at B=33, N=64 — SMAC, CB-RBFOpt, RS, exhaustive, both
+//! targets. Regenerates the figure end-to-end (BENCH_SEEDS overrides the
+//! reduced default; `multicloud figures --fig4 --seeds 50` is
+//! paper-scale) and reports wall-clock.
+
+use multicloud::benchkit::Suite;
+use multicloud::coordinator::savings::{savings_analysis, SavingsConfig};
+use multicloud::dataset::{OfflineDataset, BOTH_TARGETS};
+use multicloud::report::figures;
+use multicloud::surrogate::NativeBackend;
+
+fn main() {
+    let seeds: usize =
+        std::env::var("BENCH_SEEDS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+    let ds = OfflineDataset::generate(2022, 5);
+    let backend = NativeBackend;
+    let methods: Vec<String> =
+        ["smac", "cb-rbfopt", "rs", "exhaustive"].iter().map(|m| m.to_string()).collect();
+    let cfg = SavingsConfig { seeds, ..Default::default() };
+
+    let t0 = std::time::Instant::now();
+    let mut all = Vec::new();
+    for target in BOTH_TARGETS {
+        let dists = savings_analysis(&ds, &backend, &methods, target, &cfg);
+        println!("-- Figure 4 (bench-scale), target {} --", target.name());
+        println!("{}", figures::savings_ascii(&dists));
+        all.extend(dists);
+    }
+    let elapsed = t0.elapsed();
+
+    let trials = methods.len() * 30 * seeds * 2;
+    let mut suite = Suite::new("fig4 — end-to-end savings analysis");
+    suite.record("fig4 savings (trials)", elapsed.as_nanos() as f64, trials as f64);
+    suite.finish();
+
+    // Headline sanity (soft, printed not asserted — the e2e example
+    // asserts): CB-RBFOpt median > 0, exhaustive < 0.
+    for d in &all {
+        let b = d.box_stats();
+        println!("{} ({}): median {:+.1}%", d.method, d.target.name(), 100.0 * b.median);
+    }
+}

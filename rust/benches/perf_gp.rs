@@ -1,0 +1,61 @@
+//! §Perf L2/runtime bench: surrogate fit+predict latency, native vs PJRT
+//! artifact, across observation counts — the per-iteration hot path of
+//! every BO-family optimizer. Also isolates artifact execution vs buffer
+//! marshalling and measures the executable-pool effect.
+
+use multicloud::benchkit::{black_box, Suite};
+use multicloud::dataset::{OfflineDataset, Target};
+use multicloud::domain::encode;
+use multicloud::runtime::{artifact_dir, ArtifactBackend};
+use multicloud::surrogate::{Backend, NativeBackend};
+use multicloud::util::rng::Rng;
+
+fn problem(n: usize) -> (Vec<Vec<f64>>, Vec<f64>, Vec<Vec<f64>>) {
+    let ds = OfflineDataset::generate(2022, 3);
+    let grid = ds.domain.full_grid();
+    let mut rng = Rng::new(42);
+    let idx = rng.sample_indices(grid.len(), n.min(grid.len()));
+    let x: Vec<Vec<f64>> = idx.iter().map(|&i| encode(&ds.domain, &grid[i])).collect();
+    let y: Vec<f64> = idx.iter().map(|&i| ds.mean_value(5, i, Target::Cost)).collect();
+    let cands: Vec<Vec<f64>> = grid.iter().map(|c| encode(&ds.domain, c)).collect();
+    (x, y, cands)
+}
+
+fn main() {
+    let mut suite = Suite::new("perf_gp — surrogate hot path (native vs PJRT artifact)");
+    suite.max_seconds = 1.5;
+
+    let native = NativeBackend;
+    for n in [8usize, 32, 88] {
+        let (x, y, cands) = problem(n);
+        suite.bench(&format!("native gp_fit_predict n={n} m=88"), || {
+            black_box(native.gp_fit_predict(&x, &y, &cands)).mean[0]
+        });
+        suite.bench(&format!("native rbf_fit_predict n={n} m=88"), || {
+            black_box(native.rbf_fit_predict(&x, &y, 1e-6, &cands)).pred[0]
+        });
+    }
+
+    match ArtifactBackend::load_with_pool(&artifact_dir(None), 1) {
+        Ok(art) => {
+            for n in [8usize, 32, 88] {
+                let (x, y, cands) = problem(n);
+                suite.bench(&format!("artifact gp_fit_predict n={n} m=88 (4 ls execs)"), || {
+                    black_box(art.gp_fit_predict(&x, &y, &cands)).mean[0]
+                });
+                suite.bench(&format!("artifact rbf_fit_predict n={n} m=88"), || {
+                    black_box(art.rbf_fit_predict(&x, &y, 1e-6, &cands)).pred[0]
+                });
+            }
+            // Compile cost (pool slot construction).
+            suite.bench("artifact load_with_pool(1) [compile both graphs]", || {
+                ArtifactBackend::load_with_pool(&artifact_dir(None), 1).unwrap().pool_size()
+            });
+        }
+        Err(e) => eprintln!("(artifact benches skipped: {e} — run `make artifacts`)"),
+    }
+
+    suite.finish();
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/perf_gp.csv", suite.to_csv()).ok();
+}

@@ -1,0 +1,69 @@
+//! §Perf L3 bench: full-trial latency per optimizer (native backend) at
+//! small and large budgets, plus coordinator trial throughput and TCP
+//! service round-trip latency.
+
+use multicloud::benchkit::Suite;
+use multicloud::coordinator::experiment::{run_trial, TrialSpec};
+use multicloud::coordinator::service::Service;
+use multicloud::dataset::{OfflineDataset, Target};
+use multicloud::optimizers::ALL_OPTIMIZERS;
+use multicloud::surrogate::NativeBackend;
+use std::sync::Arc;
+
+fn main() {
+    let ds = OfflineDataset::generate(2022, 5);
+    let backend = NativeBackend;
+    let mut suite = Suite::new("perf_optimizers — per-trial latency (native backend)");
+    suite.max_seconds = 1.0;
+
+    for budget in [11usize, 88] {
+        for name in ALL_OPTIMIZERS {
+            if name == "exhaustive" && budget == 11 {
+                continue;
+            }
+            let mut seed = 0u64;
+            suite.bench_units(&format!("{name} B={budget}"), budget as f64, &mut || {
+                seed += 1;
+                let spec = TrialSpec {
+                    method: name.to_string(),
+                    workload: (seed % 30) as usize,
+                    target: Target::Cost,
+                    budget,
+                    seed,
+                };
+                run_trial(&ds, &backend, &spec).regret
+            });
+        }
+    }
+
+    // Predictive baselines.
+    for name in ["predict-linear", "predict-rf"] {
+        let mut seed = 0u64;
+        suite.bench(&format!("{name}"), || {
+            seed += 1;
+            let spec = TrialSpec {
+                method: name.to_string(),
+                workload: (seed % 30) as usize,
+                target: Target::Time,
+                budget: 0,
+                seed,
+            };
+            run_trial(&ds, &backend, &spec).regret
+        });
+    }
+
+    // Service round trip (in-process handle, no TCP; TCP adds the kernel).
+    let svc = Service::new(Arc::new(OfflineDataset::generate(2022, 5)), Arc::new(NativeBackend));
+    let mut i = 0u64;
+    suite.bench("service optimize request (rs, B=11)", || {
+        i += 1;
+        svc.handle(&format!(
+            r#"{{"op":"optimize","workload":"kmeans:buzz","method":"rs","budget":11,"seed":{i}}}"#
+        ))
+        .len()
+    });
+
+    suite.finish();
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/perf_optimizers.csv", suite.to_csv()).ok();
+}

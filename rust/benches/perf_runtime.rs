@@ -1,0 +1,72 @@
+//! §Perf runtime bench: PJRT artifact execution decomposition — compile
+//! time, per-execution latency vs observation count, and end-to-end
+//! optimizer runs on the artifact backend vs native. Quantifies the
+//! fixed PJRT dispatch overhead that dominates at this problem size
+//! (see EXPERIMENTS.md §Perf).
+
+use multicloud::benchkit::{black_box, Suite};
+use multicloud::dataset::objective::{LookupObjective, MeasureMode};
+use multicloud::dataset::{OfflineDataset, Target};
+use multicloud::domain::encode;
+use multicloud::optimizers::{by_name, SearchContext};
+use multicloud::runtime::{artifact_dir, ArtifactBackend};
+use multicloud::surrogate::{Backend, NativeBackend};
+use multicloud::util::rng::Rng;
+
+fn main() {
+    let mut suite = Suite::new("perf_runtime — PJRT artifact path");
+    suite.max_seconds = 2.0;
+
+    let dir = artifact_dir(None);
+    let art = match ArtifactBackend::load_with_pool(&dir, 1) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("perf_runtime skipped: {e} (run `make artifacts`)");
+            return;
+        }
+    };
+
+    suite.bench("compile both graphs (pool slot)", || {
+        ArtifactBackend::load_with_pool(&dir, 1).unwrap().pool_size()
+    });
+
+    let ds = OfflineDataset::generate(2022, 3);
+    let grid = ds.domain.full_grid();
+    let cands: Vec<Vec<f64>> = grid.iter().map(|c| encode(&ds.domain, c)).collect();
+    for n in [4usize, 44, 88] {
+        let x: Vec<Vec<f64>> = cands[..n].to_vec();
+        let y: Vec<f64> = (0..n).map(|i| ds.mean_value(2, i, Target::Cost)).collect();
+        suite.bench(&format!("gp artifact full fit_predict n={n} (4 execs)"), || {
+            black_box(art.gp_fit_predict(&x, &y, &cands)).mean[0]
+        });
+    }
+
+    // End-to-end optimizer on artifact vs native backend.
+    let native = NativeBackend;
+    for (label, backend) in
+        [("artifact", &art as &dyn Backend), ("native", &native as &dyn Backend)]
+    {
+        let mut seed = 0u64;
+        suite.bench_units(&format!("cherrypick-x1 B=22 on {label}"), 22.0, &mut || {
+            seed += 1;
+            let opt = by_name("cherrypick-x1").unwrap();
+            let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend };
+            let mut obj =
+                LookupObjective::new(&ds, 3, Target::Cost, MeasureMode::SingleDraw, seed);
+            opt.run(&ctx, &mut obj, 22, &mut Rng::new(seed)).best_value
+        });
+        let mut seed = 0u64;
+        suite.bench_units(&format!("cb-rbfopt B=22 on {label}"), 22.0, &mut || {
+            seed += 1;
+            let opt = by_name("cb-rbfopt").unwrap();
+            let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend };
+            let mut obj =
+                LookupObjective::new(&ds, 3, Target::Cost, MeasureMode::SingleDraw, seed);
+            opt.run(&ctx, &mut obj, 22, &mut Rng::new(seed)).best_value
+        });
+    }
+
+    suite.finish();
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/perf_runtime.csv", suite.to_csv()).ok();
+}

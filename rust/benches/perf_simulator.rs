@@ -1,0 +1,61 @@
+//! §Perf L3 bench: simulator + dataset substrate throughput (measurement
+//! generation, objective lookups, encoding) — these sit under every
+//! trial, so they must be negligible next to surrogate math.
+
+use multicloud::benchkit::{black_box, Suite};
+use multicloud::dataset::objective::{LookupObjective, MeasureMode, Objective};
+use multicloud::dataset::{OfflineDataset, Target};
+use multicloud::domain::{encode, Domain};
+use multicloud::simulator::tasks::all_workloads;
+use multicloud::simulator::{expected_runtime_s, measure};
+use multicloud::util::rng::Rng;
+
+fn main() {
+    let mut suite = Suite::new("perf_simulator — substrate throughput");
+    suite.max_seconds = 1.0;
+
+    let d = Domain::paper();
+    let grid = d.full_grid();
+    let ws = all_workloads();
+
+    suite.bench_units("expected_runtime_s (full 30x88 sweep)", (30 * 88) as f64, &mut || {
+        let mut acc = 0.0;
+        for w in &ws {
+            for c in &grid {
+                acc += expected_runtime_s(&d, w, c);
+            }
+        }
+        black_box(acc)
+    });
+
+    let mut rng = Rng::new(1);
+    suite.bench_units("measure() with noise (1k draws)", 1000.0, &mut || {
+        let mut acc = 0.0;
+        for _ in 0..1000 {
+            acc += measure(&d, &ws[3], &grid[17], &mut rng).0;
+        }
+        black_box(acc)
+    });
+
+    suite.bench_units("encode() full grid", grid.len() as f64, &mut || {
+        grid.iter().map(|c| encode(&d, c)[3]).sum::<f64>()
+    });
+
+    let ds = OfflineDataset::generate(2022, 5);
+    suite.bench_units("objective eval (SingleDraw, 1k)", 1000.0, &mut || {
+        let mut obj = LookupObjective::new(&ds, 7, Target::Cost, MeasureMode::SingleDraw, 5);
+        let mut acc = 0.0;
+        for i in 0..1000 {
+            acc += obj.eval(&grid[i % grid.len()]);
+        }
+        black_box(acc)
+    });
+
+    suite.bench("true_min (one workload, both targets)", || {
+        (ds.true_min(4, Target::Time), ds.true_min(4, Target::Cost))
+    });
+
+    suite.finish();
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/perf_simulator.csv", suite.to_csv()).ok();
+}

@@ -1,0 +1,32 @@
+//! Bench target for Table II (T2 in DESIGN.md §4): regenerate the
+//! task/configuration-space table and the offline dataset behind it,
+//! timing dataset materialization and persistence.
+
+use multicloud::benchkit::{black_box, Suite};
+use multicloud::dataset::OfflineDataset;
+use multicloud::domain::Domain;
+use multicloud::report::figures;
+
+fn main() {
+    let mut suite = Suite::new("table2 — dataset + configuration space");
+    suite.max_seconds = 1.0;
+
+    suite.bench("domain::full_grid (88 configs)", || black_box(Domain::paper().full_grid()));
+    suite.bench_units("dataset::generate (30x88x5 measurements)", (30 * 88 * 5) as f64, &mut || {
+        black_box(OfflineDataset::generate(2022, 5))
+    });
+    let ds = OfflineDataset::generate(2022, 5);
+    suite.bench("dataset::to_csv", || black_box(ds.to_csv()).len());
+    let csv = ds.to_csv();
+    suite.bench("dataset::from_csv", || black_box(OfflineDataset::from_csv(&csv).unwrap()).reps);
+
+    println!("{}", figures::table2(&ds.domain));
+    println!(
+        "dataset: {} workloads x {} configs x {} reps, csv {} bytes",
+        ds.workload_count(),
+        ds.domain.size(),
+        ds.reps,
+        csv.len()
+    );
+    suite.finish();
+}

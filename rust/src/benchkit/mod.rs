@@ -1,0 +1,230 @@
+//! Bench harness (substrate: criterion is unavailable offline).
+//!
+//! Drives the `[[bench]]` targets (`harness = false`) under `cargo bench`:
+//! warmup, timed iterations, mean/p50/p95 per-op latency and derived
+//! throughput, printed as aligned rows and optionally dumped as CSV so the
+//! §Perf before/after entries in EXPERIMENTS.md are regenerable.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+pub use std::hint::black_box;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    /// Optional user-supplied unit count per iteration (e.g. evaluations),
+    /// for throughput = units / second.
+    pub units_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> f64 {
+        self.units_per_iter / (self.mean_ns * 1e-9)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// A bench suite accumulating results and printing a final table.
+pub struct Suite {
+    title: String,
+    results: Vec<BenchResult>,
+    /// Max wallclock seconds to spend in the measuring loop per bench.
+    pub max_seconds: f64,
+    /// Min timed iterations (even if over the wallclock budget).
+    pub min_iters: usize,
+    pub warmup_iters: usize,
+}
+
+impl Suite {
+    pub fn new(title: &str) -> Suite {
+        Suite {
+            title: title.to_string(),
+            results: Vec::new(),
+            max_seconds: 2.0,
+            min_iters: 5,
+            warmup_iters: 2,
+        }
+    }
+
+    /// Time `f` repeatedly. `f` should perform one logical operation and
+    /// return a value (passed through `black_box` to defeat DCE).
+    pub fn bench<R, F: FnMut() -> R>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.bench_units(name, 1.0, &mut f)
+    }
+
+    /// Like `bench`, with `units` logical sub-operations per call for
+    /// throughput reporting.
+    pub fn bench_units<R, F: FnMut() -> R>(
+        &mut self,
+        name: &str,
+        units: f64,
+        f: &mut F,
+    ) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let budget_ns = self.max_seconds * 1e9;
+        let mut samples = Vec::new();
+        let started = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+            let spent = started.elapsed().as_nanos() as f64;
+            if samples.len() >= self.min_iters && spent > budget_ns {
+                break;
+            }
+            if samples.len() >= 10_000 {
+                break;
+            }
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_ns: stats::mean(&samples),
+            p50_ns: stats::percentile(&samples, 50.0),
+            p95_ns: stats::percentile(&samples, 95.0),
+            units_per_iter: units,
+        };
+        eprintln!(
+            "  {:<44} {:>10}/iter  p50 {:>10}  p95 {:>10}  ({} iters)",
+            res.name,
+            fmt_ns(res.mean_ns),
+            fmt_ns(res.p50_ns),
+            fmt_ns(res.p95_ns),
+            res.iters
+        );
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally-measured result (for end-to-end harnesses that
+    /// time whole experiment grids once).
+    pub fn record(&mut self, name: &str, total_ns: f64, units: f64) {
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            mean_ns: total_ns,
+            p50_ns: total_ns,
+            p95_ns: total_ns,
+            units_per_iter: units,
+        };
+        eprintln!(
+            "  {:<44} {:>10} total  ({:.1} units/s)",
+            res.name,
+            fmt_ns(total_ns),
+            res.throughput()
+        );
+        self.results.push(res);
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print the summary table to stdout (captured by bench_output.txt).
+    pub fn finish(&self) {
+        println!("\n== {} ==", self.title);
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>14} {:>8}",
+            "bench", "mean", "p50", "p95", "throughput/s", "iters"
+        );
+        for r in &self.results {
+            println!(
+                "{:<44} {:>12} {:>12} {:>12} {:>14.1} {:>8}",
+                r.name,
+                fmt_ns(r.mean_ns),
+                fmt_ns(r.p50_ns),
+                fmt_ns(r.p95_ns),
+                r.throughput(),
+                r.iters
+            );
+        }
+    }
+
+    /// CSV dump for EXPERIMENTS.md §Perf bookkeeping.
+    pub fn to_csv(&self) -> String {
+        let mut rows = vec![vec![
+            "bench".to_string(),
+            "mean_ns".to_string(),
+            "p50_ns".to_string(),
+            "p95_ns".to_string(),
+            "iters".to_string(),
+            "throughput_per_s".to_string(),
+        ]];
+        for r in &self.results {
+            rows.push(vec![
+                r.name.clone(),
+                format!("{:.1}", r.mean_ns),
+                format!("{:.1}", r.p50_ns),
+                format!("{:.1}", r.p95_ns),
+                r.iters.to_string(),
+                format!("{:.2}", r.throughput()),
+            ]);
+        }
+        crate::util::csv::write_rows(&rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut s = Suite::new("t");
+        s.max_seconds = 0.01;
+        s.min_iters = 3;
+        s.warmup_iters = 1;
+        let r = s.bench("noop-ish", || (0..100).sum::<usize>());
+        assert!(r.iters >= 3);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p95_ns >= r.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn throughput_uses_units() {
+        let mut s = Suite::new("t");
+        s.max_seconds = 0.01;
+        s.min_iters = 3;
+        let r = s.bench_units("u", 100.0, &mut || std::thread::sleep(std::time::Duration::from_micros(50)));
+        // 100 units / ~50µs >= ~1e6/s within slack.
+        assert!(r.throughput() > 1e5, "{}", r.throughput());
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut s = Suite::new("t");
+        s.max_seconds = 0.005;
+        s.min_iters = 2;
+        s.bench("a", || 1 + 1);
+        let csv = s.to_csv();
+        assert!(csv.starts_with("bench,mean_ns"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn record_external() {
+        let mut s = Suite::new("t");
+        s.record("grid", 2e9, 100.0);
+        assert_eq!(s.results().len(), 1);
+        assert!((s.results()[0].throughput() - 50.0).abs() < 1e-9);
+    }
+}

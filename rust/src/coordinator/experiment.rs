@@ -1,0 +1,271 @@
+//! Experiment grids: run many (method, workload, target, budget, seed)
+//! trials in parallel and aggregate regrets (the engine behind Figures
+//! 2-3 and the savings analysis).
+
+use crate::dataset::objective::{LookupObjective, MeasureMode, Objective};
+use crate::dataset::{OfflineDataset, Target};
+use crate::metrics;
+use crate::optimizers::{by_name, SearchContext};
+use crate::predictors::ernest::LinearPredictor;
+use crate::predictors::paris::ParisPredictor;
+use crate::surrogate::Backend;
+use crate::util::rng::Rng;
+use crate::util::threadpool::{default_workers, parallel_map_progress};
+
+/// Names of the predictive baselines (no budget axis).
+pub const PREDICTORS: [&str; 2] = ["predict-linear", "predict-rf"];
+
+/// One trial to execute.
+#[derive(Clone, Debug)]
+pub struct TrialSpec {
+    pub method: String,
+    pub workload: usize,
+    pub target: Target,
+    pub budget: usize,
+    pub seed: u64,
+}
+
+/// Outcome of one trial.
+#[derive(Clone, Debug)]
+pub struct TrialResult {
+    pub spec: TrialSpec,
+    /// Ground-truth (mean) value of the configuration the method returned.
+    pub chosen_value: f64,
+    /// Regret vs the workload's true optimum.
+    pub regret: f64,
+    /// Search expense: sum of the target metric over all evaluations.
+    pub search_expense: f64,
+    pub evals: usize,
+}
+
+/// Run a single trial. Seeds are decorrelated per (method, workload,
+/// target, budget, seed) so grid order cannot matter.
+pub fn run_trial(ds: &OfflineDataset, backend: &dyn Backend, spec: &TrialSpec) -> TrialResult {
+    let mut label = Rng::new(spec.seed);
+    // Mix the spec into the stream label deterministically.
+    let mut h: u64 = 0x9E3779B97F4A7C15;
+    for b in spec.method.bytes() {
+        h = h.wrapping_mul(0x100000001b3) ^ b as u64;
+    }
+    h ^= (spec.workload as u64) << 32 | spec.budget as u64;
+    h ^= match spec.target {
+        Target::Time => 0x1111_1111,
+        Target::Cost => 0x2222_2222,
+    };
+    let mut rng = label.fork(h);
+    let obj_seed = rng.next_u64();
+
+    let mut obj =
+        LookupObjective::new(ds, spec.workload, spec.target, MeasureMode::SingleDraw, obj_seed);
+
+    let chosen = match spec.method.as_str() {
+        "predict-linear" => LinearPredictor.run(&mut obj).chosen,
+        "predict-rf" => {
+            ParisPredictor::default().run(ds, spec.workload, spec.target, &mut obj).chosen
+        }
+        name => {
+            let opt = by_name(name).unwrap_or_else(|| panic!("unknown method {name}"));
+            let ctx = SearchContext { domain: &ds.domain, target: spec.target, backend };
+            opt.run(&ctx, &mut obj, spec.budget, &mut rng).best_config
+        }
+    };
+
+    let chosen_value = obj.ground_truth(&chosen);
+    let (_, true_min) = ds.true_min(spec.workload, spec.target);
+    TrialResult {
+        spec: spec.clone(),
+        chosen_value,
+        regret: metrics::regret(chosen_value, true_min),
+        search_expense: obj.total_expense(),
+        evals: obj.evals(),
+    }
+}
+
+/// Regret curve of one method: mean regret per budget, aggregated over all
+/// workloads (seed-mean first, workload-mean second).
+#[derive(Clone, Debug)]
+pub struct RegretCurve {
+    pub method: String,
+    pub target: Target,
+    pub budgets: Vec<usize>,
+    pub mean_regret: Vec<f64>,
+}
+
+/// Grid description for a regret experiment (Figures 2-3).
+pub struct RegretGrid<'a> {
+    pub ds: &'a OfflineDataset,
+    pub backend: &'a dyn Backend,
+    pub methods: Vec<String>,
+    pub budgets: Vec<usize>,
+    pub seeds: usize,
+    pub targets: Vec<Target>,
+    pub workers: usize,
+    pub verbose: bool,
+    /// Workload indices to include (empty = all).
+    pub workload_filter: Vec<usize>,
+}
+
+impl<'a> RegretGrid<'a> {
+    pub fn new(ds: &'a OfflineDataset, backend: &'a dyn Backend) -> Self {
+        RegretGrid {
+            ds,
+            backend,
+            methods: Vec::new(),
+            budgets: vec![11, 22, 33, 44, 55, 66, 77, 88],
+            seeds: 50,
+            targets: vec![Target::Time, Target::Cost],
+            workers: default_workers(),
+            verbose: false,
+            workload_filter: Vec::new(),
+        }
+    }
+
+    /// Execute the full grid; returns one curve per (method, target).
+    /// Predictive methods get a single "budget" (their fixed online cost)
+    /// replicated across the budget axis, as in Figure 2's flat lines.
+    pub fn run(&self) -> Vec<RegretCurve> {
+        let workloads = self.ds.workload_count();
+        let included: Vec<usize> = if self.workload_filter.is_empty() {
+            (0..workloads).collect()
+        } else {
+            self.workload_filter.clone()
+        };
+        let mut specs: Vec<TrialSpec> = Vec::new();
+        for target in &self.targets {
+            for method in &self.methods {
+                let is_pred = PREDICTORS.contains(&method.as_str());
+                let budgets: Vec<usize> =
+                    if is_pred { vec![0] } else { self.budgets.clone() };
+                for &budget in &budgets {
+                    for &workload in &included {
+                        // Predictors are deterministic given the dataset —
+                        // a single seed suffices (their "seed" axis only
+                        // shuffles SingleDraw measurement draws).
+                        let seeds = if is_pred { self.seeds.min(5) } else { self.seeds };
+                        for seed in 0..seeds {
+                            specs.push(TrialSpec {
+                                method: method.clone(),
+                                workload,
+                                target: *target,
+                                budget,
+                                seed: seed as u64,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+
+        let total = specs.len();
+        let verbose = self.verbose;
+        let results: Vec<TrialResult> = parallel_map_progress(
+            specs,
+            self.workers,
+            |spec| run_trial(self.ds, self.backend, spec),
+            move |done, _| {
+                if verbose && (done % 500 == 0 || done == total) {
+                    eprintln!("  [experiment] {done}/{total} trials");
+                }
+            },
+        );
+
+        // Aggregate.
+        let mut curves = Vec::new();
+        for target in &self.targets {
+            for method in &self.methods {
+                let is_pred = PREDICTORS.contains(&method.as_str());
+                let budgets: Vec<usize> = if is_pred { vec![0] } else { self.budgets.clone() };
+                let mut mean_regret = Vec::with_capacity(budgets.len());
+                for &budget in &budgets {
+                    let mut per_workload: Vec<Vec<f64>> = vec![Vec::new(); workloads];
+                    for r in &results {
+                        if r.spec.method == *method
+                            && r.spec.target == *target
+                            && r.spec.budget == budget
+                        {
+                            per_workload[r.spec.workload].push(r.regret);
+                        }
+                    }
+                    mean_regret.push(metrics::mean_regret_over_workloads(&per_workload));
+                }
+                // Replicate predictor point across the budget axis.
+                let (budgets, mean_regret) = if is_pred {
+                    (self.budgets.clone(), vec![mean_regret[0]; self.budgets.len()])
+                } else {
+                    (budgets, mean_regret)
+                };
+                curves.push(RegretCurve {
+                    method: method.clone(),
+                    target: *target,
+                    budgets,
+                    mean_regret,
+                });
+            }
+        }
+        curves
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::surrogate::NativeBackend;
+
+    #[test]
+    fn run_trial_is_deterministic_per_spec() {
+        let ds = OfflineDataset::generate(40, 3);
+        let backend = NativeBackend;
+        let spec = TrialSpec {
+            method: "rs".into(),
+            workload: 2,
+            target: Target::Cost,
+            budget: 11,
+            seed: 4,
+        };
+        let a = run_trial(&ds, &backend, &spec);
+        let b = run_trial(&ds, &backend, &spec);
+        assert_eq!(a.regret, b.regret);
+        assert_eq!(a.search_expense, b.search_expense);
+        assert!(a.regret >= 0.0);
+    }
+
+    #[test]
+    fn small_grid_produces_curves_for_every_method() {
+        let ds = OfflineDataset::generate(41, 3);
+        let backend = NativeBackend;
+        let mut grid = RegretGrid::new(&ds, &backend);
+        grid.methods = vec!["rs".into(), "predict-linear".into()];
+        grid.budgets = vec![11, 22];
+        grid.seeds = 2;
+        grid.targets = vec![Target::Cost];
+        grid.workers = 2;
+        let curves = grid.run();
+        assert_eq!(curves.len(), 2);
+        for c in &curves {
+            assert_eq!(c.budgets.len(), 2);
+            assert_eq!(c.mean_regret.len(), 2);
+            assert!(c.mean_regret.iter().all(|r| r.is_finite() && *r >= 0.0));
+        }
+        // The predictor's line is flat.
+        let pred = curves.iter().find(|c| c.method == "predict-linear").unwrap();
+        assert_eq!(pred.mean_regret[0], pred.mean_regret[1]);
+    }
+
+    #[test]
+    fn rs_regret_decreases_with_budget_on_average() {
+        let ds = OfflineDataset::generate(42, 3);
+        let backend = NativeBackend;
+        let mut grid = RegretGrid::new(&ds, &backend);
+        grid.methods = vec!["rs".into()];
+        grid.budgets = vec![11, 88];
+        grid.seeds = 10;
+        grid.targets = vec![Target::Time];
+        grid.workers = 4;
+        let curves = grid.run();
+        assert!(
+            curves[0].mean_regret[1] < curves[0].mean_regret[0],
+            "RS regret should fall with budget: {:?}",
+            curves[0].mean_regret
+        );
+    }
+}

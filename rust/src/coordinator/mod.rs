@@ -1,0 +1,14 @@
+//! L3 coordinator: the experiment launcher and runtime.
+//!
+//! * [`experiment`] — declarative experiment grids (method x workload x
+//!   budget x seed x target) executed on the work-queue thread pool; the
+//!   engine behind every figure and the CLI.
+//! * [`savings`]    — the §IV-E production-savings analysis.
+//! * [`service`]    — a line-delimited-JSON TCP service exposing the
+//!   optimizer suite (the "request path": rust only, artifacts loaded
+//!   once, python never involved).
+
+pub mod experiment;
+pub mod savings;
+pub mod service;
+pub mod spec;

@@ -1,0 +1,146 @@
+//! Production savings analysis (paper §IV-E, Figure 4).
+//!
+//! For each workload: run the optimizer once (budget B), pay its search
+//! expense C_opt, then run the workload N more times at the returned
+//! configuration's expense R_opt; compare the total against N runs at the
+//! random-strategy expectation R_rand. Per-seed quantities are averaged
+//! before the savings formula is applied (matching "the savings were
+//! computed using each algorithm's results averaged over all random
+//! seeds, separately for each workload").
+
+use super::experiment::{run_trial, TrialSpec};
+use crate::dataset::{OfflineDataset, Target};
+use crate::metrics;
+use crate::surrogate::Backend;
+use crate::util::stats::BoxStats;
+use crate::util::threadpool::parallel_map_progress;
+
+#[derive(Clone, Debug)]
+pub struct SavingsConfig {
+    pub budget: usize,
+    pub production_runs: usize,
+    pub seeds: usize,
+    pub workers: usize,
+}
+
+impl Default for SavingsConfig {
+    fn default() -> Self {
+        // Paper: B = 33, N = 64.
+        SavingsConfig { budget: 33, production_runs: 64, seeds: 50, workers: crate::util::threadpool::default_workers() }
+    }
+}
+
+/// Per-method savings distribution across workloads.
+#[derive(Clone, Debug)]
+pub struct SavingsDistribution {
+    pub method: String,
+    pub target: Target,
+    /// One savings value per workload (seed-averaged).
+    pub per_workload: Vec<f64>,
+}
+
+impl SavingsDistribution {
+    pub fn box_stats(&self) -> BoxStats {
+        BoxStats::compute(&self.per_workload)
+    }
+}
+
+/// Compute savings distributions for the given methods.
+pub fn savings_analysis(
+    ds: &OfflineDataset,
+    backend: &dyn Backend,
+    methods: &[String],
+    target: Target,
+    cfg: &SavingsConfig,
+) -> Vec<SavingsDistribution> {
+    let workloads = ds.workload_count();
+    let mut specs = Vec::new();
+    for method in methods {
+        for workload in 0..workloads {
+            for seed in 0..cfg.seeds {
+                specs.push(TrialSpec {
+                    method: method.clone(),
+                    workload,
+                    target,
+                    budget: cfg.budget,
+                    seed: seed as u64,
+                });
+            }
+        }
+    }
+    let results = parallel_map_progress(
+        specs,
+        cfg.workers,
+        |spec| run_trial(ds, backend, spec),
+        |_, _| {},
+    );
+
+    methods
+        .iter()
+        .map(|method| {
+            let per_workload: Vec<f64> = (0..workloads)
+                .map(|w| {
+                    let rs: Vec<&_> = results
+                        .iter()
+                        .filter(|r| r.spec.method == *method && r.spec.workload == w)
+                        .collect();
+                    assert!(!rs.is_empty());
+                    let c_opt = crate::util::stats::mean(
+                        &rs.iter().map(|r| r.search_expense).collect::<Vec<_>>(),
+                    );
+                    let r_opt = crate::util::stats::mean(
+                        &rs.iter().map(|r| r.chosen_value).collect::<Vec<_>>(),
+                    );
+                    let r_rand = ds.random_strategy_value(w, target);
+                    metrics::savings(c_opt, r_opt, r_rand, cfg.production_runs)
+                })
+                .collect();
+            SavingsDistribution { method: method.clone(), target, per_workload }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::surrogate::NativeBackend;
+
+    #[test]
+    fn exhaustive_search_has_strictly_negative_savings() {
+        // The paper's headline strawman result: testing all 88 configs can
+        // never pay off within 64 production runs on this domain.
+        let ds = OfflineDataset::generate(50, 3);
+        let backend = NativeBackend;
+        let cfg = SavingsConfig { seeds: 2, workers: 4, ..Default::default() };
+        let out = savings_analysis(
+            &ds,
+            &backend,
+            &["exhaustive".to_string()],
+            Target::Cost,
+            &cfg,
+        );
+        let dist = &out[0].per_workload;
+        assert_eq!(dist.len(), 30);
+        assert!(
+            dist.iter().all(|&s| s < 0.0),
+            "exhaustive produced positive savings: {:?}",
+            dist.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        );
+    }
+
+    #[test]
+    fn cheap_search_with_good_config_gives_positive_median_savings() {
+        let ds = OfflineDataset::generate(51, 3);
+        let backend = NativeBackend;
+        let cfg = SavingsConfig { seeds: 3, workers: 4, ..Default::default() };
+        let out = savings_analysis(
+            &ds,
+            &backend,
+            &["cb-rbfopt".to_string()],
+            Target::Cost,
+            &cfg,
+        );
+        let b = out[0].box_stats();
+        assert!(b.median > 0.0, "median savings {}", b.median);
+    }
+}

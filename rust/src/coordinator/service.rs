@@ -1,0 +1,223 @@
+//! TCP optimization service: the long-running "request path" deployment.
+//!
+//! Line-delimited JSON over TCP. The server loads the offline dataset and
+//! the PJRT artifacts once at startup; each request runs one optimization
+//! and returns the recommended deployment. Python is never involved.
+//!
+//! Request:
+//!   {"op": "optimize", "workload": "kmeans:santander", "target": "cost",
+//!    "method": "cb-rbfopt", "budget": 33, "seed": 1}
+//!   {"op": "list_workloads"}
+//!   {"op": "list_methods"}
+//!   {"op": "ping"}
+//!
+//! Response (optimize):
+//!   {"ok": true, "config": "gcp/family=e2/...", "value": 0.123,
+//!    "evals": 33, "search_expense": 4.56, "regret": 0.01}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::experiment::{run_trial, TrialSpec};
+use crate::dataset::{OfflineDataset, Target};
+use crate::optimizers::ALL_OPTIMIZERS;
+use crate::surrogate::Backend;
+use crate::util::json::{parse, Value};
+
+pub struct Service {
+    ds: Arc<OfflineDataset>,
+    backend: Arc<dyn Backend + Send + Sync>,
+}
+
+impl Service {
+    pub fn new(ds: Arc<OfflineDataset>, backend: Arc<dyn Backend + Send + Sync>) -> Service {
+        Service { ds, backend }
+    }
+
+    /// Handle one request line; always returns a JSON response line.
+    pub fn handle(&self, line: &str) -> String {
+        match self.handle_inner(line) {
+            Ok(v) => v.to_string_compact(),
+            Err(e) => Value::obj(vec![("ok", false.into()), ("error", e.into())])
+                .to_string_compact(),
+        }
+    }
+
+    fn handle_inner(&self, line: &str) -> Result<Value, String> {
+        let req = parse(line).map_err(|e| format!("bad json: {e}"))?;
+        let op = req.get("op").and_then(|v| v.as_str()).unwrap_or("optimize");
+        match op {
+            "ping" => Ok(Value::obj(vec![("ok", true.into()), ("pong", true.into())])),
+            "list_workloads" => {
+                let names: Vec<Value> =
+                    self.ds.workloads.iter().map(|w| Value::str(w.id())).collect();
+                Ok(Value::obj(vec![("ok", true.into()), ("workloads", Value::Arr(names))]))
+            }
+            "list_methods" => {
+                let names: Vec<Value> =
+                    ALL_OPTIMIZERS.iter().map(|m| Value::str(*m)).collect();
+                Ok(Value::obj(vec![("ok", true.into()), ("methods", Value::Arr(names))]))
+            }
+            "optimize" => {
+                let workload_id = req
+                    .get("workload")
+                    .and_then(|v| v.as_str())
+                    .ok_or("missing 'workload'")?;
+                let workload = self
+                    .ds
+                    .workload_index(workload_id)
+                    .ok_or_else(|| format!("unknown workload '{workload_id}'"))?;
+                let target = Target::parse(
+                    req.get("target").and_then(|v| v.as_str()).unwrap_or("cost"),
+                )
+                .ok_or("target must be 'time' or 'cost'")?;
+                let method = req
+                    .get("method")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("cb-rbfopt")
+                    .to_string();
+                let budget =
+                    req.get("budget").and_then(|v| v.as_usize()).unwrap_or(33);
+                let seed = req.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+                if budget == 0 || budget > 10_000 {
+                    return Err("budget out of range".into());
+                }
+
+                let spec = TrialSpec { method, workload, target, budget, seed };
+                let r = run_trial(&self.ds, self.backend.as_ref(), &spec);
+                let grid = self.ds.domain.full_grid();
+                let _ = grid;
+                Ok(Value::obj(vec![
+                    ("ok", true.into()),
+                    ("workload", workload_id.into()),
+                    ("target", target.name().into()),
+                    ("method", spec.method.as_str().into()),
+                    ("value", r.chosen_value.into()),
+                    ("regret", r.regret.into()),
+                    ("evals", r.evals.into()),
+                    ("search_expense", r.search_expense.into()),
+                ]))
+            }
+            other => Err(format!("unknown op '{other}'")),
+        }
+    }
+
+    /// Serve until `stop` is set. Returns the bound local port.
+    pub fn serve(
+        self: Arc<Self>,
+        addr: &str,
+        stop: Arc<AtomicBool>,
+    ) -> std::io::Result<(u16, std::thread::JoinHandle<()>)> {
+        let listener = TcpListener::bind(addr)?;
+        let port = listener.local_addr()?.port();
+        listener.set_nonblocking(true)?;
+        let svc = self;
+        let handle = std::thread::spawn(move || {
+            let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+            while !stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let svc = svc.clone();
+                        workers.push(std::thread::spawn(move || {
+                            let _ = handle_conn(&svc, stream);
+                        }));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for w in workers {
+                let _ = w.join();
+            }
+        });
+        Ok((port, handle))
+    }
+}
+
+fn handle_conn(svc: &Service, stream: TcpStream) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(300)))?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = svc.handle(&line);
+        writer.write_all(resp.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::surrogate::NativeBackend;
+
+    fn service() -> Service {
+        let ds = Arc::new(OfflineDataset::generate(60, 3));
+        Service::new(ds, Arc::new(NativeBackend))
+    }
+
+    #[test]
+    fn ping_and_lists() {
+        let svc = service();
+        assert!(svc.handle(r#"{"op":"ping"}"#).contains("pong"));
+        let w = svc.handle(r#"{"op":"list_workloads"}"#);
+        assert!(w.contains("kmeans:santander"), "{w}");
+        let m = svc.handle(r#"{"op":"list_methods"}"#);
+        assert!(m.contains("cb-rbfopt"), "{m}");
+    }
+
+    #[test]
+    fn optimize_request_roundtrip() {
+        let svc = service();
+        let resp = svc.handle(
+            r#"{"op":"optimize","workload":"xgboost:credit_card","target":"cost","method":"rs","budget":11,"seed":3}"#,
+        );
+        let v = parse(&resp).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true), "{resp}");
+        assert_eq!(v.get("evals").unwrap().as_usize(), Some(11));
+        assert!(v.get("value").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn malformed_requests_get_errors_not_panics() {
+        let svc = service();
+        for bad in [
+            "not json",
+            r#"{"op":"optimize"}"#,
+            r#"{"op":"optimize","workload":"nope:nope"}"#,
+            r#"{"op":"optimize","workload":"kmeans:buzz","target":"speed"}"#,
+            r#"{"op":"optimize","workload":"kmeans:buzz","budget":0}"#,
+            r#"{"op":"wat"}"#,
+        ] {
+            let resp = svc.handle(bad);
+            let v = parse(&resp).unwrap();
+            assert_eq!(v.get("ok").unwrap().as_bool(), Some(false), "{bad} -> {resp}");
+        }
+    }
+
+    #[test]
+    fn tcp_end_to_end() {
+        use std::io::{BufRead, BufReader, Write};
+        let svc = Arc::new(service());
+        let stop = Arc::new(AtomicBool::new(false));
+        let (port, handle) = svc.serve("127.0.0.1:0", stop.clone()).unwrap();
+        {
+            let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+            conn.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+            let mut line = String::new();
+            BufReader::new(conn.try_clone().unwrap()).read_line(&mut line).unwrap();
+            assert!(line.contains("pong"), "{line}");
+        }
+        stop.store(true, Ordering::Relaxed);
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,156 @@
+//! Declarative experiment specifications (the config system behind the
+//! `experiment` CLI subcommand).
+//!
+//! A spec is a JSON file describing a regret grid:
+//!
+//! ```json
+//! {
+//!   "name": "smac-vs-cb",
+//!   "methods": ["smac", "cb-rbfopt", "rs"],
+//!   "budgets": [11, 33, 88],
+//!   "seeds": 25,
+//!   "targets": ["cost", "time"],
+//!   "workloads": ["xgboost:santander", "kmeans:buzz"]
+//! }
+//! ```
+//!
+//! `workloads` is optional (default: all 30). Methods are validated
+//! against the optimizer registry + predictive baselines at parse time so
+//! a bad spec fails before any compute is spent.
+
+use crate::coordinator::experiment::PREDICTORS;
+use crate::dataset::Target;
+use crate::optimizers::ALL_OPTIMIZERS;
+use crate::util::json::{parse, Value};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentSpec {
+    pub name: String,
+    pub methods: Vec<String>,
+    pub budgets: Vec<usize>,
+    pub seeds: usize,
+    pub targets: Vec<Target>,
+    /// Workload ids; empty = all.
+    pub workloads: Vec<String>,
+}
+
+impl ExperimentSpec {
+    pub fn parse(text: &str) -> Result<ExperimentSpec, String> {
+        let v = parse(text)?;
+        let name = v
+            .get("name")
+            .and_then(Value::as_str)
+            .unwrap_or("experiment")
+            .to_string();
+
+        let str_list = |key: &str| -> Result<Vec<String>, String> {
+            match v.get(key) {
+                None => Ok(Vec::new()),
+                Some(Value::Arr(a)) => a
+                    .iter()
+                    .map(|e| {
+                        e.as_str().map(str::to_string).ok_or_else(|| format!("{key}: non-string"))
+                    })
+                    .collect(),
+                Some(_) => Err(format!("{key} must be an array of strings")),
+            }
+        };
+
+        let methods = str_list("methods")?;
+        if methods.is_empty() {
+            return Err("spec needs a non-empty 'methods' array".into());
+        }
+        for m in &methods {
+            if !ALL_OPTIMIZERS.contains(&m.as_str()) && !PREDICTORS.contains(&m.as_str()) {
+                return Err(format!("unknown method '{m}'"));
+            }
+        }
+
+        let budgets: Vec<usize> = match v.get("budgets") {
+            None => vec![11, 22, 33, 44, 55, 66, 77, 88],
+            Some(Value::Arr(a)) => {
+                let mut out = Vec::new();
+                for e in a {
+                    out.push(e.as_usize().ok_or("budgets: non-integer")?);
+                }
+                if out.is_empty() || out.iter().any(|&b| b == 0) {
+                    return Err("budgets must be positive".into());
+                }
+                out
+            }
+            Some(_) => return Err("budgets must be an array".into()),
+        };
+
+        let seeds = match v.get("seeds") {
+            None => 10,
+            Some(s) => s.as_usize().ok_or("seeds must be a non-negative integer")?,
+        };
+        if seeds == 0 {
+            return Err("seeds must be >= 1".into());
+        }
+
+        let targets = match v.get("targets") {
+            None => vec![Target::Time, Target::Cost],
+            Some(Value::Arr(a)) => {
+                let mut out = Vec::new();
+                for e in a {
+                    let s = e.as_str().ok_or("targets: non-string")?;
+                    out.push(Target::parse(s).ok_or_else(|| format!("bad target '{s}'"))?);
+                }
+                out
+            }
+            Some(_) => return Err("targets must be an array".into()),
+        };
+
+        Ok(ExperimentSpec { name, methods, budgets, seeds, targets, workloads: str_list("workloads")? })
+    }
+
+    pub fn load(path: &str) -> Result<ExperimentSpec, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_spec_roundtrip() {
+        let s = ExperimentSpec::parse(
+            r#"{"name":"x","methods":["rs","smac"],"budgets":[11,33],
+                "seeds":5,"targets":["cost"],"workloads":["kmeans:buzz"]}"#,
+        )
+        .unwrap();
+        assert_eq!(s.name, "x");
+        assert_eq!(s.methods, vec!["rs", "smac"]);
+        assert_eq!(s.budgets, vec![11, 33]);
+        assert_eq!(s.seeds, 5);
+        assert_eq!(s.targets, vec![Target::Cost]);
+        assert_eq!(s.workloads, vec!["kmeans:buzz"]);
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let s = ExperimentSpec::parse(r#"{"methods":["rs"]}"#).unwrap();
+        assert_eq!(s.budgets.len(), 8);
+        assert_eq!(s.seeds, 10);
+        assert_eq!(s.targets.len(), 2);
+        assert!(s.workloads.is_empty());
+    }
+
+    #[test]
+    fn validation_errors() {
+        assert!(ExperimentSpec::parse("{}").is_err());
+        assert!(ExperimentSpec::parse(r#"{"methods":["warp-drive"]}"#).is_err());
+        assert!(ExperimentSpec::parse(r#"{"methods":["rs"],"budgets":[0]}"#).is_err());
+        assert!(ExperimentSpec::parse(r#"{"methods":["rs"],"seeds":0}"#).is_err());
+        assert!(ExperimentSpec::parse(r#"{"methods":["rs"],"targets":["speed"]}"#).is_err());
+        assert!(ExperimentSpec::parse("not json").is_err());
+    }
+
+    #[test]
+    fn predictors_are_valid_methods() {
+        assert!(ExperimentSpec::parse(r#"{"methods":["predict-rf"]}"#).is_ok());
+    }
+}

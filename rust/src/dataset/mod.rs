@@ -1,0 +1,342 @@
+//! The offline benchmark dataset (paper §IV-A).
+//!
+//! The paper evaluates every optimizer *against a pre-collected offline
+//! dataset* — when an algorithm asks for an evaluation, the measurement is
+//! read from the store instead of deploying a Kubernetes cluster. This
+//! module materializes exactly that: 30 workloads x 88 configurations x R
+//! repeated measurements of (runtime, cost), generated deterministically
+//! by the simulator, persisted as CSV, and exposed to optimizers through
+//! [`objective::LookupObjective`].
+
+pub mod objective;
+
+use crate::domain::{Config, Domain};
+use crate::simulator::tasks::{all_workloads, Workload};
+use crate::simulator::{self};
+use crate::util::csv;
+use crate::util::rng::Rng;
+
+/// Optimization target (paper: each workload yields two tasks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Target {
+    Time,
+    Cost,
+}
+
+impl Target {
+    pub fn name(self) -> &'static str {
+        match self {
+            Target::Time => "time",
+            Target::Cost => "cost",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Target> {
+        match s {
+            "time" => Some(Target::Time),
+            "cost" => Some(Target::Cost),
+            _ => None,
+        }
+    }
+
+    pub fn pick(self, (runtime, cost): (f64, f64)) -> f64 {
+        match self {
+            Target::Time => runtime,
+            Target::Cost => cost,
+        }
+    }
+}
+
+pub const BOTH_TARGETS: [Target; 2] = [Target::Time, Target::Cost];
+
+/// The materialized offline store.
+pub struct OfflineDataset {
+    pub domain: Domain,
+    pub workloads: Vec<Workload>,
+    pub reps: usize,
+    /// data[workload][config_id][rep] = (runtime_s, cost_usd)
+    data: Vec<Vec<Vec<(f64, f64)>>>,
+}
+
+impl OfflineDataset {
+    /// Generate the full dataset from the simulator, deterministically.
+    pub fn generate(seed: u64, reps: usize) -> OfflineDataset {
+        Self::generate_for(seed, reps, all_workloads())
+    }
+
+    /// The ML-inference workload suite (the paper's stated future work;
+    /// see `simulator::tasks::INFERENCE_TASKS`). Same domain, same
+    /// methodology, 10 workloads.
+    pub fn generate_inference(seed: u64, reps: usize) -> OfflineDataset {
+        Self::generate_for(seed, reps, crate::simulator::tasks::inference_workloads())
+    }
+
+    /// Generate for an explicit workload list.
+    pub fn generate_for(seed: u64, reps: usize, workloads: Vec<Workload>) -> OfflineDataset {
+        let domain = Domain::paper();
+        let grid = domain.full_grid();
+        let mut root = Rng::new(seed);
+        let data = workloads
+            .iter()
+            .enumerate()
+            .map(|(wi, w)| {
+                let mut wrng = root.fork(wi as u64);
+                grid.iter()
+                    .map(|cfg| {
+                        (0..reps).map(|_| simulator::measure(&domain, w, cfg, &mut wrng)).collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        OfflineDataset { domain, workloads, reps, data }
+    }
+
+    pub fn workload_count(&self) -> usize {
+        self.workloads.len()
+    }
+
+    pub fn workload_index(&self, id: &str) -> Option<usize> {
+        self.workloads.iter().position(|w| w.id() == id)
+    }
+
+    /// All repetitions for (workload, config).
+    pub fn measurements(&self, workload: usize, config_id: usize) -> &[(f64, f64)] {
+        &self.data[workload][config_id]
+    }
+
+    /// Mean target value over repetitions (the "ground truth" used for
+    /// regret and savings denominators).
+    pub fn mean_value(&self, workload: usize, config_id: usize, target: Target) -> f64 {
+        let ms = self.measurements(workload, config_id);
+        ms.iter().map(|&m| target.pick(m)).sum::<f64>() / ms.len() as f64
+    }
+
+    /// True optimum of a workload/target over the whole grid (mean over
+    /// reps), as (config_id, value).
+    pub fn true_min(&self, workload: usize, target: Target) -> (usize, f64) {
+        (0..self.domain.size())
+            .map(|c| (c, self.mean_value(workload, c, target)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap()
+    }
+
+    /// Expected value of choosing a configuration uniformly at random
+    /// (the savings baseline R_rand of §IV-E).
+    pub fn random_strategy_value(&self, workload: usize, target: Target) -> f64 {
+        let n = self.domain.size();
+        (0..n).map(|c| self.mean_value(workload, c, target)).sum::<f64>() / n as f64
+    }
+
+    // -- CSV persistence ----------------------------------------------------
+
+    pub fn to_csv(&self) -> String {
+        let grid = self.domain.full_grid();
+        let mut rows = vec![vec![
+            "task".to_string(),
+            "dataset".to_string(),
+            "provider".to_string(),
+            "params".to_string(),
+            "nodes".to_string(),
+            "rep".to_string(),
+            "runtime_s".to_string(),
+            "cost_usd".to_string(),
+        ]];
+        for (wi, w) in self.workloads.iter().enumerate() {
+            for (ci, cfg) in grid.iter().enumerate() {
+                let p = &self.domain.providers[cfg.provider];
+                let params = p
+                    .params
+                    .iter()
+                    .zip(&cfg.choices)
+                    .map(|(def, &c)| format!("{}={}", def.name, def.values[c]))
+                    .collect::<Vec<_>>()
+                    .join(";");
+                for (rep, m) in self.data[wi][ci].iter().enumerate() {
+                    rows.push(vec![
+                        w.task.name.to_string(),
+                        w.dataset.name.to_string(),
+                        p.name.to_string(),
+                        params.clone(),
+                        cfg.nodes.to_string(),
+                        rep.to_string(),
+                        format!("{:.6}", m.0),
+                        format!("{:.8}", m.1),
+                    ]);
+                }
+            }
+        }
+        csv::write_rows(&rows)
+    }
+
+    pub fn from_csv(text: &str) -> Result<OfflineDataset, String> {
+        let table = csv::Table::parse(text)?;
+        let domain = Domain::paper();
+        let workloads = all_workloads();
+        let n_cfg = domain.size();
+
+        // Collect into (workload, config) -> Vec<(rep, runtime, cost)>.
+        let mut cells: Vec<Vec<Vec<(usize, f64, f64)>>> =
+            vec![vec![Vec::new(); n_cfg]; workloads.len()];
+        for (ri, row) in table.rows.iter().enumerate() {
+            let get = |name: &str| {
+                table.get(row, name).ok_or_else(|| format!("row {}: missing {name}", ri + 2))
+            };
+            let wid = format!("{}:{}", get("task")?, get("dataset")?);
+            let wi = workloads
+                .iter()
+                .position(|w| w.id() == wid)
+                .ok_or_else(|| format!("row {}: unknown workload {wid}", ri + 2))?;
+            let provider = domain
+                .provider_index(get("provider")?)
+                .ok_or_else(|| format!("row {}: unknown provider", ri + 2))?;
+            let pspace = &domain.providers[provider];
+            let mut choices = vec![usize::MAX; pspace.params.len()];
+            for kv in get("params")?.split(';') {
+                let (k, v) =
+                    kv.split_once('=').ok_or_else(|| format!("row {}: bad params", ri + 2))?;
+                let qi = pspace
+                    .params
+                    .iter()
+                    .position(|q| q.name == k)
+                    .ok_or_else(|| format!("row {}: unknown param {k}", ri + 2))?;
+                choices[qi] = pspace.params[qi]
+                    .values
+                    .iter()
+                    .position(|&val| val == v)
+                    .ok_or_else(|| format!("row {}: unknown value {v} for {k}", ri + 2))?;
+            }
+            if choices.contains(&usize::MAX) {
+                return Err(format!("row {}: incomplete params", ri + 2));
+            }
+            let nodes: u32 =
+                get("nodes")?.parse().map_err(|_| format!("row {}: bad nodes", ri + 2))?;
+            let cfg = Config { provider, choices, nodes };
+            let ci = domain.config_id(&cfg);
+            let rep: usize =
+                get("rep")?.parse().map_err(|_| format!("row {}: bad rep", ri + 2))?;
+            let rt: f64 =
+                get("runtime_s")?.parse().map_err(|_| format!("row {}: bad runtime", ri + 2))?;
+            let cost: f64 =
+                get("cost_usd")?.parse().map_err(|_| format!("row {}: bad cost", ri + 2))?;
+            cells[wi][ci].push((rep, rt, cost));
+        }
+
+        let mut reps = None;
+        let mut data = Vec::with_capacity(workloads.len());
+        for (wi, w) in workloads.iter().enumerate() {
+            let mut per_cfg = Vec::with_capacity(n_cfg);
+            for (ci, cell) in cells[wi].iter_mut().enumerate() {
+                if cell.is_empty() {
+                    return Err(format!("no measurements for {} config {ci}", w.id()));
+                }
+                cell.sort_by_key(|&(rep, _, _)| rep);
+                let r = reps.get_or_insert(cell.len());
+                if *r != cell.len() {
+                    return Err(format!("inconsistent rep count for {}", w.id()));
+                }
+                per_cfg.push(cell.iter().map(|&(_, t, c)| (t, c)).collect());
+            }
+            data.push(per_cfg);
+        }
+        Ok(OfflineDataset { domain, workloads, reps: reps.unwrap_or(0), data })
+    }
+
+    /// Load from a CSV file, or generate-and-save if the file is missing.
+    pub fn load_or_generate(path: &str, seed: u64, reps: usize) -> Result<OfflineDataset, String> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => Self::from_csv(&text),
+            Err(_) => {
+                let ds = Self::generate(seed, reps);
+                if let Some(dir) = std::path::Path::new(path).parent() {
+                    std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+                }
+                std::fs::write(path, ds.to_csv()).map_err(|e| e.to_string())?;
+                Ok(ds)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> OfflineDataset {
+        OfflineDataset::generate(7, 3)
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = OfflineDataset::generate(42, 2);
+        let b = OfflineDataset::generate(42, 2);
+        assert_eq!(a.measurements(3, 10), b.measurements(3, 10));
+        let c = OfflineDataset::generate(43, 2);
+        assert_ne!(a.measurements(3, 10), c.measurements(3, 10));
+    }
+
+    #[test]
+    fn shape_is_30x88xreps() {
+        let ds = small();
+        assert_eq!(ds.workload_count(), 30);
+        assert_eq!(ds.domain.size(), 88);
+        for w in 0..30 {
+            for c in 0..88 {
+                assert_eq!(ds.measurements(w, c).len(), 3);
+            }
+        }
+    }
+
+    #[test]
+    fn csv_roundtrip_preserves_values() {
+        let ds = small();
+        let text = ds.to_csv();
+        let back = OfflineDataset::from_csv(&text).unwrap();
+        assert_eq!(back.reps, 3);
+        for w in [0, 7, 29] {
+            for c in [0, 24, 40, 87] {
+                let a = ds.measurements(w, c);
+                let b = back.measurements(w, c);
+                for (x, y) in a.iter().zip(b) {
+                    assert!((x.0 - y.0).abs() < 1e-4, "runtime {x:?} vs {y:?}");
+                    assert!((x.1 - y.1).abs() < 1e-6, "cost {x:?} vs {y:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn true_min_is_really_minimal() {
+        let ds = small();
+        for target in BOTH_TARGETS {
+            let (cid, v) = ds.true_min(0, target);
+            for c in 0..ds.domain.size() {
+                assert!(ds.mean_value(0, c, target) >= v - 1e-12);
+            }
+            assert!(cid < ds.domain.size());
+        }
+    }
+
+    #[test]
+    fn random_strategy_value_between_min_and_max() {
+        let ds = small();
+        for w in [2, 15] {
+            for target in BOTH_TARGETS {
+                let r = ds.random_strategy_value(w, target);
+                let (_, mn) = ds.true_min(w, target);
+                assert!(r > mn);
+            }
+        }
+    }
+
+    #[test]
+    fn from_csv_rejects_corrupt_input() {
+        assert!(OfflineDataset::from_csv("task,dataset\nx,y\n").is_err());
+        let ds = small();
+        let text = ds.to_csv();
+        // Drop a row: incomplete grid must be rejected.
+        let mut lines: Vec<&str> = text.lines().collect();
+        lines.remove(1);
+        let partial = lines.join("\n");
+        assert!(OfflineDataset::from_csv(&partial).is_err());
+    }
+}

@@ -1,0 +1,120 @@
+//! Flattened one-hot encoding of the hierarchical domain.
+//!
+//! This is the feature representation shared by every surrogate — the
+//! native Rust GP/RBF/RF and the AOT-compiled PJRT graphs — so its width
+//! must equal the `D` baked into `python/compile/model.py` (checked at
+//! runtime against the artifact manifest, and by `layout_matches_paper`
+//! below).
+//!
+//! Layout (width 20):
+//! ```text
+//!   [0..3)   provider one-hot (aws, azure, gcp)
+//!   [3]      nodes, min-max normalized to [0, 1]
+//!   [4..9)   aws:   family(m4,r4,c4) + size(large,xlarge)
+//!   [9..13)  azure: family(D_v2,D_v3) + cpu_size(2,4)
+//!   [13..20) gcp:   family(e2,n1) + type(std,hm,hc) + vcpu(2,4)
+//! ```
+//! Hierarchical (per-provider) optimizers reuse the same encoding with
+//! foreign provider blocks left at zero, which is exactly what this
+//! function produces — one artifact serves every optimizer.
+
+use super::{Config, Domain};
+
+/// Must equal `model.D` on the python side.
+pub const ENCODED_DIM: usize = 20;
+
+/// Encode a configuration into the shared feature vector.
+pub fn encode(domain: &Domain, cfg: &Config) -> Vec<f64> {
+    let k = domain.providers.len();
+    let width = feature_width(domain);
+    let mut x = vec![0.0; width];
+    x[cfg.provider] = 1.0;
+
+    let n_lo = *domain.nodes.first().expect("empty nodes") as f64;
+    let n_hi = *domain.nodes.last().expect("empty nodes") as f64;
+    x[k] = if n_hi > n_lo { (cfg.nodes as f64 - n_lo) / (n_hi - n_lo) } else { 0.0 };
+
+    // Offset of this provider's categorical block.
+    let mut off = k + 1;
+    for p in 0..cfg.provider {
+        off += domain.providers[p].params.iter().map(|q| q.values.len()).sum::<usize>();
+    }
+    for (q, &choice) in domain.providers[cfg.provider].params.iter().zip(&cfg.choices) {
+        x[off + choice] = 1.0;
+        off += q.values.len();
+    }
+    x
+}
+
+/// Total encoded width for an arbitrary domain (providers + nodes + all
+/// categorical values).
+pub fn feature_width(domain: &Domain) -> usize {
+    domain.providers.len()
+        + 1
+        + domain
+            .providers
+            .iter()
+            .map(|p| p.params.iter().map(|q| q.values.len()).sum::<usize>())
+            .sum::<usize>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::domain::Domain;
+
+    #[test]
+    fn layout_matches_paper() {
+        let d = Domain::paper();
+        assert_eq!(feature_width(&d), ENCODED_DIM);
+    }
+
+    #[test]
+    fn one_hot_blocks_sum_correctly() {
+        let d = Domain::paper();
+        for cfg in d.full_grid() {
+            let x = encode(&d, &cfg);
+            assert_eq!(x.len(), ENCODED_DIM);
+            // Provider one-hot sums to 1.
+            assert_eq!(x[..3].iter().sum::<f64>(), 1.0);
+            // Exactly (number of params of the chosen provider) categorical
+            // ones beyond provider + nodes dims.
+            let cat_ones: f64 = x[4..].iter().sum();
+            assert_eq!(cat_ones, d.providers[cfg.provider].params.len() as f64);
+            // Nodes dim within [0,1].
+            assert!((0.0..=1.0).contains(&x[3]));
+        }
+    }
+
+    #[test]
+    fn encoding_is_injective_on_paper_grid() {
+        let d = Domain::paper();
+        let mut seen = std::collections::HashSet::new();
+        for cfg in d.full_grid() {
+            let x = encode(&d, &cfg);
+            let key: Vec<u64> = x.iter().map(|v| v.to_bits()).collect();
+            assert!(seen.insert(key), "duplicate encoding for {}", cfg.label(&d));
+        }
+    }
+
+    #[test]
+    fn foreign_provider_blocks_are_zero() {
+        let d = Domain::paper();
+        let cfg = crate::domain::Config { provider: 1, choices: vec![1, 0], nodes: 5 };
+        let x = encode(&d, &cfg);
+        // AWS block [4..9) and GCP block [13..20) must be zero.
+        assert!(x[4..9].iter().all(|&v| v == 0.0));
+        assert!(x[13..20].iter().all(|&v| v == 0.0));
+        // Azure block has exactly two ones.
+        assert_eq!(x[9..13].iter().sum::<f64>(), 2.0);
+    }
+
+    #[test]
+    fn nodes_normalization_spans_unit_interval() {
+        let d = Domain::paper();
+        let mk = |n| crate::domain::Config { provider: 0, choices: vec![0, 0], nodes: n };
+        assert_eq!(encode(&d, &mk(2))[3], 0.0);
+        assert_eq!(encode(&d, &mk(5))[3], 1.0);
+        assert!((encode(&d, &mk(3))[3] - 1.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,251 @@
+//! The hierarchical multi-cloud configuration domain (paper §III-A).
+//!
+//! Each cloud provider exposes its own categorical parameters (Table II);
+//! the cluster size (`nodes`) is shared. The domain supports three views:
+//!
+//! * **hierarchical** — per-provider grids, used by the `x3` adaptation,
+//!   SMAC-lite / HyperOpt-lite conditional sampling, Rising Bandits and
+//!   CloudBandit arms;
+//! * **flattened**    — one joint grid over all providers, used by the
+//!   `x1` adaptation, random and exhaustive search;
+//! * **encoded**      — a fixed-width one-hot feature vector (width
+//!   [`ENCODED_DIM`] = the AOT artifacts' `D`), shared by every surrogate
+//!   (native and PJRT-backed) so one compiled executable serves them all.
+
+pub mod encoding;
+
+pub use encoding::{encode, ENCODED_DIM};
+
+/// One categorical parameter of a provider (e.g. AWS `family`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParamDef {
+    pub name: &'static str,
+    pub values: Vec<&'static str>,
+}
+
+/// A provider's configuration space: the cross product of its parameters.
+#[derive(Clone, Debug)]
+pub struct ProviderSpace {
+    pub name: &'static str,
+    pub params: Vec<ParamDef>,
+}
+
+impl ProviderSpace {
+    /// Number of parameter combinations (excluding the nodes axis).
+    pub fn type_count(&self) -> usize {
+        self.params.iter().map(|p| p.values.len()).product()
+    }
+
+    /// Decode a flat type index into per-parameter value indices
+    /// (mixed-radix, first parameter most significant).
+    pub fn decode_type(&self, mut idx: usize) -> Vec<usize> {
+        let mut out = vec![0; self.params.len()];
+        for (i, p) in self.params.iter().enumerate().rev() {
+            out[i] = idx % p.values.len();
+            idx /= p.values.len();
+        }
+        out
+    }
+
+    pub fn encode_type(&self, choices: &[usize]) -> usize {
+        assert_eq!(choices.len(), self.params.len());
+        let mut idx = 0;
+        for (p, &c) in self.params.iter().zip(choices) {
+            assert!(c < p.values.len(), "choice out of range");
+            idx = idx * p.values.len() + c;
+        }
+        idx
+    }
+}
+
+/// The full multi-cloud domain.
+#[derive(Clone, Debug)]
+pub struct Domain {
+    pub providers: Vec<ProviderSpace>,
+    pub nodes: Vec<u32>,
+}
+
+/// One point of the domain: a provider, its parameter choices, and the
+/// cluster size.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Config {
+    pub provider: usize,
+    /// Per-parameter value indices into the provider's `params`.
+    pub choices: Vec<usize>,
+    pub nodes: u32,
+}
+
+impl Config {
+    /// Human-readable name, e.g. `aws/family=m4/size=xlarge/nodes=4`.
+    pub fn label(&self, domain: &Domain) -> String {
+        let p = &domain.providers[self.provider];
+        let mut s = p.name.to_string();
+        for (def, &c) in p.params.iter().zip(&self.choices) {
+            s.push_str(&format!("/{}={}", def.name, def.values[c]));
+        }
+        s.push_str(&format!("/nodes={}", self.nodes));
+        s
+    }
+}
+
+impl Domain {
+    /// The paper's exact configuration space (Table II): AWS 24 / Azure 16
+    /// / GCP 48 = 88 multi-cloud configurations, nodes in 2..=5.
+    pub fn paper() -> Domain {
+        Domain {
+            providers: vec![
+                ProviderSpace {
+                    name: "aws",
+                    params: vec![
+                        ParamDef { name: "family", values: vec!["m4", "r4", "c4"] },
+                        ParamDef { name: "size", values: vec!["large", "xlarge"] },
+                    ],
+                },
+                ProviderSpace {
+                    name: "azure",
+                    params: vec![
+                        ParamDef { name: "family", values: vec!["D_v2", "D_v3"] },
+                        ParamDef { name: "cpu_size", values: vec!["2", "4"] },
+                    ],
+                },
+                ProviderSpace {
+                    name: "gcp",
+                    params: vec![
+                        ParamDef { name: "family", values: vec!["e2", "n1"] },
+                        ParamDef {
+                            name: "type",
+                            values: vec!["standard", "highmem", "highcpu"],
+                        },
+                        ParamDef { name: "vcpu", values: vec!["2", "4"] },
+                    ],
+                },
+            ],
+            nodes: vec![2, 3, 4, 5],
+        }
+    }
+
+    pub fn provider_count(&self) -> usize {
+        self.providers.len()
+    }
+
+    pub fn provider_index(&self, name: &str) -> Option<usize> {
+        self.providers.iter().position(|p| p.name == name)
+    }
+
+    /// Configurations for one provider (type grid x nodes).
+    pub fn provider_grid(&self, provider: usize) -> Vec<Config> {
+        let p = &self.providers[provider];
+        let mut out = Vec::with_capacity(p.type_count() * self.nodes.len());
+        for t in 0..p.type_count() {
+            let choices = p.decode_type(t);
+            for &n in &self.nodes {
+                out.push(Config { provider, choices: choices.clone(), nodes: n });
+            }
+        }
+        out
+    }
+
+    /// The full flattened grid across all providers, in stable order
+    /// (provider-major). This order defines `config_id`.
+    pub fn full_grid(&self) -> Vec<Config> {
+        (0..self.providers.len()).flat_map(|p| self.provider_grid(p)).collect()
+    }
+
+    /// Stable index of a config in `full_grid` order.
+    pub fn config_id(&self, cfg: &Config) -> usize {
+        let mut base = 0;
+        for p in 0..cfg.provider {
+            base += self.providers[p].type_count() * self.nodes.len();
+        }
+        let t = self.providers[cfg.provider].encode_type(&cfg.choices);
+        let n_idx = self
+            .nodes
+            .iter()
+            .position(|&n| n == cfg.nodes)
+            .expect("nodes value not in domain");
+        base + t * self.nodes.len() + n_idx
+    }
+
+    pub fn size(&self) -> usize {
+        self.providers
+            .iter()
+            .map(|p| p.type_count() * self.nodes.len())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_domain_cardinalities() {
+        let d = Domain::paper();
+        assert_eq!(d.providers[0].type_count() * d.nodes.len(), 24); // AWS
+        assert_eq!(d.providers[1].type_count() * d.nodes.len(), 16); // Azure
+        assert_eq!(d.providers[2].type_count() * d.nodes.len(), 48); // GCP
+        assert_eq!(d.size(), 88);
+        assert_eq!(d.full_grid().len(), 88);
+    }
+
+    #[test]
+    fn config_ids_are_stable_and_bijective() {
+        let d = Domain::paper();
+        let grid = d.full_grid();
+        for (i, cfg) in grid.iter().enumerate() {
+            assert_eq!(d.config_id(cfg), i, "config {}", cfg.label(&d));
+        }
+    }
+
+    #[test]
+    fn type_roundtrip() {
+        let d = Domain::paper();
+        for p in &d.providers {
+            for t in 0..p.type_count() {
+                let c = p.decode_type(t);
+                assert_eq!(p.encode_type(&c), t);
+            }
+        }
+    }
+
+    #[test]
+    fn labels_are_descriptive() {
+        let d = Domain::paper();
+        let cfg = Config { provider: 2, choices: vec![1, 2, 0], nodes: 3 };
+        assert_eq!(cfg.label(&d), "gcp/family=n1/type=highcpu/vcpu=2/nodes=3");
+    }
+
+    #[test]
+    fn provider_grids_partition_full_grid() {
+        let d = Domain::paper();
+        let total: usize = (0..3).map(|p| d.provider_grid(p).len()).sum();
+        assert_eq!(total, d.size());
+        // No overlap: every config's provider matches its grid.
+        for p in 0..3 {
+            assert!(d.provider_grid(p).iter().all(|c| c.provider == p));
+        }
+    }
+
+    #[test]
+    fn property_config_id_bijection_random_domains() {
+        crate::testkit::check("config_id bijection", 30, |g| {
+            let providers = (0..g.usize_in(1, 4))
+                .map(|pi| ProviderSpace {
+                    name: ["p0", "p1", "p2", "p3"][pi],
+                    params: (0..g.usize_in(1, 3))
+                        .map(|qi| ParamDef {
+                            name: ["a", "b", "c"][qi],
+                            values: vec!["x", "y", "z"][..g.usize_in(1, 3)].to_vec(),
+                        })
+                        .collect(),
+                })
+                .collect::<Vec<_>>();
+            let d = Domain { providers, nodes: vec![2, 3, 4] };
+            let grid = d.full_grid();
+            assert_eq!(grid.len(), d.size());
+            for (i, cfg) in grid.iter().enumerate() {
+                assert_eq!(d.config_id(cfg), i);
+            }
+        });
+    }
+}

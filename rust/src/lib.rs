@@ -1,0 +1,26 @@
+//! multicloud — a reproduction of "Search-based Methods for Multi-Cloud
+//! Configuration" (Lazuka et al., 2022) as a three-layer Rust + JAX +
+//! Pallas system. See DESIGN.md for the architecture and EXPERIMENTS.md
+//! for paper-vs-measured results.
+//!
+//! Layer map:
+//! * L3 (this crate): hierarchical domain, multi-cloud simulator + offline
+//!   dataset, the full optimizer suite incl. CloudBandit, experiment
+//!   coordinator, metrics and report generation.
+//! * L2/L1 (python/compile): AOT-lowered GP / RBF surrogate graphs with
+//!   Pallas Gram kernels, executed by `runtime` via PJRT.
+
+pub mod benchkit;
+pub mod dataset;
+pub mod domain;
+pub mod coordinator;
+pub mod linalg;
+pub mod metrics;
+pub mod optimizers;
+pub mod predictors;
+pub mod report;
+pub mod runtime;
+pub mod simulator;
+pub mod surrogate;
+pub mod testkit;
+pub mod util;

@@ -1,0 +1,378 @@
+//! Dense linear algebra substrate (f64, row-major).
+//!
+//! Backs the native GP surrogate (Cholesky + triangular solves), the
+//! RBF interpolant, and the Ernest-style linear predictor (ridge least
+//! squares). Sizes here are tiny (<= ~100), so clarity beats blocking;
+//! the AOT/PJRT path owns the "big" math.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Matrix {
+        assert!(!rows.is_empty());
+        let cols = rows[0].len();
+        let mut m = Matrix::zeros(rows.len(), cols);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.len(), cols, "ragged rows");
+            m.data[i * cols..(i + 1) * cols].copy_from_slice(r);
+        }
+        m
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// self * other.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, &b) in out_row.iter_mut().zip(orow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// self * v (matrix-vector).
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len(), "matvec shape mismatch");
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(v).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    /// self^T * v.
+    pub fn matvec_t(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, v.len(), "matvec_t shape mismatch");
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let vi = v[i];
+            if vi == 0.0 {
+                continue;
+            }
+            for (o, &a) in out.iter_mut().zip(self.row(i)) {
+                *o += a * vi;
+            }
+        }
+        out
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Cholesky factorization A = L L^T of an SPD matrix. Returns None if a
+/// non-positive pivot appears (caller should add jitter and retry).
+pub fn cholesky(a: &Matrix) -> Option<Matrix> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if s <= 0.0 || !s.is_finite() {
+                    return None;
+                }
+                l[(i, j)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L y = b (forward substitution), L lower-triangular.
+pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[(i, k)] * y[k];
+        }
+        y[i] = s / l[(i, i)];
+    }
+    y
+}
+
+/// Solve L^T x = b (back substitution), L lower-triangular.
+pub fn solve_upper_t(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for k in i + 1..n {
+            s -= l[(k, i)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    x
+}
+
+/// Solve A x = b for SPD A via Cholesky with escalating jitter.
+pub fn solve_spd(a: &Matrix, b: &[f64]) -> Option<Vec<f64>> {
+    let mut jitter = 0.0;
+    for attempt in 0..6 {
+        let mut aj = a.clone();
+        if attempt > 0 {
+            jitter = if jitter == 0.0 { 1e-10 } else { jitter * 100.0 };
+            for i in 0..aj.rows {
+                aj[(i, i)] += jitter;
+            }
+        }
+        if let Some(l) = cholesky(&aj) {
+            let y = solve_lower(&l, b);
+            return Some(solve_upper_t(&l, &y));
+        }
+    }
+    None
+}
+
+/// Solve a general square system A x = b by Gaussian elimination with
+/// partial pivoting (for the RBF saddle system, which is indefinite).
+pub fn solve_general(a: &Matrix, b: &[f64]) -> Option<Vec<f64>> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    assert_eq!(b.len(), n);
+    let mut m = a.clone();
+    let mut x = b.to_vec();
+    for col in 0..n {
+        // Partial pivot.
+        let (piv, pmax) = (col..n)
+            .map(|r| (r, m[(r, col)].abs()))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        if pmax < 1e-300 || !pmax.is_finite() {
+            return None;
+        }
+        if piv != col {
+            for j in 0..n {
+                let tmp = m[(col, j)];
+                m[(col, j)] = m[(piv, j)];
+                m[(piv, j)] = tmp;
+            }
+            x.swap(col, piv);
+        }
+        let d = m[(col, col)];
+        for r in col + 1..n {
+            let f = m[(r, col)] / d;
+            if f == 0.0 {
+                continue;
+            }
+            m[(r, col)] = 0.0;
+            for j in col + 1..n {
+                let v = m[(col, j)];
+                m[(r, j)] -= f * v;
+            }
+            x[r] -= f * x[col];
+        }
+    }
+    // Back substitution.
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        for j in i + 1..n {
+            s -= m[(i, j)] * x[j];
+        }
+        x[i] = s / m[(i, i)];
+    }
+    Some(x)
+}
+
+/// Ridge least squares: argmin ||X w - y||^2 + ridge ||w||^2, via normal
+/// equations + SPD solve. X: [n, p], y: [n].
+pub fn lstsq_ridge(x: &Matrix, y: &[f64], ridge: f64) -> Option<Vec<f64>> {
+    assert_eq!(x.rows, y.len());
+    let p = x.cols;
+    let mut xtx = Matrix::zeros(p, p);
+    for r in 0..x.rows {
+        let row = x.row(r);
+        for i in 0..p {
+            for j in 0..p {
+                xtx[(i, j)] += row[i] * row[j];
+            }
+        }
+    }
+    for i in 0..p {
+        xtx[(i, i)] += ridge;
+    }
+    let xty = x.matvec_t(y);
+    solve_spd(&xtx, &xty)
+}
+
+/// Log-determinant of L L^T given L: 2 * sum(log diag L).
+pub fn logdet_from_chol(l: &Matrix) -> f64 {
+    (0..l.rows).map(|i| l[(i, i)].ln()).sum::<f64>() * 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, rng: &mut Rng) -> Matrix {
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] = rng.normal();
+            }
+        }
+        let at = a.transpose();
+        let mut spd = at.matmul(&a);
+        for i in 0..n {
+            spd[(i, i)] += n as f64;
+        }
+        spd
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = random_spd(5, &mut rng);
+        let i = Matrix::identity(5);
+        assert_eq!(a.matmul(&i), a);
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(2);
+        let a = random_spd(8, &mut rng);
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul(&l.transpose());
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((rec[(i, j)] - a[(i, j)]).abs() < 1e-9, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = Matrix::identity(3);
+        a[(2, 2)] = -1.0;
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn spd_solve_residual() {
+        let mut rng = Rng::new(3);
+        let a = random_spd(10, &mut rng);
+        let b: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
+        let x = solve_spd(&a, &b).unwrap();
+        let r = a.matvec(&x);
+        for i in 0..10 {
+            assert!((r[i] - b[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn general_solve_with_pivoting() {
+        // Needs pivoting: zero on the leading diagonal.
+        let a = Matrix::from_rows(&[
+            vec![0.0, 2.0, 1.0],
+            vec![1.0, -2.0, -3.0],
+            vec![-1.0, 1.0, 2.0],
+        ]);
+        let b = vec![-8.0, 0.0, 3.0];
+        let x = solve_general(&a, &b).unwrap();
+        let r = a.matvec(&x);
+        for i in 0..3 {
+            assert!((r[i] - b[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn general_solve_singular_is_none() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]);
+        assert!(solve_general(&a, &[1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn lstsq_recovers_exact_fit() {
+        // y = 3 + 2u over a few points, X = [1, u].
+        let us = [0.0, 1.0, 2.0, 3.0];
+        let x = Matrix::from_rows(&us.iter().map(|&u| vec![1.0, u]).collect::<Vec<_>>());
+        let y: Vec<f64> = us.iter().map(|&u| 3.0 + 2.0 * u).collect();
+        let w = lstsq_ridge(&x, &y, 1e-12).unwrap();
+        assert!((w[0] - 3.0).abs() < 1e-6);
+        assert!((w[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn triangular_solves_roundtrip() {
+        let mut rng = Rng::new(4);
+        let a = random_spd(6, &mut rng);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        let y = solve_lower(&l, &b);
+        let x = solve_upper_t(&l, &y);
+        let r = a.matvec(&x);
+        for i in 0..6 {
+            assert!((r[i] - b[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn logdet_matches_direct() {
+        let a = Matrix::from_rows(&[vec![4.0, 0.0], vec![0.0, 9.0]]);
+        let l = cholesky(&a).unwrap();
+        assert!((logdet_from_chol(&l) - (36.0f64).ln()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,446 @@
+//! multicloud — CLI launcher for the multi-cloud configuration system.
+//!
+//! Subcommands:
+//!   generate-dataset  materialize the offline benchmark dataset (CSV)
+//!   optimize          run one optimizer on one (workload, target) task
+//!   figures           regenerate the paper's tables/figures (T1/T2/F2/F3/F4)
+//!   savings           the §IV-E savings analysis (Figure 4 numbers)
+//!   serve             TCP optimization service (line-delimited JSON)
+//!   inspect           show a workload's ground-truth response surface
+//!
+//! Run `multicloud <cmd> --help` for per-command options.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use multicloud::coordinator::experiment::RegretGrid;
+use multicloud::coordinator::savings::{savings_analysis, SavingsConfig};
+use multicloud::coordinator::service::Service;
+use multicloud::dataset::{OfflineDataset, Target, BOTH_TARGETS};
+use multicloud::optimizers::ALL_OPTIMIZERS;
+use multicloud::report::figures;
+use multicloud::runtime::{artifact_dir, ArtifactBackend};
+use multicloud::surrogate::{Backend, NativeBackend};
+use multicloud::util::cli::Command;
+
+const DATASET_SEED: u64 = 2022;
+const DATASET_REPS: usize = 5;
+
+/// Figure 2's method set (adapted SOTA + predictors + RS).
+const FIG2_METHODS: [&str; 7] = [
+    "predict-linear",
+    "predict-rf",
+    "rs",
+    "cherrypick-x1",
+    "cherrypick-x3",
+    "bilal-x1",
+    "bilal-x3",
+];
+
+/// Figure 3's method set (hierarchical methods + references).
+const FIG3_METHODS: [&str; 8] = [
+    "rs",
+    "cherrypick-x1",
+    "cherrypick-x3",
+    "smac",
+    "hyperopt",
+    "rb",
+    "cb-cherrypick",
+    "cb-rbfopt",
+];
+
+/// Figure 4's method set.
+const FIG4_METHODS: [&str; 4] = ["smac", "cb-rbfopt", "rs", "exhaustive"];
+
+fn load_backend(native: bool, artifacts: &str) -> Box<dyn Backend + Send + Sync> {
+    if native {
+        eprintln!("[backend] native Rust surrogates (--native)");
+        return Box::new(NativeBackend);
+    }
+    match ArtifactBackend::load(artifacts) {
+        Ok(b) => {
+            eprintln!(
+                "[backend] PJRT artifacts from '{artifacts}' (N={}, M={}, D={})",
+                b.manifest.n_max, b.manifest.m_max, b.manifest.d
+            );
+            Box::new(b)
+        }
+        Err(e) => {
+            eprintln!("[backend] artifacts unavailable ({e}); falling back to native");
+            Box::new(NativeBackend)
+        }
+    }
+}
+
+fn load_dataset(path: &str) -> OfflineDataset {
+    if path.is_empty() {
+        OfflineDataset::generate(DATASET_SEED, DATASET_REPS)
+    } else {
+        OfflineDataset::load_or_generate(path, DATASET_SEED, DATASET_REPS)
+            .unwrap_or_else(|e| fail(&format!("loading dataset {path}: {e}")))
+    }
+}
+
+fn fail(msg: &str) -> ! {
+    eprintln!("error: {msg}");
+    std::process::exit(2);
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().map(|s| s.as_str()) else {
+        eprintln!("{}", usage());
+        std::process::exit(2);
+    };
+    let rest = &argv[1..];
+    let code = match cmd {
+        "generate-dataset" => cmd_generate(rest),
+        "optimize" => cmd_optimize(rest),
+        "experiment" => cmd_experiment(rest),
+        "figures" => cmd_figures(rest),
+        "savings" => cmd_savings(rest),
+        "serve" => cmd_serve(rest),
+        "inspect" => cmd_inspect(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n\n{}", usage());
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    "multicloud — search-based multi-cloud configuration (paper reproduction)\n\
+     \n\
+     commands:\n\
+       generate-dataset   materialize the offline benchmark dataset\n\
+       optimize           run one optimizer on one task\n\
+       experiment         run a declarative experiment spec (JSON)\n\
+       figures            regenerate Table I/II, Figures 2/3/4\n\
+       savings            production savings analysis (Fig. 4 numbers)\n\
+       serve              TCP optimization service\n\
+       inspect            ground-truth surface of one workload\n"
+        .to_string()
+}
+
+fn parse_or_exit(c: Command, args: &[String]) -> multicloud::util::cli::Args {
+    match c.parse(args) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_generate(args: &[String]) -> i32 {
+    let c = Command::new("generate-dataset", "materialize the offline benchmark dataset")
+        .opt("out", "data/offline.csv", "output CSV path")
+        .opt("seed", "2022", "simulator seed")
+        .opt("reps", "5", "measurement repetitions per configuration");
+    let a = parse_or_exit(c, args);
+    let ds = OfflineDataset::generate(a.u64("seed").unwrap(), a.usize("reps").unwrap());
+    let out = a.get("out");
+    if let Some(dir) = std::path::Path::new(out).parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    std::fs::write(out, ds.to_csv()).unwrap_or_else(|e| fail(&e.to_string()));
+    println!(
+        "wrote {} ({} workloads x {} configs x {} reps)",
+        out,
+        ds.workload_count(),
+        ds.domain.size(),
+        ds.reps
+    );
+    0
+}
+
+fn cmd_optimize(args: &[String]) -> i32 {
+    let c = Command::new("optimize", "run one optimizer on one (workload, target) task")
+        .opt("workload", "kmeans:santander", "workload id (task:dataset)")
+        .opt("target", "cost", "optimization target: cost | time")
+        .opt("method", "cb-rbfopt", "optimizer name")
+        .opt("budget", "33", "search budget (evaluations)")
+        .opt("seed", "0", "random seed")
+        .opt("dataset", "", "offline dataset CSV (empty = regenerate)")
+        .opt("artifacts", "", "artifact directory (default: ./artifacts)")
+        .flag("native", "use native surrogates instead of PJRT artifacts");
+    let a = parse_or_exit(c, args);
+    let ds = load_dataset(a.get("dataset"));
+    let art = a.get("artifacts");
+    let backend =
+        load_backend(a.flag("native"), &artifact_dir(Some(art).filter(|s| !s.is_empty())));
+    let workload = ds
+        .workload_index(a.get("workload"))
+        .unwrap_or_else(|| fail(&format!("unknown workload '{}'", a.get("workload"))));
+    let target = Target::parse(a.get("target")).unwrap_or_else(|| fail("bad target"));
+    let method = a.get("method").to_string();
+    if !ALL_OPTIMIZERS.contains(&method.as_str())
+        && !multicloud::coordinator::experiment::PREDICTORS.contains(&method.as_str())
+    {
+        fail(&format!("unknown method '{method}'"));
+    }
+
+    let spec = multicloud::coordinator::experiment::TrialSpec {
+        method,
+        workload,
+        target,
+        budget: a.usize("budget").unwrap(),
+        seed: a.u64("seed").unwrap(),
+    };
+    let r = multicloud::coordinator::experiment::run_trial(&ds, backend.as_ref(), &spec);
+    let (_, true_min) = ds.true_min(workload, target);
+    println!("workload        : {}", a.get("workload"));
+    println!("target          : {}", target.name());
+    println!("method          : {}", spec.method);
+    println!("budget          : {}", spec.budget);
+    println!("evaluations     : {}", r.evals);
+    println!("chosen value    : {:.4}", r.chosen_value);
+    println!("true optimum    : {true_min:.4}");
+    println!("regret          : {:.4}", r.regret);
+    println!("search expense  : {:.4}", r.search_expense);
+    0
+}
+
+fn cmd_experiment(args: &[String]) -> i32 {
+    let c = Command::new("experiment", "run a declarative experiment spec (JSON)")
+        .req("spec", "path to the experiment spec JSON (see coordinator::spec)")
+        .opt("out", "results", "output directory")
+        .opt("workers", "0", "worker threads (0 = all cores)")
+        .opt("dataset", "", "offline dataset CSV (empty = regenerate)")
+        .flag("native", "use native surrogates instead of PJRT artifacts");
+    let a = parse_or_exit(c, args);
+    let spec = multicloud::coordinator::spec::ExperimentSpec::load(a.get("spec"))
+        .unwrap_or_else(|e| fail(&e));
+    let ds = load_dataset(a.get("dataset"));
+    let backend = load_backend(a.flag("native"), &artifact_dir(None));
+
+    let workload_filter: Vec<usize> = spec
+        .workloads
+        .iter()
+        .map(|id| ds.workload_index(id).unwrap_or_else(|| fail(&format!("unknown workload '{id}'"))))
+        .collect();
+
+    let mut grid = RegretGrid::new(&ds, backend.as_ref());
+    grid.methods = spec.methods.clone();
+    grid.budgets = spec.budgets.clone();
+    grid.seeds = spec.seeds;
+    grid.targets = spec.targets.clone();
+    grid.workload_filter = workload_filter;
+    grid.workers = match a.usize("workers").unwrap() {
+        0 => multicloud::util::threadpool::default_workers(),
+        w => w,
+    };
+    grid.verbose = true;
+    let curves = grid.run();
+
+    let ascii = figures::regret_ascii(&spec.name, &curves, &spec.targets);
+    println!("{ascii}");
+    let out = a.get("out");
+    std::fs::create_dir_all(out).ok();
+    let csv_path = format!("{out}/{}.csv", spec.name);
+    std::fs::write(&csv_path, figures::regret_csv(&curves)).unwrap_or_else(|e| fail(&e.to_string()));
+    eprintln!("[experiment] wrote {csv_path}");
+    0
+}
+
+struct FigureOpts {
+    out: String,
+    seeds: usize,
+    workers: usize,
+}
+
+fn write_result(opts: &FigureOpts, name: &str, content: &str) {
+    std::fs::create_dir_all(&opts.out).ok();
+    let path = format!("{}/{}", opts.out, name);
+    std::fs::write(&path, content).unwrap_or_else(|e| fail(&e.to_string()));
+    eprintln!("[figures] wrote {path}");
+}
+
+fn cmd_figures(args: &[String]) -> i32 {
+    let c = Command::new("figures", "regenerate the paper's tables and figures")
+        .flag("table1", "Table I (state-of-the-art summary)")
+        .flag("table2", "Table II (tasks + configuration space)")
+        .flag("fig2", "Figure 2 (adapted SOTA regret)")
+        .flag("fig3", "Figure 3 (hierarchical methods regret)")
+        .flag("fig4", "Figure 4 (savings box plots)")
+        .flag("all", "everything")
+        .opt("out", "results", "output directory for CSV/text")
+        .opt("seeds", "50", "random repetitions per (method, workload, budget)")
+        .opt("budgets", "11,22,33,44,55,66,77,88", "budget grid")
+        .opt("workers", "0", "worker threads (0 = all cores)")
+        .opt("dataset", "", "offline dataset CSV (empty = regenerate)")
+        .opt("artifacts", "", "artifact directory")
+        .flag("native", "use native surrogates instead of PJRT artifacts");
+    let a = parse_or_exit(c, args);
+    let all = a.flag("all");
+    let ds = load_dataset(a.get("dataset"));
+    let art = a.get("artifacts");
+    let backend =
+        load_backend(a.flag("native"), &artifact_dir(Some(art).filter(|s| !s.is_empty())));
+    let budgets: Vec<usize> = a
+        .list("budgets")
+        .iter()
+        .map(|b| b.parse().unwrap_or_else(|_| fail("bad --budgets")))
+        .collect();
+    let opts = FigureOpts {
+        out: a.get("out").to_string(),
+        seeds: a.usize("seeds").unwrap(),
+        workers: match a.usize("workers").unwrap() {
+            0 => multicloud::util::threadpool::default_workers(),
+            w => w,
+        },
+    };
+
+    if all || a.flag("table1") {
+        let t = figures::table1();
+        println!("{t}");
+        write_result(&opts, "table1.txt", &t);
+    }
+    if all || a.flag("table2") {
+        let t = figures::table2(&ds.domain);
+        println!("{t}");
+        write_result(&opts, "table2.txt", &t);
+    }
+
+    let mut run_fig = |name: &str, methods: &[&str]| {
+        eprintln!(
+            "[figures] running {name} grid ({} methods, {} budgets, {} seeds)...",
+            methods.len(),
+            budgets.len(),
+            opts.seeds
+        );
+        let started = std::time::Instant::now();
+        let mut grid = RegretGrid::new(&ds, backend.as_ref());
+        grid.methods = methods.iter().map(|m| m.to_string()).collect();
+        grid.budgets = budgets.clone();
+        grid.seeds = opts.seeds;
+        grid.workers = opts.workers;
+        grid.verbose = true;
+        let curves = grid.run();
+        eprintln!("[figures] {name} done in {:.1}s", started.elapsed().as_secs_f64());
+        let ascii = figures::regret_ascii(name, &curves, &BOTH_TARGETS);
+        println!("{ascii}");
+        write_result(&opts, &format!("{name}.csv"), &figures::regret_csv(&curves));
+        write_result(&opts, &format!("{name}.txt"), &ascii);
+    };
+
+    if all || a.flag("fig2") {
+        run_fig("fig2", &FIG2_METHODS);
+    }
+    if all || a.flag("fig3") {
+        run_fig("fig3", &FIG3_METHODS);
+    }
+    if all || a.flag("fig4") {
+        let cfg = SavingsConfig { seeds: opts.seeds, workers: opts.workers, ..Default::default() };
+        let methods: Vec<String> = FIG4_METHODS.iter().map(|m| m.to_string()).collect();
+        let mut all_dists = Vec::new();
+        for target in BOTH_TARGETS {
+            eprintln!("[figures] savings analysis, target {}", target.name());
+            let dists = savings_analysis(&ds, backend.as_ref(), &methods, target, &cfg);
+            println!(
+                "-- Figure 4, target: {} (B={}, N={}) --",
+                target.name(),
+                cfg.budget,
+                cfg.production_runs
+            );
+            println!("{}", figures::savings_ascii(&dists));
+            all_dists.extend(dists);
+        }
+        write_result(&opts, "fig4.csv", &figures::savings_csv(&ds, &all_dists));
+    }
+    0
+}
+
+fn cmd_savings(args: &[String]) -> i32 {
+    let c = Command::new("savings", "production savings analysis (§IV-E)")
+        .opt("methods", "smac,cb-rbfopt,rs,exhaustive", "comma-separated methods")
+        .opt("target", "cost", "cost | time")
+        .opt("budget", "33", "search budget B")
+        .opt("runs", "64", "production runs N")
+        .opt("seeds", "50", "random repetitions")
+        .opt("workers", "0", "worker threads (0 = all cores)")
+        .opt("dataset", "", "offline dataset CSV (empty = regenerate)")
+        .flag("native", "use native surrogates");
+    let a = parse_or_exit(c, args);
+    let ds = load_dataset(a.get("dataset"));
+    let backend = load_backend(a.flag("native"), &artifact_dir(None));
+    let target = Target::parse(a.get("target")).unwrap_or_else(|| fail("bad target"));
+    let cfg = SavingsConfig {
+        budget: a.usize("budget").unwrap(),
+        production_runs: a.usize("runs").unwrap(),
+        seeds: a.usize("seeds").unwrap(),
+        workers: match a.usize("workers").unwrap() {
+            0 => multicloud::util::threadpool::default_workers(),
+            w => w,
+        },
+    };
+    let methods = a.list("methods");
+    let dists = savings_analysis(&ds, backend.as_ref(), &methods, target, &cfg);
+    println!(
+        "savings vs random provider+configuration (target {}, B={}, N={}):\n",
+        target.name(),
+        cfg.budget,
+        cfg.production_runs
+    );
+    println!("{}", figures::savings_ascii(&dists));
+    0
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let c = Command::new("serve", "TCP optimization service (line-delimited JSON)")
+        .opt("addr", "127.0.0.1:7077", "bind address")
+        .opt("dataset", "", "offline dataset CSV (empty = regenerate)")
+        .flag("native", "use native surrogates");
+    let a = parse_or_exit(c, args);
+    let ds = Arc::new(load_dataset(a.get("dataset")));
+    let backend: Arc<dyn Backend + Send + Sync> =
+        Arc::from(load_backend(a.flag("native"), &artifact_dir(None)));
+    let svc = Arc::new(Service::new(ds, backend));
+    let stop = Arc::new(AtomicBool::new(false));
+    let (port, handle) = svc.serve(a.get("addr"), stop).unwrap_or_else(|e| fail(&e.to_string()));
+    println!(
+        "listening on port {port} (line-delimited JSON; op: optimize | list_workloads | list_methods | ping)"
+    );
+    handle.join().ok();
+    0
+}
+
+fn cmd_inspect(args: &[String]) -> i32 {
+    let c = Command::new("inspect", "ground-truth response surface of one workload")
+        .opt("workload", "kmeans:santander", "workload id")
+        .opt("target", "cost", "cost | time")
+        .opt("top", "10", "show the best N configurations")
+        .opt("dataset", "", "offline dataset CSV (empty = regenerate)");
+    let a = parse_or_exit(c, args);
+    let ds = load_dataset(a.get("dataset"));
+    let w = ds
+        .workload_index(a.get("workload"))
+        .unwrap_or_else(|| fail(&format!("unknown workload '{}'", a.get("workload"))));
+    let target = Target::parse(a.get("target")).unwrap_or_else(|| fail("bad target"));
+    let grid = ds.domain.full_grid();
+    let mut vals: Vec<(usize, f64)> =
+        (0..grid.len()).map(|c| (c, ds.mean_value(w, c, target))).collect();
+    vals.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    let top = a.usize("top").unwrap().min(vals.len());
+    println!(
+        "{} / {} — best {top} of {} configurations (mean of {} reps):",
+        a.get("workload"),
+        target.name(),
+        grid.len(),
+        ds.reps
+    );
+    let header = vec!["rank".to_string(), "configuration".to_string(), target.name().to_string()];
+    let rows: Vec<Vec<String>> = vals[..top]
+        .iter()
+        .enumerate()
+        .map(|(i, (c, v))| vec![format!("{}", i + 1), grid[*c].label(&ds.domain), format!("{v:.4}")])
+        .collect();
+    println!("{}", multicloud::report::ascii_table(&header, &rows));
+    println!("random-strategy expectation: {:.4}", ds.random_strategy_value(w, target));
+    0
+}

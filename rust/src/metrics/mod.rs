@@ -1,0 +1,76 @@
+//! Evaluation metrics: regret (§IV-B) and production savings (§IV-E).
+
+use crate::util::stats;
+
+/// Relative distance of the chosen configuration's ground-truth value to
+/// the true minimum: (v - v*) / v*. Zero iff the optimum was found.
+pub fn regret(chosen_value: f64, true_min: f64) -> f64 {
+    assert!(true_min > 0.0, "true_min must be positive");
+    (chosen_value - true_min) / true_min
+}
+
+/// Savings of an optimized deployment over the random-choice strategy
+/// (§IV-E):
+///
+///   S = (N*R_rand - (C_opt + N*R_opt)) / (N*R_rand)
+///
+/// * `c_opt`  — one-time search expense (sum of the target metric over
+///   every configuration the optimizer evaluated);
+/// * `r_opt`  — per-run expense of the returned configuration;
+/// * `r_rand` — expected per-run expense of a uniformly random
+///   configuration;
+/// * `n_runs` — production runs amortizing the search.
+pub fn savings(c_opt: f64, r_opt: f64, r_rand: f64, n_runs: usize) -> f64 {
+    let n = n_runs as f64;
+    assert!(r_rand > 0.0 && n > 0.0);
+    (n * r_rand - (c_opt + n * r_opt)) / (n * r_rand)
+}
+
+/// Aggregate per-(workload, seed) regrets into the figure's scalar: mean
+/// over seeds, then mean over workloads (each inner slice = one workload's
+/// seeds).
+pub fn mean_regret_over_workloads(per_workload_seed: &[Vec<f64>]) -> f64 {
+    let per_workload: Vec<f64> = per_workload_seed
+        .iter()
+        .filter(|seeds| !seeds.is_empty()) // workload filtered out of the grid
+        .map(|seeds| stats::mean(seeds))
+        .collect();
+    stats::mean(&per_workload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regret_zero_at_optimum() {
+        assert_eq!(regret(10.0, 10.0), 0.0);
+        assert!((regret(15.0, 10.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn savings_signs() {
+        // Finding a config 2x cheaper, negligible search cost: ~50%.
+        let s = savings(0.0, 5.0, 10.0, 64);
+        assert!((s - 0.5).abs() < 1e-12);
+        // Exhaustive-search-like: huge search cost -> negative.
+        let s2 = savings(10_000.0, 5.0, 10.0, 64);
+        assert!(s2 < 0.0);
+        // No improvement, nonzero search cost -> negative.
+        assert!(savings(1.0, 10.0, 10.0, 64) < 0.0);
+    }
+
+    #[test]
+    fn savings_improve_with_amortization() {
+        let short = savings(100.0, 5.0, 10.0, 4);
+        let long = savings(100.0, 5.0, 10.0, 1000);
+        assert!(long > short);
+    }
+
+    #[test]
+    fn aggregation_weights_workloads_equally() {
+        // Workload A has 2 seeds, workload B has 4 — B must not dominate.
+        let a = vec![vec![1.0, 1.0], vec![0.0, 0.0, 0.0, 0.0]];
+        assert!((mean_regret_over_workloads(&a) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,321 @@
+//! Bayesian optimization core + the two multi-cloud adaptations of §III-B.
+//!
+//! [`BoState`] is an *incrementally steppable* BO loop over an explicit
+//! candidate grid (a provider's grid, or the flattened multi-cloud grid):
+//! CloudBandit and Rising Bandits pull arms by stepping these states, and
+//! the standalone `x1` / `x3` optimizers drive them to budget exhaustion.
+//!
+//! Presets:
+//! * **CherryPick** [1]: GP surrogate (Matern-5/2) + EI.
+//! * **Bilal et al.** [3]: GP + LCB when optimizing cost, RF + PI when
+//!   optimizing time (their reported best flavours).
+//!
+//! Both presets may re-evaluate configurations (scikit-optimize behaviour;
+//! the paper calls out the wasted evaluations this causes — SMAC-lite's
+//! no-repeat rule is its advantage).
+
+use super::{Optimizer, SearchContext, SearchResult};
+use crate::dataset::objective::Objective;
+use crate::dataset::Target;
+use crate::domain::{encode, Config};
+use crate::surrogate::rf::{RandomForest, RfParams};
+use crate::surrogate::{Acquisition, Prediction, Surrogate};
+use crate::util::rng::Rng;
+
+/// Which surrogate a preset uses.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SurrogateKind {
+    Gp,
+    Rf,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BoPreset {
+    pub surrogate: SurrogateKind,
+    pub acquisition: Acquisition,
+    pub n_init: usize,
+    /// Whether the proposal may revisit already-evaluated candidates.
+    pub allow_repeats: bool,
+}
+
+impl BoPreset {
+    pub fn cherrypick() -> BoPreset {
+        BoPreset {
+            surrogate: SurrogateKind::Gp,
+            acquisition: Acquisition::Ei,
+            n_init: 3,
+            allow_repeats: true,
+        }
+    }
+
+    /// Bilal et al.: target-dependent best flavour.
+    pub fn bilal(target: Target) -> BoPreset {
+        match target {
+            Target::Cost => BoPreset {
+                surrogate: SurrogateKind::Gp,
+                acquisition: Acquisition::Lcb { kappa: 1.96 },
+                n_init: 3,
+                allow_repeats: true,
+            },
+            Target::Time => BoPreset {
+                surrogate: SurrogateKind::Rf,
+                acquisition: Acquisition::Pi,
+                n_init: 3,
+                allow_repeats: true,
+            },
+        }
+    }
+}
+
+/// Steppable BO over a fixed candidate set.
+pub struct BoState {
+    pub cands: Vec<Config>,
+    enc: Vec<Vec<f64>>,
+    preset: BoPreset,
+    obs_x: Vec<Vec<f64>>,
+    obs_cfg_idx: Vec<usize>,
+    ys: Vec<f64>,
+    evaluated: Vec<bool>,
+    rf_seed: u64,
+}
+
+impl BoState {
+    pub fn new(ctx: &SearchContext, cands: Vec<Config>, preset: BoPreset) -> BoState {
+        assert!(!cands.is_empty());
+        let enc = cands.iter().map(|c| encode(ctx.domain, c)).collect();
+        let evaluated = vec![false; cands.len()];
+        BoState { cands, enc, preset, obs_x: Vec::new(), obs_cfg_idx: Vec::new(), ys: Vec::new(), evaluated, rf_seed: 0 }
+    }
+
+    pub fn observations(&self) -> usize {
+        self.ys.len()
+    }
+
+    /// The most recently evaluated (config, value), if any.
+    pub fn last(&self) -> Option<(Config, f64)> {
+        let i = *self.obs_cfg_idx.last()?;
+        Some((self.cands[i].clone(), *self.ys.last()?))
+    }
+
+    /// Best (config, observed value) so far, if any.
+    pub fn best(&self) -> Option<(Config, f64)> {
+        let i = self
+            .ys
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())?
+            .0;
+        Some((self.cands[self.obs_cfg_idx[i]].clone(), self.ys[i]))
+    }
+
+    fn propose(&mut self, ctx: &SearchContext, rng: &mut Rng) -> usize {
+        // Init design: uniform random (distinct while possible).
+        if self.obs_x.len() < self.preset.n_init {
+            let unseen: Vec<usize> =
+                (0..self.cands.len()).filter(|&i| !self.evaluated[i]).collect();
+            return if unseen.is_empty() {
+                rng.usize_below(self.cands.len())
+            } else {
+                *rng.choice(&unseen)
+            };
+        }
+
+        let pred: Prediction = match self.preset.surrogate {
+            SurrogateKind::Gp => ctx.backend.gp_fit_predict(&self.obs_x, &self.ys, &self.enc),
+            SurrogateKind::Rf => {
+                self.rf_seed += 1;
+                let mut rf = RandomForest::new(RfParams { seed: self.rf_seed, ..Default::default() });
+                rf.fit_predict(&self.obs_x, &self.ys, &self.enc)
+            }
+        };
+        let best_y = self.ys.iter().copied().fold(f64::INFINITY, f64::min);
+        let excluded: Vec<bool> = if self.preset.allow_repeats {
+            vec![false; self.cands.len()]
+        } else {
+            self.evaluated.clone()
+        };
+        self.preset
+            .acquisition
+            .argmax(&pred, best_y, &excluded)
+            .unwrap_or_else(|| rng.usize_below(self.cands.len()))
+    }
+
+    /// One BO iteration: propose, evaluate, record. Returns the observed
+    /// value.
+    pub fn step(&mut self, ctx: &SearchContext, obj: &mut dyn Objective, rng: &mut Rng) -> f64 {
+        let i = self.propose(ctx, rng);
+        let v = obj.eval(&self.cands[i]);
+        self.obs_x.push(self.enc[i].clone());
+        self.obs_cfg_idx.push(i);
+        self.ys.push(v);
+        self.evaluated[i] = true;
+        v
+    }
+}
+
+// ---------------------------------------------------------------------------
+// §III-B1: flattened-domain adaptation ("x1")
+
+pub struct FlattenedBo {
+    label: &'static str,
+    preset_for: fn(Target) -> BoPreset,
+}
+
+impl FlattenedBo {
+    pub fn cherrypick() -> Self {
+        FlattenedBo { label: "cherrypick-x1", preset_for: |_| BoPreset::cherrypick() }
+    }
+
+    pub fn bilal() -> Self {
+        FlattenedBo { label: "bilal-x1", preset_for: BoPreset::bilal }
+    }
+}
+
+impl Optimizer for FlattenedBo {
+    fn name(&self) -> String {
+        self.label.into()
+    }
+
+    fn run(
+        &self,
+        ctx: &SearchContext,
+        obj: &mut dyn Objective,
+        budget: usize,
+        rng: &mut Rng,
+    ) -> SearchResult {
+        let mut state = BoState::new(ctx, ctx.domain.full_grid(), (self.preset_for)(ctx.target));
+        let mut history = Vec::with_capacity(budget);
+        for _ in 0..budget {
+            let v = state.step(ctx, obj, rng);
+            let i = *state.obs_cfg_idx.last().unwrap();
+            history.push((state.cands[i].clone(), v));
+        }
+        SearchResult::from_history(&history)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// §III-B2: independent per-provider optimizers ("x3")
+
+pub struct IndependentBo {
+    label: &'static str,
+    preset_for: fn(Target) -> BoPreset,
+}
+
+impl IndependentBo {
+    pub fn cherrypick() -> Self {
+        IndependentBo { label: "cherrypick-x3", preset_for: |_| BoPreset::cherrypick() }
+    }
+
+    pub fn bilal() -> Self {
+        IndependentBo { label: "bilal-x3", preset_for: BoPreset::bilal }
+    }
+}
+
+impl Optimizer for IndependentBo {
+    fn name(&self) -> String {
+        self.label.into()
+    }
+
+    /// Budget is split equally across the K providers (B/K each, paper
+    /// §III-B2); the leftover B mod K goes to the first providers.
+    fn run(
+        &self,
+        ctx: &SearchContext,
+        obj: &mut dyn Objective,
+        budget: usize,
+        rng: &mut Rng,
+    ) -> SearchResult {
+        let k = ctx.domain.provider_count();
+        let preset = (self.preset_for)(ctx.target);
+        let mut history = Vec::with_capacity(budget);
+        for p in 0..k {
+            let share = budget / k + usize::from(p < budget % k);
+            let mut state = BoState::new(ctx, ctx.domain.provider_grid(p), preset);
+            for _ in 0..share {
+                let v = state.step(ctx, obj, rng);
+                let i = *state.obs_cfg_idx.last().unwrap();
+                history.push((state.cands[i].clone(), v));
+            }
+        }
+        SearchResult::from_history(&history)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::objective::{LookupObjective, MeasureMode};
+    use crate::dataset::{OfflineDataset, Target};
+    use crate::surrogate::NativeBackend;
+
+    fn ctx<'a>(ds: &'a OfflineDataset, backend: &'a NativeBackend, t: Target) -> SearchContext<'a> {
+        SearchContext { domain: &ds.domain, target: t, backend }
+    }
+
+    #[test]
+    fn bo_state_steps_and_tracks_best() {
+        let ds = OfflineDataset::generate(1, 3);
+        let backend = NativeBackend;
+        let c = ctx(&ds, &backend, Target::Cost);
+        let mut obj = LookupObjective::new(&ds, 2, Target::Cost, MeasureMode::SingleDraw, 1);
+        let mut st = BoState::new(&c, ds.domain.provider_grid(0), BoPreset::cherrypick());
+        let mut rng = Rng::new(5);
+        for _ in 0..10 {
+            st.step(&c, &mut obj, &mut rng);
+        }
+        assert_eq!(st.observations(), 10);
+        let (_, bv) = st.best().unwrap();
+        assert!(st.ys.iter().all(|&y| y >= bv));
+    }
+
+    #[test]
+    fn cherrypick_x1_converges_close_to_optimum_with_large_budget() {
+        let ds = OfflineDataset::generate(2, 3);
+        let backend = NativeBackend;
+        let c = ctx(&ds, &backend, Target::Cost);
+        let mut obj = LookupObjective::new(&ds, 5, Target::Cost, MeasureMode::Mean, 2);
+        let r = FlattenedBo::cherrypick().run(&c, &mut obj, 44, &mut Rng::new(3));
+        let (_, true_min) = ds.true_min(5, Target::Cost);
+        let mean = ds.random_strategy_value(5, Target::Cost);
+        assert!(r.best_value < 0.5 * mean + 0.5 * true_min, "{} vs min {}", r.best_value, true_min);
+    }
+
+    #[test]
+    fn independent_splits_budget_across_providers() {
+        let ds = OfflineDataset::generate(3, 3);
+        let backend = NativeBackend;
+        let c = ctx(&ds, &backend, Target::Time);
+        let mut obj = LookupObjective::new(&ds, 1, Target::Time, MeasureMode::SingleDraw, 4);
+        let mut rec = crate::optimizers::HistoryRecorder::new(&mut obj);
+        IndependentBo::cherrypick().run(&c, &mut rec, 10, &mut Rng::new(6));
+        // 10 = 4 + 3 + 3 across providers 0,1,2 in order.
+        let per: Vec<usize> =
+            (0..3).map(|p| rec.history.iter().filter(|(c, _)| c.provider == p).count()).collect();
+        assert_eq!(per, vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn bilal_uses_rf_for_time_and_gp_for_cost() {
+        assert_eq!(BoPreset::bilal(Target::Time).surrogate, SurrogateKind::Rf);
+        assert_eq!(BoPreset::bilal(Target::Cost).surrogate, SurrogateKind::Gp);
+    }
+
+    #[test]
+    fn no_repeat_mode_visits_distinct_candidates() {
+        let ds = OfflineDataset::generate(4, 3);
+        let backend = NativeBackend;
+        let c = ctx(&ds, &backend, Target::Cost);
+        let mut obj = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::SingleDraw, 8);
+        let preset = BoPreset { allow_repeats: false, ..BoPreset::cherrypick() };
+        let mut st = BoState::new(&c, ds.domain.provider_grid(1), preset); // 16 configs
+        let mut rng = Rng::new(9);
+        for _ in 0..16 {
+            st.step(&c, &mut obj, &mut rng);
+        }
+        let mut seen = st.obs_cfg_idx.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 16, "all 16 distinct configs visited");
+    }
+}

@@ -1,0 +1,243 @@
+//! CloudBandit (paper §III-D, Algorithm 1) — the paper's contribution.
+//!
+//! Best-arm identification over cloud providers where pulling an arm runs
+//! iterations of an *arbitrary* component black-box optimizer on that
+//! provider's configuration space. Differences from Rising Bandits, as
+//! the paper lists them:
+//!
+//! 1. the component BBO is pluggable (CherryPick-BO or RBFOpt-lite here);
+//! 2. the per-arm budget grows by a multiplicative factor eta as arms are
+//!    eliminated, so surviving providers get exponentially more search;
+//! 3. elimination is purely empirical — after each round, the active arm
+//!    with the worst best-loss is dropped; no convergence assumptions.
+//!
+//! Round m (1-based) pulls every active arm `b1 * eta^(m-1)` times; with
+//! K = 3 and eta = 2 the total budget is exactly 11*b1, matching the
+//! paper's budget grid B in {11, 22, ..., 88}.
+//!
+//! Output (Algorithm 1 line 11): the best (configuration, nodes) pair *of
+//! the surviving provider* — not the globally best observation, which may
+//! sit on an eliminated arm.
+
+use super::bo::{BoPreset, BoState};
+use super::rbfopt::RbfOptState;
+use super::{Optimizer, SearchContext, SearchResult};
+use crate::dataset::objective::Objective;
+use crate::domain::Config;
+use crate::util::rng::Rng;
+
+/// Component black-box optimizer choices evaluated in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Component {
+    CherryPick,
+    RbfOpt,
+}
+
+/// One arm's component optimizer state.
+enum ArmState {
+    Bo(BoState),
+    Rbf(RbfOptState),
+}
+
+impl ArmState {
+    fn step(&mut self, ctx: &SearchContext, obj: &mut dyn Objective, rng: &mut Rng) -> f64 {
+        match self {
+            ArmState::Bo(s) => s.step(ctx, obj, rng),
+            ArmState::Rbf(s) => s.step(ctx, obj, rng),
+        }
+    }
+
+    fn best(&self) -> Option<(Config, f64)> {
+        match self {
+            ArmState::Bo(s) => s.best(),
+            ArmState::Rbf(s) => s.best(),
+        }
+    }
+
+    fn last(&self) -> Option<(Config, f64)> {
+        match self {
+            ArmState::Bo(s) => s.last(),
+            ArmState::Rbf(s) => s.last(),
+        }
+    }
+}
+
+pub struct CloudBandit {
+    pub component: Component,
+    /// Budget growth factor eta (> 1; the paper uses 2).
+    pub eta: f64,
+}
+
+impl CloudBandit {
+    pub fn new(component: Component, eta: f64) -> Self {
+        assert!(eta >= 1.0);
+        CloudBandit { component, eta }
+    }
+
+    fn make_arm(&self, ctx: &SearchContext, provider: usize) -> ArmState {
+        let grid = ctx.domain.provider_grid(provider);
+        match self.component {
+            Component::CherryPick => {
+                // Fewer init points than standalone CherryPick: the first
+                // rounds may only have 1-2 pulls per arm.
+                ArmState::Bo(BoState::new(ctx, grid, BoPreset { n_init: 2, ..BoPreset::cherrypick() }))
+            }
+            Component::RbfOpt => ArmState::Rbf(RbfOptState::new(ctx, grid)),
+        }
+    }
+}
+
+/// Initial per-arm budget b1 such that the Algorithm-1 schedule
+/// sum_{m=1..K} (K-m+1) * b1 * eta^(m-1) stays within `total`. Returns at
+/// least 1.
+pub fn b1_for_budget(total: usize, k: usize, eta: f64) -> usize {
+    let unit: f64 = (1..=k).map(|m| (k - m + 1) as f64 * eta.powi(m as i32 - 1)).sum();
+    ((total as f64 / unit).floor() as usize).max(1)
+}
+
+impl Optimizer for CloudBandit {
+    fn name(&self) -> String {
+        match self.component {
+            Component::CherryPick => "cb-cherrypick".into(),
+            Component::RbfOpt => "cb-rbfopt".into(),
+        }
+    }
+
+    fn run(
+        &self,
+        ctx: &SearchContext,
+        obj: &mut dyn Objective,
+        budget: usize,
+        rng: &mut Rng,
+    ) -> SearchResult {
+        let k = ctx.domain.provider_count();
+        let b1 = b1_for_budget(budget, k, self.eta);
+        let mut arms: Vec<Option<ArmState>> =
+            (0..k).map(|p| Some(self.make_arm(ctx, p))).collect();
+        let mut losses: Vec<f64> = vec![f64::INFINITY; k];
+        let mut history: Vec<(Config, f64)> = Vec::with_capacity(budget);
+        let mut used = 0;
+        let mut b_m = b1 as f64;
+
+        for _round in 0..k {
+            let active: Vec<usize> =
+                (0..k).filter(|&a| arms[a].is_some()).collect();
+            if active.is_empty() {
+                break;
+            }
+            // Pull every active arm b_m times (budget permitting).
+            for &a in &active {
+                let arm = arms[a].as_mut().unwrap();
+                for _ in 0..(b_m.round() as usize) {
+                    if used >= budget {
+                        break;
+                    }
+                    arm.step(ctx, obj, rng);
+                    used += 1;
+                    history.push(arm.last().unwrap());
+                }
+                if let Some((_, v)) = arm.best() {
+                    losses[a] = v;
+                }
+            }
+            // Eliminate the worst active arm (not in the final round).
+            if active.len() > 1 {
+                let worst = *active
+                    .iter()
+                    .max_by(|&&x, &&y| losses[x].partial_cmp(&losses[y]).unwrap())
+                    .unwrap();
+                arms[worst] = None;
+            }
+            b_m *= self.eta;
+        }
+
+        // Spend any integer-rounding leftover on the surviving arm.
+        let winner_idx = (0..k)
+            .filter(|&a| arms[a].is_some())
+            .min_by(|&x, &y| losses[x].partial_cmp(&losses[y]).unwrap())
+            .expect("CloudBandit finished with no arms");
+        while used < budget {
+            let arm = arms[winner_idx].as_mut().unwrap();
+            arm.step(ctx, obj, rng);
+            used += 1;
+            history.push(arm.last().unwrap());
+        }
+
+        let (best_config, best_value) =
+            arms[winner_idx].as_ref().unwrap().best().expect("winner arm never pulled");
+        let mut result = SearchResult::from_history(&history);
+        result.best_config = best_config;
+        result.best_value = best_value;
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::objective::{LookupObjective, MeasureMode};
+    use crate::dataset::{OfflineDataset, Target};
+    use crate::surrogate::NativeBackend;
+
+    #[test]
+    fn b1_matches_paper_grid() {
+        // K=3, eta=2: unit = 3 + 4 + 4 = 11.
+        assert_eq!(b1_for_budget(11, 3, 2.0), 1);
+        assert_eq!(b1_for_budget(33, 3, 2.0), 3);
+        assert_eq!(b1_for_budget(88, 3, 2.0), 8);
+        assert_eq!(b1_for_budget(5, 3, 2.0), 1); // floor, min 1
+    }
+
+    fn run_cb(component: Component, budget: usize, seed: u64) -> (SearchResult, Vec<(usize, f64)>) {
+        let ds = OfflineDataset::generate(31, 3);
+        let backend = NativeBackend;
+        let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
+        let mut obj = LookupObjective::new(&ds, 22, Target::Cost, MeasureMode::SingleDraw, seed);
+        let mut rec = crate::optimizers::HistoryRecorder::new(&mut obj);
+        let r = CloudBandit::new(component, 2.0).run(&ctx, &mut rec, budget, &mut Rng::new(seed));
+        let prov = rec.history.iter().map(|(c, v)| (c.provider, *v)).collect();
+        (r, prov)
+    }
+
+    #[test]
+    fn uses_full_budget_exactly() {
+        for component in [Component::CherryPick, Component::RbfOpt] {
+            for budget in [11, 22, 33] {
+                let (r, hist) = run_cb(component, budget, 9);
+                assert_eq!(hist.len(), budget, "{component:?} B={budget}");
+                assert_eq!(r.evals_used, budget);
+            }
+        }
+    }
+
+    #[test]
+    fn elimination_schedule_concentrates_late_pulls() {
+        let (_, hist) = run_cb(Component::RbfOpt, 33, 5);
+        // Round 1: 3 providers x 3 pulls = 9 evals over all 3 providers.
+        let early: std::collections::HashSet<usize> =
+            hist[..9].iter().map(|&(p, _)| p).collect();
+        assert_eq!(early.len(), 3, "round 1 touches all providers");
+        // Final 12 pulls (round 3 + leftovers): exactly one provider.
+        let late: std::collections::HashSet<usize> =
+            hist[hist.len() - 12..].iter().map(|&(p, _)| p).collect();
+        assert_eq!(late.len(), 1, "final round is single-provider: {late:?}");
+    }
+
+    #[test]
+    fn returns_config_from_surviving_provider() {
+        let (r, hist) = run_cb(Component::CherryPick, 22, 7);
+        let last_provider = hist.last().unwrap().0;
+        assert_eq!(
+            r.best_config.provider, last_provider,
+            "output must come from the surviving arm"
+        );
+    }
+
+    #[test]
+    fn works_with_budget_below_schedule_unit() {
+        // B < 11: b1 = 1, schedule truncated by the budget check.
+        let (r, hist) = run_cb(Component::RbfOpt, 7, 3);
+        assert_eq!(hist.len(), 7);
+        assert!(r.best_value.is_finite());
+    }
+}

@@ -1,0 +1,127 @@
+//! Coordinate descent baseline (mentioned alongside RS in §II-B).
+//!
+//! Multi-cloud adaptation: pick a random provider and configuration, then
+//! cycle over that provider's coordinates (each categorical parameter and
+//! the node count), greedily evaluating every alternative value of one
+//! coordinate while holding the others fixed. When a full sweep makes no
+//! progress, restart at a new random provider/configuration. Budget-capped
+//! throughout.
+
+use super::{Optimizer, SearchContext, SearchResult};
+use crate::dataset::objective::Objective;
+use crate::domain::Config;
+use crate::util::rng::Rng;
+
+pub struct CoordinateDescent;
+
+fn random_config(ctx: &SearchContext, rng: &mut Rng) -> Config {
+    let provider = rng.usize_below(ctx.domain.provider_count());
+    let p = &ctx.domain.providers[provider];
+    let choices = p.params.iter().map(|q| rng.usize_below(q.values.len())).collect();
+    let nodes = *rng.choice(&ctx.domain.nodes);
+    Config { provider, choices, nodes }
+}
+
+impl Optimizer for CoordinateDescent {
+    fn name(&self) -> String {
+        "cd".into()
+    }
+
+    fn run(
+        &self,
+        ctx: &SearchContext,
+        obj: &mut dyn Objective,
+        budget: usize,
+        rng: &mut Rng,
+    ) -> SearchResult {
+        let mut history: Vec<(Config, f64)> = Vec::with_capacity(budget);
+        let eval = |cfg: &Config, hist: &mut Vec<(Config, f64)>, obj: &mut dyn Objective| {
+            let v = obj.eval(cfg);
+            hist.push((cfg.clone(), v));
+            v
+        };
+
+        'outer: while history.len() < budget {
+            // Restart point.
+            let mut current = random_config(ctx, rng);
+            let mut current_val = eval(&current, &mut history, obj);
+            loop {
+                let mut improved = false;
+                let p = &ctx.domain.providers[current.provider];
+                // Coordinates: each categorical param, then nodes.
+                for coord in 0..=p.params.len() {
+                    let alternatives: Vec<Config> = if coord < p.params.len() {
+                        (0..p.params[coord].values.len())
+                            .filter(|&v| v != current.choices[coord])
+                            .map(|v| {
+                                let mut c = current.clone();
+                                c.choices[coord] = v;
+                                c
+                            })
+                            .collect()
+                    } else {
+                        ctx.domain
+                            .nodes
+                            .iter()
+                            .filter(|&&n| n != current.nodes)
+                            .map(|&n| {
+                                let mut c = current.clone();
+                                c.nodes = n;
+                                c
+                            })
+                            .collect()
+                    };
+                    for alt in alternatives {
+                        if history.len() >= budget {
+                            break 'outer;
+                        }
+                        let v = eval(&alt, &mut history, obj);
+                        if v < current_val {
+                            current = alt;
+                            current_val = v;
+                            improved = true;
+                        }
+                    }
+                }
+                if !improved {
+                    continue 'outer; // local optimum: restart elsewhere
+                }
+            }
+        }
+        SearchResult::from_history(&history)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::objective::{LookupObjective, MeasureMode};
+    use crate::dataset::{OfflineDataset, Target};
+    use crate::surrogate::NativeBackend;
+
+    #[test]
+    fn respects_budget_and_improves_over_first_sample() {
+        let ds = OfflineDataset::generate(6, 3);
+        let backend = NativeBackend;
+        let ctx = SearchContext { domain: &ds.domain, target: Target::Time, backend: &backend };
+        let mut obj = LookupObjective::new(&ds, 9, Target::Time, MeasureMode::Mean, 3);
+        let r = CoordinateDescent.run(&ctx, &mut obj, 30, &mut Rng::new(4));
+        assert_eq!(r.evals_used, 30);
+        assert!(r.best_value <= r.trace[0]);
+    }
+
+    #[test]
+    fn local_search_stays_within_provider_until_restart() {
+        // With a budget of 2 the second eval must share the provider of the
+        // first (a coordinate move never switches provider).
+        let ds = OfflineDataset::generate(6, 3);
+        let backend = NativeBackend;
+        let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
+        let mut obj = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 3);
+        let mut recorder = crate::optimizers::HistoryRecorder::new(&mut obj);
+        CoordinateDescent.run(&ctx, &mut recorder, 2, &mut Rng::new(8));
+        let h = &recorder.history;
+        assert_eq!(h.len(), 2);
+        assert_eq!(h[0].0.provider, h[1].0.provider);
+    }
+}

@@ -1,0 +1,192 @@
+//! HyperOpt-lite: hierarchical Tree-structured Parzen Estimator [2].
+//!
+//! Models the hierarchical domain as a graph-structured generative
+//! process, exactly as HyperOpt expresses conditional search spaces: first
+//! the provider choice, then — conditioned on the provider — each of its
+//! categorical parameters, plus the shared node count. Each node of the
+//! graph carries an l(x)/g(x) Parzen pair (surrogate::tpe); proposals are
+//! sampled from the good densities and ranked by the likelihood ratio.
+//!
+//! Deliberately allows repeated configurations (HyperOpt does too): the
+//! paper attributes HyperOpt's gap to SMAC to precisely this.
+
+use super::{Optimizer, SearchContext, SearchResult};
+use crate::dataset::objective::Objective;
+use crate::domain::Config;
+use crate::surrogate::tpe::{split_good_bad, TpePair};
+use crate::util::rng::Rng;
+
+pub struct HyperOptLite {
+    pub n_init: usize,
+    /// Fraction of observations considered "good".
+    pub gamma: f64,
+    /// Candidates sampled from l(x) per iteration.
+    pub n_candidates: usize,
+    /// Laplace smoothing for the categorical densities.
+    pub alpha: f64,
+}
+
+impl Default for HyperOptLite {
+    fn default() -> Self {
+        HyperOptLite { n_init: 5, gamma: 0.25, n_candidates: 24, alpha: 1.0 }
+    }
+}
+
+fn random_config(ctx: &SearchContext, rng: &mut Rng) -> Config {
+    let provider = rng.usize_below(ctx.domain.provider_count());
+    let p = &ctx.domain.providers[provider];
+    Config {
+        provider,
+        choices: p.params.iter().map(|q| rng.usize_below(q.values.len())).collect(),
+        nodes: *rng.choice(&ctx.domain.nodes),
+    }
+}
+
+impl HyperOptLite {
+    fn propose(
+        &self,
+        ctx: &SearchContext,
+        history: &[(Config, f64)],
+        rng: &mut Rng,
+    ) -> Config {
+        let ys: Vec<f64> = history.iter().map(|(_, v)| *v).collect();
+        let (good, bad) = split_good_bad(&ys, self.gamma);
+
+        let k = ctx.domain.provider_count();
+        let providers_of = |idx: &[usize]| -> Vec<usize> {
+            idx.iter().map(|&i| history[i].0.provider).collect()
+        };
+        let provider_pair =
+            TpePair::new(k, &providers_of(&good), &providers_of(&bad), self.alpha);
+
+        let n_values = ctx.domain.nodes.len();
+        let node_idx_of = |idx: &[usize]| -> Vec<usize> {
+            idx.iter()
+                .map(|&i| {
+                    ctx.domain.nodes.iter().position(|&n| n == history[i].0.nodes).unwrap()
+                })
+                .collect()
+        };
+        let nodes_pair =
+            TpePair::new(n_values, &node_idx_of(&good), &node_idx_of(&bad), self.alpha);
+
+        // Conditional parameter pairs per provider, built lazily.
+        let mut best: Option<(Config, f64)> = None;
+        for _ in 0..self.n_candidates {
+            let provider = provider_pair.sample_good(rng);
+            let pspace = &ctx.domain.providers[provider];
+            let mut score = provider_pair.ratio(provider).ln();
+
+            let good_p: Vec<usize> =
+                good.iter().copied().filter(|&i| history[i].0.provider == provider).collect();
+            let bad_p: Vec<usize> =
+                bad.iter().copied().filter(|&i| history[i].0.provider == provider).collect();
+
+            let mut choices = Vec::with_capacity(pspace.params.len());
+            for (qi, q) in pspace.params.iter().enumerate() {
+                let choice_of = |idx: &[usize]| -> Vec<usize> {
+                    idx.iter().map(|&i| history[i].0.choices[qi]).collect()
+                };
+                let pair = TpePair::new(
+                    q.values.len(),
+                    &choice_of(&good_p),
+                    &choice_of(&bad_p),
+                    self.alpha,
+                );
+                let v = pair.sample_good(rng);
+                score += pair.ratio(v).ln();
+                choices.push(v);
+            }
+
+            let node_i = nodes_pair.sample_good(rng);
+            score += nodes_pair.ratio(node_i).ln();
+
+            let cfg = Config { provider, choices, nodes: ctx.domain.nodes[node_i] };
+            if best.as_ref().map(|(_, s)| score > *s).unwrap_or(true) {
+                best = Some((cfg, score));
+            }
+        }
+        best.expect("n_candidates > 0").0
+    }
+}
+
+impl Optimizer for HyperOptLite {
+    fn name(&self) -> String {
+        "hyperopt".into()
+    }
+
+    fn run(
+        &self,
+        ctx: &SearchContext,
+        obj: &mut dyn Objective,
+        budget: usize,
+        rng: &mut Rng,
+    ) -> SearchResult {
+        let mut history: Vec<(Config, f64)> = Vec::with_capacity(budget);
+        for it in 0..budget {
+            let cfg = if it < self.n_init {
+                random_config(ctx, rng)
+            } else {
+                self.propose(ctx, &history, rng)
+            };
+            let v = obj.eval(&cfg);
+            history.push((cfg, v));
+        }
+        SearchResult::from_history(&history)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::objective::{LookupObjective, MeasureMode};
+    use crate::dataset::{OfflineDataset, Target};
+    use crate::surrogate::NativeBackend;
+
+    #[test]
+    fn proposals_are_valid_configs() {
+        let ds = OfflineDataset::generate(12, 3);
+        let backend = NativeBackend;
+        let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
+        let mut obj = LookupObjective::new(&ds, 14, Target::Cost, MeasureMode::SingleDraw, 2);
+        let mut rec = crate::optimizers::HistoryRecorder::new(&mut obj);
+        HyperOptLite::default().run(&ctx, &mut rec, 30, &mut Rng::new(3));
+        for (cfg, _) in &rec.history {
+            // config_id panics on invalid configs; also checks nodes value.
+            let _ = ds.domain.config_id(cfg);
+        }
+        assert_eq!(rec.history.len(), 30);
+    }
+
+    #[test]
+    fn concentrates_on_the_better_provider() {
+        // After enough iterations the provider density should favour the
+        // provider containing the optimum.
+        let ds = OfflineDataset::generate(13, 3);
+        let backend = NativeBackend;
+        let w = 3;
+        let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
+        let (best_cfg_id, _) = ds.true_min(w, Target::Cost);
+        let best_provider = ds.domain.full_grid()[best_cfg_id].provider;
+        let mut obj = LookupObjective::new(&ds, w, Target::Cost, MeasureMode::SingleDraw, 4);
+        let mut rec = crate::optimizers::HistoryRecorder::new(&mut obj);
+        HyperOptLite::default().run(&ctx, &mut rec, 60, &mut Rng::new(5));
+        let late = &rec.history[30..];
+        let hits = late.iter().filter(|(c, _)| c.provider == best_provider).count();
+        assert!(hits * 2 > late.len(), "only {hits}/{} late samples on best provider", late.len());
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let ds = OfflineDataset::generate(14, 3);
+        let backend = NativeBackend;
+        let ctx = SearchContext { domain: &ds.domain, target: Target::Time, backend: &backend };
+        let run = |seed| {
+            let mut obj = LookupObjective::new(&ds, 8, Target::Time, MeasureMode::SingleDraw, 6);
+            HyperOptLite::default().run(&ctx, &mut obj, 25, &mut Rng::new(seed))
+        };
+        let (a, b) = (run(7), run(7));
+        assert_eq!(a.best_config, b.best_config);
+        assert_eq!(a.trace, b.trace);
+    }
+}

@@ -1,0 +1,27 @@
+//! Predictive (model-based) baselines from the cloud-configuration
+//! literature (paper §II-A, evaluated in Figure 2 as horizontal lines).
+//!
+//! * [`ernest::LinearPredictor`] — Ernest-style [31] linear scaling model,
+//!   fit per (workload, provider, machine type) with leave-one-out over
+//!   cluster sizes.
+//! * [`paris::ParisPredictor`]  — PARIS-style [33] random forest trained
+//!   offline on *other* workloads, plus an online fingerprint of the
+//!   target workload on 2 reference configurations per provider.
+//!
+//! Unlike search methods these have no budget axis: each returns one
+//! predicted-best configuration (plus the online evaluations it had to
+//! make, for the savings accounting).
+
+pub mod ernest;
+pub mod paris;
+
+use crate::domain::Config;
+
+/// Outcome of a predictive method on one (workload, target) task.
+#[derive(Clone, Debug)]
+pub struct PredictionOutcome {
+    /// Configuration the method recommends.
+    pub chosen: Config,
+    /// Number of *online* objective evaluations the method performed.
+    pub online_evals: usize,
+}

@@ -1,0 +1,131 @@
+//! PARIS-style predictive baseline [33], adapted per §IV-B.
+//!
+//! One random forest per cloud provider predicts the (log) target metric
+//! of a workload on a configuration from:
+//!   * the configuration's encoded features, and
+//!   * a 2-value *fingerprint*: the workload's measured target on two
+//!     fixed reference configurations of that provider (the paper's
+//!     black-box adaptation — execution values only, no low-level
+//!     counters).
+//!
+//! Offline phase: train on every workload except the target (their stored
+//! mean values). Online phase: evaluate the target workload on the 2
+//! reference configurations per provider (6 online evaluations total,
+//! counted as search expense) and recommend the argmin prediction.
+
+use super::PredictionOutcome;
+use crate::dataset::objective::{LookupObjective, Objective};
+use crate::dataset::{OfflineDataset, Target};
+use crate::domain::{encode, Config};
+use crate::surrogate::rf::{RandomForest, RfParams};
+
+/// Indices (within a provider's grid) of the 2 reference configurations.
+fn reference_indices(grid_len: usize) -> [usize; 2] {
+    [0, grid_len / 2]
+}
+
+pub struct ParisPredictor {
+    pub n_trees: usize,
+}
+
+impl Default for ParisPredictor {
+    fn default() -> Self {
+        ParisPredictor { n_trees: 40 }
+    }
+}
+
+impl ParisPredictor {
+    pub fn run(
+        &self,
+        ds: &OfflineDataset,
+        workload: usize,
+        target: Target,
+        obj: &mut LookupObjective,
+    ) -> PredictionOutcome {
+        let domain = &ds.domain;
+        let mut best: Option<(Config, f64)> = None;
+        let mut online_evals = 0;
+
+        for p in 0..domain.provider_count() {
+            let grid = domain.provider_grid(p);
+            let refs = reference_indices(grid.len());
+
+            // Online fingerprint of the target workload (2 evals, logged
+            // through the objective so the expense is accounted).
+            let fp: Vec<f64> = refs
+                .iter()
+                .map(|&ri| {
+                    online_evals += 1;
+                    obj.eval(&grid[ri]).max(1e-9).ln()
+                })
+                .collect();
+
+            // Offline training set: all other workloads.
+            let mut x: Vec<Vec<f64>> = Vec::new();
+            let mut y: Vec<f64> = Vec::new();
+            for w in 0..ds.workload_count() {
+                if w == workload {
+                    continue;
+                }
+                let train_fp: Vec<f64> = refs
+                    .iter()
+                    .map(|&ri| {
+                        let cid = domain.config_id(&grid[ri]);
+                        ds.mean_value(w, cid, target).max(1e-9).ln()
+                    })
+                    .collect();
+                for cfg in &grid {
+                    let cid = domain.config_id(cfg);
+                    let mut feat = encode(domain, cfg);
+                    feat.extend_from_slice(&train_fp);
+                    x.push(feat);
+                    y.push(ds.mean_value(w, cid, target).max(1e-9).ln());
+                }
+            }
+
+            let mut rf = RandomForest::new(RfParams {
+                n_trees: self.n_trees,
+                seed: 0x9A215,
+                ..Default::default()
+            });
+            rf.fit(&x, &y);
+
+            for cfg in &grid {
+                let mut feat = encode(domain, cfg);
+                feat.extend_from_slice(&fp);
+                let (pred, _) = rf.predict_one(&feat);
+                if best.as_ref().map(|(_, b)| pred < *b).unwrap_or(true) {
+                    best = Some((cfg.clone(), pred));
+                }
+            }
+        }
+
+        PredictionOutcome { chosen: best.expect("providers non-empty").0, online_evals }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::objective::MeasureMode;
+
+    #[test]
+    fn reference_indices_distinct() {
+        let [a, b] = reference_indices(24);
+        assert_ne!(a, b);
+        assert!(b < 24);
+    }
+
+    #[test]
+    fn runs_with_six_online_evals_and_recommends_sanely() {
+        let ds = OfflineDataset::generate(19, 3);
+        let w = 10;
+        let mut obj = LookupObjective::new(&ds, w, Target::Cost, MeasureMode::Mean, 2);
+        let out = ParisPredictor::default().run(&ds, w, Target::Cost, &mut obj);
+        assert_eq!(out.online_evals, 6);
+        assert_eq!(obj.evals(), 6);
+        let rec = obj.ground_truth(&out.chosen);
+        // Cross-workload transfer + fingerprint should beat random choice.
+        assert!(rec < ds.random_strategy_value(w, Target::Cost), "rec {rec}");
+    }
+}

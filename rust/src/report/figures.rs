@@ -1,0 +1,215 @@
+//! Renderers for the paper's tables and figures (DESIGN.md §4 index).
+//!
+//! Each figure has two outputs: a CSV with the exact numbers (written to
+//! the results directory for external plotting / EXPERIMENTS.md) and an
+//! ASCII rendering for the terminal.
+
+use crate::coordinator::experiment::RegretCurve;
+use crate::coordinator::savings::SavingsDistribution;
+use crate::dataset::{OfflineDataset, Target};
+use crate::domain::Domain;
+use crate::report::{ascii_bars, ascii_box, ascii_table};
+use crate::simulator::tasks::{DATASETS, TASKS};
+use crate::util::csv;
+
+/// Table I — the state-of-the-art summary (static literature table,
+/// reproduced for completeness).
+pub fn table1() -> String {
+    let header: Vec<String> = ["Paper", "Type", "Algorithms", "Offline", "Online", "Low-level", "Multi-cloud"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let rows: Vec<Vec<&str>> = vec![
+        vec!["Ernest [31]", "Predictive", "Linear Regression", "no", "yes", "no", "no"],
+        vec!["Mariani+ [25]", "Predictive", "Random Forest", "yes", "no", "yes", "no"],
+        vec!["PARIS [33]", "Predictive", "Random Forest", "yes", "yes", "yes", "yes"],
+        vec!["Selecta [21]", "Predictive", "Collab. Filtering", "yes", "yes", "no", "no"],
+        vec!["CherryPick [1]", "Search", "Bayesian Opt.", "no", "yes", "no", "no"],
+        vec!["Bilal+ [3]", "Search", "BO, SHC, SA, TPE", "no", "yes", "no", "no"],
+        vec!["Arrow [14]", "Search", "Augmented BO", "no", "yes", "yes", "no"],
+        vec!["Scout [16]", "Search", "Pairwise Modelling", "yes", "yes", "yes", "no"],
+        vec!["Micky [15]", "Search", "Multi-armed Bandits", "no", "yes", "no", "no"],
+        vec!["This repo", "Search", "RBFOpt, HyperOpt, SMAC, CloudBandit", "no", "yes", "no", "yes"],
+    ];
+    let rows: Vec<Vec<String>> =
+        rows.into_iter().map(|r| r.into_iter().map(|s| s.to_string()).collect()).collect();
+    ascii_table(&header, &rows)
+}
+
+/// Table II — optimization tasks and the configuration space.
+pub fn table2(domain: &Domain) -> String {
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    rows.push(vec![
+        "Dask tasks".into(),
+        TASKS.iter().map(|t| t.name).collect::<Vec<_>>().join(", "),
+    ]);
+    rows.push(vec![
+        "Datasets".into(),
+        DATASETS.iter().map(|d| d.name).collect::<Vec<_>>().join(", "),
+    ]);
+    rows.push(vec!["Targets".into(), "cost, runtime".into()]);
+    for p in &domain.providers {
+        let desc = p
+            .params
+            .iter()
+            .map(|q| format!("{}: {}", q.name, q.values.join(", ")))
+            .collect::<Vec<_>>()
+            .join("; ");
+        rows.push(vec![
+            format!("{} ({} configs)", p.name, p.type_count() * domain.nodes.len()),
+            desc,
+        ]);
+    }
+    rows.push(vec![
+        "Nodes".into(),
+        domain.nodes.iter().map(|n| n.to_string()).collect::<Vec<_>>().join(", "),
+    ]);
+    rows.push(vec!["Total configurations".into(), domain.size().to_string()]);
+    ascii_table(&["Field".into(), "Values".into()], &rows)
+}
+
+/// Regret curves (Figures 2 and 3) as CSV: method,target,budget,regret.
+pub fn regret_csv(curves: &[RegretCurve]) -> String {
+    let mut rows = vec![vec![
+        "method".to_string(),
+        "target".to_string(),
+        "budget".to_string(),
+        "mean_regret".to_string(),
+    ]];
+    for c in curves {
+        for (b, r) in c.budgets.iter().zip(&c.mean_regret) {
+            rows.push(vec![
+                c.method.clone(),
+                c.target.name().to_string(),
+                b.to_string(),
+                format!("{r:.6}"),
+            ]);
+        }
+    }
+    csv::write_rows(&rows)
+}
+
+/// ASCII rendering of regret curves: per target, bars at each budget.
+pub fn regret_ascii(title: &str, curves: &[RegretCurve], targets: &[Target]) -> String {
+    let mut out = format!("== {title} ==\n");
+    for target in targets {
+        out.push_str(&format!("\n-- target: {} --\n", target.name()));
+        let tcurves: Vec<&RegretCurve> =
+            curves.iter().filter(|c| c.target == *target).collect();
+        if tcurves.is_empty() {
+            continue;
+        }
+        for (bi, b) in tcurves[0].budgets.iter().enumerate() {
+            out.push_str(&format!("\nbudget B = {b}\n"));
+            let labels: Vec<String> = tcurves.iter().map(|c| c.method.clone()).collect();
+            let values: Vec<f64> = tcurves.iter().map(|c| c.mean_regret[bi]).collect();
+            out.push_str(&ascii_bars(&labels, &values, 40));
+        }
+    }
+    out
+}
+
+/// Savings distributions (Figure 4) as CSV:
+/// method,target,workload,savings.
+pub fn savings_csv(ds: &OfflineDataset, dists: &[SavingsDistribution]) -> String {
+    let mut rows = vec![vec![
+        "method".to_string(),
+        "target".to_string(),
+        "workload".to_string(),
+        "savings".to_string(),
+    ]];
+    for d in dists {
+        for (w, s) in d.per_workload.iter().enumerate() {
+            rows.push(vec![
+                d.method.clone(),
+                d.target.name().to_string(),
+                ds.workloads[w].id(),
+                format!("{s:.6}"),
+            ]);
+        }
+    }
+    csv::write_rows(&rows)
+}
+
+/// ASCII rendering of Figure 4: one labelled box plot per method.
+pub fn savings_ascii(dists: &[SavingsDistribution]) -> String {
+    let mut out = String::new();
+    let lo = dists
+        .iter()
+        .flat_map(|d| d.per_workload.iter().copied())
+        .fold(f64::INFINITY, f64::min)
+        .min(-1.0);
+    let hi = dists
+        .iter()
+        .flat_map(|d| d.per_workload.iter().copied())
+        .fold(f64::NEG_INFINITY, f64::max)
+        .max(1.0);
+    for d in dists {
+        let b = d.box_stats();
+        out.push_str(&format!(
+            "{:<14} [{}] median {:+.1}%  IQR [{:+.1}%, {:+.1}%]\n",
+            d.method,
+            ascii_box(&b, lo, hi, 61),
+            100.0 * b.median,
+            100.0 * b.q1,
+            100.0 * b.q3,
+        ));
+    }
+    out.push_str(&format!(
+        "axis: {:+.0}% .. {:+.0}% (savings vs random provider+config)\n",
+        lo * 100.0,
+        hi * 100.0
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_mentions_all_methods() {
+        let t = table1();
+        for m in ["CherryPick", "PARIS", "CloudBandit", "Micky"] {
+            assert!(t.contains(m), "missing {m}");
+        }
+    }
+
+    #[test]
+    fn table2_reports_88_configs() {
+        let t = table2(&Domain::paper());
+        assert!(t.contains("Total configurations"));
+        assert!(t.contains("88"));
+        assert!(t.contains("xgboost"));
+        assert!(t.contains("santander"));
+    }
+
+    #[test]
+    fn regret_csv_shape() {
+        let curves = vec![RegretCurve {
+            method: "rs".into(),
+            target: Target::Cost,
+            budgets: vec![11, 22],
+            mean_regret: vec![0.5, 0.25],
+        }];
+        let text = regret_csv(&curves);
+        let parsed = csv::Table::parse(&text).unwrap();
+        assert_eq!(parsed.rows.len(), 2);
+        assert_eq!(parsed.get(&parsed.rows[1], "budget"), Some("22"));
+    }
+
+    #[test]
+    fn savings_outputs_render() {
+        let ds = OfflineDataset::generate(70, 2);
+        let d = SavingsDistribution {
+            method: "smac".into(),
+            target: Target::Cost,
+            per_workload: (0..30).map(|i| (i as f64 - 10.0) / 30.0).collect(),
+        };
+        let csv_text = savings_csv(&ds, &[d.clone()]);
+        assert_eq!(csv::Table::parse(&csv_text).unwrap().rows.len(), 30);
+        let ascii = savings_ascii(&[d]);
+        assert!(ascii.contains("smac"));
+        assert!(ascii.contains("median"));
+    }
+}

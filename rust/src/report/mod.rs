@@ -1,0 +1,136 @@
+//! Report generation: ASCII tables/charts and CSV data for every table
+//! and figure in the paper's evaluation section (see DESIGN.md §4).
+
+pub mod figures;
+
+use crate::util::stats::BoxStats;
+
+/// Render an aligned ASCII table.
+pub fn ascii_table(header: &[String], rows: &[Vec<String>]) -> String {
+    let cols = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for r in rows {
+        assert_eq!(r.len(), cols, "ragged table row");
+        for (i, cell) in r.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let sep: String = widths
+        .iter()
+        .map(|w| "-".repeat(w + 2))
+        .collect::<Vec<_>>()
+        .join("+");
+    let fmt_row = |cells: &[String]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!(" {:<width$} ", c, width = widths[i]))
+            .collect::<Vec<_>>()
+            .join("|")
+    };
+    let mut out = String::new();
+    out.push_str(&fmt_row(header));
+    out.push('\n');
+    out.push_str(&sep);
+    out.push('\n');
+    for r in rows {
+        out.push_str(&fmt_row(r));
+        out.push('\n');
+    }
+    out
+}
+
+/// Render one horizontal ASCII box plot row (for Figure 4).
+///
+/// `lo`/`hi` bound the axis; width is the number of character cells.
+pub fn ascii_box(b: &BoxStats, lo: f64, hi: f64, width: usize) -> String {
+    assert!(hi > lo && width >= 10);
+    let clamp = |v: f64| v.clamp(lo, hi);
+    let cell = |v: f64| -> usize {
+        (((clamp(v) - lo) / (hi - lo)) * (width - 1) as f64).round() as usize
+    };
+    let mut row = vec![' '; width];
+    let (wl, q1, med, q3, wh) =
+        (cell(b.whisker_lo), cell(b.q1), cell(b.median), cell(b.q3), cell(b.whisker_hi));
+    for c in row.iter_mut().take(q1).skip(wl) {
+        *c = '-';
+    }
+    for c in row.iter_mut().take(wh + 1).skip(q3) {
+        *c = '-';
+    }
+    for c in row.iter_mut().take(q3 + 1).skip(q1) {
+        *c = '=';
+    }
+    row[wl] = '|';
+    row[wh] = '|';
+    row[med] = '#';
+    row.into_iter().collect()
+}
+
+/// Simple multi-series ASCII chart: one row per (series, budget) value —
+/// regret rendered as a bar. Good enough to eyeball orderings in the
+/// terminal; the CSVs carry the precise numbers.
+pub fn ascii_bars(labels: &[String], values: &[f64], width: usize) -> String {
+    let max = values.iter().copied().fold(f64::NEG_INFINITY, f64::max).max(1e-12);
+    let lw = labels.iter().map(|l| l.len()).max().unwrap_or(0);
+    let mut out = String::new();
+    for (l, &v) in labels.iter().zip(values) {
+        let n = ((v / max) * width as f64).round() as usize;
+        out.push_str(&format!("{:<lw$} | {:<width$} {:.4}\n", l, "█".repeat(n), v));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_aligns_columns() {
+        let t = ascii_table(
+            &["method".into(), "regret".into()],
+            &[
+                vec!["rs".into(), "0.35".into()],
+                vec!["cb-rbfopt".into(), "0.02".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].len(), lines[2].len());
+        assert!(lines[2].starts_with(" rs "));
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn table_rejects_ragged_rows() {
+        ascii_table(&["a".into()], &[vec!["1".into(), "2".into()]]);
+    }
+
+    #[test]
+    fn box_render_has_median_inside_box() {
+        let b = BoxStats {
+            q1: 0.25,
+            median: 0.5,
+            q3: 0.75,
+            whisker_lo: 0.0,
+            whisker_hi: 1.0,
+            n: 10,
+            outliers: 0,
+        };
+        let s = ascii_box(&b, 0.0, 1.0, 41);
+        let med = s.find('#').unwrap();
+        let q1 = s.find('=').unwrap();
+        let q3 = s.rfind('=').unwrap();
+        assert!(q1 <= med && med <= q3, "{s}");
+        assert!(s.starts_with('|') && s.trim_end().ends_with('|'));
+    }
+
+    #[test]
+    fn bars_scale_to_max() {
+        let s = ascii_bars(&["a".into(), "b".into()], &[1.0, 0.5], 10);
+        let lines: Vec<&str> = s.lines().collect();
+        let count = |l: &str| l.matches('█').count();
+        assert_eq!(count(lines[0]), 10);
+        assert_eq!(count(lines[1]), 5);
+    }
+}

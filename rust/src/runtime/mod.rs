@@ -1,0 +1,30 @@
+//! PJRT runtime: load and execute the AOT artifacts from the L3 hot path.
+//!
+//! `make artifacts` (python, build-time only) lowers the L2 JAX surrogate
+//! graphs — with the L1 Pallas Gram kernels inlined — to HLO *text*; this
+//! module loads the text with `HloModuleProto::from_text_file`, compiles
+//! it once on the PJRT CPU client, and executes it for every BO iteration.
+//! Python never runs at request time.
+//!
+//! [`ArtifactBackend`] implements [`surrogate::Backend`], so every
+//! BO-family optimizer transparently runs its surrogate math through XLA.
+//! Inputs are padded/masked to the fixed AOT shapes (see
+//! `python/compile/model.py`); observation sets larger than `n_max` fall
+//! back to the native backend (cannot happen with the paper's budgets,
+//! but the seam is safe).
+
+pub mod artifacts;
+
+pub use artifacts::ArtifactBackend;
+
+/// Default artifact directory, relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Resolve the artifact directory: explicit argument, else the
+/// `MULTICLOUD_ARTIFACTS` environment variable, else ./artifacts.
+pub fn artifact_dir(explicit: Option<&str>) -> String {
+    if let Some(d) = explicit {
+        return d.to_string();
+    }
+    std::env::var("MULTICLOUD_ARTIFACTS").unwrap_or_else(|_| DEFAULT_ARTIFACT_DIR.to_string())
+}

@@ -1,0 +1,164 @@
+//! Machine catalog: vCPUs, memory, relative CPU speed and list price for
+//! every (provider, parameter combination) in the paper's Table II space.
+//!
+//! Prices are modelled on 2021 list prices (USD per node-hour) for the
+//! regions the paper used; speeds are relative single-thread throughput
+//! factors. The absolute values matter less than the *structure* they
+//! induce: compute-optimized families are faster but memory-starved,
+//! memory-optimized ones are pricier per vCPU, GCP's e2 line is slow but
+//! cheap, Azure's D_v2 is an older generation, etc. This is what gives
+//! each provider a distinct price/performance profile for the bandit
+//! methods to discover.
+
+use crate::domain::{Config, Domain};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MachineSpec {
+    pub vcpus: u32,
+    pub mem_gb: f64,
+    /// Relative per-core speed (1.0 = baseline Broadwell-class core).
+    pub speed: f64,
+    /// USD per node-hour (list price).
+    pub price_per_hour: f64,
+}
+
+/// Provider-level systematic effects.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ProviderTraits {
+    /// Multiplier on communication time (inter-node network quality).
+    pub net_factor: f64,
+    /// Per-node scheduling/provisioning overhead folded into runtime (s).
+    pub per_node_overhead_s: f64,
+}
+
+pub fn provider_traits(provider_name: &str) -> ProviderTraits {
+    match provider_name {
+        "aws" => ProviderTraits { net_factor: 1.0, per_node_overhead_s: 2.0 },
+        "azure" => ProviderTraits { net_factor: 1.30, per_node_overhead_s: 3.5 },
+        "gcp" => ProviderTraits { net_factor: 0.85, per_node_overhead_s: 1.5 },
+        other => panic!("unknown provider {other}"),
+    }
+}
+
+/// Resolve the machine backing a configuration.
+pub fn machine_spec(domain: &Domain, cfg: &Config) -> MachineSpec {
+    let p = &domain.providers[cfg.provider];
+    let val = |param: &str| -> &str {
+        let (i, def) = p
+            .params
+            .iter()
+            .enumerate()
+            .find(|(_, d)| d.name == param)
+            .unwrap_or_else(|| panic!("{} has no param {param}", p.name));
+        def.values[cfg.choices[i]]
+    };
+    match p.name {
+        "aws" => {
+            let vcpus = match val("size") {
+                "large" => 2,
+                "xlarge" => 4,
+                s => panic!("bad aws size {s}"),
+            };
+            // (speed, mem per vcpu, price per vcpu-hour)
+            let (speed, mem_per, ppv) = match val("family") {
+                "m4" => (1.00, 4.0, 0.0500),
+                "r4" => (1.02, 8.0, 0.0665),
+                "c4" => (1.18, 1.875, 0.0498),
+                f => panic!("bad aws family {f}"),
+            };
+            MachineSpec {
+                vcpus,
+                mem_gb: mem_per * vcpus as f64,
+                speed,
+                price_per_hour: ppv * vcpus as f64,
+            }
+        }
+        "azure" => {
+            let vcpus: u32 = val("cpu_size").parse().expect("azure cpu_size");
+            let (speed, mem_per, ppv) = match val("family") {
+                "D_v2" => (0.92, 3.5, 0.0570),
+                "D_v3" => (1.06, 4.0, 0.0480),
+                f => panic!("bad azure family {f}"),
+            };
+            MachineSpec {
+                vcpus,
+                mem_gb: mem_per * vcpus as f64,
+                speed,
+                price_per_hour: ppv * vcpus as f64,
+            }
+        }
+        "gcp" => {
+            let vcpus: u32 = val("vcpu").parse().expect("gcp vcpu");
+            let (speed, base_ppv) = match val("family") {
+                "e2" => (0.88, 0.0335),
+                "n1" => (1.00, 0.0475),
+                f => panic!("bad gcp family {f}"),
+            };
+            let (mem_per, price_mult) = match val("type") {
+                "standard" => (4.0, 1.00),
+                "highmem" => (8.0, 1.21),
+                "highcpu" => (1.0, 0.745),
+                t => panic!("bad gcp type {t}"),
+            };
+            MachineSpec {
+                vcpus,
+                mem_gb: mem_per * vcpus as f64,
+                speed,
+                price_per_hour: base_ppv * price_mult * vcpus as f64,
+            }
+        }
+        other => panic!("unknown provider {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::domain::Domain;
+
+    #[test]
+    fn every_grid_config_resolves() {
+        let d = Domain::paper();
+        for cfg in d.full_grid() {
+            let m = machine_spec(&d, &cfg);
+            assert!(m.vcpus == 2 || m.vcpus == 4, "{}", cfg.label(&d));
+            assert!(m.mem_gb > 0.0 && m.speed > 0.5 && m.price_per_hour > 0.0);
+        }
+    }
+
+    #[test]
+    fn aws_c4_is_fast_and_lean() {
+        let d = Domain::paper();
+        // c4.xlarge vs r4.xlarge
+        let c4 = Config { provider: 0, choices: vec![2, 1], nodes: 2 };
+        let r4 = Config { provider: 0, choices: vec![1, 1], nodes: 2 };
+        let (mc, mr) = (machine_spec(&d, &c4), machine_spec(&d, &r4));
+        assert!(mc.speed > mr.speed);
+        assert!(mc.mem_gb < mr.mem_gb);
+        assert!(mc.price_per_hour < mr.price_per_hour);
+    }
+
+    #[test]
+    fn gcp_highmem_doubles_memory_for_a_premium() {
+        let d = Domain::paper();
+        let std = Config { provider: 2, choices: vec![1, 0, 1], nodes: 2 };
+        let hm = Config { provider: 2, choices: vec![1, 1, 1], nodes: 2 };
+        let (ms, mh) = (machine_spec(&d, &std), machine_spec(&d, &hm));
+        assert_eq!(mh.mem_gb, 2.0 * ms.mem_gb);
+        assert!(mh.price_per_hour > ms.price_per_hour);
+    }
+
+    #[test]
+    fn provider_traits_differ() {
+        let a = provider_traits("aws");
+        let z = provider_traits("azure");
+        let g = provider_traits("gcp");
+        assert!(g.net_factor < a.net_factor && a.net_factor < z.net_factor);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown provider")]
+    fn unknown_provider_panics() {
+        provider_traits("oracle");
+    }
+}

@@ -1,0 +1,164 @@
+//! Workload profiles: the 10 Dask tasks x 3 input datasets of Table II.
+//!
+//! Each task is characterized by an Ernest-style decomposition of where
+//! its time goes (serial fraction, parallelizable vCPU-seconds,
+//! tree-aggregation and all-to-all communication) plus a memory footprint
+//! factor. The numbers are calibrated so that the *qualitative* contrasts
+//! the paper describes hold: XGBoost is communication-heavy with branching
+//! logic, k-means is compute-bound with minimal communication, quantile
+//! transformation is shuffle(all-to-all)-dominated, polynomial features
+//! blow up memory, standard scaling is a cheap single pass, etc.
+
+/// Per-task cost model coefficients (at dataset scale 1.0).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TaskProfile {
+    pub name: &'static str,
+    /// Non-parallelizable seconds (driver-side work).
+    pub serial_s: f64,
+    /// Parallelizable work in vCPU-seconds.
+    pub parallel_vcpu_s: f64,
+    /// Tree-aggregation seconds multiplied by log2(nodes).
+    pub comm_log_s: f64,
+    /// All-to-all shuffle seconds multiplied by (nodes - 1).
+    pub comm_a2a_s: f64,
+    /// Working-set memory = mem_factor x dataset.size_gb.
+    pub mem_factor: f64,
+    /// Log-normal measurement noise sigma.
+    pub noise_sigma: f64,
+}
+
+/// The 10 Dask tasks of Table II.
+pub const TASKS: [TaskProfile; 10] = [
+    TaskProfile { name: "kmeans", serial_s: 20.0, parallel_vcpu_s: 9000.0, comm_log_s: 30.0, comm_a2a_s: 2.0, mem_factor: 1.2, noise_sigma: 0.04 },
+    TaskProfile { name: "linear_regression", serial_s: 15.0, parallel_vcpu_s: 5000.0, comm_log_s: 20.0, comm_a2a_s: 4.0, mem_factor: 1.0, noise_sigma: 0.04 },
+    TaskProfile { name: "logistic_regression", serial_s: 25.0, parallel_vcpu_s: 6500.0, comm_log_s: 40.0, comm_a2a_s: 3.0, mem_factor: 1.0, noise_sigma: 0.05 },
+    TaskProfile { name: "naive_bayes", serial_s: 10.0, parallel_vcpu_s: 1800.0, comm_log_s: 10.0, comm_a2a_s: 1.0, mem_factor: 0.8, noise_sigma: 0.05 },
+    TaskProfile { name: "poisson_regression", serial_s: 20.0, parallel_vcpu_s: 5500.0, comm_log_s: 35.0, comm_a2a_s: 3.0, mem_factor: 1.0, noise_sigma: 0.05 },
+    TaskProfile { name: "polynomial_features", serial_s: 30.0, parallel_vcpu_s: 4000.0, comm_log_s: 8.0, comm_a2a_s: 25.0, mem_factor: 3.5, noise_sigma: 0.06 },
+    TaskProfile { name: "spectral_clustering", serial_s: 60.0, parallel_vcpu_s: 14000.0, comm_log_s: 50.0, comm_a2a_s: 40.0, mem_factor: 2.5, noise_sigma: 0.07 },
+    TaskProfile { name: "quantile_transformer", serial_s: 15.0, parallel_vcpu_s: 1500.0, comm_log_s: 10.0, comm_a2a_s: 110.0, mem_factor: 1.4, noise_sigma: 0.06 },
+    TaskProfile { name: "standard_scaler", serial_s: 8.0, parallel_vcpu_s: 900.0, comm_log_s: 6.0, comm_a2a_s: 1.0, mem_factor: 0.8, noise_sigma: 0.08 },
+    TaskProfile { name: "xgboost", serial_s: 40.0, parallel_vcpu_s: 11000.0, comm_log_s: 120.0, comm_a2a_s: 8.0, mem_factor: 1.5, noise_sigma: 0.06 },
+];
+
+/// An input dataset (Table II): its compute scale factor and in-memory
+/// footprint.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DatasetProfile {
+    pub name: &'static str,
+    /// Multiplier on compute/communication work relative to scale 1.0.
+    pub scale: f64,
+    /// Dense in-memory size (GB) before task-specific expansion.
+    pub size_gb: f64,
+}
+
+/// The 3 public datasets of Table II.
+pub const DATASETS: [DatasetProfile; 3] = [
+    DatasetProfile { name: "buzz", scale: 1.8, size_gb: 10.0 },
+    DatasetProfile { name: "credit_card", scale: 0.35, size_gb: 2.5 },
+    DatasetProfile { name: "santander", scale: 1.0, size_gb: 6.0 },
+];
+
+/// ML inference serving tasks — the paper's stated future work ("a
+/// similar in-depth study for ML inference applications"), implemented as
+/// a second workload suite. An "inference workload" is a fixed batch of
+/// requests served through a model replica set: mostly embarrassingly
+/// parallel (replicas), with a load-balancer aggregation term, negligible
+/// all-to-all traffic, and a hard memory floor for model weights (lean
+/// nodes cannot even hold large models without heavy paging).
+pub const INFERENCE_TASKS: [TaskProfile; 5] = [
+    TaskProfile { name: "bert_serving", serial_s: 12.0, parallel_vcpu_s: 7000.0, comm_log_s: 14.0, comm_a2a_s: 0.5, mem_factor: 2.0, noise_sigma: 0.05 },
+    TaskProfile { name: "resnet_serving", serial_s: 8.0, parallel_vcpu_s: 5200.0, comm_log_s: 10.0, comm_a2a_s: 0.5, mem_factor: 1.2, noise_sigma: 0.05 },
+    TaskProfile { name: "recsys_ranking", serial_s: 15.0, parallel_vcpu_s: 3800.0, comm_log_s: 25.0, comm_a2a_s: 2.0, mem_factor: 2.8, noise_sigma: 0.06 },
+    TaskProfile { name: "ner_pipeline", serial_s: 6.0, parallel_vcpu_s: 2400.0, comm_log_s: 8.0, comm_a2a_s: 0.5, mem_factor: 0.9, noise_sigma: 0.07 },
+    TaskProfile { name: "tts_batch", serial_s: 10.0, parallel_vcpu_s: 9500.0, comm_log_s: 12.0, comm_a2a_s: 1.0, mem_factor: 1.6, noise_sigma: 0.05 },
+];
+
+/// Request-trace "datasets" for the inference suite: a trace's scale is
+/// its request volume; its size is the model + feature footprint.
+pub const INFERENCE_TRACES: [DatasetProfile; 2] = [
+    DatasetProfile { name: "peak_trace", scale: 1.6, size_gb: 8.0 },
+    DatasetProfile { name: "offpeak_trace", scale: 0.5, size_gb: 8.0 },
+];
+
+/// A workload = (task, dataset) pair; 30 in total.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Workload {
+    pub task: TaskProfile,
+    pub dataset: DatasetProfile,
+}
+
+impl Workload {
+    pub fn id(&self) -> String {
+        format!("{}:{}", self.task.name, self.dataset.name)
+    }
+}
+
+/// All 30 workloads in stable (task-major) order.
+pub fn all_workloads() -> Vec<Workload> {
+    TASKS
+        .iter()
+        .flat_map(|&task| DATASETS.iter().map(move |&dataset| Workload { task, dataset }))
+        .collect()
+}
+
+/// The 10 inference workloads (5 serving tasks x 2 request traces).
+pub fn inference_workloads() -> Vec<Workload> {
+    INFERENCE_TASKS
+        .iter()
+        .flat_map(|&task| {
+            INFERENCE_TRACES.iter().map(move |&dataset| Workload { task, dataset })
+        })
+        .collect()
+}
+
+pub fn workload_by_id(id: &str) -> Option<Workload> {
+    all_workloads()
+        .into_iter()
+        .chain(inference_workloads())
+        .find(|w| w.id() == id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thirty_workloads_with_unique_ids() {
+        let ws = all_workloads();
+        assert_eq!(ws.len(), 30);
+        let mut ids: Vec<String> = ws.iter().map(|w| w.id()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), 30);
+    }
+
+    #[test]
+    fn workload_lookup_roundtrip() {
+        for w in all_workloads() {
+            let got = workload_by_id(&w.id()).unwrap();
+            assert_eq!(got.task.name, w.task.name);
+            assert_eq!(got.dataset.name, w.dataset.name);
+        }
+        assert!(workload_by_id("nope:nothing").is_none());
+    }
+
+    #[test]
+    fn task_contrasts_from_the_paper() {
+        let by_name = |n: &str| TASKS.iter().find(|t| t.name == n).unwrap();
+        let xgb = by_name("xgboost");
+        let km = by_name("kmeans");
+        let qt = by_name("quantile_transformer");
+        let ss = by_name("standard_scaler");
+        let pf = by_name("polynomial_features");
+        // XGBoost: complex communication patterns; k-means compute-bound.
+        assert!(xgb.comm_log_s > 3.0 * km.comm_log_s);
+        assert!(km.parallel_vcpu_s / km.comm_log_s > 100.0);
+        // Quantile transform is shuffle-dominated.
+        assert!(qt.comm_a2a_s > qt.comm_log_s);
+        // Standard scaler is the cheapest task.
+        assert!(TASKS.iter().all(|t| t.parallel_vcpu_s >= ss.parallel_vcpu_s));
+        // Polynomial features has the largest memory blow-up.
+        assert!(TASKS.iter().all(|t| t.mem_factor <= pf.mem_factor));
+    }
+}

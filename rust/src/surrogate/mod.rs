@@ -1,0 +1,213 @@
+//! Surrogate models + acquisition functions for the BO-family optimizers.
+//!
+//! All surrogates share one interface: fit on the evaluated (encoded)
+//! configurations, predict mean/std over a candidate set. Implementations:
+//!
+//! * [`gp::GpSurrogate`]   — Matern-5/2 Gaussian process (CherryPick, the
+//!   Bilal et al. cost scheme, Rising Bandits' component optimizer). Runs
+//!   natively (this module) or through the AOT PJRT artifact
+//!   (`runtime::ArtifactGp`) — bit-for-bit the same math, checked by the
+//!   parity integration test.
+//! * [`rf::RandomForest`]  — random-forest regressor (Bilal et al. time
+//!   scheme, SMAC-lite; also the PARIS-style predictor).
+//! * [`rbf::RbfModel`]     — cubic RBF interpolant (RBFOpt-lite).
+//! * [`tpe`]               — Parzen categorical estimators (HyperOpt-lite).
+
+pub mod gp;
+pub mod rbf;
+pub mod rf;
+pub mod tpe;
+
+/// Pluggable execution backend for the two surrogates that exist both
+/// natively and as AOT artifacts. The optimizer layer only ever talks to
+/// this trait; `NativeBackend` computes in-process, `runtime::ArtifactGp`
+/// executes the PJRT-compiled HLO. RF/TPE are native-only by design (the
+/// paper's hot-spot is the GP/RBF math).
+pub trait Backend: Sync {
+    /// Matern-5/2 GP posterior over candidates (mean/std in y units).
+    fn gp_fit_predict(&self, x: &[Vec<f64>], y: &[f64], cands: &[Vec<f64>]) -> Prediction;
+
+    /// Cubic-RBF interpolant values + min-distance over candidates.
+    fn rbf_fit_predict(
+        &self,
+        x: &[Vec<f64>],
+        y: &[f64],
+        ridge: f64,
+        cands: &[Vec<f64>],
+    ) -> rbf::RbfPrediction;
+}
+
+/// In-process reference backend.
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn gp_fit_predict(&self, x: &[Vec<f64>], y: &[f64], cands: &[Vec<f64>]) -> Prediction {
+        gp::GpSurrogate::default().fit_predict(x, y, cands)
+    }
+
+    fn rbf_fit_predict(
+        &self,
+        x: &[Vec<f64>],
+        y: &[f64],
+        ridge: f64,
+        cands: &[Vec<f64>],
+    ) -> rbf::RbfPrediction {
+        // Escalate ridge on singular systems (duplicate evaluations).
+        let mut r = ridge;
+        for _ in 0..8 {
+            if let Some(fit) = rbf::fit(x, y, r) {
+                return fit.predict(cands);
+            }
+            r = if r == 0.0 { 1e-8 } else { r * 100.0 };
+        }
+        panic!("RBF fit failed even with large ridge");
+    }
+}
+
+/// Posterior prediction over a candidate set.
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+}
+
+/// A surrogate regression model with predictive uncertainty.
+pub trait Surrogate {
+    /// Fit on observations and predict at candidate points.
+    ///
+    /// `x`: n encoded configurations, `y`: n observed losses,
+    /// `cands`: m encoded candidates. Returns mean/std of length m.
+    fn fit_predict(&mut self, x: &[Vec<f64>], y: &[f64], cands: &[Vec<f64>]) -> Prediction;
+}
+
+/// Standard normal CDF via the same A&S 7.1.26 erf approximation baked
+/// into the AOT artifact (keeps native and artifact paths numerically
+/// aligned to ~1e-7).
+pub fn norm_cdf(z: f64) -> f64 {
+    let x = z / std::f64::consts::SQRT_2;
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    let erf = sign * (1.0 - poly * (-x * x).exp());
+    0.5 * (1.0 + erf)
+}
+
+pub fn norm_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Acquisition functions, oriented maximize-is-better for minimization.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Acquisition {
+    /// Expected improvement below `best_y`.
+    Ei,
+    /// Probability of improvement below `best_y`.
+    Pi,
+    /// Negative lower confidence bound, -(mean - kappa*std).
+    Lcb { kappa: f64 },
+}
+
+impl Acquisition {
+    pub fn score(&self, mean: f64, std: f64, best_y: f64) -> f64 {
+        let std = std.max(1e-12);
+        match *self {
+            Acquisition::Ei => {
+                let imp = best_y - mean;
+                let z = imp / std;
+                imp * norm_cdf(z) + std * norm_pdf(z)
+            }
+            Acquisition::Pi => norm_cdf((best_y - mean) / std),
+            Acquisition::Lcb { kappa } => -(mean - kappa * std),
+        }
+    }
+
+    /// Index of the best candidate under this acquisition, optionally
+    /// excluding some candidates (e.g. already-evaluated ones).
+    pub fn argmax(&self, pred: &Prediction, best_y: f64, excluded: &[bool]) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for i in 0..pred.mean.len() {
+            if *excluded.get(i).unwrap_or(&false) {
+                continue;
+            }
+            let s = self.score(pred.mean[i], pred.std[i], best_y);
+            if best.map(|(_, b)| s > b).unwrap_or(true) {
+                best = Some((i, s));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+}
+
+/// Standardize y to zero mean / unit variance; returns (z, mean, std).
+/// Degenerate inputs (constant y) get std = 1 to avoid division by zero.
+pub fn standardize(y: &[f64]) -> (Vec<f64>, f64, f64) {
+    let m = crate::util::stats::mean(y);
+    let s = {
+        let sd = crate::util::stats::stddev(y);
+        if sd > 1e-12 { sd } else { 1.0 }
+    };
+    (y.iter().map(|v| (v - m) / s).collect(), m, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norm_cdf_reference_values() {
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((norm_cdf(1.0) - 0.8413447).abs() < 1e-6);
+        assert!((norm_cdf(-2.0) - 0.0227501).abs() < 1e-6);
+        assert!(norm_cdf(6.0) > 0.999999);
+    }
+
+    #[test]
+    fn ei_zero_when_hopeless_positive_when_promising() {
+        let a = Acquisition::Ei;
+        // mean far above best with tiny std: ~0 improvement expected.
+        assert!(a.score(10.0, 0.01, 0.0) < 1e-9);
+        // mean below best: at least the mean gap.
+        assert!(a.score(-1.0, 0.1, 0.0) > 0.99);
+        // More uncertainty, more EI (at equal mean).
+        assert!(a.score(1.0, 2.0, 0.0) > a.score(1.0, 0.5, 0.0));
+    }
+
+    #[test]
+    fn pi_monotone_in_mean() {
+        let a = Acquisition::Pi;
+        assert!(a.score(-1.0, 1.0, 0.0) > a.score(1.0, 1.0, 0.0));
+    }
+
+    #[test]
+    fn lcb_prefers_low_mean_high_std() {
+        let a = Acquisition::Lcb { kappa: 2.0 };
+        assert!(a.score(1.0, 1.0, 0.0) > a.score(2.0, 1.0, 0.0));
+        assert!(a.score(1.0, 2.0, 0.0) > a.score(1.0, 1.0, 0.0));
+    }
+
+    #[test]
+    fn argmax_respects_exclusions() {
+        let pred = Prediction { mean: vec![0.0, -5.0, 1.0], std: vec![0.1; 3] };
+        let a = Acquisition::Ei;
+        assert_eq!(a.argmax(&pred, 0.0, &[false, false, false]), Some(1));
+        assert_eq!(a.argmax(&pred, 0.0, &[false, true, false]), Some(0));
+        assert_eq!(a.argmax(&pred, 0.0, &[true, true, true]), None);
+    }
+
+    #[test]
+    fn standardize_roundtrip() {
+        let y = vec![3.0, 5.0, 7.0, 9.0];
+        let (z, m, s) = standardize(&y);
+        assert!((crate::util::stats::mean(&z)).abs() < 1e-12);
+        for (zi, yi) in z.iter().zip(&y) {
+            assert!((zi * s + m - yi).abs() < 1e-12);
+        }
+        // Constant input doesn't blow up.
+        let (z2, _, s2) = standardize(&[4.0, 4.0]);
+        assert_eq!(s2, 1.0);
+        assert_eq!(z2, vec![0.0, 0.0]);
+    }
+}

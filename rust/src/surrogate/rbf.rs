@@ -1,0 +1,140 @@
+//! Native cubic-RBF interpolant (RBFOpt-lite's surrogate).
+//!
+//! phi(r) = r^3 with a constant polynomial tail, fit by solving the
+//! (n+1) saddle system with partial-pivoting Gaussian elimination.
+//! Mirrors `rbf_forward` in python/compile/model.py (the AOT artifact
+//! solves the same system via normal equations in f64); the parity test
+//! in rust/tests checks the two agree.
+//!
+//! Besides the interpolant value, the model reports each candidate's
+//! distance to the nearest observation — RBFOpt-lite's exploration signal.
+
+use crate::linalg::{solve_general, Matrix};
+
+#[derive(Clone, Debug)]
+pub struct RbfFit {
+    centers: Vec<Vec<f64>>,
+    coef: Vec<f64>,
+    tail: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct RbfPrediction {
+    pub pred: Vec<f64>,
+    pub mindist: Vec<f64>,
+}
+
+fn dist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt()
+}
+
+fn phi(r: f64) -> f64 {
+    r * r * r
+}
+
+/// Fit the interpolant. `ridge` regularizes the live diagonal (matches the
+/// artifact's `lam`). Returns None when the saddle system is singular
+/// (e.g. duplicated points with conflicting targets and zero ridge).
+pub fn fit(x: &[Vec<f64>], y: &[f64], ridge: f64) -> Option<RbfFit> {
+    assert_eq!(x.len(), y.len());
+    assert!(!x.is_empty());
+    let n = x.len();
+    let mut a = Matrix::zeros(n + 1, n + 1);
+    for i in 0..n {
+        for j in 0..n {
+            a[(i, j)] = phi(dist(&x[i], &x[j]));
+        }
+        a[(i, i)] += ridge;
+        a[(i, n)] = 1.0;
+        a[(n, i)] = 1.0;
+    }
+    let mut rhs = y.to_vec();
+    rhs.push(0.0);
+    let z = solve_general(&a, &rhs)?;
+    Some(RbfFit { centers: x.to_vec(), coef: z[..n].to_vec(), tail: z[n] })
+}
+
+impl RbfFit {
+    pub fn predict(&self, cands: &[Vec<f64>]) -> RbfPrediction {
+        let mut pred = Vec::with_capacity(cands.len());
+        let mut mindist = Vec::with_capacity(cands.len());
+        for c in cands {
+            let mut s = self.tail;
+            let mut dmin = f64::INFINITY;
+            for (center, coef) in self.centers.iter().zip(&self.coef) {
+                let r = dist(center, c);
+                s += coef * phi(r);
+                dmin = dmin.min(r);
+            }
+            pred.push(s);
+            mindist.push(dmin);
+        }
+        RbfPrediction { pred, mindist }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn toy(n: usize, d: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<Vec<f64>> = (0..n).map(|_| (0..d).map(|_| rng.f64()).collect()).collect();
+        let y: Vec<f64> = x.iter().map(|v| v.iter().map(|t| t * t).sum::<f64>()).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn interpolates_exactly_with_zero_ridge() {
+        let (x, y) = toy(15, 3, 1);
+        let fit = fit(&x, &y, 0.0).unwrap();
+        let p = fit.predict(&x);
+        for (got, want) in p.pred.iter().zip(&y) {
+            assert!((got - want).abs() < 1e-7, "{got} vs {want}");
+        }
+        assert!(p.mindist.iter().all(|&d| d < 1e-12));
+    }
+
+    #[test]
+    fn mindist_matches_bruteforce() {
+        let (x, y) = toy(10, 4, 2);
+        let fit = fit(&x, &y, 1e-8).unwrap();
+        let mut rng = Rng::new(3);
+        let cands: Vec<Vec<f64>> = (0..5).map(|_| (0..4).map(|_| rng.f64()).collect()).collect();
+        let p = fit.predict(&cands);
+        for (c, got) in cands.iter().zip(&p.mindist) {
+            let want =
+                x.iter().map(|xi| dist(xi, c)).fold(f64::INFINITY, f64::min);
+            assert!((got - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn smooth_generalization_between_points() {
+        // 1-D line: interpolant of y = x should stay near x in-between.
+        let x: Vec<Vec<f64>> = (0..=10).map(|i| vec![i as f64 / 10.0]).collect();
+        let y: Vec<f64> = x.iter().map(|v| v[0]).collect();
+        let fit = fit(&x, &y, 0.0).unwrap();
+        let p = fit.predict(&[vec![0.55], vec![0.05]]);
+        assert!((p.pred[0] - 0.55).abs() < 0.05);
+        assert!((p.pred[1] - 0.05).abs() < 0.05);
+    }
+
+    #[test]
+    fn duplicate_points_need_ridge() {
+        let x = vec![vec![0.5, 0.5], vec![0.5, 0.5]];
+        let y = vec![1.0, 2.0];
+        assert!(fit(&x, &y, 0.0).is_none());
+        let f = fit(&x, &y, 1e-3).unwrap();
+        let p = f.predict(&[vec![0.5, 0.5]]);
+        assert!((p.pred[0] - 1.5).abs() < 0.1);
+    }
+
+    #[test]
+    fn single_point_degenerates_to_constant() {
+        let f = fit(&[vec![0.3]], &[7.0], 1e-8).unwrap();
+        let p = f.predict(&[vec![0.9]]);
+        assert!((p.pred[0] - 7.0).abs() < 1e-6);
+    }
+}

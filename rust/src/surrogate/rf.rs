@@ -1,0 +1,258 @@
+//! Random-forest regressor (substrate).
+//!
+//! Serves two roles from the paper: the surrogate of the Bilal et al.
+//! time-target scheme and SMAC-lite (predictive std = spread across
+//! trees, the standard SMAC construction), and the PARIS-style predictive
+//! baseline. CART regression trees, bootstrap sampling, random feature
+//! subsets at each split, variance-reduction split criterion.
+
+use super::{Prediction, Surrogate};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct RfParams {
+    pub n_trees: usize,
+    pub min_leaf: usize,
+    /// Features tried per split; 0 = ceil(d/3).
+    pub mtry: usize,
+    pub seed: u64,
+    /// Bootstrap resampling (true for forest behaviour; false makes each
+    /// tree see the full data — useful for tests).
+    pub bootstrap: bool,
+}
+
+impl Default for RfParams {
+    fn default() -> Self {
+        RfParams { n_trees: 30, min_leaf: 2, mtry: 0, seed: 0x5EED, bootstrap: true }
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Node {
+    Leaf { value: f64 },
+    Split { feature: usize, threshold: f64, left: usize, right: usize },
+}
+
+#[derive(Clone, Debug)]
+struct Tree {
+    nodes: Vec<Node>,
+}
+
+impl Tree {
+    fn predict(&self, x: &[f64]) -> f64 {
+        let mut i = 0;
+        loop {
+            match &self.nodes[i] {
+                Node::Leaf { value } => return *value,
+                Node::Split { feature, threshold, left, right } => {
+                    i = if x[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+}
+
+pub struct RandomForest {
+    pub params: RfParams,
+    trees: Vec<Tree>,
+}
+
+impl RandomForest {
+    pub fn new(params: RfParams) -> Self {
+        RandomForest { params, trees: Vec::new() }
+    }
+
+    pub fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty(), "RF fit with no data");
+        let d = x[0].len();
+        let mtry = if self.params.mtry == 0 { d.div_ceil(3) } else { self.params.mtry.min(d) };
+        let mut rng = Rng::new(self.params.seed);
+        self.trees = (0..self.params.n_trees)
+            .map(|t| {
+                let mut trng = rng.fork(t as u64);
+                let idx: Vec<usize> = if self.params.bootstrap {
+                    (0..x.len()).map(|_| trng.usize_below(x.len())).collect()
+                } else {
+                    (0..x.len()).collect()
+                };
+                let mut tree = Tree { nodes: Vec::new() };
+                build(&mut tree, x, y, idx, mtry, self.params.min_leaf, &mut trng);
+                tree
+            })
+            .collect();
+    }
+
+    pub fn predict_one(&self, x: &[f64]) -> (f64, f64) {
+        assert!(!self.trees.is_empty(), "predict before fit");
+        let preds: Vec<f64> = self.trees.iter().map(|t| t.predict(x)).collect();
+        let m = crate::util::stats::mean(&preds);
+        let s = crate::util::stats::stddev(&preds);
+        (m, s)
+    }
+}
+
+fn build(
+    tree: &mut Tree,
+    x: &[Vec<f64>],
+    y: &[f64],
+    idx: Vec<usize>,
+    mtry: usize,
+    min_leaf: usize,
+    rng: &mut Rng,
+) -> usize {
+    let mean: f64 = idx.iter().map(|&i| y[i]).sum::<f64>() / idx.len() as f64;
+    // Stop: small node or pure targets.
+    let sse: f64 = idx.iter().map(|&i| (y[i] - mean) * (y[i] - mean)).sum();
+    if idx.len() < 2 * min_leaf || sse < 1e-12 {
+        tree.nodes.push(Node::Leaf { value: mean });
+        return tree.nodes.len() - 1;
+    }
+
+    let d = x[0].len();
+    let feats = rng.sample_indices(d, mtry.min(d));
+    let mut best: Option<(usize, f64, f64)> = None; // (feature, threshold, score)
+    for &f in &feats {
+        let mut vals: Vec<f64> = idx.iter().map(|&i| x[i][f]).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        vals.dedup();
+        if vals.len() < 2 {
+            continue;
+        }
+        for w in vals.windows(2) {
+            let thr = 0.5 * (w[0] + w[1]);
+            let (mut nl, mut sl, mut nr, mut sr) = (0usize, 0.0, 0usize, 0.0);
+            for &i in &idx {
+                if x[i][f] <= thr {
+                    nl += 1;
+                    sl += y[i];
+                } else {
+                    nr += 1;
+                    sr += y[i];
+                }
+            }
+            if nl < min_leaf || nr < min_leaf {
+                continue;
+            }
+            // Variance reduction == maximize sum of squared means weighted.
+            let score = sl * sl / nl as f64 + sr * sr / nr as f64;
+            if best.map(|(_, _, b)| score > b).unwrap_or(true) {
+                best = Some((f, thr, score));
+            }
+        }
+    }
+
+    let Some((f, thr, _)) = best else {
+        tree.nodes.push(Node::Leaf { value: mean });
+        return tree.nodes.len() - 1;
+    };
+
+    let (li, ri): (Vec<usize>, Vec<usize>) = idx.iter().partition(|&&i| x[i][f] <= thr);
+    let placeholder = tree.nodes.len();
+    tree.nodes.push(Node::Leaf { value: mean }); // replaced below
+    let left = build(tree, x, y, li, mtry, min_leaf, rng);
+    let right = build(tree, x, y, ri, mtry, min_leaf, rng);
+    tree.nodes[placeholder] = Node::Split { feature: f, threshold: thr, left, right };
+    placeholder
+}
+
+impl Surrogate for RandomForest {
+    fn fit_predict(&mut self, x: &[Vec<f64>], y: &[f64], cands: &[Vec<f64>]) -> Prediction {
+        self.fit(x, y);
+        let (mut mean, mut std) = (Vec::with_capacity(cands.len()), Vec::with_capacity(cands.len()));
+        for c in cands {
+            let (m, s) = self.predict_one(c);
+            mean.push(m);
+            std.push(s);
+        }
+        Prediction { mean, std }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn step_data(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        // y = 10 if x0 > 0.5 else 0, plus small noise on x1 irrelevant dim.
+        let mut rng = Rng::new(seed);
+        let x: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.f64(), rng.f64()]).collect();
+        let y: Vec<f64> = x.iter().map(|v| if v[0] > 0.5 { 10.0 } else { 0.0 }).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn learns_a_step_function() {
+        let (x, y) = step_data(200, 1);
+        let mut rf = RandomForest::new(RfParams::default());
+        rf.fit(&x, &y);
+        let (lo, _) = rf.predict_one(&[0.1, 0.5]);
+        let (hi, _) = rf.predict_one(&[0.9, 0.5]);
+        assert!(lo < 2.0, "lo {lo}");
+        assert!(hi > 8.0, "hi {hi}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, y) = step_data(100, 2);
+        let mut a = RandomForest::new(RfParams::default());
+        let mut b = RandomForest::new(RfParams::default());
+        let pa = a.fit_predict(&x, &y, &x);
+        let pb = b.fit_predict(&x, &y, &x);
+        assert_eq!(pa.mean, pb.mean);
+    }
+
+    #[test]
+    fn uncertainty_higher_near_boundary() {
+        let (x, y) = step_data(300, 3);
+        let mut rf = RandomForest::new(RfParams::default());
+        rf.fit(&x, &y);
+        let (_, s_boundary) = rf.predict_one(&[0.5, 0.5]);
+        let (_, s_deep) = rf.predict_one(&[0.05, 0.5]);
+        assert!(s_boundary >= s_deep, "{s_boundary} vs {s_deep}");
+    }
+
+    #[test]
+    fn no_bootstrap_single_tree_fits_exactly() {
+        // A single un-bootstrapped tree with min_leaf 1 memorizes the data.
+        let x = vec![vec![0.0], vec![0.25], vec![0.5], vec![0.75], vec![1.0]];
+        let y = vec![1.0, 5.0, 2.0, 8.0, 3.0];
+        let mut rf = RandomForest::new(RfParams {
+            n_trees: 1,
+            min_leaf: 1,
+            mtry: 1,
+            seed: 4,
+            bootstrap: false,
+        });
+        rf.fit(&x, &y);
+        for (xi, yi) in x.iter().zip(&y) {
+            assert_eq!(rf.predict_one(xi).0, *yi);
+        }
+    }
+
+    #[test]
+    fn handles_tiny_datasets() {
+        let mut rf = RandomForest::new(RfParams::default());
+        let p = rf.fit_predict(&[vec![0.1], vec![0.9]], &[1.0, 2.0], &[vec![0.5]]);
+        assert!(p.mean[0] >= 1.0 && p.mean[0] <= 2.0);
+    }
+
+    #[test]
+    fn property_predictions_within_target_range() {
+        crate::testkit::check("rf predictions bounded by target range", 10, |g| {
+            let n = g.usize_in(5, 40);
+            let d = g.usize_in(1, 6);
+            let x: Vec<Vec<f64>> = (0..n).map(|_| g.vec_f64(d, 0.0, 1.0)).collect();
+            let y = g.vec_f64(n, -5.0, 5.0);
+            let mut rf = RandomForest::new(RfParams { n_trees: 10, ..Default::default() });
+            let cands: Vec<Vec<f64>> = (0..10).map(|_| g.vec_f64(d, 0.0, 1.0)).collect();
+            let p = rf.fit_predict(&x, &y, &cands);
+            let (lo, hi) =
+                (crate::util::stats::min(&y) - 1e-9, crate::util::stats::max(&y) + 1e-9);
+            for m in p.mean {
+                assert!(m >= lo && m <= hi, "prediction {m} outside [{lo}, {hi}]");
+            }
+        });
+    }
+}

@@ -1,0 +1,137 @@
+//! Parzen categorical estimators — the building block of HyperOpt-lite.
+//!
+//! TPE splits observed configurations into a "good" set (best gamma
+//! fraction) and a "bad" set, models each with smoothed categorical
+//! densities l(x) and g(x), and proposes values maximizing l/g. The
+//! hierarchical structure (provider first, then its conditional
+//! parameters) is handled by the optimizer in `optimizers::hyperopt`;
+//! this module provides the per-parameter density math.
+
+use crate::util::rng::Rng;
+
+/// Laplace-smoothed categorical distribution over `k` values.
+#[derive(Clone, Debug)]
+pub struct CatDensity {
+    counts: Vec<f64>,
+    total: f64,
+}
+
+impl CatDensity {
+    /// Build from observed value indices with smoothing `alpha` (>0).
+    pub fn from_observations(k: usize, obs: &[usize], alpha: f64) -> CatDensity {
+        assert!(k > 0 && alpha > 0.0);
+        let mut counts = vec![alpha; k];
+        for &o in obs {
+            assert!(o < k, "observation out of range");
+            counts[o] += 1.0;
+        }
+        let total = counts.iter().sum();
+        CatDensity { counts, total }
+    }
+
+    pub fn prob(&self, v: usize) -> f64 {
+        self.counts[v] / self.total
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        rng.weighted_index(&self.counts)
+    }
+
+    pub fn k(&self) -> usize {
+        self.counts.len()
+    }
+}
+
+/// The l/g density pair for one categorical parameter.
+#[derive(Clone, Debug)]
+pub struct TpePair {
+    pub good: CatDensity,
+    pub bad: CatDensity,
+}
+
+impl TpePair {
+    pub fn new(k: usize, good_obs: &[usize], bad_obs: &[usize], alpha: f64) -> TpePair {
+        TpePair {
+            good: CatDensity::from_observations(k, good_obs, alpha),
+            bad: CatDensity::from_observations(k, bad_obs, alpha),
+        }
+    }
+
+    /// The TPE acquisition ratio l(v)/g(v) (higher = more promising).
+    pub fn ratio(&self, v: usize) -> f64 {
+        self.good.prob(v) / self.bad.prob(v)
+    }
+
+    /// Sample from the good density (candidate generation), as in TPE.
+    pub fn sample_good(&self, rng: &mut Rng) -> usize {
+        self.good.sample(rng)
+    }
+}
+
+/// Split observation indices into (good, bad) by target value: the best
+/// ceil(gamma * n) observations are "good". Returns indices into `ys`.
+pub fn split_good_bad(ys: &[f64], gamma: f64) -> (Vec<usize>, Vec<usize>) {
+    assert!((0.0..=1.0).contains(&gamma));
+    let n = ys.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| ys[a].partial_cmp(&ys[b]).unwrap());
+    let n_good = ((gamma * n as f64).ceil() as usize).clamp(1.min(n), n);
+    let good = order[..n_good].to_vec();
+    let bad = order[n_good..].to_vec();
+    (good, bad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn density_normalizes() {
+        let d = CatDensity::from_observations(3, &[0, 0, 1], 1.0);
+        let total: f64 = (0..3).map(|v| d.prob(v)).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        assert!(d.prob(0) > d.prob(1));
+        assert!(d.prob(1) > d.prob(2));
+    }
+
+    #[test]
+    fn smoothing_keeps_unseen_values_alive() {
+        let d = CatDensity::from_observations(4, &[0; 50], 1.0);
+        for v in 1..4 {
+            assert!(d.prob(v) > 0.0);
+        }
+    }
+
+    #[test]
+    fn ratio_prefers_good_values() {
+        // Value 0 dominates good observations, value 1 dominates bad.
+        let p = TpePair::new(2, &[0, 0, 0, 0], &[1, 1, 1, 1], 0.5);
+        assert!(p.ratio(0) > 1.0);
+        assert!(p.ratio(1) < 1.0);
+    }
+
+    #[test]
+    fn split_good_bad_orders_by_value() {
+        let ys = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        let (good, bad) = split_good_bad(&ys, 0.4);
+        assert_eq!(good, vec![1, 3]); // values 1.0, 2.0
+        assert_eq!(bad.len(), 3);
+        assert!(good.iter().all(|&g| ys[g] <= bad.iter().map(|&b| ys[b]).fold(f64::INFINITY, f64::min)));
+    }
+
+    #[test]
+    fn split_always_keeps_at_least_one_good() {
+        let (good, bad) = split_good_bad(&[2.0, 1.0], 0.01);
+        assert_eq!(good.len(), 1);
+        assert_eq!(good[0], 1);
+        assert_eq!(bad.len(), 1);
+    }
+
+    #[test]
+    fn sampling_follows_density() {
+        let d = CatDensity::from_observations(2, &[0; 99], 1.0);
+        let mut rng = Rng::new(7);
+        let zeros = (0..1000).filter(|_| d.sample(&mut rng) == 0).count();
+        assert!(zeros > 900, "zeros {zeros}");
+    }
+}

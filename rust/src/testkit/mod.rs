@@ -1,0 +1,136 @@
+//! Property-testing mini-framework (substrate: proptest is unavailable
+//! offline — see DESIGN.md §Substitutions).
+//!
+//! `check` runs a property over many seeded generator instances and, on
+//! failure, reports the failing case number and seed so it can be replayed
+//! deterministically:
+//!
+//! ```ignore
+//! testkit::check("routing is stable", 200, |g| {
+//!     let n = g.usize_in(1, 50);
+//!     ...assertions...
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Generator handle passed to properties; wraps a seeded RNG with
+/// convenience constructors for common shapes.
+pub struct Gen {
+    rng: Rng,
+}
+
+impl Gen {
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.usize_in(lo, hi)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.f64_in(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choice(xs)
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, len: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..len).map(|_| self.usize_in(lo, hi)).collect()
+    }
+
+    /// A random subset (possibly empty) of 0..n as sorted indices.
+    pub fn subset(&mut self, n: usize) -> Vec<usize> {
+        (0..n).filter(|_| self.bool()).collect()
+    }
+}
+
+/// Environment knob for reproducing a failure: TESTKIT_SEED pins case 0's
+/// seed; TESTKIT_CASES overrides the case count.
+fn env_u64(name: &str) -> Option<u64> {
+    std::env::var(name).ok().and_then(|v| v.parse().ok())
+}
+
+/// Run `prop` for `cases` generated inputs. Panics (failing the enclosing
+/// test) with the case index + replay seed on the first violated property.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut prop: F) {
+    let base = env_u64("TESTKIT_SEED").unwrap_or(0x5EED_CAFE_F00D_0001);
+    let cases = env_u64("TESTKIT_CASES").map(|c| c as usize).unwrap_or(cases);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen { rng: Rng::new(seed) };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay with TESTKIT_SEED={base} TESTKIT_CASES={}):\n{msg}",
+                case + 1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 50, |g| {
+            let x = g.usize_in(0, 10);
+            assert!(x <= 10);
+            count += 1;
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn failing_property_reports_case_and_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check("fails on large", 100, |g| {
+                let x = g.usize_in(0, 100);
+                assert!(x < 95, "x = {x}");
+            });
+        });
+        let msg = match result {
+            Err(p) => p.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("TESTKIT_SEED="), "msg: {msg}");
+        assert!(msg.contains("fails on large"), "msg: {msg}");
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_case() {
+        let mut first: Vec<usize> = Vec::new();
+        check("record", 10, |g| first.push(g.usize_in(0, 1000)));
+        let mut second: Vec<usize> = Vec::new();
+        check("record", 10, |g| second.push(g.usize_in(0, 1000)));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn subset_is_sorted_and_bounded() {
+        check("subset", 50, |g| {
+            let s = g.subset(20);
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+            assert!(s.iter().all(|&i| i < 20));
+        });
+    }
+}

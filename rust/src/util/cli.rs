@@ -1,0 +1,214 @@
+//! Declarative CLI argument parsing (substrate: no clap offline).
+//!
+//! Supports subcommands with `--flag`, `--key value` / `--key=value`
+//! options and auto-generated help. The launcher (`main.rs`) builds one
+//! `Command` per subcommand.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let kind = if o.is_flag {
+                String::new()
+            } else if let Some(d) = o.default {
+                format!(" <value, default {d}>")
+            } else {
+                " <value, required>".to_string()
+            };
+            s.push_str(&format!("  --{}{}\n      {}\n", o.name, kind, o.help));
+        }
+        s
+    }
+
+    /// Parse raw args (everything after the subcommand name).
+    pub fn parse(&self, args: &[String]) -> Result<Args, String> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: BTreeMap<String, bool> = BTreeMap::new();
+        for o in &self.opts {
+            if o.is_flag {
+                flags.insert(o.name.to_string(), false);
+            } else if let Some(d) = o.default {
+                values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            let Some(stripped) = a.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument '{a}'\n\n{}", self.usage()));
+            };
+            let (key, inline_val) = match stripped.split_once('=') {
+                Some((k, v)) => (k, Some(v.to_string())),
+                None => (stripped, None),
+            };
+            let spec = self
+                .opts
+                .iter()
+                .find(|o| o.name == key)
+                .ok_or_else(|| format!("unknown option '--{key}'\n\n{}", self.usage()))?;
+            if spec.is_flag {
+                if inline_val.is_some() {
+                    return Err(format!("flag '--{key}' takes no value"));
+                }
+                flags.insert(key.to_string(), true);
+                i += 1;
+            } else {
+                let v = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        args.get(i).cloned().ok_or_else(|| format!("option '--{key}' needs a value"))?
+                    }
+                };
+                values.insert(key.to_string(), v);
+                i += 1;
+            }
+        }
+
+        for o in &self.opts {
+            if !o.is_flag && !values.contains_key(o.name) {
+                return Err(format!("missing required option '--{}'\n\n{}", o.name, self.usage()));
+            }
+        }
+        Ok(Args { values, flags })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or_else(|| panic!("unknown option {name}"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        *self.flags.get(name).unwrap_or_else(|| panic!("unknown flag {name}"))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, String> {
+        self.get(name).parse().map_err(|_| format!("--{name} must be an integer"))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, String> {
+        self.get(name).parse().map_err(|_| format!("--{name} must be an integer"))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name).parse().map_err(|_| format!("--{name} must be a number"))
+    }
+
+    /// Comma-separated list.
+    pub fn list(&self, name: &str) -> Vec<String> {
+        let raw = self.get(name);
+        if raw.is_empty() {
+            Vec::new()
+        } else {
+            raw.split(',').map(|s| s.trim().to_string()).collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("optimize", "run one optimizer")
+            .opt("budget", "33", "search budget")
+            .req("method", "optimizer name")
+            .flag("verbose", "chatty output")
+    }
+
+    fn s(args: &[&str]) -> Vec<String> {
+        args.iter().map(|a| a.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = cmd().parse(&s(&["--method", "cloudbandit"])).unwrap();
+        assert_eq!(a.get("budget"), "33");
+        assert_eq!(a.usize("budget").unwrap(), 33);
+        assert_eq!(a.get("method"), "cloudbandit");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_flags() {
+        let a = cmd().parse(&s(&["--method=rs", "--budget=88", "--verbose"])).unwrap();
+        assert_eq!(a.get("budget"), "88");
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cmd().parse(&s(&["--budget", "11"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cmd().parse(&s(&["--method", "rs", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn help_is_an_err_with_usage() {
+        let e = cmd().parse(&s(&["--help"])).unwrap_err();
+        assert!(e.contains("optimize"));
+        assert!(e.contains("--budget"));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let c = Command::new("x", "y").opt("methods", "a,b", "names");
+        let a = c.parse(&s(&["--methods", "rs, smac ,cb"])).unwrap();
+        assert_eq!(a.list("methods"), vec!["rs", "smac", "cb"]);
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(cmd().parse(&s(&["--method", "rs", "--verbose=1"])).is_err());
+    }
+}

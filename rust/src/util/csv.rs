@@ -1,0 +1,174 @@
+//! Minimal CSV codec (substrate) for the offline benchmark dataset and
+//! figure data emitted for external plotting. RFC-4180-style quoting.
+
+/// Escape one field if needed.
+fn write_field(f: &str, out: &mut String) {
+    if f.contains(',') || f.contains('"') || f.contains('\n') {
+        out.push('"');
+        for c in f.chars() {
+            if c == '"' {
+                out.push('"');
+            }
+            out.push(c);
+        }
+        out.push('"');
+    } else {
+        out.push_str(f);
+    }
+}
+
+/// Serialize rows (first row is typically the header).
+pub fn write_rows(rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    for row in rows {
+        for (i, f) in row.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            write_field(f, &mut out);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse CSV text into rows of fields. Handles quoted fields with embedded
+/// commas/newlines/escaped quotes. Skips a trailing empty line.
+pub fn parse(input: &str) -> Result<Vec<Vec<String>>, String> {
+    let mut rows = Vec::new();
+    let mut row: Vec<String> = Vec::new();
+    let mut field = String::new();
+    let mut chars = input.chars().peekable();
+    let mut in_quotes = false;
+    let mut any = false;
+
+    while let Some(c) = chars.next() {
+        any = true;
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        field.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                c => field.push(c),
+            }
+        } else {
+            match c {
+                '"' => {
+                    if !field.is_empty() {
+                        return Err("quote inside unquoted field".into());
+                    }
+                    in_quotes = true;
+                }
+                ',' => {
+                    row.push(std::mem::take(&mut field));
+                }
+                '\n' => {
+                    row.push(std::mem::take(&mut field));
+                    rows.push(std::mem::take(&mut row));
+                }
+                '\r' => {} // tolerate CRLF
+                c => field.push(c),
+            }
+        }
+    }
+    if in_quotes {
+        return Err("unterminated quoted field".into());
+    }
+    if any && (!field.is_empty() || !row.is_empty()) {
+        row.push(field);
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+/// A header-indexed view over parsed CSV rows.
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn parse(input: &str) -> Result<Table, String> {
+        let mut rows = parse(input)?;
+        if rows.is_empty() {
+            return Err("empty csv".into());
+        }
+        let header = rows.remove(0);
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != header.len() {
+                return Err(format!(
+                    "row {} has {} fields, header has {}",
+                    i + 2,
+                    r.len(),
+                    header.len()
+                ));
+            }
+        }
+        Ok(Table { header, rows })
+    }
+
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.header.iter().position(|h| h == name)
+    }
+
+    pub fn get<'a>(&'a self, row: &'a [String], name: &str) -> Option<&'a str> {
+        self.col(name).map(|i| row[i].as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_plain() {
+        let rows = vec![
+            vec!["a".to_string(), "b".to_string()],
+            vec!["1".to_string(), "2".to_string()],
+        ];
+        let s = write_rows(&rows);
+        assert_eq!(parse(&s).unwrap(), rows);
+    }
+
+    #[test]
+    fn roundtrip_quoted() {
+        let rows = vec![vec![
+            "with,comma".to_string(),
+            "with\"quote".to_string(),
+            "with\nnewline".to_string(),
+        ]];
+        let s = write_rows(&rows);
+        assert_eq!(parse(&s).unwrap(), rows);
+    }
+
+    #[test]
+    fn crlf_tolerated() {
+        assert_eq!(
+            parse("a,b\r\n1,2\r\n").unwrap(),
+            vec![vec!["a".to_string(), "b".to_string()], vec!["1".to_string(), "2".to_string()]]
+        );
+    }
+
+    #[test]
+    fn table_header_lookup() {
+        let t = Table::parse("x,y\n1,2\n3,4\n").unwrap();
+        assert_eq!(t.col("y"), Some(1));
+        assert_eq!(t.get(&t.rows[1], "y"), Some("4"));
+    }
+
+    #[test]
+    fn table_rejects_ragged_rows() {
+        assert!(Table::parse("a,b\n1\n").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_quoting() {
+        assert!(parse("ab\"c,d\n").is_err());
+        assert!(parse("\"unterminated\n").is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Shared substrates: deterministic RNG, statistics, JSON/CSV codecs,
+//! a work-queue thread pool and CLI parsing. These stand in for the crates
+//! (serde, rayon, clap, ...) that are unavailable in the offline build
+//! environment — see DESIGN.md §Substitutions.
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

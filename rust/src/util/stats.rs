@@ -1,0 +1,199 @@
+//! Summary statistics used by the metrics / report layers.
+//!
+//! Everything here operates on plain `&[f64]` and is careful about the two
+//! conventions the paper relies on: *linear-interpolation percentiles* (for
+//! p90 measurement modes) and *Tukey box-plot statistics* (Figure 4:
+//! median, IQR box, 1.5-IQR whiskers).
+
+/// Arithmetic mean. Returns NaN on empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator); 0 for n < 2.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+fn sorted_copy(xs: &[f64]) -> Vec<f64> {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in stats input"));
+    v
+}
+
+/// Linear-interpolation percentile, q in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    assert!((0.0..=100.0).contains(&q), "percentile q out of range: {q}");
+    let v = sorted_copy(xs);
+    percentile_sorted(&v, q)
+}
+
+/// Percentile over an already-sorted slice.
+pub fn percentile_sorted(v: &[f64], q: f64) -> f64 {
+    let n = v.len();
+    if n == 1 {
+        return v[0];
+    }
+    let pos = q / 100.0 * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    v[lo] + (v[hi] - v[lo]) * frac
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Tukey box-plot summary (Figure 4's rendering contract).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BoxStats {
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    /// Smallest value >= q1 - 1.5*IQR.
+    pub whisker_lo: f64,
+    /// Largest value <= q3 + 1.5*IQR.
+    pub whisker_hi: f64,
+    pub n: usize,
+    pub outliers: usize,
+}
+
+impl BoxStats {
+    pub fn compute(xs: &[f64]) -> BoxStats {
+        assert!(!xs.is_empty(), "BoxStats of empty slice");
+        let v = sorted_copy(xs);
+        let q1 = percentile_sorted(&v, 25.0);
+        let q3 = percentile_sorted(&v, 75.0);
+        let med = percentile_sorted(&v, 50.0);
+        let iqr = q3 - q1;
+        let lo_fence = q1 - 1.5 * iqr;
+        let hi_fence = q3 + 1.5 * iqr;
+        let whisker_lo = v.iter().copied().find(|&x| x >= lo_fence).unwrap_or(v[0]);
+        let whisker_hi = v
+            .iter()
+            .rev()
+            .copied()
+            .find(|&x| x <= hi_fence)
+            .unwrap_or(v[v.len() - 1]);
+        let outliers = v.iter().filter(|&&x| x < lo_fence || x > hi_fence).count();
+        BoxStats { q1, median: med, q3, whisker_lo, whisker_hi, n: v.len(), outliers }
+    }
+}
+
+/// Welford online mean/variance accumulator (used by long-running benches).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Online {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Online {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_median_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert_eq!(median(&xs), 2.5);
+        assert_eq!(median(&[5.0, 1.0, 3.0]), 3.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [10.0, 20.0, 30.0, 40.0, 50.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 50.0);
+        assert_eq!(percentile(&xs, 25.0), 20.0);
+        assert!((percentile(&xs, 90.0) - 46.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stddev_matches_hand_computation() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        // population var 4 -> sample var 4*8/7
+        assert!((stddev(&xs) - (32.0f64 / 7.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn box_stats_tukey() {
+        let xs: Vec<f64> = (1..=11).map(|i| i as f64).collect();
+        let b = BoxStats::compute(&xs);
+        assert_eq!(b.median, 6.0);
+        assert_eq!(b.q1, 3.5);
+        assert_eq!(b.q3, 8.5);
+        assert_eq!(b.whisker_lo, 1.0);
+        assert_eq!(b.whisker_hi, 11.0);
+        assert_eq!(b.outliers, 0);
+    }
+
+    #[test]
+    fn box_stats_flags_outlier() {
+        let mut xs: Vec<f64> = (1..=11).map(|i| i as f64).collect();
+        xs.push(100.0);
+        let b = BoxStats::compute(&xs);
+        assert_eq!(b.outliers, 1);
+        assert!(b.whisker_hi <= 11.0 + 1e-9);
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut o = Online::default();
+        for &x in &xs {
+            o.push(x);
+        }
+        assert!((o.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((o.stddev() - stddev(&xs)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn min_max() {
+        let xs = [3.0, -1.0, 7.5];
+        assert_eq!(min(&xs), -1.0);
+        assert_eq!(max(&xs), 7.5);
+    }
+}

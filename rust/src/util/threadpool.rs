@@ -1,0 +1,154 @@
+//! Work-queue parallelism (substrate: no tokio/rayon offline).
+//!
+//! The coordinator fans thousands of independent trials (workload x method
+//! x budget x seed) across cores. `parallel_map` preserves input order in
+//! the output, pulls work from a shared atomic cursor (so long trials don't
+//! straggle behind a static partition), and propagates panics.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of workers to use by default: the machine's parallelism.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Apply `f` to every item on `workers` threads; results keep input order.
+///
+/// `f` must be `Sync` (it is shared, not cloned). Panics in workers are
+/// re-raised on the caller thread after all workers exit.
+pub fn parallel_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send + Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let items_ref = &items;
+    let f_ref = &f;
+    let cursor_ref = &cursor;
+    let slots_ref = &slots;
+
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                scope.spawn(move || loop {
+                    let i = cursor_ref.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f_ref(&items_ref[i]);
+                    *slots_ref[i].lock().unwrap() = Some(r);
+                })
+            })
+            .collect();
+        for h in handles {
+            if let Err(p) = h.join() {
+                std::panic::resume_unwind(p);
+            }
+        }
+    });
+
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker skipped a slot"))
+        .collect()
+}
+
+/// Like `parallel_map` but with a progress callback invoked (from worker
+/// threads) after each completed item with the number done so far.
+pub fn parallel_map_progress<T, R, F, P>(items: Vec<T>, workers: usize, f: F, progress: P) -> Vec<R>
+where
+    T: Send + Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+    P: Fn(usize, usize) + Sync,
+{
+    let done = AtomicUsize::new(0);
+    let n = items.len();
+    let done_ref = &done;
+    let progress_ref = &progress;
+    let f_ref = &f;
+    parallel_map(items, workers, move |t| {
+        let r = f_ref(t);
+        let d = done_ref.fetch_add(1, Ordering::Relaxed) + 1;
+        progress_ref(d, n);
+        r
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = parallel_map(items, 8, |&x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<usize> = parallel_map(Vec::<usize>::new(), 4, |&x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_worker_path() {
+        let out = parallel_map(vec![1, 2, 3], 1, |&x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        let out = parallel_map(vec![5, 6], 16, |&x| x);
+        assert_eq!(out, vec![5, 6]);
+    }
+
+    #[test]
+    fn all_items_processed_exactly_once() {
+        let counter = AtomicU64::new(0);
+        let _ = parallel_map((0..500).collect::<Vec<_>>(), 7, |_| {
+            counter.fetch_add(1, Ordering::Relaxed)
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 500);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn worker_panic_propagates() {
+        let _ = parallel_map(vec![0usize, 1, 2], 2, |&x| {
+            if x == 1 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn progress_reaches_total() {
+        let max_seen = AtomicUsize::new(0);
+        let _ = parallel_map_progress(
+            (0..100).collect::<Vec<_>>(),
+            4,
+            |&x| x,
+            |done, total| {
+                assert!(done <= total);
+                max_seen.fetch_max(done, Ordering::Relaxed);
+            },
+        );
+        assert_eq!(max_seen.load(Ordering::Relaxed), 100);
+    }
+}

@@ -1,0 +1,132 @@
+//! Property-based integration tests on coordinator invariants (testkit —
+//! the proptest substitute; see DESIGN.md §Substitutions).
+
+use multicloud::coordinator::experiment::{run_trial, TrialSpec};
+use multicloud::dataset::{OfflineDataset, Target};
+use multicloud::optimizers::cloudbandit::b1_for_budget;
+use multicloud::optimizers::ALL_OPTIMIZERS;
+use multicloud::runtime::artifacts::Manifest;
+use multicloud::surrogate::NativeBackend;
+use multicloud::testkit;
+
+fn dataset() -> &'static OfflineDataset {
+    use std::sync::OnceLock;
+    static DS: OnceLock<OfflineDataset> = OnceLock::new();
+    DS.get_or_init(|| OfflineDataset::generate(2022, 3))
+}
+
+#[test]
+fn prop_no_optimizer_exceeds_its_budget() {
+    let ds = dataset();
+    let backend = NativeBackend;
+    testkit::check("budget ceiling", 40, |g| {
+        let method = g.pick(&ALL_OPTIMIZERS).to_string();
+        if method == "exhaustive" {
+            return; // evaluates the whole grid by definition
+        }
+        let spec = TrialSpec {
+            method,
+            workload: g.usize_in(0, 29),
+            target: if g.bool() { Target::Time } else { Target::Cost },
+            budget: g.usize_in(1, 40),
+            seed: g.usize_in(0, 1000) as u64,
+        };
+        let r = run_trial(ds, &backend, &spec);
+        assert!(
+            r.evals <= spec.budget,
+            "{} used {} > budget {}",
+            r.spec.method,
+            r.evals,
+            spec.budget
+        );
+        assert!(r.regret >= -1e-12, "negative regret {}", r.regret);
+        assert!(r.search_expense > 0.0);
+    });
+}
+
+#[test]
+fn prop_trials_are_replayable() {
+    let ds = dataset();
+    let backend = NativeBackend;
+    testkit::check("trial determinism", 15, |g| {
+        let spec = TrialSpec {
+            method: g.pick(&["rs", "smac", "cb-rbfopt", "hyperopt"]).to_string(),
+            workload: g.usize_in(0, 29),
+            target: Target::Cost,
+            budget: g.usize_in(5, 25),
+            seed: g.usize_in(0, 99) as u64,
+        };
+        let a = run_trial(ds, &backend, &spec);
+        let b = run_trial(ds, &backend, &spec);
+        assert_eq!(a.regret, b.regret);
+        assert_eq!(a.evals, b.evals);
+        assert_eq!(a.search_expense, b.search_expense);
+    });
+}
+
+#[test]
+fn prop_cloudbandit_schedule_fits_budget() {
+    testkit::check("CB schedule unit", 100, |g| {
+        let k = g.usize_in(2, 6);
+        let eta = g.f64_in(1.0, 3.0);
+        let budget = g.usize_in(1, 500);
+        let b1 = b1_for_budget(budget, k, eta);
+        assert!(b1 >= 1);
+        // The scheduled total with this b1 must not exceed the budget
+        // unless b1 was clamped to its minimum of 1.
+        let total: f64 =
+            (1..=k).map(|m| (k - m + 1) as f64 * b1 as f64 * eta.powi(m as i32 - 1)).sum();
+        assert!(
+            total <= budget as f64 + 1e-9 || b1 == 1,
+            "schedule {total} exceeds budget {budget} with b1={b1}"
+        );
+    });
+}
+
+#[test]
+fn prop_savings_upper_bound() {
+    testkit::check("savings <= 1", 200, |g| {
+        let c_opt = g.f64_in(0.0, 100.0);
+        let r_opt = g.f64_in(0.0, 10.0);
+        let r_rand = g.f64_in(0.1, 10.0);
+        let n = g.usize_in(1, 1000);
+        let s = multicloud::metrics::savings(c_opt, r_opt, r_rand, n);
+        assert!(s <= 1.0 + 1e-12, "savings {s} > 1");
+        // Optimal config + zero search cost attains the bound only when
+        // r_opt == 0.
+        if r_opt == 0.0 && c_opt == 0.0 {
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+    });
+}
+
+#[test]
+fn manifest_parser_rejects_corruption() {
+    let good = r#"{"version":2,"n_max":96,"m_max":96,"d":20,
+        "graphs":{"gp_matern52":{"file":"gp.hlo.txt"},
+                  "rbf_cubic":{"file":"rbf.hlo.txt"}}}"#;
+    let m = Manifest::parse(good).unwrap();
+    assert_eq!(m.n_max, 96);
+    assert_eq!(m.gp_file, "gp.hlo.txt");
+
+    for bad in [
+        "",
+        "{}",
+        r#"{"version":2}"#,
+        r#"{"version":2,"n_max":96,"m_max":96,"d":20,"graphs":{}}"#,
+        r#"{"version":2,"n_max":96,"m_max":96,"d":20,
+            "graphs":{"gp_matern52":{"file":"gp.hlo.txt"}}}"#,
+        r#"{"version":2,"n_max":"lots","m_max":96,"d":20,
+            "graphs":{"gp_matern52":{"file":"a"},"rbf_cubic":{"file":"b"}}}"#,
+    ] {
+        assert!(Manifest::parse(bad).is_err(), "accepted: {bad}");
+    }
+}
+
+#[test]
+fn backend_fallback_on_missing_artifacts() {
+    // Loading from a directory without artifacts must error (the CLI then
+    // falls back to native), never panic.
+    let r = multicloud::runtime::ArtifactBackend::load("/nonexistent/dir");
+    assert!(r.is_err());
+}

@@ -1,0 +1,85 @@
+//! Integration: the ML-inference workload suite (the paper's stated
+//! future work, implemented as an extension — DESIGN.md §4 note).
+//! Verifies the suite has the expected shape, that the full optimizer
+//! pipeline runs on it unchanged, and that the headline savings behaviour
+//! (CloudBandit positive, exhaustive negative) carries over to the new
+//! workload category.
+
+use multicloud::coordinator::savings::{savings_analysis, SavingsConfig};
+use multicloud::dataset::{OfflineDataset, Target};
+use multicloud::optimizers::{by_name, SearchContext};
+use multicloud::simulator::tasks::inference_workloads;
+use multicloud::surrogate::NativeBackend;
+
+#[test]
+fn suite_shape() {
+    let ws = inference_workloads();
+    assert_eq!(ws.len(), 10);
+    let mut ids: Vec<String> = ws.iter().map(|w| w.id()).collect();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), 10);
+
+    let ds = OfflineDataset::generate_inference(7, 3);
+    assert_eq!(ds.workload_count(), 10);
+    assert_eq!(ds.domain.size(), 88);
+    assert!(ds.workload_index("bert_serving:peak_trace").is_some());
+}
+
+#[test]
+fn optimizers_run_on_inference_workloads() {
+    let ds = OfflineDataset::generate_inference(8, 3);
+    let backend = NativeBackend;
+    for name in ["rs", "smac", "cb-rbfopt", "hyperopt"] {
+        let opt = by_name(name).unwrap();
+        let ctx = SearchContext { domain: &ds.domain, target: Target::Time, backend: &backend };
+        let mut obj = multicloud::dataset::objective::LookupObjective::new(
+            &ds,
+            2,
+            Target::Time,
+            multicloud::dataset::objective::MeasureMode::SingleDraw,
+            5,
+        );
+        let mut rng = multicloud::util::rng::Rng::new(6);
+        let r = opt.run(&ctx, &mut obj, 22, &mut rng);
+        assert!(r.best_value.is_finite(), "{name}");
+        assert!(r.best_value < ds.random_strategy_value(2, Target::Time) * 1.5, "{name}");
+    }
+}
+
+#[test]
+fn savings_shape_carries_over() {
+    let ds = OfflineDataset::generate_inference(9, 3);
+    let backend = NativeBackend;
+    let cfg = SavingsConfig { seeds: 3, workers: 2, ..Default::default() };
+    let dists = savings_analysis(
+        &ds,
+        &backend,
+        &["cb-rbfopt".to_string(), "exhaustive".to_string()],
+        Target::Cost,
+        &cfg,
+    );
+    let cb = dists[0].box_stats();
+    let ex = dists[1].box_stats();
+    assert!(cb.median > 0.0, "cb median {:.3}", cb.median);
+    assert!(ex.median < 0.0, "exhaustive median {:.3}", ex.median);
+}
+
+#[test]
+fn memory_floor_separates_lean_and_fat_nodes() {
+    // recsys_ranking on the peak trace needs ~22 GB resident; highcpu
+    // 2-vCPU nodes (2 GB) must be dramatically slower than highmem ones.
+    let ds = OfflineDataset::generate_inference(10, 3);
+    let w = ds.workload_index("recsys_ranking:peak_trace").unwrap();
+    let grid = ds.domain.full_grid();
+    let find = |needle: &str| {
+        grid.iter()
+            .position(|c| c.label(&ds.domain) == needle)
+            .unwrap_or_else(|| panic!("{needle} not in grid"))
+    };
+    let lean = find("gcp/family=n1/type=highcpu/vcpu=2/nodes=2");
+    let fat = find("gcp/family=n1/type=highmem/vcpu=2/nodes=2");
+    let t_lean = ds.mean_value(w, lean, Target::Time);
+    let t_fat = ds.mean_value(w, fat, Target::Time);
+    assert!(t_lean > 2.0 * t_fat, "lean {t_lean} vs fat {t_fat}");
+}
