@@ -6,7 +6,7 @@
 //! cargo run --release --example provider_selection
 //! ```
 
-use multicloud::dataset::objective::{LookupObjective, MeasureMode, Objective};
+use multicloud::dataset::objective::{EvalLedger, EvalSource, LookupObjective, MeasureMode};
 use multicloud::dataset::{OfflineDataset, Target};
 use multicloud::domain::Config;
 use multicloud::optimizers::{by_name, SearchContext};
@@ -14,20 +14,22 @@ use multicloud::runtime::{artifact_dir, ArtifactBackend};
 use multicloud::surrogate::{Backend, NativeBackend};
 use multicloud::util::rng::Rng;
 
-/// Objective wrapper recording which provider every evaluation went to.
+/// Measurement-source wrapper recording which provider every evaluation
+/// went to (the ledger's history could do this too — the wrapper shows
+/// that custom sources compose under the ledger).
 struct Recording<'a> {
     inner: LookupObjective<'a>,
     providers: Vec<usize>,
 }
 
-impl multicloud::dataset::objective::Objective for Recording<'_> {
-    fn eval(&mut self, cfg: &Config) -> f64 {
+impl EvalSource for Recording<'_> {
+    fn measure(&mut self, cfg: &Config) -> f64 {
         self.providers.push(cfg.provider);
-        self.inner.eval(cfg)
+        self.inner.measure(cfg)
     }
 
-    fn evals(&self) -> usize {
-        self.inner.evals()
+    fn deterministic(&self) -> bool {
+        self.inner.deterministic()
     }
 }
 
@@ -65,7 +67,10 @@ fn main() {
             inner: LookupObjective::new(&ds, w, target, MeasureMode::SingleDraw, 11),
             providers: Vec::new(),
         };
-        let res = opt.run(&ctx, &mut rec, budget, &mut Rng::new(5));
+        let res = {
+            let mut ledger = EvalLedger::new(&mut rec, budget);
+            opt.run(&ctx, &mut ledger, &mut Rng::new(5))
+        };
         let mut counts = [0usize; 3];
         for &p in &rec.providers {
             counts[p] += 1;

@@ -9,7 +9,7 @@
 //! default budget, and prints the recommended deployment.
 
 use multicloud::coordinator::experiment::{run_trial, TrialSpec};
-use multicloud::dataset::objective::{LookupObjective, MeasureMode};
+use multicloud::dataset::objective::{EvalLedger, LookupObjective, MeasureMode};
 use multicloud::dataset::{OfflineDataset, Target};
 use multicloud::optimizers::{by_name, SearchContext};
 use multicloud::runtime::{artifact_dir, ArtifactBackend};
@@ -48,15 +48,20 @@ fn main() {
 
     let opt = by_name("cb-rbfopt").unwrap();
     let ctx = SearchContext { domain: &ds.domain, target, backend: backend.as_ref() };
-    let mut obj = LookupObjective::new(&ds, workload, target, MeasureMode::SingleDraw, 1);
-    let result = opt.run(&ctx, &mut obj, budget, &mut Rng::new(7));
+    let mut src = LookupObjective::new(&ds, workload, target, MeasureMode::SingleDraw, 1);
+    // The ledger enforces the budget and does all the accounting; the
+    // optimizer only decides how to spend it.
+    let mut ledger = EvalLedger::new(&mut src, budget);
+    let result = opt.run(&ctx, &mut ledger, &mut Rng::new(7));
+    let spend = ledger.total_expense();
+    drop(ledger);
 
     println!("\nCloudBandit (RBFOpt component), budget {budget}:");
     println!("  recommended : {}", result.best_config.label(&ds.domain));
-    println!("  est. cost   : ${:.4} per run", obj.ground_truth(&result.best_config));
+    println!("  est. cost   : ${:.4} per run", src.ground_truth(&result.best_config));
     let (_, best) = ds.true_min(workload, target);
     println!("  true optimum: ${best:.4} per run");
-    println!("  search spend: ${:.4} (one-time)", obj.total_expense());
+    println!("  search spend: ${spend:.4} (one-time)");
 
     // 4. The same thing through the coordinator's trial API (what the
     //    figures and the TCP service use).

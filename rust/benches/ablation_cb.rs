@@ -10,7 +10,7 @@
 //! CB "devote exponentially more budget to more promising providers".
 
 use multicloud::benchkit::Suite;
-use multicloud::dataset::objective::{LookupObjective, MeasureMode};
+use multicloud::dataset::objective::{EvalLedger, LookupObjective, MeasureMode};
 use multicloud::dataset::{OfflineDataset, Target, BOTH_TARGETS};
 use multicloud::metrics;
 use multicloud::optimizers::cloudbandit::{CloudBandit, Component};
@@ -42,15 +42,18 @@ fn main() {
                     let (_, tmin) = ds.true_min(w, target);
                     for seed in 0..seeds {
                         let ctx = SearchContext { domain: &ds.domain, target, backend: &backend };
-                        let mut obj = LookupObjective::new(
+                        let mut src = LookupObjective::new(
                             &ds,
                             w,
                             target,
                             MeasureMode::SingleDraw,
                             seed as u64,
                         );
-                        let r = opt.run(&ctx, &mut obj, budget, &mut Rng::new(seed as u64 ^ 0xCB));
-                        let gt = obj.ground_truth(&r.best_config);
+                        let r = {
+                            let mut ledger = EvalLedger::new(&mut src, budget);
+                            opt.run(&ctx, &mut ledger, &mut Rng::new(seed as u64 ^ 0xCB))
+                        };
+                        let gt = src.ground_truth(&r.best_config);
                         regrets.push(metrics::regret(gt, tmin));
                     }
                 }

@@ -1,7 +1,10 @@
 //! §Perf L2/runtime bench: surrogate fit+predict latency, native vs PJRT
 //! artifact, across observation counts — the per-iteration hot path of
-//! every BO-family optimizer. Also isolates artifact execution vs buffer
-//! marshalling and measures the executable-pool effect.
+//! every BO-family optimizer. Also times the incremental-Cholesky GP
+//! session against the full refit (the O(n²) vs O(n³)-per-iteration
+//! story behind the EvalLedger/IncrementalGp redesign), isolates
+//! artifact execution vs buffer marshalling, and measures the
+//! executable-pool effect.
 
 use multicloud::benchkit::{black_box, Suite};
 use multicloud::dataset::{OfflineDataset, Target};
@@ -33,6 +36,31 @@ fn main() {
         });
         suite.bench(&format!("native rbf_fit_predict n={n} m=88"), || {
             black_box(native.rbf_fit_predict(&x, &y, 1e-6, &cands)).pred[0]
+        });
+    }
+
+    // Incremental vs full-refit fits: simulate a BO run growing from 0 to
+    // n observations with one predict per step — exactly what every
+    // GP-backed optimizer iteration pays. "full refit" rebuilds the
+    // Cholesky per step (the pre-EvalLedger behaviour); "incremental"
+    // appends a rank-1 border per step.
+    for n in [8usize, 32, 88] {
+        let (x, y, cands) = problem(n);
+        suite.bench(&format!("gp full-refit run n=0..{n} m=88"), || {
+            let mut acc = 0.0;
+            for i in 1..=n {
+                acc += native.gp_fit_predict(&x[..i], &y[..i], &cands).mean[0];
+            }
+            black_box(acc)
+        });
+        suite.bench(&format!("gp incremental run n=0..{n} m=88"), || {
+            let mut sess = native.gp_session();
+            let mut acc = 0.0;
+            for i in 0..n {
+                sess.observe(x[i].clone(), y[i]);
+                acc += sess.predict(&cands).mean[0];
+            }
+            black_box(acc)
         });
     }
 

@@ -5,7 +5,7 @@
 //! (see EXPERIMENTS.md §Perf).
 
 use multicloud::benchkit::{black_box, Suite};
-use multicloud::dataset::objective::{LookupObjective, MeasureMode};
+use multicloud::dataset::objective::{EvalLedger, LookupObjective, MeasureMode};
 use multicloud::dataset::{OfflineDataset, Target};
 use multicloud::domain::encode;
 use multicloud::optimizers::{by_name, SearchContext};
@@ -51,18 +51,20 @@ fn main() {
             seed += 1;
             let opt = by_name("cherrypick-x1").unwrap();
             let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend };
-            let mut obj =
+            let mut src =
                 LookupObjective::new(&ds, 3, Target::Cost, MeasureMode::SingleDraw, seed);
-            opt.run(&ctx, &mut obj, 22, &mut Rng::new(seed)).best_value
+            let mut ledger = EvalLedger::new(&mut src, 22);
+            opt.run(&ctx, &mut ledger, &mut Rng::new(seed)).best_value
         });
         let mut seed = 0u64;
         suite.bench_units(&format!("cb-rbfopt B=22 on {label}"), 22.0, &mut || {
             seed += 1;
             let opt = by_name("cb-rbfopt").unwrap();
             let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend };
-            let mut obj =
+            let mut src =
                 LookupObjective::new(&ds, 3, Target::Cost, MeasureMode::SingleDraw, seed);
-            opt.run(&ctx, &mut obj, 22, &mut Rng::new(seed)).best_value
+            let mut ledger = EvalLedger::new(&mut src, 22);
+            opt.run(&ctx, &mut ledger, &mut Rng::new(seed)).best_value
         });
     }
 

@@ -3,7 +3,7 @@
 //! trial, so they must be negligible next to surrogate math.
 
 use multicloud::benchkit::{black_box, Suite};
-use multicloud::dataset::objective::{LookupObjective, MeasureMode, Objective};
+use multicloud::dataset::objective::{EvalSource, LookupObjective, MeasureMode};
 use multicloud::dataset::{OfflineDataset, Target};
 use multicloud::domain::{encode, Domain};
 use multicloud::simulator::tasks::all_workloads;
@@ -42,11 +42,11 @@ fn main() {
     });
 
     let ds = OfflineDataset::generate(2022, 5);
-    suite.bench_units("objective eval (SingleDraw, 1k)", 1000.0, &mut || {
-        let mut obj = LookupObjective::new(&ds, 7, Target::Cost, MeasureMode::SingleDraw, 5);
+    suite.bench_units("objective measure (SingleDraw, 1k)", 1000.0, &mut || {
+        let mut src = LookupObjective::new(&ds, 7, Target::Cost, MeasureMode::SingleDraw, 5);
         let mut acc = 0.0;
         for i in 0..1000 {
-            acc += obj.eval(&grid[i % grid.len()]);
+            acc += src.measure(&grid[i % grid.len()]);
         }
         black_box(acc)
     });

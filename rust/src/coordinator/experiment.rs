@@ -2,7 +2,7 @@
 //! trials in parallel and aggregate regrets (the engine behind Figures
 //! 2-3 and the savings analysis).
 
-use crate::dataset::objective::{LookupObjective, MeasureMode, Objective};
+use crate::dataset::objective::{EvalLedger, LookupObjective, MeasureMode};
 use crate::dataset::{OfflineDataset, Target};
 use crate::metrics;
 use crate::optimizers::{by_name, SearchContext};
@@ -55,29 +55,43 @@ pub fn run_trial(ds: &OfflineDataset, backend: &dyn Backend, spec: &TrialSpec) -
     let mut rng = label.fork(h);
     let obj_seed = rng.next_u64();
 
-    let mut obj =
+    let mut source =
         LookupObjective::new(ds, spec.workload, spec.target, MeasureMode::SingleDraw, obj_seed);
 
-    let chosen = match spec.method.as_str() {
-        "predict-linear" => LinearPredictor.run(&mut obj).chosen,
+    // Every trial runs against a ledger; expense/evals/trace are read back
+    // from it uniformly instead of being re-derived from source internals.
+    // Predictive baselines have no budget axis: their ledger is sized to
+    // their fixed, known online cost (still landing in the accounting).
+    let (chosen, search_expense, evals) = match spec.method.as_str() {
+        "predict-linear" => {
+            let mut ledger = EvalLedger::new(&mut source, ds.domain.size());
+            let chosen = LinearPredictor.run(&ds.domain, &mut ledger).chosen;
+            (chosen, ledger.total_expense(), ledger.evals())
+        }
         "predict-rf" => {
-            ParisPredictor::default().run(ds, spec.workload, spec.target, &mut obj).chosen
+            let mut ledger = EvalLedger::new(&mut source, 2 * ds.domain.provider_count());
+            let chosen =
+                ParisPredictor::default().run(ds, spec.workload, spec.target, &mut ledger).chosen;
+            (chosen, ledger.total_expense(), ledger.evals())
         }
         name => {
             let opt = by_name(name).unwrap_or_else(|| panic!("unknown method {name}"));
             let ctx = SearchContext { domain: &ds.domain, target: spec.target, backend };
-            opt.run(&ctx, &mut obj, spec.budget, &mut rng).best_config
+            let mut ledger =
+                EvalLedger::new(&mut source, opt.provisioned_budget(&ctx, spec.budget));
+            let chosen = opt.run(&ctx, &mut ledger, &mut rng).best_config;
+            (chosen, ledger.total_expense(), ledger.evals())
         }
     };
 
-    let chosen_value = obj.ground_truth(&chosen);
+    let chosen_value = source.ground_truth(&chosen);
     let (_, true_min) = ds.true_min(spec.workload, spec.target);
     TrialResult {
         spec: spec.clone(),
         chosen_value,
         regret: metrics::regret(chosen_value, true_min),
-        search_expense: obj.total_expense(),
-        evals: obj.evals(),
+        search_expense,
+        evals,
     }
 }
 

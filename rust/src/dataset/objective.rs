@@ -1,10 +1,23 @@
-//! The black-box objective f_k(n, x) (paper §III-A) with budget
-//! accounting, backed by the offline store.
+//! The black-box objective f_k(n, x) (paper §III-A) and the evaluation
+//! ledger every optimizer runs against.
 //!
-//! Every optimizer sees only this interface: submit a configuration, get a
-//! scalar back. The objective records the full evaluation history so the
-//! coordinator can compute search expense (C_opt in the savings analysis)
-//! and enforce budgets.
+//! Two layers:
+//!
+//! * [`EvalSource`] / [`LookupObjective`] — the raw measurement source:
+//!   map a configuration to one observed scalar, backed by the offline
+//!   store. Stateless apart from its measurement RNG.
+//! * [`EvalLedger`] — the single evaluation substrate shared by the whole
+//!   optimizer suite. It owns history recording, best-so-far tracing,
+//!   search-expense accounting (the C_opt term of the §IV-E savings
+//!   analysis), **hard budget enforcement** (an optimizer physically
+//!   cannot overspend: `eval` refuses once the budget is gone), and
+//!   opt-in memoization for deterministic measure modes.
+//!
+//! Optimizers never see the source directly — they only hold a ledger, so
+//! per-optimizer history/budget bookkeeping cannot drift and the
+//! coordinator reads expense/evals/trace from one place.
+
+use std::collections::HashMap;
 
 use super::{OfflineDataset, Target};
 use crate::domain::Config;
@@ -22,22 +35,34 @@ pub enum MeasureMode {
     P90,
 }
 
-/// Black-box objective interface used by all optimizers.
-pub trait Objective {
-    /// Evaluate a configuration (consumes one unit of search budget).
-    fn eval(&mut self, cfg: &Config) -> f64;
-    /// Number of evaluations performed so far.
-    fn evals(&self) -> usize;
+impl MeasureMode {
+    /// Whether repeated evaluations of one configuration always return
+    /// the same value. Only deterministic modes may be memoized.
+    pub fn deterministic(self) -> bool {
+        !matches!(self, MeasureMode::SingleDraw)
+    }
 }
 
-/// Offline-store-backed objective for one (workload, target) task.
+/// A raw measurement source: one configuration in, one observed scalar
+/// out. Implementations do **no** bookkeeping — that is the ledger's job.
+pub trait EvalSource {
+    fn measure(&mut self, cfg: &Config) -> f64;
+
+    /// True when repeated measurements of the same configuration are
+    /// identical; gates [`EvalLedger::with_memo`].
+    fn deterministic(&self) -> bool {
+        false
+    }
+}
+
+/// Offline-store-backed measurement source for one (workload, target)
+/// task.
 pub struct LookupObjective<'a> {
     ds: &'a OfflineDataset,
     pub workload: usize,
     pub target: Target,
     pub mode: MeasureMode,
     rng: Rng,
-    history: Vec<(Config, f64)>,
 }
 
 impl<'a> LookupObjective<'a> {
@@ -49,45 +74,27 @@ impl<'a> LookupObjective<'a> {
         seed: u64,
     ) -> Self {
         assert!(workload < ds.workload_count());
-        LookupObjective { ds, workload, target, mode, rng: Rng::new(seed), history: Vec::new() }
-    }
-
-    pub fn history(&self) -> &[(Config, f64)] {
-        &self.history
+        LookupObjective { ds, workload, target, mode, rng: Rng::new(seed) }
     }
 
     pub fn domain(&self) -> &crate::domain::Domain {
         &self.ds.domain
     }
 
-    /// Total expense (sum of the target metric over every evaluation made
-    /// so far) — the C_opt term of the §IV-E savings analysis. For the
-    /// time target this is seconds spent; for cost, dollars spent.
-    pub fn total_expense(&self) -> f64 {
-        self.history.iter().map(|(_, v)| v).sum()
-    }
-
-    /// Best (config, value) seen so far.
-    pub fn best(&self) -> Option<(&Config, f64)> {
-        self.history
-            .iter()
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-            .map(|(c, v)| (c, *v))
-    }
-
-    /// Peek at the value without consuming budget (used by tests and the
-    /// savings analysis to price the *returned* configuration by its mean).
+    /// Peek at the mean value without going through a ledger (used by
+    /// tests and the savings analysis to price the *returned*
+    /// configuration by its ground truth).
     pub fn ground_truth(&self, cfg: &Config) -> f64 {
         let cid = self.ds.domain.config_id(cfg);
         self.ds.mean_value(self.workload, cid, self.target)
     }
 }
 
-impl Objective for LookupObjective<'_> {
-    fn eval(&mut self, cfg: &Config) -> f64 {
+impl EvalSource for LookupObjective<'_> {
+    fn measure(&mut self, cfg: &Config) -> f64 {
         let cid = self.ds.domain.config_id(cfg);
         let ms = self.ds.measurements(self.workload, cid);
-        let v = match self.mode {
+        match self.mode {
             MeasureMode::SingleDraw => {
                 self.target.pick(ms[self.rng.usize_below(ms.len())])
             }
@@ -98,13 +105,140 @@ impl Objective for LookupObjective<'_> {
                 let vals: Vec<f64> = ms.iter().map(|&m| self.target.pick(m)).collect();
                 crate::util::stats::percentile(&vals, 90.0)
             }
-        };
-        self.history.push((cfg.clone(), v));
-        v
+        }
     }
 
-    fn evals(&self) -> usize {
+    fn deterministic(&self) -> bool {
+        self.mode.deterministic()
+    }
+}
+
+/// Budget-enforcing evaluation ledger: the only handle optimizers get.
+pub struct EvalLedger<'a> {
+    source: &'a mut dyn EvalSource,
+    budget: usize,
+    history: Vec<(Config, f64)>,
+    /// Best-so-far observed value after each evaluation.
+    trace: Vec<f64>,
+    /// Index into `history` of the best observation so far.
+    best_idx: Option<usize>,
+    /// Sum of the target metric over every *charged* evaluation (memo
+    /// hits are free: the measurement was already paid for).
+    expense: f64,
+    memo: Option<HashMap<Config, f64>>,
+}
+
+impl<'a> EvalLedger<'a> {
+    /// A ledger with a hard evaluation cap. There is deliberately no
+    /// "unlimited" constructor: every optimizer loop runs to budget
+    /// exhaustion, so an uncapped ledger would never terminate — callers
+    /// with a fixed known cost (the predictive baselines) size the
+    /// budget to exactly that cost instead.
+    pub fn new(source: &'a mut dyn EvalSource, budget: usize) -> Self {
+        EvalLedger {
+            source,
+            budget,
+            history: Vec::new(),
+            trace: Vec::new(),
+            best_idx: None,
+            expense: 0.0,
+            memo: None,
+        }
+    }
+
+    /// Enable memoization: repeated evaluations of one configuration
+    /// replay the recorded value (still consuming budget and appearing in
+    /// the history) without being charged as expense again.
+    ///
+    /// Panics for non-deterministic sources — `MeasureMode::SingleDraw`
+    /// legitimately re-draws on repeat evaluations, so caching would
+    /// change the objective's semantics.
+    pub fn with_memo(mut self) -> Self {
+        assert!(
+            self.source.deterministic(),
+            "memoization requires a deterministic measure mode (Mean/P90)"
+        );
+        self.memo = Some(HashMap::new());
+        self
+    }
+
+    /// The evaluation cap this ledger enforces.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Evaluations still available.
+    pub fn remaining(&self) -> usize {
+        self.budget - self.history.len()
+    }
+
+    pub fn exhausted(&self) -> bool {
+        self.history.len() >= self.budget
+    }
+
+    /// Evaluate a configuration, consuming one unit of budget. Returns
+    /// `None` — performing no measurement — once the budget is exhausted;
+    /// the ledger is the budget's enforcement point, not a convention.
+    pub fn eval(&mut self, cfg: &Config) -> Option<f64> {
+        if self.exhausted() {
+            return None;
+        }
+        let (v, charged) = match &mut self.memo {
+            Some(memo) => match memo.get(cfg) {
+                Some(&v) => (v, false),
+                None => {
+                    let v = self.source.measure(cfg);
+                    memo.insert(cfg.clone(), v);
+                    (v, true)
+                }
+            },
+            None => (self.source.measure(cfg), true),
+        };
+        if charged {
+            self.expense += v;
+        }
+        let best = self.trace.last().copied().unwrap_or(f64::INFINITY);
+        if v < best {
+            self.best_idx = Some(self.history.len());
+        }
+        self.trace.push(best.min(v));
+        self.history.push((cfg.clone(), v));
+        Some(v)
+    }
+
+    /// Evaluate, panicking on an exhausted budget. For callers with a
+    /// fixed, known evaluation count that sized the ledger themselves
+    /// (the predictive baselines); search loops should use
+    /// [`eval`](Self::eval) and stop on `None`.
+    pub fn must_eval(&mut self, cfg: &Config) -> f64 {
+        self.eval(cfg).expect("evaluation budget exhausted")
+    }
+
+    /// Number of evaluations performed so far.
+    pub fn evals(&self) -> usize {
         self.history.len()
+    }
+
+    /// Full evaluation log in order.
+    pub fn history(&self) -> &[(Config, f64)] {
+        &self.history
+    }
+
+    /// Best-so-far observed value after each evaluation.
+    pub fn trace(&self) -> &[f64] {
+        &self.trace
+    }
+
+    /// Total search expense (sum of the target metric over every charged
+    /// evaluation) — the C_opt term of the §IV-E savings analysis. For
+    /// the time target this is seconds spent; for cost, dollars spent.
+    pub fn total_expense(&self) -> f64 {
+        self.expense
+    }
+
+    /// Best (config, observed value) seen so far.
+    pub fn best(&self) -> Option<(&Config, f64)> {
+        self.best_idx.map(|i| (&self.history[i].0, self.history[i].1))
     }
 }
 
@@ -124,13 +258,33 @@ mod tests {
     #[test]
     fn eval_consumes_budget_and_records_history() {
         let ds = ds();
-        let mut obj = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 9);
-        assert_eq!(obj.evals(), 0);
-        let v = obj.eval(&some_cfg());
+        let mut src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 9);
+        let mut led = EvalLedger::new(&mut src, 4);
+        assert_eq!(led.evals(), 0);
+        assert_eq!(led.remaining(), 4);
+        let v = led.eval(&some_cfg()).unwrap();
         assert!(v > 0.0);
-        assert_eq!(obj.evals(), 1);
-        assert_eq!(obj.history()[0].1, v);
-        assert_eq!(obj.total_expense(), v);
+        assert_eq!(led.evals(), 1);
+        assert_eq!(led.history()[0].1, v);
+        assert_eq!(led.trace(), &[v]);
+        assert_eq!(led.total_expense(), v);
+    }
+
+    #[test]
+    fn budget_is_physically_enforced() {
+        let ds = ds();
+        let mut src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 9);
+        let mut led = EvalLedger::new(&mut src, 3);
+        for _ in 0..3 {
+            assert!(led.eval(&some_cfg()).is_some());
+        }
+        assert!(led.exhausted());
+        // Trying harder does not help: no measurement happens.
+        for _ in 0..10 {
+            assert!(led.eval(&some_cfg()).is_none());
+        }
+        assert_eq!(led.evals(), 3);
+        assert_eq!(led.remaining(), 0);
     }
 
     #[test]
@@ -138,7 +292,8 @@ mod tests {
         let ds = ds();
         let mut a = LookupObjective::new(&ds, 3, Target::Time, MeasureMode::Mean, 1);
         let mut b = LookupObjective::new(&ds, 3, Target::Time, MeasureMode::Mean, 999);
-        assert_eq!(a.eval(&some_cfg()), b.eval(&some_cfg()));
+        assert_eq!(a.measure(&some_cfg()), b.measure(&some_cfg()));
+        assert!(a.deterministic());
     }
 
     #[test]
@@ -151,7 +306,8 @@ mod tests {
         let (lo, hi) = (crate::util::stats::min(&vals), crate::util::stats::max(&vals));
         for seed in 0..20 {
             let mut o = LookupObjective::new(&ds, 2, Target::Time, MeasureMode::SingleDraw, seed);
-            let v = o.eval(&cfg);
+            assert!(!o.deterministic());
+            let v = o.measure(&cfg);
             assert!(v >= lo && v <= hi);
         }
     }
@@ -162,19 +318,56 @@ mod tests {
         let mut p90 = LookupObjective::new(&ds, 5, Target::Cost, MeasureMode::P90, 1);
         let mut mean = LookupObjective::new(&ds, 5, Target::Cost, MeasureMode::Mean, 1);
         let cfg = some_cfg();
-        assert!(p90.eval(&cfg) >= mean.eval(&cfg) * 0.9);
+        assert!(p90.measure(&cfg) >= mean.measure(&cfg) * 0.9);
     }
 
     #[test]
-    fn best_tracks_minimum() {
+    fn best_and_trace_track_minimum() {
         let ds = ds();
-        let mut o = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 3);
+        let mut src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 3);
         let grid = ds.domain.full_grid();
+        let mut led = EvalLedger::new(&mut src, 10);
         for c in grid.iter().take(10) {
-            o.eval(c);
+            led.eval(c);
         }
-        let (bc, bv) = o.best().unwrap();
-        assert!(o.history().iter().all(|(_, v)| *v >= bv));
-        assert_eq!(o.ground_truth(bc), bv); // Mean mode = ground truth
+        let (bc, bv) = led.best().unwrap();
+        assert!(led.history().iter().all(|(_, v)| *v >= bv));
+        assert_eq!(*led.trace().last().unwrap(), bv);
+        assert!(led.trace().windows(2).all(|w| w[1] <= w[0]));
+        let bc = bc.clone();
+        drop(led);
+        assert_eq!(src.ground_truth(&bc), bv); // Mean mode = ground truth
+    }
+
+    #[test]
+    fn memo_hits_replay_value_and_consume_budget_but_not_expense() {
+        let ds = ds();
+        let mut src = LookupObjective::new(&ds, 2, Target::Cost, MeasureMode::Mean, 1);
+        let mut led = EvalLedger::new(&mut src, 5).with_memo();
+        let cfg = some_cfg();
+        let v1 = led.eval(&cfg).unwrap();
+        let v2 = led.eval(&cfg).unwrap();
+        assert_eq!(v1, v2);
+        assert_eq!(led.evals(), 2, "memo hits still consume budget");
+        assert_eq!(led.total_expense(), v1, "memo hits are not re-charged");
+        assert_eq!(led.history().len(), 2, "memo hits still appear in history");
+    }
+
+    #[test]
+    #[should_panic(expected = "memoization requires a deterministic measure mode")]
+    fn memo_refused_for_single_draw() {
+        let ds = ds();
+        let mut src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::SingleDraw, 1);
+        let _ = EvalLedger::new(&mut src, 5).with_memo();
+    }
+
+    #[test]
+    #[should_panic(expected = "evaluation budget exhausted")]
+    fn must_eval_panics_rather_than_overspending() {
+        let ds = ds();
+        let mut src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 1);
+        let mut led = EvalLedger::new(&mut src, 1);
+        led.must_eval(&some_cfg());
+        led.must_eval(&some_cfg());
     }
 }

@@ -167,6 +167,33 @@ pub fn solve_upper_t(l: &Matrix, b: &[f64]) -> Vec<f64> {
     x
 }
 
+/// Rank-1 Cholesky append: given the factor L of an n×n SPD matrix A,
+/// return the factor of the bordered matrix [[A, k], [kᵀ, d]] in O(n²)
+/// (one triangular solve + copy) instead of the O(n³) full refactor.
+/// Returns None when the new pivot is not positive (the bordered matrix
+/// is not positive definite — caller should rebuild with jitter).
+pub fn cholesky_append(l: &Matrix, k: &[f64], d: f64) -> Option<Matrix> {
+    let n = l.rows;
+    assert_eq!(l.rows, l.cols);
+    assert_eq!(k.len(), n);
+    let row = solve_lower(l, k);
+    let pivot = d - row.iter().map(|v| v * v).sum::<f64>();
+    if pivot <= 0.0 || !pivot.is_finite() {
+        return None;
+    }
+    let mut out = Matrix::zeros(n + 1, n + 1);
+    for i in 0..n {
+        for j in 0..=i {
+            out[(i, j)] = l[(i, j)];
+        }
+    }
+    for (j, &v) in row.iter().enumerate() {
+        out[(n, j)] = v;
+    }
+    out[(n, n)] = pivot.sqrt();
+    Some(out)
+}
+
 /// Solve A x = b for SPD A via Cholesky with escalating jitter.
 pub fn solve_spd(a: &Matrix, b: &[f64]) -> Option<Vec<f64>> {
     let mut jitter = 0.0;
@@ -196,9 +223,11 @@ pub fn solve_general(a: &Matrix, b: &[f64]) -> Option<Vec<f64>> {
     let mut x = b.to_vec();
     for col in 0..n {
         // Partial pivot.
+        // total_cmp keeps pivot selection NaN-safe: a poisoned column
+        // yields a non-finite pmax and a clean None instead of a panic.
         let (piv, pmax) = (col..n)
             .map(|r| (r, m[(r, col)].abs()))
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(&b.1))
             .unwrap();
         if pmax < 1e-300 || !pmax.is_finite() {
             return None;
@@ -367,6 +396,40 @@ mod tests {
         for i in 0..6 {
             assert!((r[i] - b[i]).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn cholesky_append_matches_full_factorization() {
+        let mut rng = Rng::new(7);
+        let a = random_spd(12, &mut rng);
+        // Factor the leading 6x6 block, then append rows 6..12 one by one.
+        let mut sub = Matrix::zeros(6, 6);
+        for i in 0..6 {
+            for j in 0..6 {
+                sub[(i, j)] = a[(i, j)];
+            }
+        }
+        let mut l = cholesky(&sub).unwrap();
+        for m in 6..12 {
+            let k: Vec<f64> = (0..m).map(|i| a[(m, i)]).collect();
+            l = cholesky_append(&l, &k, a[(m, m)]).unwrap();
+        }
+        let full = cholesky(&a).unwrap();
+        for i in 0..12 {
+            for j in 0..12 {
+                assert!((l[(i, j)] - full[(i, j)]).abs() < 1e-9, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_append_from_empty_and_reject_indefinite() {
+        let empty = Matrix::zeros(0, 0);
+        let l1 = cholesky_append(&empty, &[], 4.0).unwrap();
+        assert_eq!(l1[(0, 0)], 2.0);
+        // Appending a row that destroys positive definiteness fails.
+        let l2 = cholesky_append(&l1, &[4.0], 1.0);
+        assert!(l2.is_none());
     }
 
     #[test]

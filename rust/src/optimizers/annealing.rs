@@ -5,7 +5,7 @@
 //! accepts uphill moves with a temperature-scheduled probability.
 
 use super::{Optimizer, SearchContext, SearchResult};
-use crate::dataset::objective::Objective;
+use crate::dataset::objective::EvalLedger;
 use crate::domain::Config;
 use crate::util::rng::Rng;
 
@@ -71,29 +71,22 @@ impl Optimizer for StochasticHillClimbing {
         "shc".into()
     }
 
-    fn run(
-        &self,
-        ctx: &SearchContext,
-        obj: &mut dyn Objective,
-        budget: usize,
-        rng: &mut Rng,
-    ) -> SearchResult {
-        let mut history: Vec<(Config, f64)> = Vec::with_capacity(budget);
+    fn run(&self, ctx: &SearchContext, ledger: &mut EvalLedger, rng: &mut Rng) -> SearchResult {
         let mut cur = random_config(ctx, rng);
-        let mut cur_val = obj.eval(&cur);
-        history.push((cur.clone(), cur_val));
+        let Some(mut cur_val) = ledger.eval(&cur) else {
+            panic!("SHC started with a zero-budget ledger")
+        };
         let mut rejections = 0;
-        while history.len() < budget {
+        while !ledger.exhausted() {
             if rejections >= self.patience {
                 cur = random_config(ctx, rng);
-                cur_val = obj.eval(&cur);
-                history.push((cur.clone(), cur_val));
+                let Some(v) = ledger.eval(&cur) else { break };
+                cur_val = v;
                 rejections = 0;
                 continue;
             }
             let cand = neighbour(ctx, &cur, self.p_jump, rng);
-            let v = obj.eval(&cand);
-            history.push((cand.clone(), v));
+            let Some(v) = ledger.eval(&cand) else { break };
             if v < cur_val {
                 cur = cand;
                 cur_val = v;
@@ -102,7 +95,7 @@ impl Optimizer for StochasticHillClimbing {
                 rejections += 1;
             }
         }
-        SearchResult::from_history(&history)
+        SearchResult::from_ledger(ledger)
     }
 }
 
@@ -127,22 +120,15 @@ impl Optimizer for SimulatedAnnealing {
         "sa".into()
     }
 
-    fn run(
-        &self,
-        ctx: &SearchContext,
-        obj: &mut dyn Objective,
-        budget: usize,
-        rng: &mut Rng,
-    ) -> SearchResult {
-        let mut history: Vec<(Config, f64)> = Vec::with_capacity(budget);
+    fn run(&self, ctx: &SearchContext, ledger: &mut EvalLedger, rng: &mut Rng) -> SearchResult {
         let mut cur = random_config(ctx, rng);
-        let mut cur_val = obj.eval(&cur);
-        history.push((cur.clone(), cur_val));
+        let Some(mut cur_val) = ledger.eval(&cur) else {
+            panic!("SA started with a zero-budget ledger")
+        };
         let mut temp = (cur_val * self.t0_fraction).max(1e-12);
-        while history.len() < budget {
+        while !ledger.exhausted() {
             let cand = neighbour(ctx, &cur, self.p_jump, rng);
-            let v = obj.eval(&cand);
-            history.push((cand.clone(), v));
+            let Some(v) = ledger.eval(&cand) else { break };
             let accept = v < cur_val || rng.bool(((cur_val - v) / temp).exp().min(1.0));
             if accept {
                 cur = cand;
@@ -150,14 +136,14 @@ impl Optimizer for SimulatedAnnealing {
             }
             temp *= self.cooling;
         }
-        SearchResult::from_history(&history)
+        SearchResult::from_ledger(ledger)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dataset::objective::{LookupObjective, MeasureMode};
+    use crate::dataset::objective::{EvalLedger, LookupObjective, MeasureMode};
     use crate::dataset::{OfflineDataset, Target};
     use crate::surrogate::NativeBackend;
 
@@ -166,9 +152,10 @@ mod tests {
         let backend = NativeBackend;
         let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
         let opt = crate::optimizers::by_name(name).unwrap();
-        let mut obj = LookupObjective::new(&ds, 13, Target::Cost, MeasureMode::SingleDraw, seed);
-        let r = opt.run(&ctx, &mut obj, budget, &mut Rng::new(seed));
-        let e = obj.evals();
+        let mut src = LookupObjective::new(&ds, 13, Target::Cost, MeasureMode::SingleDraw, seed);
+        let mut ledger = EvalLedger::new(&mut src, budget);
+        let r = opt.run(&ctx, &mut ledger, &mut Rng::new(seed));
+        let e = ledger.evals();
         (r, e)
     }
 

@@ -5,6 +5,11 @@
 //! CloudBandit and Rising Bandits pull arms by stepping these states, and
 //! the standalone `x1` / `x3` optimizers drive them to budget exhaustion.
 //!
+//! GP-backed presets hold a [`GpSession`](crate::surrogate::GpSession)
+//! from the context's backend, so each new observation is a rank-1
+//! Cholesky append (O(n²)) on the native backend instead of a from-scratch
+//! refit (O(n³) × 4 lengthscales) per proposal.
+//!
 //! Presets:
 //! * **CherryPick** [1]: GP surrogate (Matern-5/2) + EI.
 //! * **Bilal et al.** [3]: GP + LCB when optimizing cost, RF + PI when
@@ -15,11 +20,11 @@
 //! no-repeat rule is its advantage).
 
 use super::{Optimizer, SearchContext, SearchResult};
-use crate::dataset::objective::Objective;
+use crate::dataset::objective::EvalLedger;
 use crate::dataset::Target;
 use crate::domain::{encode, Config};
 use crate::surrogate::rf::{RandomForest, RfParams};
-use crate::surrogate::{Acquisition, Prediction, Surrogate};
+use crate::surrogate::{Acquisition, GpSession, Prediction, Surrogate};
 use crate::util::rng::Rng;
 
 /// Which surrogate a preset uses.
@@ -67,34 +72,45 @@ impl BoPreset {
     }
 }
 
-/// Steppable BO over a fixed candidate set.
-pub struct BoState {
+/// Steppable BO over a fixed candidate set. The `'a` lifetime ties the
+/// incremental GP session to the backend it came from.
+pub struct BoState<'a> {
     pub cands: Vec<Config>,
     enc: Vec<Vec<f64>>,
     preset: BoPreset,
     obs_x: Vec<Vec<f64>>,
-    obs_cfg_idx: Vec<usize>,
-    ys: Vec<f64>,
+    pub(crate) obs_cfg_idx: Vec<usize>,
+    pub(crate) ys: Vec<f64>,
     evaluated: Vec<bool>,
     rf_seed: u64,
+    /// Incremental GP session (GP presets only).
+    gp: Option<Box<dyn GpSession + 'a>>,
 }
 
-impl BoState {
-    pub fn new(ctx: &SearchContext, cands: Vec<Config>, preset: BoPreset) -> BoState {
+impl<'a> BoState<'a> {
+    pub fn new(ctx: &SearchContext<'a>, cands: Vec<Config>, preset: BoPreset) -> BoState<'a> {
         assert!(!cands.is_empty());
         let enc = cands.iter().map(|c| encode(ctx.domain, c)).collect();
         let evaluated = vec![false; cands.len()];
-        BoState { cands, enc, preset, obs_x: Vec::new(), obs_cfg_idx: Vec::new(), ys: Vec::new(), evaluated, rf_seed: 0 }
+        let gp = match preset.surrogate {
+            SurrogateKind::Gp => Some(ctx.backend.gp_session()),
+            SurrogateKind::Rf => None,
+        };
+        BoState {
+            cands,
+            enc,
+            preset,
+            obs_x: Vec::new(),
+            obs_cfg_idx: Vec::new(),
+            ys: Vec::new(),
+            evaluated,
+            rf_seed: 0,
+            gp,
+        }
     }
 
     pub fn observations(&self) -> usize {
         self.ys.len()
-    }
-
-    /// The most recently evaluated (config, value), if any.
-    pub fn last(&self) -> Option<(Config, f64)> {
-        let i = *self.obs_cfg_idx.last()?;
-        Some((self.cands[i].clone(), *self.ys.last()?))
     }
 
     /// Best (config, observed value) so far, if any.
@@ -108,7 +124,7 @@ impl BoState {
         Some((self.cands[self.obs_cfg_idx[i]].clone(), self.ys[i]))
     }
 
-    fn propose(&mut self, ctx: &SearchContext, rng: &mut Rng) -> usize {
+    fn propose(&mut self, rng: &mut Rng) -> usize {
         // Init design: uniform random (distinct while possible).
         if self.obs_x.len() < self.preset.n_init {
             let unseen: Vec<usize> =
@@ -121,10 +137,15 @@ impl BoState {
         }
 
         let pred: Prediction = match self.preset.surrogate {
-            SurrogateKind::Gp => ctx.backend.gp_fit_predict(&self.obs_x, &self.ys, &self.enc),
+            SurrogateKind::Gp => self
+                .gp
+                .as_mut()
+                .expect("GP preset carries a session")
+                .predict(&self.enc),
             SurrogateKind::Rf => {
                 self.rf_seed += 1;
-                let mut rf = RandomForest::new(RfParams { seed: self.rf_seed, ..Default::default() });
+                let mut rf =
+                    RandomForest::new(RfParams { seed: self.rf_seed, ..Default::default() });
                 rf.fit_predict(&self.obs_x, &self.ys, &self.enc)
             }
         };
@@ -141,15 +162,22 @@ impl BoState {
     }
 
     /// One BO iteration: propose, evaluate, record. Returns the observed
-    /// value.
-    pub fn step(&mut self, ctx: &SearchContext, obj: &mut dyn Objective, rng: &mut Rng) -> f64 {
-        let i = self.propose(ctx, rng);
-        let v = obj.eval(&self.cands[i]);
+    /// value, or None once the ledger's budget is exhausted (nothing is
+    /// proposed or recorded in that case).
+    pub fn step(&mut self, ledger: &mut EvalLedger, rng: &mut Rng) -> Option<f64> {
+        if ledger.exhausted() {
+            return None;
+        }
+        let i = self.propose(rng);
+        let v = ledger.eval(&self.cands[i])?;
         self.obs_x.push(self.enc[i].clone());
+        if let Some(gp) = &mut self.gp {
+            gp.observe(self.enc[i].clone(), v);
+        }
         self.obs_cfg_idx.push(i);
         self.ys.push(v);
         self.evaluated[i] = true;
-        v
+        Some(v)
     }
 }
 
@@ -176,21 +204,10 @@ impl Optimizer for FlattenedBo {
         self.label.into()
     }
 
-    fn run(
-        &self,
-        ctx: &SearchContext,
-        obj: &mut dyn Objective,
-        budget: usize,
-        rng: &mut Rng,
-    ) -> SearchResult {
+    fn run(&self, ctx: &SearchContext, ledger: &mut EvalLedger, rng: &mut Rng) -> SearchResult {
         let mut state = BoState::new(ctx, ctx.domain.full_grid(), (self.preset_for)(ctx.target));
-        let mut history = Vec::with_capacity(budget);
-        for _ in 0..budget {
-            let v = state.step(ctx, obj, rng);
-            let i = *state.obs_cfg_idx.last().unwrap();
-            history.push((state.cands[i].clone(), v));
-        }
-        SearchResult::from_history(&history)
+        while state.step(ledger, rng).is_some() {}
+        SearchResult::from_ledger(ledger)
     }
 }
 
@@ -217,35 +234,30 @@ impl Optimizer for IndependentBo {
         self.label.into()
     }
 
-    /// Budget is split equally across the K providers (B/K each, paper
-    /// §III-B2); the leftover B mod K goes to the first providers.
-    fn run(
-        &self,
-        ctx: &SearchContext,
-        obj: &mut dyn Objective,
-        budget: usize,
-        rng: &mut Rng,
-    ) -> SearchResult {
+    /// The ledger's budget is split equally across the K providers (B/K
+    /// each, paper §III-B2); the leftover B mod K goes to the first
+    /// providers.
+    fn run(&self, ctx: &SearchContext, ledger: &mut EvalLedger, rng: &mut Rng) -> SearchResult {
         let k = ctx.domain.provider_count();
+        let budget = ledger.remaining();
         let preset = (self.preset_for)(ctx.target);
-        let mut history = Vec::with_capacity(budget);
         for p in 0..k {
             let share = budget / k + usize::from(p < budget % k);
             let mut state = BoState::new(ctx, ctx.domain.provider_grid(p), preset);
             for _ in 0..share {
-                let v = state.step(ctx, obj, rng);
-                let i = *state.obs_cfg_idx.last().unwrap();
-                history.push((state.cands[i].clone(), v));
+                if state.step(ledger, rng).is_none() {
+                    break;
+                }
             }
         }
-        SearchResult::from_history(&history)
+        SearchResult::from_ledger(ledger)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dataset::objective::{LookupObjective, MeasureMode};
+    use crate::dataset::objective::{EvalLedger, LookupObjective, MeasureMode};
     use crate::dataset::{OfflineDataset, Target};
     use crate::surrogate::NativeBackend;
 
@@ -258,15 +270,15 @@ mod tests {
         let ds = OfflineDataset::generate(1, 3);
         let backend = NativeBackend;
         let c = ctx(&ds, &backend, Target::Cost);
-        let mut obj = LookupObjective::new(&ds, 2, Target::Cost, MeasureMode::SingleDraw, 1);
+        let mut src = LookupObjective::new(&ds, 2, Target::Cost, MeasureMode::SingleDraw, 1);
+        let mut ledger = EvalLedger::new(&mut src, 10);
         let mut st = BoState::new(&c, ds.domain.provider_grid(0), BoPreset::cherrypick());
         let mut rng = Rng::new(5);
-        for _ in 0..10 {
-            st.step(&c, &mut obj, &mut rng);
-        }
+        while st.step(&mut ledger, &mut rng).is_some() {}
         assert_eq!(st.observations(), 10);
         let (_, bv) = st.best().unwrap();
         assert!(st.ys.iter().all(|&y| y >= bv));
+        assert_eq!(ledger.best().unwrap().1, bv);
     }
 
     #[test]
@@ -274,8 +286,9 @@ mod tests {
         let ds = OfflineDataset::generate(2, 3);
         let backend = NativeBackend;
         let c = ctx(&ds, &backend, Target::Cost);
-        let mut obj = LookupObjective::new(&ds, 5, Target::Cost, MeasureMode::Mean, 2);
-        let r = FlattenedBo::cherrypick().run(&c, &mut obj, 44, &mut Rng::new(3));
+        let mut src = LookupObjective::new(&ds, 5, Target::Cost, MeasureMode::Mean, 2);
+        let mut ledger = EvalLedger::new(&mut src, 44);
+        let r = FlattenedBo::cherrypick().run(&c, &mut ledger, &mut Rng::new(3));
         let (_, true_min) = ds.true_min(5, Target::Cost);
         let mean = ds.random_strategy_value(5, Target::Cost);
         assert!(r.best_value < 0.5 * mean + 0.5 * true_min, "{} vs min {}", r.best_value, true_min);
@@ -286,12 +299,13 @@ mod tests {
         let ds = OfflineDataset::generate(3, 3);
         let backend = NativeBackend;
         let c = ctx(&ds, &backend, Target::Time);
-        let mut obj = LookupObjective::new(&ds, 1, Target::Time, MeasureMode::SingleDraw, 4);
-        let mut rec = crate::optimizers::HistoryRecorder::new(&mut obj);
-        IndependentBo::cherrypick().run(&c, &mut rec, 10, &mut Rng::new(6));
+        let mut src = LookupObjective::new(&ds, 1, Target::Time, MeasureMode::SingleDraw, 4);
+        let mut ledger = EvalLedger::new(&mut src, 10);
+        IndependentBo::cherrypick().run(&c, &mut ledger, &mut Rng::new(6));
         // 10 = 4 + 3 + 3 across providers 0,1,2 in order.
-        let per: Vec<usize> =
-            (0..3).map(|p| rec.history.iter().filter(|(c, _)| c.provider == p).count()).collect();
+        let per: Vec<usize> = (0..3)
+            .map(|p| ledger.history().iter().filter(|(c, _)| c.provider == p).count())
+            .collect();
         assert_eq!(per, vec![4, 3, 3]);
     }
 
@@ -306,16 +320,33 @@ mod tests {
         let ds = OfflineDataset::generate(4, 3);
         let backend = NativeBackend;
         let c = ctx(&ds, &backend, Target::Cost);
-        let mut obj = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::SingleDraw, 8);
+        let mut src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::SingleDraw, 8);
+        let mut ledger = EvalLedger::new(&mut src, 16);
         let preset = BoPreset { allow_repeats: false, ..BoPreset::cherrypick() };
         let mut st = BoState::new(&c, ds.domain.provider_grid(1), preset); // 16 configs
         let mut rng = Rng::new(9);
-        for _ in 0..16 {
-            st.step(&c, &mut obj, &mut rng);
-        }
+        while st.step(&mut ledger, &mut rng).is_some() {}
         let mut seen = st.obs_cfg_idx.clone();
         seen.sort_unstable();
         seen.dedup();
         assert_eq!(seen.len(), 16, "all 16 distinct configs visited");
+    }
+
+    /// GP presets carry an incremental session; the BO loop on top of it
+    /// stays deterministic for a fixed seed.
+    #[test]
+    fn gp_session_runs_are_seed_deterministic() {
+        let ds = OfflineDataset::generate(7, 3);
+        let backend = NativeBackend;
+        let c = ctx(&ds, &backend, Target::Cost);
+        let run = || {
+            let mut src = LookupObjective::new(&ds, 3, Target::Cost, MeasureMode::Mean, 5);
+            let mut ledger = EvalLedger::new(&mut src, 14);
+            let mut st = BoState::new(&c, ds.domain.provider_grid(2), BoPreset::cherrypick());
+            let mut rng = Rng::new(2);
+            while st.step(&mut ledger, &mut rng).is_some() {}
+            st.obs_cfg_idx.clone()
+        };
+        assert_eq!(run(), run());
     }
 }

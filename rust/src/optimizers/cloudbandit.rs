@@ -22,7 +22,7 @@
 use super::bo::{BoPreset, BoState};
 use super::rbfopt::RbfOptState;
 use super::{Optimizer, SearchContext, SearchResult};
-use crate::dataset::objective::Objective;
+use crate::dataset::objective::EvalLedger;
 use crate::domain::Config;
 use crate::util::rng::Rng;
 
@@ -34,16 +34,21 @@ pub enum Component {
 }
 
 /// One arm's component optimizer state.
-enum ArmState {
-    Bo(BoState),
+enum ArmState<'a> {
+    Bo(BoState<'a>),
     Rbf(RbfOptState),
 }
 
-impl ArmState {
-    fn step(&mut self, ctx: &SearchContext, obj: &mut dyn Objective, rng: &mut Rng) -> f64 {
+impl ArmState<'_> {
+    fn step(
+        &mut self,
+        ctx: &SearchContext,
+        ledger: &mut EvalLedger,
+        rng: &mut Rng,
+    ) -> Option<f64> {
         match self {
-            ArmState::Bo(s) => s.step(ctx, obj, rng),
-            ArmState::Rbf(s) => s.step(ctx, obj, rng),
+            ArmState::Bo(s) => s.step(ledger, rng),
+            ArmState::Rbf(s) => s.step(ctx, ledger, rng),
         }
     }
 
@@ -51,13 +56,6 @@ impl ArmState {
         match self {
             ArmState::Bo(s) => s.best(),
             ArmState::Rbf(s) => s.best(),
-        }
-    }
-
-    fn last(&self) -> Option<(Config, f64)> {
-        match self {
-            ArmState::Bo(s) => s.last(),
-            ArmState::Rbf(s) => s.last(),
         }
     }
 }
@@ -74,13 +72,17 @@ impl CloudBandit {
         CloudBandit { component, eta }
     }
 
-    fn make_arm(&self, ctx: &SearchContext, provider: usize) -> ArmState {
+    fn make_arm<'a>(&self, ctx: &SearchContext<'a>, provider: usize) -> ArmState<'a> {
         let grid = ctx.domain.provider_grid(provider);
         match self.component {
             Component::CherryPick => {
                 // Fewer init points than standalone CherryPick: the first
                 // rounds may only have 1-2 pulls per arm.
-                ArmState::Bo(BoState::new(ctx, grid, BoPreset { n_init: 2, ..BoPreset::cherrypick() }))
+                ArmState::Bo(BoState::new(
+                    ctx,
+                    grid,
+                    BoPreset { n_init: 2, ..BoPreset::cherrypick() },
+                ))
             }
             Component::RbfOpt => ArmState::Rbf(RbfOptState::new(ctx, grid)),
         }
@@ -103,25 +105,16 @@ impl Optimizer for CloudBandit {
         }
     }
 
-    fn run(
-        &self,
-        ctx: &SearchContext,
-        obj: &mut dyn Objective,
-        budget: usize,
-        rng: &mut Rng,
-    ) -> SearchResult {
+    fn run(&self, ctx: &SearchContext, ledger: &mut EvalLedger, rng: &mut Rng) -> SearchResult {
         let k = ctx.domain.provider_count();
-        let b1 = b1_for_budget(budget, k, self.eta);
+        let b1 = b1_for_budget(ledger.remaining(), k, self.eta);
         let mut arms: Vec<Option<ArmState>> =
             (0..k).map(|p| Some(self.make_arm(ctx, p))).collect();
         let mut losses: Vec<f64> = vec![f64::INFINITY; k];
-        let mut history: Vec<(Config, f64)> = Vec::with_capacity(budget);
-        let mut used = 0;
         let mut b_m = b1 as f64;
 
-        for _round in 0..k {
-            let active: Vec<usize> =
-                (0..k).filter(|&a| arms[a].is_some()).collect();
+        'schedule: for _round in 0..k {
+            let active: Vec<usize> = (0..k).filter(|&a| arms[a].is_some()).collect();
             if active.is_empty() {
                 break;
             }
@@ -129,12 +122,12 @@ impl Optimizer for CloudBandit {
             for &a in &active {
                 let arm = arms[a].as_mut().unwrap();
                 for _ in 0..(b_m.round() as usize) {
-                    if used >= budget {
-                        break;
+                    if arm.step(ctx, ledger, rng).is_none() {
+                        if let Some((_, v)) = arm.best() {
+                            losses[a] = v;
+                        }
+                        break 'schedule;
                     }
-                    arm.step(ctx, obj, rng);
-                    used += 1;
-                    history.push(arm.last().unwrap());
                 }
                 if let Some((_, v)) = arm.best() {
                     losses[a] = v;
@@ -156,16 +149,16 @@ impl Optimizer for CloudBandit {
             .filter(|&a| arms[a].is_some())
             .min_by(|&x, &y| losses[x].partial_cmp(&losses[y]).unwrap())
             .expect("CloudBandit finished with no arms");
-        while used < budget {
+        while !ledger.exhausted() {
             let arm = arms[winner_idx].as_mut().unwrap();
-            arm.step(ctx, obj, rng);
-            used += 1;
-            history.push(arm.last().unwrap());
+            if arm.step(ctx, ledger, rng).is_none() {
+                break;
+            }
         }
 
         let (best_config, best_value) =
             arms[winner_idx].as_ref().unwrap().best().expect("winner arm never pulled");
-        let mut result = SearchResult::from_history(&history);
+        let mut result = SearchResult::from_ledger(ledger);
         result.best_config = best_config;
         result.best_value = best_value;
         result
@@ -175,7 +168,7 @@ impl Optimizer for CloudBandit {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dataset::objective::{LookupObjective, MeasureMode};
+    use crate::dataset::objective::{EvalLedger, LookupObjective, MeasureMode};
     use crate::dataset::{OfflineDataset, Target};
     use crate::surrogate::NativeBackend;
 
@@ -192,10 +185,10 @@ mod tests {
         let ds = OfflineDataset::generate(31, 3);
         let backend = NativeBackend;
         let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
-        let mut obj = LookupObjective::new(&ds, 22, Target::Cost, MeasureMode::SingleDraw, seed);
-        let mut rec = crate::optimizers::HistoryRecorder::new(&mut obj);
-        let r = CloudBandit::new(component, 2.0).run(&ctx, &mut rec, budget, &mut Rng::new(seed));
-        let prov = rec.history.iter().map(|(c, v)| (c.provider, *v)).collect();
+        let mut src = LookupObjective::new(&ds, 22, Target::Cost, MeasureMode::SingleDraw, seed);
+        let mut ledger = EvalLedger::new(&mut src, budget);
+        let r = CloudBandit::new(component, 2.0).run(&ctx, &mut ledger, &mut Rng::new(seed));
+        let prov = ledger.history().iter().map(|(c, v)| (c.provider, *v)).collect();
         (r, prov)
     }
 
@@ -235,7 +228,7 @@ mod tests {
 
     #[test]
     fn works_with_budget_below_schedule_unit() {
-        // B < 11: b1 = 1, schedule truncated by the budget check.
+        // B < 11: b1 = 1, schedule truncated by the ledger's cap.
         let (r, hist) = run_cb(Component::RbfOpt, 7, 3);
         assert_eq!(hist.len(), 7);
         assert!(r.best_value.is_finite());

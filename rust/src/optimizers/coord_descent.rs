@@ -4,11 +4,11 @@
 //! cycle over that provider's coordinates (each categorical parameter and
 //! the node count), greedily evaluating every alternative value of one
 //! coordinate while holding the others fixed. When a full sweep makes no
-//! progress, restart at a new random provider/configuration. Budget-capped
-//! throughout.
+//! progress, restart at a new random provider/configuration. The ledger
+//! caps the spend throughout.
 
 use super::{Optimizer, SearchContext, SearchResult};
-use crate::dataset::objective::Objective;
+use crate::dataset::objective::EvalLedger;
 use crate::domain::Config;
 use crate::util::rng::Rng;
 
@@ -27,24 +27,11 @@ impl Optimizer for CoordinateDescent {
         "cd".into()
     }
 
-    fn run(
-        &self,
-        ctx: &SearchContext,
-        obj: &mut dyn Objective,
-        budget: usize,
-        rng: &mut Rng,
-    ) -> SearchResult {
-        let mut history: Vec<(Config, f64)> = Vec::with_capacity(budget);
-        let eval = |cfg: &Config, hist: &mut Vec<(Config, f64)>, obj: &mut dyn Objective| {
-            let v = obj.eval(cfg);
-            hist.push((cfg.clone(), v));
-            v
-        };
-
-        'outer: while history.len() < budget {
+    fn run(&self, ctx: &SearchContext, ledger: &mut EvalLedger, rng: &mut Rng) -> SearchResult {
+        'outer: while !ledger.exhausted() {
             // Restart point.
             let mut current = random_config(ctx, rng);
-            let mut current_val = eval(&current, &mut history, obj);
+            let Some(mut current_val) = ledger.eval(&current) else { break };
             loop {
                 let mut improved = false;
                 let p = &ctx.domain.providers[current.provider];
@@ -72,10 +59,7 @@ impl Optimizer for CoordinateDescent {
                             .collect()
                     };
                     for alt in alternatives {
-                        if history.len() >= budget {
-                            break 'outer;
-                        }
-                        let v = eval(&alt, &mut history, obj);
+                        let Some(v) = ledger.eval(&alt) else { break 'outer };
                         if v < current_val {
                             current = alt;
                             current_val = v;
@@ -88,14 +72,14 @@ impl Optimizer for CoordinateDescent {
                 }
             }
         }
-        SearchResult::from_history(&history)
+        SearchResult::from_ledger(ledger)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dataset::objective::{LookupObjective, MeasureMode};
+    use crate::dataset::objective::{EvalLedger, LookupObjective, MeasureMode};
     use crate::dataset::{OfflineDataset, Target};
     use crate::surrogate::NativeBackend;
 
@@ -104,8 +88,9 @@ mod tests {
         let ds = OfflineDataset::generate(6, 3);
         let backend = NativeBackend;
         let ctx = SearchContext { domain: &ds.domain, target: Target::Time, backend: &backend };
-        let mut obj = LookupObjective::new(&ds, 9, Target::Time, MeasureMode::Mean, 3);
-        let r = CoordinateDescent.run(&ctx, &mut obj, 30, &mut Rng::new(4));
+        let mut src = LookupObjective::new(&ds, 9, Target::Time, MeasureMode::Mean, 3);
+        let mut ledger = EvalLedger::new(&mut src, 30);
+        let r = CoordinateDescent.run(&ctx, &mut ledger, &mut Rng::new(4));
         assert_eq!(r.evals_used, 30);
         assert!(r.best_value <= r.trace[0]);
     }
@@ -117,10 +102,10 @@ mod tests {
         let ds = OfflineDataset::generate(6, 3);
         let backend = NativeBackend;
         let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
-        let mut obj = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 3);
-        let mut recorder = crate::optimizers::HistoryRecorder::new(&mut obj);
-        CoordinateDescent.run(&ctx, &mut recorder, 2, &mut Rng::new(8));
-        let h = &recorder.history;
+        let mut src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 3);
+        let mut ledger = EvalLedger::new(&mut src, 2);
+        CoordinateDescent.run(&ctx, &mut ledger, &mut Rng::new(8));
+        let h = ledger.history();
         assert_eq!(h.len(), 2);
         assert_eq!(h[0].0.provider, h[1].0.provider);
     }

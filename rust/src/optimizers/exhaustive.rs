@@ -1,10 +1,11 @@
 //! Exhaustive search: evaluate every configuration across all providers.
 //! Guaranteed to find the (observed) optimum, at maximal search expense —
 //! the paper uses it as the savings-analysis strawman (Fig. 4, strictly
-//! negative savings).
+//! negative savings). `provisioned_budget` asks the coordinator for the
+//! full grid; the ledger still hard-caps whatever it was actually given.
 
 use super::{Optimizer, SearchContext, SearchResult};
-use crate::dataset::objective::Objective;
+use crate::dataset::objective::EvalLedger;
 use crate::util::rng::Rng;
 
 pub struct ExhaustiveSearch;
@@ -14,30 +15,30 @@ impl Optimizer for ExhaustiveSearch {
         "exhaustive".into()
     }
 
-    /// Ignores `budget` (exhaustive by definition); the evaluation order
-    /// is shuffled so ties/noise do not systematically favour low ids.
-    fn run(
-        &self,
-        ctx: &SearchContext,
-        obj: &mut dyn Objective,
-        _budget: usize,
-        rng: &mut Rng,
-    ) -> SearchResult {
+    /// Exhaustive by definition: the nominal budget is ignored in favour
+    /// of the full grid (the Fig. 4 strawman always sweeps everything).
+    fn provisioned_budget(&self, ctx: &SearchContext, requested: usize) -> usize {
+        ctx.domain.size().max(requested)
+    }
+
+    /// The evaluation order is shuffled so ties/noise do not
+    /// systematically favour low config ids.
+    fn run(&self, ctx: &SearchContext, ledger: &mut EvalLedger, rng: &mut Rng) -> SearchResult {
         let mut grid = ctx.domain.full_grid();
         rng.shuffle(&mut grid);
-        let mut history = Vec::with_capacity(grid.len());
-        for cfg in grid {
-            let v = obj.eval(&cfg);
-            history.push((cfg, v));
+        for cfg in &grid {
+            if ledger.eval(cfg).is_none() {
+                break;
+            }
         }
-        SearchResult::from_history(&history)
+        SearchResult::from_ledger(ledger)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dataset::objective::{LookupObjective, MeasureMode};
+    use crate::dataset::objective::{EvalLedger, LookupObjective, MeasureMode};
     use crate::dataset::{OfflineDataset, Target};
     use crate::surrogate::NativeBackend;
 
@@ -46,11 +47,25 @@ mod tests {
         let ds = OfflineDataset::generate(4, 3);
         let backend = NativeBackend;
         let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
-        let mut obj = LookupObjective::new(&ds, 11, Target::Cost, MeasureMode::Mean, 1);
-        let r = ExhaustiveSearch.run(&ctx, &mut obj, 0, &mut Rng::new(2));
+        let mut src = LookupObjective::new(&ds, 11, Target::Cost, MeasureMode::Mean, 1);
+        let budget = ExhaustiveSearch.provisioned_budget(&ctx, 0);
+        assert_eq!(budget, 88);
+        let mut ledger = EvalLedger::new(&mut src, budget);
+        let r = ExhaustiveSearch.run(&ctx, &mut ledger, &mut Rng::new(2));
         assert_eq!(r.evals_used, 88);
         let (true_cfg, true_val) = ds.true_min(11, Target::Cost);
         assert_eq!(ds.domain.config_id(&r.best_config), true_cfg);
         assert!((r.best_value - true_val).abs() < 1e-12);
+    }
+
+    #[test]
+    fn truncated_by_a_smaller_ledger() {
+        let ds = OfflineDataset::generate(4, 3);
+        let backend = NativeBackend;
+        let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
+        let mut src = LookupObjective::new(&ds, 2, Target::Cost, MeasureMode::Mean, 1);
+        let mut ledger = EvalLedger::new(&mut src, 10);
+        let r = ExhaustiveSearch.run(&ctx, &mut ledger, &mut Rng::new(3));
+        assert_eq!(r.evals_used, 10, "ledger cap wins over the full sweep");
     }
 }

@@ -11,7 +11,7 @@
 //! paper attributes HyperOpt's gap to SMAC to precisely this.
 
 use super::{Optimizer, SearchContext, SearchResult};
-use crate::dataset::objective::Objective;
+use crate::dataset::objective::EvalLedger;
 use crate::domain::Config;
 use crate::surrogate::tpe::{split_good_bad, TpePair};
 use crate::util::rng::Rng;
@@ -115,31 +115,25 @@ impl Optimizer for HyperOptLite {
         "hyperopt".into()
     }
 
-    fn run(
-        &self,
-        ctx: &SearchContext,
-        obj: &mut dyn Objective,
-        budget: usize,
-        rng: &mut Rng,
-    ) -> SearchResult {
-        let mut history: Vec<(Config, f64)> = Vec::with_capacity(budget);
-        for it in 0..budget {
-            let cfg = if it < self.n_init {
+    fn run(&self, ctx: &SearchContext, ledger: &mut EvalLedger, rng: &mut Rng) -> SearchResult {
+        while !ledger.exhausted() {
+            let cfg = if ledger.evals() < self.n_init {
                 random_config(ctx, rng)
             } else {
-                self.propose(ctx, &history, rng)
+                self.propose(ctx, ledger.history(), rng)
             };
-            let v = obj.eval(&cfg);
-            history.push((cfg, v));
+            if ledger.eval(&cfg).is_none() {
+                break;
+            }
         }
-        SearchResult::from_history(&history)
+        SearchResult::from_ledger(ledger)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dataset::objective::{LookupObjective, MeasureMode};
+    use crate::dataset::objective::{EvalLedger, LookupObjective, MeasureMode};
     use crate::dataset::{OfflineDataset, Target};
     use crate::surrogate::NativeBackend;
 
@@ -148,14 +142,14 @@ mod tests {
         let ds = OfflineDataset::generate(12, 3);
         let backend = NativeBackend;
         let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
-        let mut obj = LookupObjective::new(&ds, 14, Target::Cost, MeasureMode::SingleDraw, 2);
-        let mut rec = crate::optimizers::HistoryRecorder::new(&mut obj);
-        HyperOptLite::default().run(&ctx, &mut rec, 30, &mut Rng::new(3));
-        for (cfg, _) in &rec.history {
+        let mut src = LookupObjective::new(&ds, 14, Target::Cost, MeasureMode::SingleDraw, 2);
+        let mut ledger = EvalLedger::new(&mut src, 30);
+        HyperOptLite::default().run(&ctx, &mut ledger, &mut Rng::new(3));
+        for (cfg, _) in ledger.history() {
             // config_id panics on invalid configs; also checks nodes value.
             let _ = ds.domain.config_id(cfg);
         }
-        assert_eq!(rec.history.len(), 30);
+        assert_eq!(ledger.history().len(), 30);
     }
 
     #[test]
@@ -168,10 +162,10 @@ mod tests {
         let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
         let (best_cfg_id, _) = ds.true_min(w, Target::Cost);
         let best_provider = ds.domain.full_grid()[best_cfg_id].provider;
-        let mut obj = LookupObjective::new(&ds, w, Target::Cost, MeasureMode::SingleDraw, 4);
-        let mut rec = crate::optimizers::HistoryRecorder::new(&mut obj);
-        HyperOptLite::default().run(&ctx, &mut rec, 60, &mut Rng::new(5));
-        let late = &rec.history[30..];
+        let mut src = LookupObjective::new(&ds, w, Target::Cost, MeasureMode::SingleDraw, 4);
+        let mut ledger = EvalLedger::new(&mut src, 60);
+        HyperOptLite::default().run(&ctx, &mut ledger, &mut Rng::new(5));
+        let late = &ledger.history()[30..];
         let hits = late.iter().filter(|(c, _)| c.provider == best_provider).count();
         assert!(hits * 2 > late.len(), "only {hits}/{} late samples on best provider", late.len());
     }
@@ -182,8 +176,9 @@ mod tests {
         let backend = NativeBackend;
         let ctx = SearchContext { domain: &ds.domain, target: Target::Time, backend: &backend };
         let run = |seed| {
-            let mut obj = LookupObjective::new(&ds, 8, Target::Time, MeasureMode::SingleDraw, 6);
-            HyperOptLite::default().run(&ctx, &mut obj, 25, &mut Rng::new(seed))
+            let mut src = LookupObjective::new(&ds, 8, Target::Time, MeasureMode::SingleDraw, 6);
+            let mut ledger = EvalLedger::new(&mut src, 25);
+            HyperOptLite::default().run(&ctx, &mut ledger, &mut Rng::new(seed))
         };
         let (a, b) = (run(7), run(7));
         assert_eq!(a.best_config, b.best_config);

@@ -1,7 +1,7 @@
 //! The search-based optimizer suite (paper §III).
 //!
-//! Every method implements [`Optimizer`]: given a black-box objective and
-//! a budget, return the best configuration found. The suite covers
+//! Every method implements [`Optimizer`]: given a budget-enforcing
+//! [`EvalLedger`], search for the best configuration. The suite covers
 //!
 //! * baselines: random search, exhaustive search, coordinate descent;
 //! * single-cloud BO adapted to multi-cloud by flattening (`x1`) and by
@@ -12,7 +12,11 @@
 //! * RBFOpt-lite; and the paper's contribution, **CloudBandit**, with
 //!   either CherryPick-BO or RBFOpt-lite as the component BBO.
 //!
-//! `registry()` maps the CLI/figure names to constructors.
+//! The ledger owns history, best-so-far tracing, expense accounting and
+//! the hard budget cap, so optimizers carry no bookkeeping of their own:
+//! [`SearchResult::from_ledger`] derives the outcome from the log.
+//!
+//! `by_name()` maps the CLI/figure names to constructors.
 
 pub mod annealing;
 pub mod bo;
@@ -25,7 +29,7 @@ pub mod rbfopt;
 pub mod rising_bandits;
 pub mod smac;
 
-use crate::dataset::objective::Objective;
+use crate::dataset::objective::EvalLedger;
 use crate::dataset::Target;
 use crate::domain::{Config, Domain};
 use crate::surrogate::Backend;
@@ -50,26 +54,16 @@ pub struct SearchResult {
 }
 
 impl SearchResult {
-    /// Build a result from the evaluation history, returning the best
+    /// Derive the result from the ledger's log, returning the best
     /// *observed* configuration (the convention for every method except
-    /// CloudBandit, which restricts to the surviving arm).
-    pub fn from_history(history: &[(Config, f64)]) -> SearchResult {
-        assert!(!history.is_empty(), "search made no evaluations");
-        let mut trace = Vec::with_capacity(history.len());
-        let mut best = f64::INFINITY;
-        let mut best_cfg = &history[0].0;
-        for (c, v) in history {
-            if *v < best {
-                best = *v;
-                best_cfg = c;
-            }
-            trace.push(best);
-        }
+    /// the bandits, which restrict to the surviving arm).
+    pub fn from_ledger(ledger: &EvalLedger) -> SearchResult {
+        let (cfg, best) = ledger.best().expect("search made no evaluations");
         SearchResult {
-            best_config: best_cfg.clone(),
+            best_config: cfg.clone(),
             best_value: best,
-            evals_used: history.len(),
-            trace,
+            evals_used: ledger.evals(),
+            trace: ledger.trace().to_vec(),
         }
     }
 }
@@ -78,43 +72,18 @@ impl SearchResult {
 pub trait Optimizer: Sync {
     fn name(&self) -> String;
 
-    /// Run a search with the given evaluation budget. Implementations must
-    /// not exceed `budget` objective evaluations.
-    fn run(
-        &self,
-        ctx: &SearchContext,
-        obj: &mut dyn Objective,
-        budget: usize,
-        rng: &mut Rng,
-    ) -> SearchResult;
-}
-
-#[cfg(test)]
-/// History accessor used by optimizers that build their result from the
-/// full log. Implemented via a shim: optimizers record their own history.
-pub(crate) struct HistoryRecorder<'a> {
-    inner: &'a mut dyn Objective,
-    pub history: Vec<(Config, f64)>,
-}
-
-#[cfg(test)]
-impl<'a> HistoryRecorder<'a> {
-    pub fn new(inner: &'a mut dyn Objective) -> Self {
-        HistoryRecorder { inner, history: Vec::new() }
-    }
-}
-
-#[cfg(test)]
-impl Objective for HistoryRecorder<'_> {
-    fn eval(&mut self, cfg: &Config) -> f64 {
-        let v = self.inner.eval(cfg);
-        self.history.push((cfg.clone(), v));
-        v
+    /// Ledger budget this method needs for a requested search budget.
+    /// The default is the identity; exhaustive search asks for the full
+    /// grid (its defining behaviour — the Fig. 4 strawman sweeps
+    /// everything regardless of the nominal budget).
+    fn provisioned_budget(&self, _ctx: &SearchContext, requested: usize) -> usize {
+        requested
     }
 
-    fn evals(&self) -> usize {
-        self.inner.evals()
-    }
+    /// Run a search against the ledger. The ledger's budget is a hard
+    /// cap: `EvalLedger::eval` returns `None` once it is spent, so an
+    /// implementation *cannot* overspend — it only decides how to spend.
+    fn run(&self, ctx: &SearchContext, ledger: &mut EvalLedger, rng: &mut Rng) -> SearchResult;
 }
 
 /// All optimizer names understood by the CLI / experiment harness, in the
@@ -164,7 +133,7 @@ pub fn by_name(name: &str) -> Option<Box<dyn Optimizer>> {
 #[cfg(test)]
 pub(crate) mod testutil {
     use super::*;
-    use crate::dataset::objective::{LookupObjective, MeasureMode};
+    use crate::dataset::objective::{EvalLedger, LookupObjective, MeasureMode};
     use crate::dataset::OfflineDataset;
     use crate::surrogate::NativeBackend;
 
@@ -179,10 +148,11 @@ pub(crate) mod testutil {
         let opt = by_name(name).unwrap_or_else(|| panic!("unknown optimizer {name}"));
         let backend = NativeBackend;
         let ctx = SearchContext { domain: &ds.domain, target, backend: &backend };
-        let mut obj = LookupObjective::new(ds, workload, target, MeasureMode::SingleDraw, seed);
+        let mut src = LookupObjective::new(ds, workload, target, MeasureMode::SingleDraw, seed);
+        let mut ledger = EvalLedger::new(&mut src, opt.provisioned_budget(&ctx, budget));
         let mut rng = Rng::new(seed ^ 0xABCD);
-        let res = opt.run(&ctx, &mut obj, budget, &mut rng);
-        let evals = obj.evals();
+        let res = opt.run(&ctx, &mut ledger, &mut rng);
+        let evals = ledger.evals();
         (res, evals)
     }
 }
@@ -190,7 +160,9 @@ pub(crate) mod testutil {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dataset::objective::{EvalLedger, LookupObjective, MeasureMode};
     use crate::dataset::OfflineDataset;
+    use crate::surrogate::NativeBackend;
 
     #[test]
     fn registry_covers_all_names() {
@@ -201,20 +173,25 @@ mod tests {
     }
 
     #[test]
-    fn from_history_tracks_best_so_far() {
-        let d = Domain::paper();
-        let grid = d.full_grid();
-        let hist = vec![
-            (grid[0].clone(), 5.0),
-            (grid[1].clone(), 3.0),
-            (grid[2].clone(), 4.0),
-            (grid[3].clone(), 1.0),
-        ];
-        let r = SearchResult::from_history(&hist);
-        assert_eq!(r.trace, vec![5.0, 3.0, 3.0, 1.0]);
-        assert_eq!(r.best_value, 1.0);
-        assert_eq!(r.best_config, grid[3]);
+    fn from_ledger_tracks_best_so_far() {
+        let ds = OfflineDataset::generate(77, 3);
+        let mut src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 1);
+        let grid = ds.domain.full_grid();
+        let mut ledger = EvalLedger::new(&mut src, 4);
+        for c in grid.iter().take(4) {
+            ledger.eval(c);
+        }
+        let r = SearchResult::from_ledger(&ledger);
         assert_eq!(r.evals_used, 4);
+        assert_eq!(r.trace.len(), 4);
+        assert!(r.trace.windows(2).all(|w| w[1] <= w[0]));
+        assert_eq!(*r.trace.last().unwrap(), r.best_value);
+        let min = ledger
+            .history()
+            .iter()
+            .map(|(_, v)| *v)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(r.best_value, min);
     }
 
     /// Every optimizer respects its budget and returns a config whose
@@ -224,7 +201,7 @@ mod tests {
         let ds = OfflineDataset::generate(3, 3);
         for name in ALL_OPTIMIZERS {
             if name == "exhaustive" {
-                continue; // evaluates the full grid by definition
+                continue; // provisions the full grid by definition
             }
             for budget in [11, 33] {
                 let (res, evals) =
@@ -235,6 +212,61 @@ mod tests {
                 assert_eq!(res.trace.len(), res.evals_used);
             }
         }
+    }
+
+    /// The ledger is the enforcement point: even handed a smaller budget
+    /// than a method would schedule for itself (including exhaustive's
+    /// full-grid sweep), no optimizer can spend past the cap.
+    #[test]
+    fn ledger_prevents_overspend_for_every_optimizer() {
+        let ds = OfflineDataset::generate(5, 3);
+        let backend = NativeBackend;
+        for name in ALL_OPTIMIZERS {
+            let opt = by_name(name).unwrap();
+            let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
+            for budget in [1usize, 5, 9] {
+                let mut src =
+                    LookupObjective::new(&ds, 1, Target::Cost, MeasureMode::SingleDraw, 7);
+                let mut ledger = EvalLedger::new(&mut src, budget);
+                let res = opt.run(&ctx, &mut ledger, &mut Rng::new(11));
+                assert!(
+                    ledger.evals() <= budget,
+                    "{name} spent {} > hard cap {budget}",
+                    ledger.evals()
+                );
+                assert!(res.best_value.is_finite(), "{name} at budget {budget}");
+            }
+        }
+    }
+
+    /// Memoized deterministic evaluation composes with a real optimizer:
+    /// repeat proposals replay values and are charged once.
+    #[test]
+    fn memoized_ledger_does_not_double_charge_repeats() {
+        let ds = OfflineDataset::generate(6, 3);
+        let backend = NativeBackend;
+        let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
+        // CherryPick allows repeat proposals, so a long run on a small
+        // provider grid is guaranteed to revisit configurations.
+        let opt = by_name("cherrypick-x1").unwrap();
+        let mut src = LookupObjective::new(&ds, 2, Target::Cost, MeasureMode::Mean, 3);
+        let mut ledger = EvalLedger::new(&mut src, 40).with_memo();
+        opt.run(&ctx, &mut ledger, &mut Rng::new(4));
+        assert_eq!(ledger.evals(), 40);
+        // Expense equals the sum over *distinct* configurations only.
+        let mut seen = std::collections::HashMap::new();
+        for (c, v) in ledger.history() {
+            seen.entry(ds.domain.config_id(c)).or_insert(*v);
+        }
+        let distinct_sum: f64 = seen.values().sum();
+        assert!(
+            (ledger.total_expense() - distinct_sum).abs() < 1e-9,
+            "expense {} vs distinct sum {} over {} distinct / {} evals",
+            ledger.total_expense(),
+            distinct_sum,
+            seen.len(),
+            ledger.evals()
+        );
     }
 
     /// With a generous budget every method should land well below the

@@ -1,8 +1,9 @@
-//! Random search: B configurations drawn uniformly with replacement from
-//! the flattened multi-cloud grid (the paper's RS baseline, §IV-B).
+//! Random search: configurations drawn uniformly with replacement from
+//! the flattened multi-cloud grid (the paper's RS baseline, §IV-B),
+//! until the ledger's budget is spent.
 
 use super::{Optimizer, SearchContext, SearchResult};
-use crate::dataset::objective::Objective;
+use crate::dataset::objective::EvalLedger;
 use crate::util::rng::Rng;
 
 pub struct RandomSearch;
@@ -12,28 +13,17 @@ impl Optimizer for RandomSearch {
         "rs".into()
     }
 
-    fn run(
-        &self,
-        ctx: &SearchContext,
-        obj: &mut dyn Objective,
-        budget: usize,
-        rng: &mut Rng,
-    ) -> SearchResult {
+    fn run(&self, ctx: &SearchContext, ledger: &mut EvalLedger, rng: &mut Rng) -> SearchResult {
         let grid = ctx.domain.full_grid();
-        let mut history = Vec::with_capacity(budget);
-        for _ in 0..budget {
-            let cfg = rng.choice(&grid).clone();
-            let v = obj.eval(&cfg);
-            history.push((cfg, v));
-        }
-        SearchResult::from_history(&history)
+        while ledger.eval(rng.choice(&grid)).is_some() {}
+        SearchResult::from_ledger(ledger)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dataset::objective::{LookupObjective, MeasureMode};
+    use crate::dataset::objective::{EvalLedger, LookupObjective, MeasureMode};
     use crate::dataset::{OfflineDataset, Target};
     use crate::optimizers::SearchContext;
     use crate::surrogate::NativeBackend;
@@ -44,8 +34,9 @@ mod tests {
         let backend = NativeBackend;
         let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
         let run = |seed| {
-            let mut obj = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 5);
-            RandomSearch.run(&ctx, &mut obj, 22, &mut Rng::new(seed))
+            let mut src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 5);
+            let mut ledger = EvalLedger::new(&mut src, 22);
+            RandomSearch.run(&ctx, &mut ledger, &mut Rng::new(seed))
         };
         let a = run(9);
         let b = run(9);
@@ -62,8 +53,9 @@ mod tests {
         let ds = OfflineDataset::generate(2, 2);
         let backend = NativeBackend;
         let ctx = SearchContext { domain: &ds.domain, target: Target::Time, backend: &backend };
-        let mut obj = LookupObjective::new(&ds, 3, Target::Time, MeasureMode::SingleDraw, 7);
-        let r = RandomSearch.run(&ctx, &mut obj, 40, &mut Rng::new(1));
+        let mut src = LookupObjective::new(&ds, 3, Target::Time, MeasureMode::SingleDraw, 7);
+        let mut ledger = EvalLedger::new(&mut src, 40);
+        let r = RandomSearch.run(&ctx, &mut ledger, &mut Rng::new(1));
         assert!(r.trace.windows(2).all(|w| w[1] <= w[0]));
     }
 }

@@ -12,7 +12,7 @@
 //! the AOT PJRT artifact when available.
 
 use super::{Optimizer, SearchContext, SearchResult};
-use crate::dataset::objective::Objective;
+use crate::dataset::objective::EvalLedger;
 use crate::domain::{encode, Config};
 use crate::util::rng::Rng;
 
@@ -62,12 +62,6 @@ impl RbfOptState {
         Some((self.cands[self.obs_cfg_idx[i]].clone(), self.ys[i]))
     }
 
-    /// The most recently evaluated (config, value), if any.
-    pub fn last(&self) -> Option<(Config, f64)> {
-        let i = *self.obs_cfg_idx.last()?;
-        Some((self.cands[i].clone(), *self.ys.last()?))
-    }
-
     fn propose(&mut self, ctx: &SearchContext, rng: &mut Rng) -> usize {
         let unseen: Vec<usize> = (0..self.cands.len()).filter(|&i| !self.evaluated[i]).collect();
         if unseen.is_empty() {
@@ -105,15 +99,24 @@ impl RbfOptState {
         best.0
     }
 
-    pub fn step(&mut self, ctx: &SearchContext, obj: &mut dyn Objective, rng: &mut Rng) -> f64 {
+    /// One iteration; None once the ledger's budget is exhausted.
+    pub fn step(
+        &mut self,
+        ctx: &SearchContext,
+        ledger: &mut EvalLedger,
+        rng: &mut Rng,
+    ) -> Option<f64> {
+        if ledger.exhausted() {
+            return None;
+        }
         let i = self.propose(ctx, rng);
+        let v = ledger.eval(&self.cands[i])?;
         self.iter += 1;
-        let v = obj.eval(&self.cands[i]);
         self.obs_x.push(self.enc[i].clone());
         self.obs_cfg_idx.push(i);
         self.ys.push(v);
         self.evaluated[i] = true;
-        v
+        Some(v)
     }
 }
 
@@ -125,28 +128,17 @@ impl Optimizer for RbfOpt {
         "rbfopt".into()
     }
 
-    fn run(
-        &self,
-        ctx: &SearchContext,
-        obj: &mut dyn Objective,
-        budget: usize,
-        rng: &mut Rng,
-    ) -> SearchResult {
+    fn run(&self, ctx: &SearchContext, ledger: &mut EvalLedger, rng: &mut Rng) -> SearchResult {
         let mut st = RbfOptState::new(ctx, ctx.domain.full_grid());
-        let mut history = Vec::with_capacity(budget);
-        for _ in 0..budget {
-            let v = st.step(ctx, obj, rng);
-            let i = *st.obs_cfg_idx.last().unwrap();
-            history.push((st.cands[i].clone(), v));
-        }
-        SearchResult::from_history(&history)
+        while st.step(ctx, ledger, rng).is_some() {}
+        SearchResult::from_ledger(ledger)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dataset::objective::{LookupObjective, MeasureMode};
+    use crate::dataset::objective::{EvalLedger, LookupObjective, MeasureMode};
     use crate::dataset::{OfflineDataset, Target};
     use crate::surrogate::NativeBackend;
 
@@ -155,12 +147,11 @@ mod tests {
         let ds = OfflineDataset::generate(5, 3);
         let backend = NativeBackend;
         let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
-        let mut obj = LookupObjective::new(&ds, 3, Target::Cost, MeasureMode::SingleDraw, 1);
+        let mut src = LookupObjective::new(&ds, 3, Target::Cost, MeasureMode::SingleDraw, 1);
+        let mut ledger = EvalLedger::new(&mut src, 16);
         let mut st = RbfOptState::new(&ctx, ds.domain.provider_grid(1)); // 16
         let mut rng = Rng::new(2);
-        for _ in 0..16 {
-            st.step(&ctx, &mut obj, &mut rng);
-        }
+        while st.step(&ctx, &mut ledger, &mut rng).is_some() {}
         let mut seen = st.obs_cfg_idx.clone();
         seen.sort_unstable();
         seen.dedup();
@@ -172,8 +163,9 @@ mod tests {
         let ds = OfflineDataset::generate(7, 3);
         let backend = NativeBackend;
         let ctx = SearchContext { domain: &ds.domain, target: Target::Time, backend: &backend };
-        let mut obj = LookupObjective::new(&ds, 12, Target::Time, MeasureMode::Mean, 3);
-        let r = RbfOpt.run(&ctx, &mut obj, 33, &mut Rng::new(4));
+        let mut src = LookupObjective::new(&ds, 12, Target::Time, MeasureMode::Mean, 3);
+        let mut ledger = EvalLedger::new(&mut src, 33);
+        let r = RbfOpt.run(&ctx, &mut ledger, &mut Rng::new(4));
         assert_eq!(r.evals_used, 33);
         let mean = ds.random_strategy_value(12, Target::Time);
         assert!(r.best_value < mean);

@@ -15,8 +15,7 @@
 
 use super::bo::{BoPreset, BoState};
 use super::{Optimizer, SearchContext, SearchResult};
-use crate::dataset::objective::Objective;
-use crate::domain::Config;
+use crate::dataset::objective::EvalLedger;
 use crate::util::rng::Rng;
 
 pub struct RisingBandits {
@@ -32,14 +31,14 @@ impl Default for RisingBandits {
     }
 }
 
-struct Arm {
-    state: BoState,
+struct Arm<'a> {
+    state: BoState<'a>,
     /// Best-so-far after each pull.
     curve: Vec<f64>,
     active: bool,
 }
 
-impl Arm {
+impl Arm<'_> {
     fn best_val(&self) -> f64 {
         *self.curve.last().unwrap_or(&f64::INFINITY)
     }
@@ -69,13 +68,7 @@ impl Optimizer for RisingBandits {
         "rb".into()
     }
 
-    fn run(
-        &self,
-        ctx: &SearchContext,
-        obj: &mut dyn Objective,
-        budget: usize,
-        rng: &mut Rng,
-    ) -> SearchResult {
+    fn run(&self, ctx: &SearchContext, ledger: &mut EvalLedger, rng: &mut Rng) -> SearchResult {
         let k = ctx.domain.provider_count();
         let mut arms: Vec<Arm> = (0..k)
             .map(|p| Arm {
@@ -91,25 +84,21 @@ impl Optimizer for RisingBandits {
             })
             .collect();
 
-        let mut history: Vec<(Config, f64)> = Vec::with_capacity(budget);
-        let mut used = 0;
-        while used < budget {
+        'outer: while !ledger.exhausted() {
             // Round-robin over active arms.
             for a in 0..k {
-                if used >= budget || !arms[a].active {
+                if !arms[a].active {
                     continue;
                 }
-                let v = arms[a].state.step(ctx, obj, rng);
-                used += 1;
+                let Some(v) = arms[a].state.step(ledger, rng) else { break 'outer };
                 let best = arms[a].best_val().min(v);
                 arms[a].curve.push(best);
-                history.push(arms[a].state.last().unwrap());
             }
 
             // Elimination pass (keep at least one arm).
             let active_count = arms.iter().filter(|a| a.active).count();
             if active_count > 1 {
-                let remaining_rounds = (budget - used) / active_count.max(1);
+                let remaining_rounds = ledger.remaining() / active_count.max(1);
                 let mut to_kill: Option<usize> = None;
                 for i in 0..k {
                     if !arms[i].active || arms[i].curve.len() < self.min_pulls {
@@ -139,7 +128,7 @@ impl Optimizer for RisingBandits {
             .min_by(|x, y| x.best_val().partial_cmp(&y.best_val()).unwrap())
             .expect("no active arm with observations");
         let (cfg, val) = winner.state.best().unwrap();
-        let mut result = SearchResult::from_history(&history);
+        let mut result = SearchResult::from_ledger(ledger);
         result.best_config = cfg;
         result.best_value = val;
         result
@@ -149,22 +138,17 @@ impl Optimizer for RisingBandits {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dataset::objective::{LookupObjective, MeasureMode};
+    use crate::dataset::objective::{EvalLedger, LookupObjective, MeasureMode};
     use crate::dataset::{OfflineDataset, Target};
     use crate::surrogate::NativeBackend;
 
     #[test]
     fn slope_and_bounds() {
+        let d = crate::domain::Domain::paper();
+        let backend = NativeBackend;
+        let ctx = SearchContext { domain: &d, target: Target::Cost, backend: &backend };
         let mk = |curve: Vec<f64>| Arm {
-            state: BoState::new(
-                &SearchContext {
-                    domain: &crate::domain::Domain::paper(),
-                    target: Target::Cost,
-                    backend: &NativeBackend,
-                },
-                crate::domain::Domain::paper().provider_grid(0),
-                BoPreset::cherrypick(),
-            ),
+            state: BoState::new(&ctx, d.provider_grid(0), BoPreset::cherrypick()),
             curve,
             active: true,
         };
@@ -183,9 +167,10 @@ mod tests {
         let ds = OfflineDataset::generate(21, 3);
         let backend = NativeBackend;
         let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
-        let mut obj = LookupObjective::new(&ds, 17, Target::Cost, MeasureMode::SingleDraw, 1);
-        let r = RisingBandits::default().run(&ctx, &mut obj, 22, &mut Rng::new(2));
-        assert!(obj.evals() <= 22);
+        let mut src = LookupObjective::new(&ds, 17, Target::Cost, MeasureMode::SingleDraw, 1);
+        let mut ledger = EvalLedger::new(&mut src, 22);
+        let r = RisingBandits::default().run(&ctx, &mut ledger, &mut Rng::new(2));
+        assert!(ledger.evals() <= 22);
         let _ = ds.domain.config_id(&r.best_config);
     }
 
@@ -196,11 +181,12 @@ mod tests {
         let ds = OfflineDataset::generate(22, 3);
         let backend = NativeBackend;
         let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
-        let mut obj = LookupObjective::new(&ds, 5, Target::Cost, MeasureMode::SingleDraw, 3);
-        let mut rec = crate::optimizers::HistoryRecorder::new(&mut obj);
-        RisingBandits::default().run(&ctx, &mut rec, 66, &mut Rng::new(4));
+        let mut src = LookupObjective::new(&ds, 5, Target::Cost, MeasureMode::SingleDraw, 3);
+        let mut ledger = EvalLedger::new(&mut src, 66);
+        RisingBandits::default().run(&ctx, &mut ledger, &mut Rng::new(4));
         // Last 9 evaluations: how many distinct providers still pulled?
-        let tail = &rec.history[rec.history.len() - 9..];
+        let h = ledger.history();
+        let tail = &h[h.len() - 9..];
         let mut provs: Vec<usize> = tail.iter().map(|(c, _)| c.provider).collect();
         provs.sort_unstable();
         provs.dedup();

@@ -14,8 +14,8 @@
 //!   the acquisition argmax (the advantage over HyperOpt the paper notes).
 
 use super::{Optimizer, SearchContext, SearchResult};
-use crate::dataset::objective::Objective;
-use crate::domain::{encode, Config};
+use crate::dataset::objective::EvalLedger;
+use crate::domain::encode;
 use crate::surrogate::rf::{RandomForest, RfParams};
 use crate::surrogate::{Acquisition, Surrogate};
 use crate::util::rng::Rng;
@@ -38,28 +38,23 @@ impl Optimizer for SmacLite {
         "smac".into()
     }
 
-    fn run(
-        &self,
-        ctx: &SearchContext,
-        obj: &mut dyn Objective,
-        budget: usize,
-        rng: &mut Rng,
-    ) -> SearchResult {
+    fn run(&self, ctx: &SearchContext, ledger: &mut EvalLedger, rng: &mut Rng) -> SearchResult {
         let cands = ctx.domain.full_grid();
         let enc: Vec<Vec<f64>> = cands.iter().map(|c| encode(ctx.domain, c)).collect();
         let mut evaluated = vec![false; cands.len()];
         let mut obs_x: Vec<Vec<f64>> = Vec::new();
         let mut ys: Vec<f64> = Vec::new();
-        let mut history: Vec<(Config, f64)> = Vec::with_capacity(budget);
         let mut rf_seed = 0u64;
 
-        for it in 0..budget {
+        let mut it = 0;
+        while !ledger.exhausted() {
             let unseen: Vec<usize> = (0..cands.len()).filter(|&i| !evaluated[i]).collect();
             let i = if unseen.is_empty() {
                 // Grid exhausted (budget == domain size): random re-draw.
                 rng.usize_below(cands.len())
             } else if obs_x.len() < self.n_init
-                || (self.random_interleave > 0 && it % self.random_interleave == self.random_interleave - 1)
+                || (self.random_interleave > 0
+                    && it % self.random_interleave == self.random_interleave - 1)
             {
                 *rng.choice(&unseen)
             } else {
@@ -75,20 +70,20 @@ impl Optimizer for SmacLite {
                     .argmax(&pred, best_y, &evaluated)
                     .unwrap_or_else(|| *rng.choice(&unseen))
             };
-            let v = obj.eval(&cands[i]);
+            let Some(v) = ledger.eval(&cands[i]) else { break };
             evaluated[i] = true;
             obs_x.push(enc[i].clone());
             ys.push(v);
-            history.push((cands[i].clone(), v));
+            it += 1;
         }
-        SearchResult::from_history(&history)
+        SearchResult::from_ledger(ledger)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dataset::objective::{LookupObjective, MeasureMode};
+    use crate::dataset::objective::{EvalLedger, LookupObjective, MeasureMode};
     use crate::dataset::{OfflineDataset, Target};
     use crate::surrogate::NativeBackend;
 
@@ -97,10 +92,11 @@ mod tests {
         let ds = OfflineDataset::generate(8, 3);
         let backend = NativeBackend;
         let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
-        let mut obj = LookupObjective::new(&ds, 6, Target::Cost, MeasureMode::SingleDraw, 1);
-        let mut rec = crate::optimizers::HistoryRecorder::new(&mut obj);
-        SmacLite::default().run(&ctx, &mut rec, 44, &mut Rng::new(2));
-        let mut ids: Vec<usize> = rec.history.iter().map(|(c, _)| ds.domain.config_id(c)).collect();
+        let mut src = LookupObjective::new(&ds, 6, Target::Cost, MeasureMode::SingleDraw, 1);
+        let mut ledger = EvalLedger::new(&mut src, 44);
+        SmacLite::default().run(&ctx, &mut ledger, &mut Rng::new(2));
+        let mut ids: Vec<usize> =
+            ledger.history().iter().map(|(c, _)| ds.domain.config_id(c)).collect();
         ids.sort_unstable();
         ids.dedup();
         assert_eq!(ids.len(), 44, "SMAC-lite repeated a configuration");
@@ -112,8 +108,9 @@ mod tests {
         let backend = NativeBackend;
         let ctx = SearchContext { domain: &ds.domain, target: Target::Time, backend: &backend };
         let w = 20;
-        let mut obj = LookupObjective::new(&ds, w, Target::Time, MeasureMode::Mean, 5);
-        let r = SmacLite::default().run(&ctx, &mut obj, 33, &mut Rng::new(6));
+        let mut src = LookupObjective::new(&ds, w, Target::Time, MeasureMode::Mean, 5);
+        let mut ledger = EvalLedger::new(&mut src, 33);
+        let r = SmacLite::default().run(&ctx, &mut ledger, &mut Rng::new(6));
         let (_, tmin) = ds.true_min(w, Target::Time);
         let mean = ds.random_strategy_value(w, Target::Time);
         // Well into the best quartile of the gap between optimum and mean.
@@ -125,9 +122,10 @@ mod tests {
         let ds = OfflineDataset::generate(10, 3);
         let backend = NativeBackend;
         let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
-        let mut obj = LookupObjective::new(&ds, 2, Target::Cost, MeasureMode::SingleDraw, 7);
+        let mut src = LookupObjective::new(&ds, 2, Target::Cost, MeasureMode::SingleDraw, 7);
+        let mut ledger = EvalLedger::new(&mut src, 20);
         let opt = SmacLite { random_interleave: 0, ..Default::default() };
-        let r = opt.run(&ctx, &mut obj, 20, &mut Rng::new(8));
+        let r = opt.run(&ctx, &mut ledger, &mut Rng::new(8));
         assert_eq!(r.evals_used, 20);
     }
 }

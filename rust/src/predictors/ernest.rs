@@ -14,8 +14,8 @@
 //! |grid| evaluations are counted as online expense.
 
 use super::PredictionOutcome;
-use crate::dataset::objective::{LookupObjective, Objective};
-use crate::domain::Config;
+use crate::dataset::objective::EvalLedger;
+use crate::domain::{Config, Domain};
 use crate::linalg::{lstsq_ridge, Matrix};
 
 fn features(n: f64) -> Vec<f64> {
@@ -37,15 +37,17 @@ pub struct LinearPredictor;
 
 impl LinearPredictor {
     /// Run the predictor for one task: evaluates the full grid online
-    /// (through `obj`, so the expense is accounted), then recommends the
-    /// configuration with the lowest leave-one-out prediction.
-    pub fn run(&self, obj: &mut LookupObjective) -> PredictionOutcome {
+    /// (through the ledger, so the expense is accounted), then recommends
+    /// the configuration with the lowest leave-one-out prediction. The
+    /// caller provisions the ledger with at least `domain.size()` budget
+    /// (the method has no budget axis — its online cost *is* the grid);
+    /// an under-sized ledger panics via `must_eval`.
+    pub fn run(&self, domain: &Domain, ledger: &mut EvalLedger) -> PredictionOutcome {
         // Group grid configs by (provider, machine type).
-        let domain = obj_domain(obj);
         let grid = domain.full_grid();
         let mut measured: Vec<f64> = Vec::with_capacity(grid.len());
         for cfg in &grid {
-            measured.push(obj.eval(cfg));
+            measured.push(ledger.must_eval(cfg));
         }
 
         let mut best: Option<(usize, f64)> = None;
@@ -67,10 +69,6 @@ impl LinearPredictor {
         let (idx, _) = best.expect("non-empty grid");
         PredictionOutcome { chosen: grid[idx].clone(), online_evals: grid.len() }
     }
-}
-
-fn obj_domain<'a>(obj: &'a LookupObjective) -> &'a crate::domain::Domain {
-    obj.domain()
 }
 
 /// Convenience for tests: recommend using ground-truth means directly.
@@ -101,7 +99,7 @@ pub fn recommend_from_means(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dataset::objective::MeasureMode;
+    use crate::dataset::objective::{LookupObjective, MeasureMode};
     use crate::dataset::{OfflineDataset, Target};
 
     #[test]
@@ -121,14 +119,16 @@ mod tests {
     #[test]
     fn predictor_runs_and_spends_grid_evals() {
         let ds = OfflineDataset::generate(17, 3);
-        let mut obj = LookupObjective::new(&ds, 4, Target::Time, MeasureMode::Mean, 1);
-        let out = LinearPredictor.run(&mut obj);
+        let mut src = LookupObjective::new(&ds, 4, Target::Time, MeasureMode::Mean, 1);
+        let mut ledger = EvalLedger::new(&mut src, ds.domain.size());
+        let out = LinearPredictor.run(&ds.domain, &mut ledger);
         assert_eq!(out.online_evals, 88);
-        assert_eq!(obj.evals(), 88);
+        assert_eq!(ledger.evals(), 88);
+        drop(ledger);
         let _ = ds.domain.config_id(&out.chosen);
         // With full information the recommendation should be decent:
         // better than the random-strategy mean.
-        let rec_val = obj.ground_truth(&out.chosen);
+        let rec_val = src.ground_truth(&out.chosen);
         assert!(rec_val < ds.random_strategy_value(4, Target::Time));
     }
 }

@@ -14,7 +14,7 @@
 //! counted as search expense) and recommend the argmin prediction.
 
 use super::PredictionOutcome;
-use crate::dataset::objective::{LookupObjective, Objective};
+use crate::dataset::objective::EvalLedger;
 use crate::dataset::{OfflineDataset, Target};
 use crate::domain::{encode, Config};
 use crate::surrogate::rf::{RandomForest, RfParams};
@@ -40,7 +40,7 @@ impl ParisPredictor {
         ds: &OfflineDataset,
         workload: usize,
         target: Target,
-        obj: &mut LookupObjective,
+        ledger: &mut EvalLedger,
     ) -> PredictionOutcome {
         let domain = &ds.domain;
         let mut best: Option<(Config, f64)> = None;
@@ -51,12 +51,12 @@ impl ParisPredictor {
             let refs = reference_indices(grid.len());
 
             // Online fingerprint of the target workload (2 evals, logged
-            // through the objective so the expense is accounted).
+            // through the ledger so the expense is accounted).
             let fp: Vec<f64> = refs
                 .iter()
                 .map(|&ri| {
                     online_evals += 1;
-                    obj.eval(&grid[ri]).max(1e-9).ln()
+                    ledger.must_eval(&grid[ri]).max(1e-9).ln()
                 })
                 .collect();
 
@@ -107,7 +107,7 @@ impl ParisPredictor {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dataset::objective::MeasureMode;
+    use crate::dataset::objective::{LookupObjective, MeasureMode};
 
     #[test]
     fn reference_indices_distinct() {
@@ -120,11 +120,13 @@ mod tests {
     fn runs_with_six_online_evals_and_recommends_sanely() {
         let ds = OfflineDataset::generate(19, 3);
         let w = 10;
-        let mut obj = LookupObjective::new(&ds, w, Target::Cost, MeasureMode::Mean, 2);
-        let out = ParisPredictor::default().run(&ds, w, Target::Cost, &mut obj);
+        let mut src = LookupObjective::new(&ds, w, Target::Cost, MeasureMode::Mean, 2);
+        let mut ledger = EvalLedger::new(&mut src, 6);
+        let out = ParisPredictor::default().run(&ds, w, Target::Cost, &mut ledger);
         assert_eq!(out.online_evals, 6);
-        assert_eq!(obj.evals(), 6);
-        let rec = obj.ground_truth(&out.chosen);
+        assert_eq!(ledger.evals(), 6);
+        drop(ledger);
+        let rec = src.ground_truth(&out.chosen);
         // Cross-workload transfer + fingerprint should beat random choice.
         assert!(rec < ds.random_strategy_value(w, Target::Cost), "rec {rec}");
     }

@@ -1,14 +1,20 @@
 //! Artifact loading, buffer marshalling and the PJRT-backed surrogate
 //! backend.
+//!
+//! The manifest parser and the [`ArtifactBackend`] type are always
+//! compiled; the actual PJRT execution path needs the `xla` crate and
+//! lives behind the `pjrt` cargo feature (see README.md §Backends). The
+//! default build ships a stub whose `load` fails cleanly, so every caller
+//! falls back to [`NativeBackend`] exactly as it would on a machine
+//! without compiled artifacts.
 
-use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
-use std::sync::Mutex;
 
-use crate::surrogate::gp::LS_GRID;
-use crate::surrogate::rbf::RbfPrediction;
-use crate::surrogate::{standardize, Backend, NativeBackend, Prediction};
 use crate::util::json;
+
+/// Errors from the runtime layer, as plain display strings (the tree
+/// builds offline with zero external crates, so no error-helper deps).
+pub type RuntimeResult<T> = Result<T, String>;
 
 /// Shape contract parsed from artifacts/manifest.json (written by
 /// python/compile/aot.py).
@@ -23,18 +29,18 @@ pub struct Manifest {
 }
 
 impl Manifest {
-    pub fn parse(text: &str) -> Result<Manifest> {
-        let v = json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+    pub fn parse(text: &str) -> RuntimeResult<Manifest> {
+        let v = json::parse(text).map_err(|e| format!("manifest: {e}"))?;
         let num = |k: &str| {
-            v.get(k).and_then(|x| x.as_usize()).ok_or_else(|| anyhow!("manifest: missing {k}"))
+            v.get(k).and_then(|x| x.as_usize()).ok_or_else(|| format!("manifest: missing {k}"))
         };
-        let graphs = v.get("graphs").ok_or_else(|| anyhow!("manifest: missing graphs"))?;
-        let file_of = |g: &str| -> Result<String> {
+        let graphs = v.get("graphs").ok_or("manifest: missing graphs")?;
+        let file_of = |g: &str| -> RuntimeResult<String> {
             Ok(graphs
                 .get(g)
                 .and_then(|x| x.get("file"))
                 .and_then(|x| x.as_str())
-                .ok_or_else(|| anyhow!("manifest: missing graphs.{g}.file"))?
+                .ok_or_else(|| format!("manifest: missing graphs.{g}.file"))?
                 .to_string())
         };
         Ok(Manifest {
@@ -46,257 +52,362 @@ impl Manifest {
             rbf_file: file_of("rbf_cubic")?,
         })
     }
-}
 
-/// GP hyperparameters mirroring the native surrogate defaults.
-const NOISE: f32 = 1e-2;
-const SIGNAL_VAR: f32 = 1.0;
-/// kappa only affects the in-graph neg_lcb output (unused: acquisitions
-/// are recomputed Rust-side from mean/std, identically for both backends).
-const KAPPA: f32 = 2.0;
-
-struct Executables {
-    gp: xla::PjRtLoadedExecutable,
-    rbf: xla::PjRtLoadedExecutable,
-}
-
-// SAFETY: `PjRtLoadedExecutable` is !Send only because it holds an
-// `Rc<PjRtClientInternal>` (non-atomic refcount) and raw PJRT pointers.
-// We never clone those Rcs and never hand out references: every use —
-// including the eventual drop — happens either on the constructing thread
-// or under the `Mutex` in `ArtifactBackend`, so the refcount is never
-// mutated concurrently. PJRT CPU execution itself is thread-safe.
-unsafe impl Send for Executables {}
-
-/// PJRT-backed surrogate backend.
-///
-/// `Sync` via a *pool* of independently-locked (client, executables)
-/// slots: the coordinator runs trials on many threads, and PJRT wrapper
-/// types are not `Sync`, so each slot owns its own PJRT client and
-/// compiled executables and is only ever touched under its mutex.
-/// Submissions pick a free slot (try_lock scan) and fall back to blocking
-/// on their round-robin slot. Pool size 1 reproduces the fully-serialized
-/// behaviour (the §Perf before-case).
-pub struct ArtifactBackend {
-    pub manifest: Manifest,
-    pool: Vec<Mutex<Executables>>,
-    next: std::sync::atomic::AtomicUsize,
-    fallback: NativeBackend,
-}
-
-fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
-    Ok(xla::Literal::vec1(data).reshape(dims)?)
-}
-
-impl ArtifactBackend {
-    /// Load + compile both artifacts with a default pool size
-    /// (min(cores, 8)).
-    pub fn load(dir: &str) -> Result<ArtifactBackend> {
-        Self::load_with_pool(dir, crate::util::threadpool::default_workers().min(8))
-    }
-
-    /// Load + compile both artifacts from a directory, with `pool` slots
-    /// for concurrent execution.
-    pub fn load_with_pool(dir: &str, pool: usize) -> Result<ArtifactBackend> {
+    /// Read and validate a manifest from an artifact directory.
+    pub fn load(dir: &str) -> RuntimeResult<Manifest> {
         let manifest_path = Path::new(dir).join("manifest.json");
         let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {}", manifest_path.display()))?;
-        let manifest = Manifest::parse(&text)?;
+            .map_err(|e| format!("reading {}: {e}", manifest_path.display()))?;
+        let manifest = Self::parse(&text)?;
         if manifest.d != crate::domain::ENCODED_DIM {
-            bail!(
+            return Err(format!(
                 "artifact feature width {} != domain encoding {} — re-run `make artifacts`",
                 manifest.d,
                 crate::domain::ENCODED_DIM
-            );
+            ));
         }
-        let gp_text = std::fs::read_to_string(Path::new(dir).join(&manifest.gp_file))?;
-        let rbf_text = std::fs::read_to_string(Path::new(dir).join(&manifest.rbf_file))?;
-        let slots = (0..pool.max(1))
-            .map(|_| {
-                // One client per slot: executables hold Rc<client>, and
-                // slots are locked independently, so sharing one client
-                // would race its (non-atomic) refcount.
-                let client = xla::PjRtClient::cpu()?;
-                let compile = |text: &str| -> Result<xla::PjRtLoadedExecutable> {
-                    let proto = xla::HloModuleProto::parse_and_return_unverified_module(text.as_bytes())?;
-                    let comp = xla::XlaComputation::from_proto(&proto);
-                    Ok(client.compile(&comp)?)
-                };
-                Ok(Mutex::new(Executables { gp: compile(&gp_text)?, rbf: compile(&rbf_text)? }))
-            })
-            .collect::<Result<Vec<_>>>()?;
-        Ok(ArtifactBackend {
-            manifest,
-            pool: slots,
-            next: std::sync::atomic::AtomicUsize::new(0),
-            fallback: NativeBackend,
-        })
-    }
-
-    pub fn pool_size(&self) -> usize {
-        self.pool.len()
-    }
-
-    /// Acquire a slot: first free one by try_lock scan, else block on the
-    /// round-robin slot.
-    fn slot(&self) -> std::sync::MutexGuard<'_, Executables> {
-        for m in &self.pool {
-            if let Ok(g) = m.try_lock() {
-                return g;
-            }
-        }
-        let i = self.next.fetch_add(1, std::sync::atomic::Ordering::Relaxed) % self.pool.len();
-        self.pool[i].lock().unwrap()
-    }
-
-    /// Pad observations/candidates into the fixed AOT buffers.
-    fn pack(
-        &self,
-        x: &[Vec<f64>],
-        y: &[f64],
-        cands: &[Vec<f64>],
-    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, usize, usize)> {
-        let (n_max, m_max, d) = (self.manifest.n_max, self.manifest.m_max, self.manifest.d);
-        let n = x.len();
-        let m = cands.len();
-        if n > n_max || m > m_max {
-            bail!("{n} observations / {m} candidates exceed AOT shapes");
-        }
-        let mut xb = vec![0f32; n_max * d];
-        for (i, row) in x.iter().enumerate() {
-            if row.len() != d {
-                bail!("encoded width {} != artifact d {d}", row.len());
-            }
-            for (j, &v) in row.iter().enumerate() {
-                xb[i * d + j] = v as f32;
-            }
-        }
-        let mut yb = vec![0f32; n_max];
-        for (i, &v) in y.iter().enumerate() {
-            yb[i] = v as f32;
-        }
-        let mut mask = vec![0f32; n_max];
-        mask[..n].fill(1.0);
-        let mut cb = vec![0f32; m_max * d];
-        for (i, row) in cands.iter().enumerate() {
-            for (j, &v) in row.iter().enumerate() {
-                cb[i * d + j] = v as f32;
-            }
-        }
-        Ok((xb, yb, mask, cb, n, m))
-    }
-
-    /// One GP artifact execution. Returns (mean, std, lml) truncated to m.
-    fn exec_gp(
-        &self,
-        xb: &[f32],
-        yb: &[f32],
-        mask: &[f32],
-        cb: &[f32],
-        hyp: [f32; 5],
-        m: usize,
-    ) -> Result<(Vec<f64>, Vec<f64>, f64)> {
-        let (n_max, m_max, d) = (
-            self.manifest.n_max as i64,
-            self.manifest.m_max as i64,
-            self.manifest.d as i64,
-        );
-        let args = [
-            literal_f32(xb, &[n_max, d])?,
-            literal_f32(yb, &[n_max])?,
-            literal_f32(mask, &[n_max])?,
-            literal_f32(cb, &[m_max, d])?,
-            literal_f32(&hyp, &[5])?,
-        ];
-        let exes = self.slot();
-        let result = exes.gp.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        drop(exes);
-        let parts = result.to_tuple()?;
-        if parts.len() != 6 {
-            bail!("gp artifact returned {} outputs, expected 6", parts.len());
-        }
-        let mean: Vec<f32> = parts[0].to_vec()?;
-        let std: Vec<f32> = parts[1].to_vec()?;
-        let lml: Vec<f32> = parts[5].to_vec()?;
-        Ok((
-            mean[..m].iter().map(|&v| v as f64).collect(),
-            std[..m].iter().map(|&v| v as f64).collect(),
-            lml[0] as f64,
-        ))
+        Ok(manifest)
     }
 }
 
-impl Backend for ArtifactBackend {
-    fn gp_fit_predict(&self, x: &[Vec<f64>], y: &[f64], cands: &[Vec<f64>]) -> Prediction {
-        if x.len() > self.manifest.n_max || cands.len() > self.manifest.m_max {
-            return self.fallback.gp_fit_predict(x, y, cands);
-        }
-        // Same convention as the native GP: standardize y, grid-search the
-        // lengthscale by in-graph log marginal likelihood.
-        let (z, ym, ys) = standardize(y);
-        let (xb, zb, mask, cb, _n, m) = match self.pack(x, &z, cands) {
-            Ok(t) => t,
-            Err(_) => return self.fallback.gp_fit_predict(x, y, cands),
-        };
-        let best_z = z.iter().copied().fold(f64::INFINITY, f64::min) as f32;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::ArtifactBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::ArtifactBackend;
 
-        let mut best: Option<(f64, Vec<f64>, Vec<f64>)> = None;
-        for &ls in &LS_GRID {
-            let hyp = [ls as f32, SIGNAL_VAR, NOISE, best_z, KAPPA];
-            match self.exec_gp(&xb, &zb, &mask, &cb, hyp, m) {
-                Ok((mean, std, lml)) => {
-                    if best.as_ref().map(|(b, _, _)| lml > *b).unwrap_or(true) {
-                        best = Some((lml, mean, std));
-                    }
-                }
-                Err(e) => panic!("PJRT gp execution failed: {e}"),
-            }
+/// Stub compiled when the `pjrt` feature is off: loading always fails
+/// with an actionable message, so callers take their native fallback.
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::{Manifest, RuntimeResult};
+    use crate::surrogate::rbf::RbfPrediction;
+    use crate::surrogate::{Backend, NativeBackend, Prediction};
+
+    /// PJRT-backed surrogate backend (stub: built without `pjrt`).
+    pub struct ArtifactBackend {
+        pub manifest: Manifest,
+        fallback: NativeBackend,
+    }
+
+    impl ArtifactBackend {
+        pub fn load(dir: &str) -> RuntimeResult<ArtifactBackend> {
+            Self::load_with_pool(dir, 1)
         }
-        let (_, mean, std) = best.expect("lengthscale grid non-empty");
-        Prediction {
-            mean: mean.iter().map(|v| v * ys + ym).collect(),
-            std: std.iter().map(|v| v * ys).collect(),
+
+        pub fn load_with_pool(dir: &str, _pool: usize) -> RuntimeResult<ArtifactBackend> {
+            // Validate the manifest anyway so error messages stay honest,
+            // then refuse: there is no executor in this build.
+            let _ = Manifest::load(dir)?;
+            Err("built without the `pjrt` feature — PJRT artifact execution unavailable \
+                 (cargo build --features pjrt with the xla crate vendored)"
+                .to_string())
+        }
+
+        pub fn pool_size(&self) -> usize {
+            0
         }
     }
 
-    fn rbf_fit_predict(
-        &self,
-        x: &[Vec<f64>],
-        y: &[f64],
-        ridge: f64,
-        cands: &[Vec<f64>],
-    ) -> RbfPrediction {
-        if x.len() > self.manifest.n_max || cands.len() > self.manifest.m_max {
-            return self.fallback.rbf_fit_predict(x, y, ridge, cands);
+    impl Backend for ArtifactBackend {
+        fn gp_fit_predict(&self, x: &[Vec<f64>], y: &[f64], cands: &[Vec<f64>]) -> Prediction {
+            self.fallback.gp_fit_predict(x, y, cands)
         }
-        let (xb, yb, mask, cb, _n, m) = match self.pack(x, y, cands) {
-            Ok(t) => t,
-            Err(_) => return self.fallback.rbf_fit_predict(x, y, ridge, cands),
-        };
-        let (n_max, m_max, d) = (
-            self.manifest.n_max as i64,
-            self.manifest.m_max as i64,
-            self.manifest.d as i64,
-        );
-        let run = || -> Result<RbfPrediction> {
+
+        fn rbf_fit_predict(
+            &self,
+            x: &[Vec<f64>],
+            y: &[f64],
+            ridge: f64,
+            cands: &[Vec<f64>],
+        ) -> RbfPrediction {
+            self.fallback.rbf_fit_predict(x, y, ridge, cands)
+        }
+        // gp_session: default full-refit replay (no incremental PJRT path).
+    }
+}
+
+/// The real PJRT execution path. Requires the `xla` crate; kept feature-
+/// gated because this tree must build with zero registry access.
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use std::path::Path;
+    use std::sync::Mutex;
+
+    use super::{Manifest, RuntimeResult};
+    use crate::surrogate::gp::LS_GRID;
+    use crate::surrogate::rbf::RbfPrediction;
+    use crate::surrogate::{standardize, Backend, NativeBackend, Prediction};
+
+    /// GP hyperparameters mirroring the native surrogate defaults.
+    const NOISE: f32 = 1e-2;
+    const SIGNAL_VAR: f32 = 1.0;
+    /// kappa only affects the in-graph neg_lcb output (unused:
+    /// acquisitions are recomputed Rust-side from mean/std, identically
+    /// for both backends).
+    const KAPPA: f32 = 2.0;
+
+    struct Executables {
+        gp: xla::PjRtLoadedExecutable,
+        rbf: xla::PjRtLoadedExecutable,
+    }
+
+    // SAFETY: `PjRtLoadedExecutable` is !Send only because it holds an
+    // `Rc<PjRtClientInternal>` (non-atomic refcount) and raw PJRT
+    // pointers. We never clone those Rcs and never hand out references:
+    // every use — including the eventual drop — happens either on the
+    // constructing thread or under the `Mutex` in `ArtifactBackend`, so
+    // the refcount is never mutated concurrently. PJRT CPU execution
+    // itself is thread-safe.
+    unsafe impl Send for Executables {}
+
+    /// PJRT-backed surrogate backend.
+    ///
+    /// `Sync` via a *pool* of independently-locked (client, executables)
+    /// slots: the coordinator runs trials on many threads, and PJRT
+    /// wrapper types are not `Sync`, so each slot owns its own PJRT
+    /// client and compiled executables and is only ever touched under its
+    /// mutex. Submissions pick a free slot (try_lock scan) and fall back
+    /// to blocking on their round-robin slot. Pool size 1 reproduces the
+    /// fully-serialized behaviour (the §Perf before-case).
+    ///
+    /// `gp_session` stays on the default full-refit replay: the AOT graph
+    /// is a fixed-shape one-shot fit, so there is no incremental
+    /// factorization to reuse — the parity tests pin replay == one-shot.
+    pub struct ArtifactBackend {
+        pub manifest: Manifest,
+        pool: Vec<Mutex<Executables>>,
+        next: std::sync::atomic::AtomicUsize,
+        fallback: NativeBackend,
+    }
+
+    fn literal_f32(data: &[f32], dims: &[i64]) -> RuntimeResult<xla::Literal> {
+        xla::Literal::vec1(data).reshape(dims).map_err(|e| e.to_string())
+    }
+
+    impl ArtifactBackend {
+        /// Load + compile both artifacts with a default pool size
+        /// (min(cores, 8)).
+        pub fn load(dir: &str) -> RuntimeResult<ArtifactBackend> {
+            Self::load_with_pool(dir, crate::util::threadpool::default_workers().min(8))
+        }
+
+        /// Load + compile both artifacts from a directory, with `pool`
+        /// slots for concurrent execution.
+        pub fn load_with_pool(dir: &str, pool: usize) -> RuntimeResult<ArtifactBackend> {
+            let manifest = Manifest::load(dir)?;
+            let read = |f: &str| {
+                std::fs::read_to_string(Path::new(dir).join(f)).map_err(|e| e.to_string())
+            };
+            let gp_text = read(&manifest.gp_file)?;
+            let rbf_text = read(&manifest.rbf_file)?;
+            let slots = (0..pool.max(1))
+                .map(|_| {
+                    // One client per slot: executables hold Rc<client>,
+                    // and slots are locked independently, so sharing one
+                    // client would race its (non-atomic) refcount.
+                    let client = xla::PjRtClient::cpu().map_err(|e| e.to_string())?;
+                    let compile = |text: &str| -> RuntimeResult<xla::PjRtLoadedExecutable> {
+                        let proto =
+                            xla::HloModuleProto::parse_and_return_unverified_module(
+                                text.as_bytes(),
+                            )
+                            .map_err(|e| e.to_string())?;
+                        let comp = xla::XlaComputation::from_proto(&proto);
+                        client.compile(&comp).map_err(|e| e.to_string())
+                    };
+                    Ok(Mutex::new(Executables {
+                        gp: compile(&gp_text)?,
+                        rbf: compile(&rbf_text)?,
+                    }))
+                })
+                .collect::<RuntimeResult<Vec<_>>>()?;
+            Ok(ArtifactBackend {
+                manifest,
+                pool: slots,
+                next: std::sync::atomic::AtomicUsize::new(0),
+                fallback: NativeBackend,
+            })
+        }
+
+        pub fn pool_size(&self) -> usize {
+            self.pool.len()
+        }
+
+        /// Acquire a slot: first free one by try_lock scan, else block on
+        /// the round-robin slot.
+        fn slot(&self) -> std::sync::MutexGuard<'_, Executables> {
+            for m in &self.pool {
+                if let Ok(g) = m.try_lock() {
+                    return g;
+                }
+            }
+            let i =
+                self.next.fetch_add(1, std::sync::atomic::Ordering::Relaxed) % self.pool.len();
+            self.pool[i].lock().unwrap()
+        }
+
+        /// Pad observations/candidates into the fixed AOT buffers.
+        #[allow(clippy::type_complexity)]
+        fn pack(
+            &self,
+            x: &[Vec<f64>],
+            y: &[f64],
+            cands: &[Vec<f64>],
+        ) -> RuntimeResult<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, usize, usize)> {
+            let (n_max, m_max, d) = (self.manifest.n_max, self.manifest.m_max, self.manifest.d);
+            let n = x.len();
+            let m = cands.len();
+            if n > n_max || m > m_max {
+                return Err(format!("{n} observations / {m} candidates exceed AOT shapes"));
+            }
+            let mut xb = vec![0f32; n_max * d];
+            for (i, row) in x.iter().enumerate() {
+                if row.len() != d {
+                    return Err(format!("encoded width {} != artifact d {d}", row.len()));
+                }
+                for (j, &v) in row.iter().enumerate() {
+                    xb[i * d + j] = v as f32;
+                }
+            }
+            let mut yb = vec![0f32; n_max];
+            for (i, &v) in y.iter().enumerate() {
+                yb[i] = v as f32;
+            }
+            let mut mask = vec![0f32; n_max];
+            mask[..n].fill(1.0);
+            let mut cb = vec![0f32; m_max * d];
+            for (i, row) in cands.iter().enumerate() {
+                for (j, &v) in row.iter().enumerate() {
+                    cb[i * d + j] = v as f32;
+                }
+            }
+            Ok((xb, yb, mask, cb, n, m))
+        }
+
+        /// One GP artifact execution. Returns (mean, std, lml) truncated
+        /// to m.
+        fn exec_gp(
+            &self,
+            xb: &[f32],
+            yb: &[f32],
+            mask: &[f32],
+            cb: &[f32],
+            hyp: [f32; 5],
+            m: usize,
+        ) -> RuntimeResult<(Vec<f64>, Vec<f64>, f64)> {
+            let (n_max, m_max, d) = (
+                self.manifest.n_max as i64,
+                self.manifest.m_max as i64,
+                self.manifest.d as i64,
+            );
             let args = [
-                literal_f32(&xb, &[n_max, d])?,
-                literal_f32(&yb, &[n_max])?,
-                literal_f32(&mask, &[n_max])?,
-                literal_f32(&cb, &[m_max, d])?,
-                literal_f32(&[ridge as f32], &[1])?,
+                literal_f32(xb, &[n_max, d])?,
+                literal_f32(yb, &[n_max])?,
+                literal_f32(mask, &[n_max])?,
+                literal_f32(cb, &[m_max, d])?,
+                literal_f32(&hyp, &[5])?,
             ];
             let exes = self.slot();
-            let result = exes.rbf.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+            let result = exes
+                .gp
+                .execute::<xla::Literal>(&args)
+                .map_err(|e| e.to_string())?[0][0]
+                .to_literal_sync()
+                .map_err(|e| e.to_string())?;
             drop(exes);
-            let (pred_l, mind_l) = result.to_tuple2()?;
-            let pred: Vec<f32> = pred_l.to_vec()?;
-            let mind: Vec<f32> = mind_l.to_vec()?;
-            Ok(RbfPrediction {
-                pred: pred[..m].iter().map(|&v| v as f64).collect(),
-                mindist: mind[..m].iter().map(|&v| v as f64).collect(),
-            })
-        };
-        run().unwrap_or_else(|e| panic!("PJRT rbf execution failed: {e}"))
+            let parts = result.to_tuple().map_err(|e| e.to_string())?;
+            if parts.len() != 6 {
+                return Err(format!("gp artifact returned {} outputs, expected 6", parts.len()));
+            }
+            let mean: Vec<f32> = parts[0].to_vec().map_err(|e| e.to_string())?;
+            let std: Vec<f32> = parts[1].to_vec().map_err(|e| e.to_string())?;
+            let lml: Vec<f32> = parts[5].to_vec().map_err(|e| e.to_string())?;
+            Ok((
+                mean[..m].iter().map(|&v| v as f64).collect(),
+                std[..m].iter().map(|&v| v as f64).collect(),
+                lml[0] as f64,
+            ))
+        }
+    }
+
+    impl Backend for ArtifactBackend {
+        fn gp_fit_predict(&self, x: &[Vec<f64>], y: &[f64], cands: &[Vec<f64>]) -> Prediction {
+            if x.len() > self.manifest.n_max || cands.len() > self.manifest.m_max {
+                return self.fallback.gp_fit_predict(x, y, cands);
+            }
+            // Same convention as the native GP: standardize y, grid-search
+            // the lengthscale by in-graph log marginal likelihood.
+            let (z, ym, ys) = standardize(y);
+            let (xb, zb, mask, cb, _n, m) = match self.pack(x, &z, cands) {
+                Ok(t) => t,
+                Err(_) => return self.fallback.gp_fit_predict(x, y, cands),
+            };
+            let best_z = z.iter().copied().fold(f64::INFINITY, f64::min) as f32;
+
+            let mut best: Option<(f64, Vec<f64>, Vec<f64>)> = None;
+            for &ls in &LS_GRID {
+                let hyp = [ls as f32, SIGNAL_VAR, NOISE, best_z, KAPPA];
+                match self.exec_gp(&xb, &zb, &mask, &cb, hyp, m) {
+                    Ok((mean, std, lml)) => {
+                        if best.as_ref().map(|(b, _, _)| lml > *b).unwrap_or(true) {
+                            best = Some((lml, mean, std));
+                        }
+                    }
+                    Err(e) => panic!("PJRT gp execution failed: {e}"),
+                }
+            }
+            let (_, mean, std) = best.expect("lengthscale grid non-empty");
+            Prediction {
+                mean: mean.iter().map(|v| v * ys + ym).collect(),
+                std: std.iter().map(|v| v * ys).collect(),
+            }
+        }
+
+        fn rbf_fit_predict(
+            &self,
+            x: &[Vec<f64>],
+            y: &[f64],
+            ridge: f64,
+            cands: &[Vec<f64>],
+        ) -> RbfPrediction {
+            if x.len() > self.manifest.n_max || cands.len() > self.manifest.m_max {
+                return self.fallback.rbf_fit_predict(x, y, ridge, cands);
+            }
+            let (xb, yb, mask, cb, _n, m) = match self.pack(x, y, cands) {
+                Ok(t) => t,
+                Err(_) => return self.fallback.rbf_fit_predict(x, y, ridge, cands),
+            };
+            let (n_max, m_max, d) = (
+                self.manifest.n_max as i64,
+                self.manifest.m_max as i64,
+                self.manifest.d as i64,
+            );
+            let run = || -> RuntimeResult<RbfPrediction> {
+                let args = [
+                    literal_f32(&xb, &[n_max, d])?,
+                    literal_f32(&yb, &[n_max])?,
+                    literal_f32(&mask, &[n_max])?,
+                    literal_f32(&cb, &[m_max, d])?,
+                    literal_f32(&[ridge as f32], &[1])?,
+                ];
+                let exes = self.slot();
+                let result = exes
+                    .rbf
+                    .execute::<xla::Literal>(&args)
+                    .map_err(|e| e.to_string())?[0][0]
+                    .to_literal_sync()
+                    .map_err(|e| e.to_string())?;
+                drop(exes);
+                let (pred_l, mind_l) = result.to_tuple2().map_err(|e| e.to_string())?;
+                let pred: Vec<f32> = pred_l.to_vec().map_err(|e| e.to_string())?;
+                let mind: Vec<f32> = mind_l.to_vec().map_err(|e| e.to_string())?;
+                Ok(RbfPrediction {
+                    pred: pred[..m].iter().map(|&v| v as f64).collect(),
+                    mindist: mind[..m].iter().map(|&v| v as f64).collect(),
+                })
+            };
+            run().unwrap_or_else(|e| panic!("PJRT rbf execution failed: {e}"))
+        }
+        // gp_session: default full-refit replay through gp_fit_predict.
     }
 }

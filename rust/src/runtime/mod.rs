@@ -11,7 +11,13 @@
 //! Inputs are padded/masked to the fixed AOT shapes (see
 //! `python/compile/model.py`); observation sets larger than `n_max` fall
 //! back to the native backend (cannot happen with the paper's budgets,
-//! but the seam is safe).
+//! but the seam is safe). The artifact path keeps the default full-refit
+//! `gp_session` (the AOT graph is a fixed-shape one-shot fit); the
+//! incremental-Cholesky session belongs to the native backend.
+//!
+//! PJRT execution itself requires the `xla` crate and is compiled only
+//! with the `pjrt` cargo feature — the default offline build ships a
+//! stub whose `load` fails cleanly into the native fallback.
 
 pub mod artifacts;
 

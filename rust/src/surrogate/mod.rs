@@ -35,6 +35,54 @@ pub trait Backend: Sync {
         ridge: f64,
         cands: &[Vec<f64>],
     ) -> rbf::RbfPrediction;
+
+    /// Open a stateful GP session for one search run: observations arrive
+    /// one at a time and each `predict` conditions on everything so far.
+    /// The default replays a full fit through [`gp_fit_predict`] (the
+    /// reference semantics); `NativeBackend` overrides it with the O(n²)
+    /// incremental-Cholesky session ([`gp::IncrementalGp`]).
+    fn gp_session(&self) -> Box<dyn GpSession + '_> {
+        Box::new(ReplayGpSession { backend: self, x: Vec::new(), y: Vec::new() })
+    }
+}
+
+/// A stateful GP fit that grows one observation at a time. Semantically a
+/// session with n observations is interchangeable with a fresh
+/// [`Backend::gp_fit_predict`] on the same data (asserted to 1e-6 by the
+/// incremental/full parity tests) — only the fit cost differs.
+pub trait GpSession {
+    /// Record one (encoded configuration, observed value) pair.
+    fn observe(&mut self, x: Vec<f64>, y: f64);
+
+    /// Posterior mean/std over candidates given all observations so far.
+    fn predict(&mut self, cands: &[Vec<f64>]) -> Prediction;
+
+    /// Number of observations recorded.
+    fn n_obs(&self) -> usize;
+}
+
+/// Full-refit reference session: buffers observations and delegates every
+/// `predict` to the backend's one-shot fit. Used by backends without an
+/// incremental path (the PJRT artifact executes fixed-shape graphs).
+pub struct ReplayGpSession<'a, B: Backend + ?Sized> {
+    backend: &'a B,
+    x: Vec<Vec<f64>>,
+    y: Vec<f64>,
+}
+
+impl<B: Backend + ?Sized> GpSession for ReplayGpSession<'_, B> {
+    fn observe(&mut self, x: Vec<f64>, y: f64) {
+        self.x.push(x);
+        self.y.push(y);
+    }
+
+    fn predict(&mut self, cands: &[Vec<f64>]) -> Prediction {
+        self.backend.gp_fit_predict(&self.x, &self.y, cands)
+    }
+
+    fn n_obs(&self) -> usize {
+        self.y.len()
+    }
 }
 
 /// In-process reference backend.
@@ -60,7 +108,14 @@ impl Backend for NativeBackend {
             }
             r = if r == 0.0 { 1e-8 } else { r * 100.0 };
         }
-        panic!("RBF fit failed even with large ridge");
+        // Even the largest ridge failed (fully degenerate system, e.g.
+        // non-finite inputs): degrade to the constant interpolant rather
+        // than killing the whole search run.
+        rbf::constant_prediction(x, y, cands)
+    }
+
+    fn gp_session(&self) -> Box<dyn GpSession + '_> {
+        Box::new(gp::IncrementalGp::default())
     }
 }
 
@@ -195,6 +250,70 @@ mod tests {
         assert_eq!(a.argmax(&pred, 0.0, &[false, false, false]), Some(1));
         assert_eq!(a.argmax(&pred, 0.0, &[false, true, false]), Some(0));
         assert_eq!(a.argmax(&pred, 0.0, &[true, true, true]), None);
+    }
+
+    #[test]
+    fn rbf_backend_escalates_ridge_on_duplicate_observations() {
+        // Two identical points with conflicting targets make the saddle
+        // system singular at ridge 0; the backend must escalate the ridge
+        // and return a finite blend instead of failing.
+        let x = vec![vec![0.5, 0.5], vec![0.5, 0.5]];
+        let y = vec![1.0, 2.0];
+        let p = NativeBackend.rbf_fit_predict(&x, &y, 0.0, &[vec![0.5, 0.5]]);
+        assert!(p.pred[0].is_finite());
+        assert!((p.pred[0] - 1.5).abs() < 0.25, "blend {}", p.pred[0]);
+    }
+
+    #[test]
+    fn rbf_backend_degrades_gracefully_when_no_ridge_helps() {
+        // Non-finite coordinates poison every kernel entry: no ridge can
+        // fix the system, and the backend must fall back to the constant
+        // interpolant instead of panicking.
+        let x = vec![vec![f64::NAN, 0.5]; 3];
+        let y = vec![1.0, 2.0, 3.0];
+        let p = NativeBackend.rbf_fit_predict(&x, &y, 1e-6, &[vec![0.1, 0.1], vec![0.9, 0.9]]);
+        assert_eq!(p.pred, vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn default_gp_session_replays_full_fits() {
+        // A session fed observations one by one must agree exactly with a
+        // one-shot fit on the same data (it literally replays one).
+        struct ReplayOnly;
+        impl Backend for ReplayOnly {
+            fn gp_fit_predict(
+                &self,
+                x: &[Vec<f64>],
+                y: &[f64],
+                cands: &[Vec<f64>],
+            ) -> Prediction {
+                NativeBackend.gp_fit_predict(x, y, cands)
+            }
+            fn rbf_fit_predict(
+                &self,
+                x: &[Vec<f64>],
+                y: &[f64],
+                ridge: f64,
+                cands: &[Vec<f64>],
+            ) -> rbf::RbfPrediction {
+                NativeBackend.rbf_fit_predict(x, y, ridge, cands)
+            }
+        }
+        let backend = ReplayOnly;
+        let mut sess = backend.gp_session();
+        let x = vec![vec![0.1, 0.2], vec![0.8, 0.3], vec![0.4, 0.9]];
+        let y = vec![1.0, 2.0, 1.5];
+        for (xi, &yi) in x.iter().zip(&y) {
+            sess.observe(xi.clone(), yi);
+        }
+        assert_eq!(sess.n_obs(), 3);
+        let cands = vec![vec![0.5, 0.5], vec![0.0, 1.0]];
+        let ps = sess.predict(&cands);
+        let pf = backend.gp_fit_predict(&x, &y, &cands);
+        for i in 0..cands.len() {
+            assert_eq!(ps.mean[i], pf.mean[i]);
+            assert_eq!(ps.std[i], pf.std[i]);
+        }
     }
 
     #[test]

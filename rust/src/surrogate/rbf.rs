@@ -54,6 +54,20 @@ pub fn fit(x: &[Vec<f64>], y: &[f64], ridge: f64) -> Option<RbfFit> {
     Some(RbfFit { centers: x.to_vec(), coef: z[..n].to_vec(), tail: z[n] })
 }
 
+/// Last-resort degenerate model: a constant interpolant at the mean of
+/// the finite targets, with brute-force nearest-observation distances.
+/// Used by the backend when even the largest ridge cannot make the
+/// saddle system solvable (e.g. non-finite inputs).
+pub fn constant_prediction(x: &[Vec<f64>], y: &[f64], cands: &[Vec<f64>]) -> RbfPrediction {
+    let finite: Vec<f64> = y.iter().copied().filter(|v| v.is_finite()).collect();
+    let level = if finite.is_empty() { 0.0 } else { crate::util::stats::mean(&finite) };
+    let mindist = cands
+        .iter()
+        .map(|c| x.iter().map(|xi| dist(xi, c)).fold(f64::INFINITY, f64::min))
+        .collect();
+    RbfPrediction { pred: vec![level; cands.len()], mindist }
+}
+
 impl RbfFit {
     pub fn predict(&self, cands: &[Vec<f64>]) -> RbfPrediction {
         let mut pred = Vec::with_capacity(cands.len());
@@ -129,6 +143,15 @@ mod tests {
         let f = fit(&x, &y, 1e-3).unwrap();
         let p = f.predict(&[vec![0.5, 0.5]]);
         assert!((p.pred[0] - 1.5).abs() < 0.1);
+    }
+
+    #[test]
+    fn constant_prediction_uses_mean_and_distances() {
+        let x = vec![vec![0.0, 0.0], vec![1.0, 0.0]];
+        let y = vec![2.0, 4.0];
+        let p = constant_prediction(&x, &y, &[vec![0.0, 3.0]]);
+        assert_eq!(p.pred, vec![3.0]);
+        assert!((p.mindist[0] - 3.0).abs() < 1e-12);
     }
 
     #[test]

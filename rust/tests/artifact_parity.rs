@@ -5,7 +5,7 @@
 //! Requires `make artifacts` to have run (skipped with a loud message
 //! otherwise, so `cargo test` works in a fresh checkout).
 
-use multicloud::dataset::objective::{LookupObjective, MeasureMode, Objective};
+use multicloud::dataset::objective::{EvalLedger, LookupObjective, MeasureMode};
 use multicloud::dataset::{OfflineDataset, Target};
 use multicloud::domain::encode;
 use multicloud::optimizers::{by_name, SearchContext};
@@ -89,10 +89,11 @@ fn optimizers_run_end_to_end_on_artifact_backend() {
     for name in ["cherrypick-x1", "cb-rbfopt", "cb-cherrypick"] {
         let opt = by_name(name).unwrap();
         let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
-        let mut obj = LookupObjective::new(&ds, 9, Target::Cost, MeasureMode::SingleDraw, 11);
+        let mut src = LookupObjective::new(&ds, 9, Target::Cost, MeasureMode::SingleDraw, 11);
+        let mut ledger = EvalLedger::new(&mut src, 22);
         let mut rng = Rng::new(13);
-        let res = opt.run(&ctx, &mut obj, 22, &mut rng);
-        assert!(obj.evals() <= 22);
+        let res = opt.run(&ctx, &mut ledger, &mut rng);
+        assert!(ledger.evals() <= 22);
         assert!(res.best_value.is_finite(), "{name}");
         // Search should do clearly better than the domain average.
         assert!(res.best_value < ds.random_strategy_value(9, Target::Cost), "{name}");
@@ -109,9 +110,10 @@ fn artifact_and_native_agree_on_proposals_early() {
     let run = |b: &dyn Backend| {
         let opt = by_name("cherrypick-x1").unwrap();
         let ctx = SearchContext { domain: &ds.domain, target: Target::Time, backend: b };
-        let mut obj = LookupObjective::new(&ds, 20, Target::Time, MeasureMode::Mean, 7);
+        let mut src = LookupObjective::new(&ds, 20, Target::Time, MeasureMode::Mean, 7);
+        let mut ledger = EvalLedger::new(&mut src, 12);
         let mut rng = Rng::new(99);
-        opt.run(&ctx, &mut obj, 12, &mut rng).best_value
+        opt.run(&ctx, &mut ledger, &mut rng).best_value
     };
     let va = run(&backend);
     let vn = run(&NativeBackend);

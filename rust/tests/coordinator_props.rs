@@ -22,7 +22,8 @@ fn prop_no_optimizer_exceeds_its_budget() {
     testkit::check("budget ceiling", 40, |g| {
         let method = g.pick(&ALL_OPTIMIZERS).to_string();
         if method == "exhaustive" {
-            return; // evaluates the whole grid by definition
+            return; // provisions the full grid by definition (its ledger
+                    // is sized to domain.size(), not the nominal budget)
         }
         let spec = TrialSpec {
             method,

@@ -33,15 +33,17 @@ fn optimizers_run_on_inference_workloads() {
     for name in ["rs", "smac", "cb-rbfopt", "hyperopt"] {
         let opt = by_name(name).unwrap();
         let ctx = SearchContext { domain: &ds.domain, target: Target::Time, backend: &backend };
-        let mut obj = multicloud::dataset::objective::LookupObjective::new(
+        let mut src = multicloud::dataset::objective::LookupObjective::new(
             &ds,
             2,
             Target::Time,
             multicloud::dataset::objective::MeasureMode::SingleDraw,
             5,
         );
+        let mut ledger = multicloud::dataset::objective::EvalLedger::new(&mut src, 22);
         let mut rng = multicloud::util::rng::Rng::new(6);
-        let r = opt.run(&ctx, &mut obj, 22, &mut rng);
+        let r = opt.run(&ctx, &mut ledger, &mut rng);
+        assert_eq!(ledger.evals(), 22, "{name}");
         assert!(r.best_value.is_finite(), "{name}");
         assert!(r.best_value < ds.random_strategy_value(2, Target::Time) * 1.5, "{name}");
     }
