@@ -16,16 +16,18 @@ use multicloud::util::rng::Rng;
 
 /// Measurement-source wrapper recording which provider every evaluation
 /// went to (the ledger's history could do this too — the wrapper shows
-/// that custom sources compose under the ledger).
+/// that custom sources compose under the ledger). Sources are `&self` +
+/// `Sync` so ledger shards can share them across arm workers; side state
+/// therefore needs interior mutability.
 struct Recording<'a> {
     inner: LookupObjective<'a>,
-    providers: Vec<usize>,
+    providers: std::sync::Mutex<Vec<usize>>,
 }
 
 impl EvalSource for Recording<'_> {
-    fn measure(&mut self, cfg: &Config) -> f64 {
-        self.providers.push(cfg.provider);
-        self.inner.measure(cfg)
+    fn measure(&self, cfg: &Config, pull: u64) -> f64 {
+        self.providers.lock().unwrap().push(cfg.provider);
+        self.inner.measure(cfg, pull)
     }
 
     fn deterministic(&self) -> bool {
@@ -62,17 +64,17 @@ fn main() {
     for method in ["rs", "cherrypick-x1", "cherrypick-x3", "smac", "hyperopt", "rb", "cb-cherrypick", "cb-rbfopt"]
     {
         let opt = by_name(method).unwrap();
-        let ctx = SearchContext { domain: &ds.domain, target, backend: backend.as_ref() };
-        let mut rec = Recording {
+        let ctx = SearchContext::new(&ds.domain, target, backend.as_ref());
+        let rec = Recording {
             inner: LookupObjective::new(&ds, w, target, MeasureMode::SingleDraw, 11),
-            providers: Vec::new(),
+            providers: std::sync::Mutex::new(Vec::new()),
         };
         let res = {
-            let mut ledger = EvalLedger::new(&mut rec, budget);
+            let mut ledger = EvalLedger::new(&rec, budget);
             opt.run(&ctx, &mut ledger, &mut Rng::new(5))
         };
         let mut counts = [0usize; 3];
-        for &p in &rec.providers {
+        for &p in rec.providers.lock().unwrap().iter() {
             counts[p] += 1;
         }
         let chosen_gt = rec.inner.ground_truth(&res.best_config);

@@ -47,11 +47,14 @@ fn main() {
     let budget = 33;
 
     let opt = by_name("cb-rbfopt").unwrap();
-    let ctx = SearchContext { domain: &ds.domain, target, backend: backend.as_ref() };
-    let mut src = LookupObjective::new(&ds, workload, target, MeasureMode::SingleDraw, 1);
+    // Pull the three provider arms in parallel — results are identical to
+    // sequential, only the wall-clock changes.
+    let ctx = SearchContext::new(&ds.domain, target, backend.as_ref())
+        .with_arm_workers(ds.domain.provider_count());
+    let src = LookupObjective::new(&ds, workload, target, MeasureMode::SingleDraw, 1);
     // The ledger enforces the budget and does all the accounting; the
     // optimizer only decides how to spend it.
-    let mut ledger = EvalLedger::new(&mut src, budget);
+    let mut ledger = EvalLedger::new(&src, budget);
     let result = opt.run(&ctx, &mut ledger, &mut Rng::new(7));
     let spend = ledger.total_expense();
     drop(ledger);
@@ -71,6 +74,7 @@ fn main() {
         target,
         budget,
         seed: 7,
+        ..TrialSpec::default()
     };
     let trial = run_trial(&ds, backend.as_ref(), &spec);
     println!("\ncoordinator trial: regret {:.4} after {} evaluations", trial.regret, trial.evals);

@@ -43,6 +43,7 @@ fn main() {
         target,
         budget: 33,
         seed: 3,
+        ..Default::default()
     };
     let trial = multicloud::coordinator::experiment::run_trial(&ds, backend.as_ref(), &spec);
     let s = metrics::savings(trial.search_expense, trial.chosen_value, r_rand, n_runs);

@@ -1,13 +1,17 @@
-//! Ablation bench: CloudBandit's two design choices (paper §III-D).
+//! Ablation bench: CloudBandit's two design choices (paper §III-D), plus
+//! the parallel-arms execution mode.
 //!
 //! * growth factor eta — eta = 1 degenerates to uniform round-robin
 //!   (no exponential concentration), the paper uses eta = 2;
-//! * component BBO — CherryPick-BO vs RBFOpt-lite.
+//! * component BBO — CherryPick-BO vs RBFOpt-lite;
+//! * arm workers — sequential (`trial_workers` = 1) vs parallel (one
+//!   worker per arm, K = 3): bit-identical results, divergent wall-clock.
 //!
 //! Reports mean regret (30 workloads x BENCH_SEEDS seeds, both targets)
 //! at B = 33, plus wall-clock per configuration. Regenerates the evidence
 //! behind the paper's claim that exponential budget growth is what lets
-//! CB "devote exponentially more budget to more promising providers".
+//! CB "devote exponentially more budget to more promising providers",
+//! and quantifies the speedup of sharded-ledger parallel arm execution.
 
 use multicloud::benchkit::Suite;
 use multicloud::dataset::objective::{EvalLedger, LookupObjective, MeasureMode};
@@ -41,8 +45,8 @@ fn main() {
                 for w in 0..ds.workload_count() {
                     let (_, tmin) = ds.true_min(w, target);
                     for seed in 0..seeds {
-                        let ctx = SearchContext { domain: &ds.domain, target, backend: &backend };
-                        let mut src = LookupObjective::new(
+                        let ctx = SearchContext::new(&ds.domain, target, &backend);
+                        let src = LookupObjective::new(
                             &ds,
                             w,
                             target,
@@ -50,7 +54,7 @@ fn main() {
                             seed as u64,
                         );
                         let r = {
-                            let mut ledger = EvalLedger::new(&mut src, budget);
+                            let mut ledger = EvalLedger::new(&src, budget);
                             opt.run(&ctx, &mut ledger, &mut Rng::new(seed as u64 ^ 0xCB))
                         };
                         let gt = src.ground_truth(&r.best_config);
@@ -68,6 +72,60 @@ fn main() {
             );
         }
     }
+
+    // -- Sequential vs parallel arm execution (K = 3 arms) ------------------
+    //
+    // Same spec, same results (the parity tests pin bit-identity); the
+    // only difference is wall-clock per trial.
+    println!(
+        "\n{:<28} {:>14} {:>14} {:>9}",
+        "arms mode", "ms/trial seq", "ms/trial par", "speedup"
+    );
+    let k = ds.domain.provider_count();
+    let trials = (0..ds.workload_count()).step_by(3).count() * seeds;
+    for component in [Component::CherryPick, Component::RbfOpt] {
+        let opt = CloudBandit::new(component, 2.0);
+        let mut wall = [0.0f64; 2]; // [sequential, parallel]
+        let mut check = [0.0f64; 2];
+        for (mi, workers) in [1usize, k].into_iter().enumerate() {
+            let t0 = std::time::Instant::now();
+            for w in (0..ds.workload_count()).step_by(3) {
+                for seed in 0..seeds {
+                    let ctx = SearchContext::new(&ds.domain, Target::Cost, &backend)
+                        .with_arm_workers(workers);
+                    let src = LookupObjective::new(
+                        &ds,
+                        w,
+                        Target::Cost,
+                        MeasureMode::SingleDraw,
+                        seed as u64,
+                    );
+                    let mut ledger = EvalLedger::new(&src, budget);
+                    let r = opt.run(&ctx, &mut ledger, &mut Rng::new(seed as u64 ^ 0xCB));
+                    check[mi] += r.best_value;
+                }
+            }
+            wall[mi] = t0.elapsed().as_secs_f64();
+            suite.record(
+                &format!("{component:?} arms={}", if workers == 1 { "seq" } else { "par" }),
+                wall[mi] * 1e9,
+                (trials * budget) as f64,
+            );
+        }
+        assert_eq!(
+            check[0].to_bits(),
+            check[1].to_bits(),
+            "parallel arms changed results — determinism contract broken"
+        );
+        println!(
+            "{:<28} {:>14.2} {:>14.2} {:>8.2}x",
+            format!("{component:?} K={k}"),
+            1e3 * wall[0] / trials as f64,
+            1e3 * wall[1] / trials as f64,
+            wall[0] / wall[1].max(1e-12),
+        );
+    }
+
     suite.finish();
     std::fs::create_dir_all("results").ok();
     std::fs::write("results/ablation_cb.csv", suite.to_csv()).ok();

@@ -30,6 +30,7 @@ fn main() {
                     target: Target::Cost,
                     budget,
                     seed,
+                    ..TrialSpec::default()
                 };
                 run_trial(&ds, &backend, &spec).regret
             });
@@ -47,6 +48,7 @@ fn main() {
                 target: Target::Time,
                 budget: 0,
                 seed,
+                ..TrialSpec::default()
             };
             run_trial(&ds, &backend, &spec).regret
         });

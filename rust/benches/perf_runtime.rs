@@ -50,20 +50,20 @@ fn main() {
         suite.bench_units(&format!("cherrypick-x1 B=22 on {label}"), 22.0, &mut || {
             seed += 1;
             let opt = by_name("cherrypick-x1").unwrap();
-            let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend };
-            let mut src =
+            let ctx = SearchContext::new(&ds.domain, Target::Cost, backend);
+            let src =
                 LookupObjective::new(&ds, 3, Target::Cost, MeasureMode::SingleDraw, seed);
-            let mut ledger = EvalLedger::new(&mut src, 22);
+            let mut ledger = EvalLedger::new(&src, 22);
             opt.run(&ctx, &mut ledger, &mut Rng::new(seed)).best_value
         });
         let mut seed = 0u64;
         suite.bench_units(&format!("cb-rbfopt B=22 on {label}"), 22.0, &mut || {
             seed += 1;
             let opt = by_name("cb-rbfopt").unwrap();
-            let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend };
-            let mut src =
+            let ctx = SearchContext::new(&ds.domain, Target::Cost, backend);
+            let src =
                 LookupObjective::new(&ds, 3, Target::Cost, MeasureMode::SingleDraw, seed);
-            let mut ledger = EvalLedger::new(&mut src, 22);
+            let mut ledger = EvalLedger::new(&src, 22);
             opt.run(&ctx, &mut ledger, &mut Rng::new(seed)).best_value
         });
     }

@@ -43,10 +43,10 @@ fn main() {
 
     let ds = OfflineDataset::generate(2022, 5);
     suite.bench_units("objective measure (SingleDraw, 1k)", 1000.0, &mut || {
-        let mut src = LookupObjective::new(&ds, 7, Target::Cost, MeasureMode::SingleDraw, 5);
+        let src = LookupObjective::new(&ds, 7, Target::Cost, MeasureMode::SingleDraw, 5);
         let mut acc = 0.0;
         for i in 0..1000 {
-            acc += src.measure(&grid[i % grid.len()]);
+            acc += src.measure(&grid[i % grid.len()], (i / grid.len()) as u64);
         }
         black_box(acc)
     });

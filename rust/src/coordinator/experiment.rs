@@ -23,6 +23,30 @@ pub struct TrialSpec {
     pub target: Target,
     pub budget: usize,
     pub seed: u64,
+    /// Worker threads for parallel arm execution inside this trial (the
+    /// bandit optimizers). Results are bit-identical at any setting, so
+    /// this is deliberately excluded from the seed-derivation hash; total
+    /// parallelism is grid workers × trial workers.
+    pub trial_workers: usize,
+    /// How one evaluation aggregates the stored repetitions.
+    /// Deterministic modes (Mean/P90) run the ledger memoized: repeat
+    /// proposals replay recorded values and are charged as search
+    /// expense only once (the "cache measurements" deployment).
+    pub measure_mode: MeasureMode,
+}
+
+impl Default for TrialSpec {
+    fn default() -> Self {
+        TrialSpec {
+            method: "rs".into(),
+            workload: 0,
+            target: Target::Cost,
+            budget: 11,
+            seed: 0,
+            trial_workers: 1,
+            measure_mode: MeasureMode::SingleDraw,
+        }
+    }
 }
 
 /// Outcome of one trial.
@@ -38,8 +62,20 @@ pub struct TrialResult {
     pub evals: usize,
 }
 
+/// Size a trial ledger, memoized when the measure mode is deterministic.
+fn new_ledger<'a>(
+    source: &'a LookupObjective<'a>,
+    budget: usize,
+    memoize: bool,
+) -> EvalLedger<'a> {
+    let ledger = EvalLedger::new(source, budget);
+    if memoize { ledger.with_memo() } else { ledger }
+}
+
 /// Run a single trial. Seeds are decorrelated per (method, workload,
-/// target, budget, seed) so grid order cannot matter.
+/// target, budget, seed) so grid order cannot matter — `trial_workers`
+/// and `measure_mode` are deliberately not mixed in (workers never
+/// change results; the mode changes the measurement itself).
 pub fn run_trial(ds: &OfflineDataset, backend: &dyn Backend, spec: &TrialSpec) -> TrialResult {
     let mut label = Rng::new(spec.seed);
     // Mix the spec into the stream label deterministically.
@@ -55,8 +91,12 @@ pub fn run_trial(ds: &OfflineDataset, backend: &dyn Backend, spec: &TrialSpec) -
     let mut rng = label.fork(h);
     let obj_seed = rng.next_u64();
 
-    let mut source =
-        LookupObjective::new(ds, spec.workload, spec.target, MeasureMode::SingleDraw, obj_seed);
+    let source =
+        LookupObjective::new(ds, spec.workload, spec.target, spec.measure_mode, obj_seed);
+    // Deterministic measure modes exploit ledger memoization: repeat
+    // proposals replay the recorded value and C_opt only charges distinct
+    // configurations.
+    let memoize = spec.measure_mode.deterministic();
 
     // Every trial runs against a ledger; expense/evals/trace are read back
     // from it uniformly instead of being re-derived from source internals.
@@ -64,21 +104,22 @@ pub fn run_trial(ds: &OfflineDataset, backend: &dyn Backend, spec: &TrialSpec) -
     // their fixed, known online cost (still landing in the accounting).
     let (chosen, search_expense, evals) = match spec.method.as_str() {
         "predict-linear" => {
-            let mut ledger = EvalLedger::new(&mut source, ds.domain.size());
+            let mut ledger = new_ledger(&source, ds.domain.size(), memoize);
             let chosen = LinearPredictor.run(&ds.domain, &mut ledger).chosen;
             (chosen, ledger.total_expense(), ledger.evals())
         }
         "predict-rf" => {
-            let mut ledger = EvalLedger::new(&mut source, 2 * ds.domain.provider_count());
+            let mut ledger = new_ledger(&source, 2 * ds.domain.provider_count(), memoize);
             let chosen =
                 ParisPredictor::default().run(ds, spec.workload, spec.target, &mut ledger).chosen;
             (chosen, ledger.total_expense(), ledger.evals())
         }
         name => {
             let opt = by_name(name).unwrap_or_else(|| panic!("unknown method {name}"));
-            let ctx = SearchContext { domain: &ds.domain, target: spec.target, backend };
+            let ctx = SearchContext::new(&ds.domain, spec.target, backend)
+                .with_arm_workers(spec.trial_workers);
             let mut ledger =
-                EvalLedger::new(&mut source, opt.provisioned_budget(&ctx, spec.budget));
+                new_ledger(&source, opt.provisioned_budget(&ctx, spec.budget), memoize);
             let chosen = opt.run(&ctx, &mut ledger, &mut rng).best_config;
             (chosen, ledger.total_expense(), ledger.evals())
         }
@@ -114,6 +155,15 @@ pub struct RegretGrid<'a> {
     pub seeds: usize,
     pub targets: Vec<Target>,
     pub workers: usize,
+    /// Worker threads per trial for parallel arm execution (bandit
+    /// methods). Total parallelism is `workers × trial_workers`; the grid
+    /// defaults to 1 so saturating the cores with trials stays the
+    /// default and nested parallelism is an explicit opt-in (useful for
+    /// small grids of expensive bandit trials).
+    pub trial_workers: usize,
+    /// Measure mode for every trial; deterministic modes run memoized
+    /// ledgers (the "cache measurements" deployment preset).
+    pub measure_mode: MeasureMode,
     pub verbose: bool,
     /// Workload indices to include (empty = all).
     pub workload_filter: Vec<usize>,
@@ -129,6 +179,8 @@ impl<'a> RegretGrid<'a> {
             seeds: 50,
             targets: vec![Target::Time, Target::Cost],
             workers: default_workers(),
+            trial_workers: 1,
+            measure_mode: MeasureMode::SingleDraw,
             verbose: false,
             workload_filter: Vec::new(),
         }
@@ -163,6 +215,8 @@ impl<'a> RegretGrid<'a> {
                                 target: *target,
                                 budget,
                                 seed: seed as u64,
+                                trial_workers: self.trial_workers,
+                                measure_mode: self.measure_mode,
                             });
                         }
                     }
@@ -235,12 +289,83 @@ mod tests {
             target: Target::Cost,
             budget: 11,
             seed: 4,
+            ..TrialSpec::default()
         };
         let a = run_trial(&ds, &backend, &spec);
         let b = run_trial(&ds, &backend, &spec);
         assert_eq!(a.regret, b.regret);
         assert_eq!(a.search_expense, b.search_expense);
         assert!(a.regret >= 0.0);
+    }
+
+    /// `trial_workers` is a pure wall-clock knob: bandit trials produce
+    /// bit-identical results at any worker count.
+    #[test]
+    fn trial_workers_do_not_change_results() {
+        let ds = OfflineDataset::generate(40, 3);
+        let backend = NativeBackend;
+        for method in ["cb-cherrypick", "cb-rbfopt", "rb"] {
+            let base = TrialSpec {
+                method: method.into(),
+                workload: 5,
+                target: Target::Time,
+                budget: 22,
+                seed: 3,
+                ..TrialSpec::default()
+            };
+            let seq = run_trial(&ds, &backend, &base);
+            for workers in [2usize, 4] {
+                let par = run_trial(
+                    &ds,
+                    &backend,
+                    &TrialSpec { trial_workers: workers, ..base.clone() },
+                );
+                assert_eq!(seq.chosen_value.to_bits(), par.chosen_value.to_bits(), "{method}");
+                assert_eq!(seq.regret.to_bits(), par.regret.to_bits(), "{method}");
+                assert_eq!(
+                    seq.search_expense.to_bits(),
+                    par.search_expense.to_bits(),
+                    "{method}"
+                );
+                assert_eq!(seq.evals, par.evals, "{method}");
+            }
+        }
+    }
+
+    /// The memoized Mean-mode preset: a repeat-heavy method (CherryPick
+    /// allows repeat proposals; a budget above the grid size forces them)
+    /// reports lower C_opt under Mean than under SingleDraw, because memo
+    /// hits replay recorded measurements instead of paying again.
+    #[test]
+    fn mean_mode_memoization_cuts_search_expense_for_repeat_heavy_methods() {
+        let ds = OfflineDataset::generate(44, 3);
+        let backend = NativeBackend;
+        // Budget above the grid size forces repeat evaluations for any
+        // method; with-replacement RS repeats statistically and
+        // CherryPick repeats by acquisition design.
+        for method in ["rs", "cherrypick-x1"] {
+            let base = TrialSpec {
+                method: method.into(),
+                workload: 3,
+                target: Target::Cost,
+                budget: ds.domain.size() + 12,
+                seed: 1,
+                ..TrialSpec::default()
+            };
+            let single = run_trial(&ds, &backend, &base);
+            let mean = run_trial(
+                &ds,
+                &backend,
+                &TrialSpec { measure_mode: MeasureMode::Mean, ..base.clone() },
+            );
+            assert_eq!(single.evals, mean.evals, "{method}: both modes use the full budget");
+            assert!(
+                mean.search_expense < single.search_expense,
+                "{method}: memoized Mean C_opt {} should undercut SingleDraw C_opt {}",
+                mean.search_expense,
+                single.search_expense
+            );
+        }
     }
 
     #[test]

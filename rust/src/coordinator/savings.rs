@@ -64,6 +64,7 @@ pub fn savings_analysis(
                     target,
                     budget: cfg.budget,
                     seed: seed as u64,
+                    ..TrialSpec::default()
                 });
             }
         }

@@ -6,10 +6,17 @@
 //!
 //! Request:
 //!   {"op": "optimize", "workload": "kmeans:santander", "target": "cost",
-//!    "method": "cb-rbfopt", "budget": 33, "seed": 1}
+//!    "method": "cb-rbfopt", "budget": 33, "seed": 1,
+//!    "trial_workers": 3, "measure_mode": "single_draw"}
 //!   {"op": "list_workloads"}
 //!   {"op": "list_methods"}
 //!   {"op": "ping"}
+//!
+//! `trial_workers` (optional, default 1) runs the bandit optimizers'
+//! arms in parallel inside the request — results are bit-identical at
+//! any setting, only latency changes. `measure_mode` (optional, default
+//! "single_draw") selects the evaluation aggregation; deterministic
+//! modes run memoized.
 //!
 //! Response (optimize):
 //!   {"ok": true, "config": "gcp/family=e2/...", "value": 0.123,
@@ -21,6 +28,8 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use crate::coordinator::experiment::{run_trial, TrialSpec};
+use crate::coordinator::spec::MAX_TRIAL_WORKERS;
+use crate::dataset::objective::MeasureMode;
 use crate::dataset::{OfflineDataset, Target};
 use crate::optimizers::ALL_OPTIMIZERS;
 use crate::surrogate::Backend;
@@ -84,11 +93,35 @@ impl Service {
                 if budget == 0 || budget > 10_000 {
                     return Err("budget out of range".into());
                 }
+                let trial_workers = match req.get("trial_workers") {
+                    None => 1,
+                    Some(v) => v
+                        .as_usize()
+                        .ok_or("trial_workers must be a non-negative integer")?,
+                };
+                if trial_workers == 0 || trial_workers > MAX_TRIAL_WORKERS {
+                    return Err(format!("trial_workers must be in 1..={MAX_TRIAL_WORKERS}"));
+                }
+                let measure_mode = match req.get("measure_mode") {
+                    None => MeasureMode::SingleDraw,
+                    Some(v) => {
+                        let s = v.as_str().ok_or("measure_mode must be a string")?;
+                        MeasureMode::parse(s).ok_or_else(|| {
+                            format!("bad measure_mode '{s}' (single_draw | mean | p90)")
+                        })?
+                    }
+                };
 
-                let spec = TrialSpec { method, workload, target, budget, seed };
+                let spec = TrialSpec {
+                    method,
+                    workload,
+                    target,
+                    budget,
+                    seed,
+                    trial_workers,
+                    measure_mode,
+                };
                 let r = run_trial(&self.ds, self.backend.as_ref(), &spec);
-                let grid = self.ds.domain.full_grid();
-                let _ = grid;
                 Ok(Value::obj(vec![
                     ("ok", true.into()),
                     ("workload", workload_id.into()),
@@ -187,6 +220,32 @@ mod tests {
         assert!(v.get("value").unwrap().as_f64().unwrap() > 0.0);
     }
 
+    /// `trial_workers` changes request latency, never the answer.
+    #[test]
+    fn parallel_optimize_requests_match_sequential() {
+        let svc = service();
+        let req = |workers: usize| {
+            format!(
+                r#"{{"op":"optimize","workload":"kmeans:buzz","target":"cost","method":"cb-rbfopt","budget":22,"seed":5,"trial_workers":{workers}}}"#
+            )
+        };
+        let seq = svc.handle(&req(1));
+        let par = svc.handle(&req(4));
+        assert!(seq.contains("\"ok\":true") || seq.contains("\"ok\": true"), "{seq}");
+        assert_eq!(seq, par, "trial_workers changed the response");
+    }
+
+    #[test]
+    fn mean_mode_requests_run_memoized() {
+        let svc = service();
+        let resp = svc.handle(
+            r#"{"op":"optimize","workload":"kmeans:buzz","target":"cost","method":"cherrypick-x1","budget":95,"seed":2,"measure_mode":"mean"}"#,
+        );
+        let v = parse(&resp).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true), "{resp}");
+        assert_eq!(v.get("evals").unwrap().as_usize(), Some(95));
+    }
+
     #[test]
     fn malformed_requests_get_errors_not_panics() {
         let svc = service();
@@ -196,6 +255,12 @@ mod tests {
             r#"{"op":"optimize","workload":"nope:nope"}"#,
             r#"{"op":"optimize","workload":"kmeans:buzz","target":"speed"}"#,
             r#"{"op":"optimize","workload":"kmeans:buzz","budget":0}"#,
+            r#"{"op":"optimize","workload":"kmeans:buzz","trial_workers":0}"#,
+            r#"{"op":"optimize","workload":"kmeans:buzz","trial_workers":9999}"#,
+            r#"{"op":"optimize","workload":"kmeans:buzz","trial_workers":"4"}"#,
+            r#"{"op":"optimize","workload":"kmeans:buzz","trial_workers":-2}"#,
+            r#"{"op":"optimize","workload":"kmeans:buzz","measure_mode":"median"}"#,
+            r#"{"op":"optimize","workload":"kmeans:buzz","measure_mode":5}"#,
             r#"{"op":"wat"}"#,
         ] {
             let resp = svc.handle(bad);

@@ -14,14 +14,23 @@
 //! }
 //! ```
 //!
-//! `workloads` is optional (default: all 30). Methods are validated
-//! against the optimizer registry + predictive baselines at parse time so
-//! a bad spec fails before any compute is spent.
+//! `workloads` is optional (default: all 30). Optional knobs:
+//! `"measure_mode": "single_draw" | "mean" | "p90"` (deterministic modes
+//! run memoized ledgers) and `"trial_workers": N` (parallel arm execution
+//! inside each bandit trial; results are identical at any setting).
+//! Methods are validated against the optimizer registry + predictive
+//! baselines at parse time so a bad spec fails before any compute is
+//! spent.
 
 use crate::coordinator::experiment::PREDICTORS;
+use crate::dataset::objective::MeasureMode;
 use crate::dataset::Target;
 use crate::optimizers::ALL_OPTIMIZERS;
 use crate::util::json::{parse, Value};
+
+/// Upper bound on per-trial arm workers: total parallelism is grid
+/// workers × trial workers, so this stays small and explicit.
+pub const MAX_TRIAL_WORKERS: usize = 64;
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExperimentSpec {
@@ -32,6 +41,10 @@ pub struct ExperimentSpec {
     pub targets: Vec<Target>,
     /// Workload ids; empty = all.
     pub workloads: Vec<String>,
+    /// Measurement aggregation per evaluation (default `single_draw`).
+    pub measure_mode: MeasureMode,
+    /// Arm workers per trial (default 1 = sequential arms).
+    pub trial_workers: usize,
 }
 
 impl ExperimentSpec {
@@ -102,7 +115,33 @@ impl ExperimentSpec {
             Some(_) => return Err("targets must be an array".into()),
         };
 
-        Ok(ExperimentSpec { name, methods, budgets, seeds, targets, workloads: str_list("workloads")? })
+        let measure_mode = match v.get("measure_mode") {
+            None => MeasureMode::SingleDraw,
+            Some(m) => {
+                let s = m.as_str().ok_or("measure_mode must be a string")?;
+                MeasureMode::parse(s)
+                    .ok_or_else(|| format!("bad measure_mode '{s}' (single_draw | mean | p90)"))?
+            }
+        };
+
+        let trial_workers = match v.get("trial_workers") {
+            None => 1,
+            Some(w) => w.as_usize().ok_or("trial_workers must be a non-negative integer")?,
+        };
+        if trial_workers == 0 || trial_workers > MAX_TRIAL_WORKERS {
+            return Err(format!("trial_workers must be in 1..={MAX_TRIAL_WORKERS}"));
+        }
+
+        Ok(ExperimentSpec {
+            name,
+            methods,
+            budgets,
+            seeds,
+            targets,
+            workloads: str_list("workloads")?,
+            measure_mode,
+            trial_workers,
+        })
     }
 
     pub fn load(path: &str) -> Result<ExperimentSpec, String> {
@@ -137,6 +176,18 @@ mod tests {
         assert_eq!(s.seeds, 10);
         assert_eq!(s.targets.len(), 2);
         assert!(s.workloads.is_empty());
+        assert_eq!(s.measure_mode, MeasureMode::SingleDraw);
+        assert_eq!(s.trial_workers, 1);
+    }
+
+    #[test]
+    fn measure_mode_and_trial_workers_parse() {
+        let s = ExperimentSpec::parse(
+            r#"{"methods":["cb-rbfopt"],"measure_mode":"mean","trial_workers":4}"#,
+        )
+        .unwrap();
+        assert_eq!(s.measure_mode, MeasureMode::Mean);
+        assert_eq!(s.trial_workers, 4);
     }
 
     #[test]
@@ -146,6 +197,9 @@ mod tests {
         assert!(ExperimentSpec::parse(r#"{"methods":["rs"],"budgets":[0]}"#).is_err());
         assert!(ExperimentSpec::parse(r#"{"methods":["rs"],"seeds":0}"#).is_err());
         assert!(ExperimentSpec::parse(r#"{"methods":["rs"],"targets":["speed"]}"#).is_err());
+        assert!(ExperimentSpec::parse(r#"{"methods":["rs"],"measure_mode":"median"}"#).is_err());
+        assert!(ExperimentSpec::parse(r#"{"methods":["rs"],"trial_workers":0}"#).is_err());
+        assert!(ExperimentSpec::parse(r#"{"methods":["rs"],"trial_workers":1000}"#).is_err());
         assert!(ExperimentSpec::parse("not json").is_err());
     }
 

@@ -1,35 +1,54 @@
 //! The black-box objective f_k(n, x) (paper §III-A) and the evaluation
 //! ledger every optimizer runs against.
 //!
-//! Two layers:
+//! Three layers:
 //!
 //! * [`EvalSource`] / [`LookupObjective`] — the raw measurement source:
 //!   map a configuration to one observed scalar, backed by the offline
-//!   store. Stateless apart from its measurement RNG.
+//!   store. Measurement is `&self` and thread-safe: a `SingleDraw` is
+//!   derived from a per-(configuration, pull-index) seeded stream, so the
+//!   value of "the k-th measurement of config c" is a pure function of
+//!   (source seed, c, k) — independent of global evaluation order and of
+//!   which thread performs it.
 //! * [`EvalLedger`] — the single evaluation substrate shared by the whole
 //!   optimizer suite. It owns history recording, best-so-far tracing,
 //!   search-expense accounting (the C_opt term of the §IV-E savings
 //!   analysis), **hard budget enforcement** (an optimizer physically
 //!   cannot overspend: `eval` refuses once the budget is gone), and
-//!   opt-in memoization for deterministic measure modes.
+//!   opt-in memoization for deterministic measure modes. The budget lives
+//!   in an atomic [`BudgetPool`], so enforcement survives concurrency.
+//! * [`LedgerShard`] — a per-arm slice of a ledger for parallel arm
+//!   execution (CloudBandit / Rising Bandits). Shards reserve budget from
+//!   the parent's shared atomic pool, record locally, and are merged back
+//!   deterministically in the caller's canonical (round, arm, pull) order
+//!   regardless of thread completion order.
 //!
-//! Optimizers never see the source directly — they only hold a ledger, so
-//! per-optimizer history/budget bookkeeping cannot drift and the
-//! coordinator reads expense/evals/trace from one place.
+//! Optimizers never see the source directly — they only hold a ledger (or
+//! a shard of one, behind [`EvalSink`]), so per-optimizer history/budget
+//! bookkeeping cannot drift and the coordinator reads expense/evals/trace
+//! from one place.
+//!
+//! Determinism contract for shards: arms must evaluate **disjoint**
+//! configuration subsets (true by construction for per-provider arms).
+//! Under that contract, sequential and parallel execution produce
+//! bit-identical merged ledgers; the budget cap holds unconditionally
+//! either way.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use super::{OfflineDataset, Target};
 use crate::domain::Config;
-use crate::util::rng::Rng;
+use crate::util::rng::{splitmix64, Rng};
 
 /// How one evaluation aggregates the stored repetitions (paper §III-A:
 /// "a single measurement or any chosen metric based on multiple
 /// measurements, such as the mean or the 90th percentile").
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MeasureMode {
-    /// One stored repetition chosen at random per evaluation (the paper's
-    /// default online behaviour).
+    /// One stored repetition chosen per evaluation from a seeded
+    /// per-(config, pull) stream (the paper's default online behaviour).
     SingleDraw,
     Mean,
     P90,
@@ -41,12 +60,35 @@ impl MeasureMode {
     pub fn deterministic(self) -> bool {
         !matches!(self, MeasureMode::SingleDraw)
     }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MeasureMode::SingleDraw => "single_draw",
+            MeasureMode::Mean => "mean",
+            MeasureMode::P90 => "p90",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<MeasureMode> {
+        match s {
+            "single_draw" | "single-draw" => Some(MeasureMode::SingleDraw),
+            "mean" => Some(MeasureMode::Mean),
+            "p90" => Some(MeasureMode::P90),
+            _ => None,
+        }
+    }
 }
 
 /// A raw measurement source: one configuration in, one observed scalar
 /// out. Implementations do **no** bookkeeping — that is the ledger's job.
-pub trait EvalSource {
-    fn measure(&mut self, cfg: &Config) -> f64;
+///
+/// `measure` is `&self` and must be thread-safe (`Sync`): ledger shards
+/// running on worker threads share one source. `pull` is the 0-based
+/// count of prior measurements of this configuration; a source whose
+/// repeat measurements differ (e.g. `SingleDraw`) must derive them from
+/// (seed, cfg, pull) only, never from call order.
+pub trait EvalSource: Sync {
+    fn measure(&self, cfg: &Config, pull: u64) -> f64;
 
     /// True when repeated measurements of the same configuration are
     /// identical; gates [`EvalLedger::with_memo`].
@@ -62,7 +104,7 @@ pub struct LookupObjective<'a> {
     pub workload: usize,
     pub target: Target,
     pub mode: MeasureMode,
-    rng: Rng,
+    seed: u64,
 }
 
 impl<'a> LookupObjective<'a> {
@@ -74,7 +116,7 @@ impl<'a> LookupObjective<'a> {
         seed: u64,
     ) -> Self {
         assert!(workload < ds.workload_count());
-        LookupObjective { ds, workload, target, mode, rng: Rng::new(seed) }
+        LookupObjective { ds, workload, target, mode, seed }
     }
 
     pub fn domain(&self) -> &crate::domain::Domain {
@@ -91,12 +133,19 @@ impl<'a> LookupObjective<'a> {
 }
 
 impl EvalSource for LookupObjective<'_> {
-    fn measure(&mut self, cfg: &Config) -> f64 {
+    fn measure(&self, cfg: &Config, pull: u64) -> f64 {
         let cid = self.ds.domain.config_id(cfg);
         let ms = self.ds.measurements(self.workload, cid);
         match self.mode {
             MeasureMode::SingleDraw => {
-                self.target.pick(ms[self.rng.usize_below(ms.len())])
+                // Per-(config, pull) stream: two SplitMix64 rounds mix the
+                // config id and the pull index into the source seed, so
+                // the draw is decorrelated across both axes yet a pure
+                // function of (seed, cid, pull).
+                let mut s = self.seed ^ (cid as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                let mut s2 = splitmix64(&mut s) ^ pull.wrapping_mul(0xD1B5_4A32_D192_ED03);
+                let mut rng = Rng::new(splitmix64(&mut s2));
+                self.target.pick(ms[rng.usize_below(ms.len())])
             }
             MeasureMode::Mean => {
                 ms.iter().map(|&m| self.target.pick(m)).sum::<f64>() / ms.len() as f64
@@ -113,10 +162,91 @@ impl EvalSource for LookupObjective<'_> {
     }
 }
 
+/// Shared atomic evaluation budget: the single admission point for a
+/// ledger and all of its shards. A reservation that succeeds here is the
+/// *only* way an evaluation happens, so concurrent shards cannot
+/// collectively over-admit past the trial budget.
+#[derive(Debug)]
+pub struct BudgetPool {
+    remaining: AtomicUsize,
+}
+
+impl BudgetPool {
+    fn new(budget: usize) -> BudgetPool {
+        BudgetPool { remaining: AtomicUsize::new(budget) }
+    }
+
+    /// Evaluations still admissible.
+    pub fn remaining(&self) -> usize {
+        self.remaining.load(Ordering::Acquire)
+    }
+
+    /// Reserve one evaluation; `false` once the pool is empty.
+    pub fn try_reserve(&self) -> bool {
+        let mut cur = self.remaining.load(Ordering::Acquire);
+        while cur > 0 {
+            match self.remaining.compare_exchange_weak(
+                cur,
+                cur - 1,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return true,
+                Err(observed) => cur = observed,
+            }
+        }
+        false
+    }
+}
+
+/// The budget-gated evaluation interface optimizer *search states* step
+/// against: a whole [`EvalLedger`] or one [`LedgerShard`] of it.
+pub trait EvalSink {
+    /// Evaluate a configuration, consuming one unit of budget; `None`
+    /// (performing no measurement) once the budget is exhausted.
+    fn eval(&mut self, cfg: &Config) -> Option<f64>;
+
+    /// Whether the next `eval` is guaranteed to return `None`.
+    fn exhausted(&self) -> bool;
+}
+
+/// One evaluation performed against a shard, staged for merge.
+struct ShardRecord {
+    cfg: Config,
+    value: f64,
+    charged: bool,
+}
+
+fn measure_next(
+    source: &dyn EvalSource,
+    pulls: &mut HashMap<Config, u64>,
+    memo: &mut Option<HashMap<Config, f64>>,
+    cfg: &Config,
+) -> (f64, bool) {
+    let mut draw = |pulls: &mut HashMap<Config, u64>| {
+        let count = pulls.entry(cfg.clone()).or_insert(0);
+        let v = source.measure(cfg, *count);
+        *count += 1;
+        v
+    };
+    match memo {
+        Some(memo) => match memo.get(cfg) {
+            Some(&v) => (v, false),
+            None => {
+                let v = draw(pulls);
+                memo.insert(cfg.clone(), v);
+                (v, true)
+            }
+        },
+        None => (draw(pulls), true),
+    }
+}
+
 /// Budget-enforcing evaluation ledger: the only handle optimizers get.
 pub struct EvalLedger<'a> {
-    source: &'a mut dyn EvalSource,
+    source: &'a dyn EvalSource,
     budget: usize,
+    pool: Arc<BudgetPool>,
     history: Vec<(Config, f64)>,
     /// Best-so-far observed value after each evaluation.
     trace: Vec<f64>,
@@ -126,6 +256,8 @@ pub struct EvalLedger<'a> {
     /// hits are free: the measurement was already paid for).
     expense: f64,
     memo: Option<HashMap<Config, f64>>,
+    /// Per-configuration pull counts driving [`EvalSource::measure`].
+    pulls: HashMap<Config, u64>,
 }
 
 impl<'a> EvalLedger<'a> {
@@ -134,15 +266,17 @@ impl<'a> EvalLedger<'a> {
     /// exhaustion, so an uncapped ledger would never terminate — callers
     /// with a fixed known cost (the predictive baselines) size the
     /// budget to exactly that cost instead.
-    pub fn new(source: &'a mut dyn EvalSource, budget: usize) -> Self {
+    pub fn new(source: &'a dyn EvalSource, budget: usize) -> Self {
         EvalLedger {
             source,
             budget,
+            pool: Arc::new(BudgetPool::new(budget)),
             history: Vec::new(),
             trace: Vec::new(),
             best_idx: None,
             expense: 0.0,
             memo: None,
+            pulls: HashMap::new(),
         }
     }
 
@@ -167,33 +301,18 @@ impl<'a> EvalLedger<'a> {
         self.budget
     }
 
-    /// Evaluations still available.
+    /// Evaluations still available in the shared pool (counts budget
+    /// reserved by outstanding shards as spent).
     pub fn remaining(&self) -> usize {
-        self.budget - self.history.len()
+        self.pool.remaining()
     }
 
     pub fn exhausted(&self) -> bool {
-        self.history.len() >= self.budget
+        self.pool.remaining() == 0
     }
 
-    /// Evaluate a configuration, consuming one unit of budget. Returns
-    /// `None` — performing no measurement — once the budget is exhausted;
-    /// the ledger is the budget's enforcement point, not a convention.
-    pub fn eval(&mut self, cfg: &Config) -> Option<f64> {
-        if self.exhausted() {
-            return None;
-        }
-        let (v, charged) = match &mut self.memo {
-            Some(memo) => match memo.get(cfg) {
-                Some(&v) => (v, false),
-                None => {
-                    let v = self.source.measure(cfg);
-                    memo.insert(cfg.clone(), v);
-                    (v, true)
-                }
-            },
-            None => (self.source.measure(cfg), true),
-        };
+    /// Append one evaluation outcome to history/trace/best/expense.
+    fn record(&mut self, cfg: Config, v: f64, charged: bool) {
         if charged {
             self.expense += v;
         }
@@ -202,7 +321,18 @@ impl<'a> EvalLedger<'a> {
             self.best_idx = Some(self.history.len());
         }
         self.trace.push(best.min(v));
-        self.history.push((cfg.clone(), v));
+        self.history.push((cfg, v));
+    }
+
+    /// Evaluate a configuration, consuming one unit of budget. Returns
+    /// `None` — performing no measurement — once the budget is exhausted;
+    /// the ledger is the budget's enforcement point, not a convention.
+    pub fn eval(&mut self, cfg: &Config) -> Option<f64> {
+        if !self.pool.try_reserve() {
+            return None;
+        }
+        let (v, charged) = measure_next(self.source, &mut self.pulls, &mut self.memo, cfg);
+        self.record(cfg.clone(), v, charged);
         Some(v)
     }
 
@@ -212,6 +342,53 @@ impl<'a> EvalLedger<'a> {
     /// [`eval`](Self::eval) and stop on `None`.
     pub fn must_eval(&mut self, cfg: &Config) -> f64 {
         self.eval(cfg).expect("evaluation budget exhausted")
+    }
+
+    /// Split off `n` shards for parallel arm execution. Each shard draws
+    /// from this ledger's shared atomic [`BudgetPool`] (so shards plus
+    /// parent can never over-admit collectively) and additionally carries
+    /// a local allowance of `per_shard_budget` evaluations, extensible
+    /// per round via [`LedgerShard::grant`].
+    ///
+    /// Shards inherit the parent's pull counters and memo (if enabled) at
+    /// split time; merge folds them back. Determinism requires shards to
+    /// evaluate disjoint configuration subsets (see module docs).
+    pub fn shard(&self, n: usize, per_shard_budget: usize) -> Vec<LedgerShard<'a>> {
+        (0..n)
+            .map(|_| LedgerShard {
+                source: self.source,
+                pool: Arc::clone(&self.pool),
+                allowance: per_shard_budget,
+                records: Vec::new(),
+                pulls: self.pulls.clone(),
+                memo: self.memo.clone(),
+            })
+            .collect()
+    }
+
+    /// Drain one shard's staged records into this ledger, in the shard's
+    /// local (pull) order. Callers merge shards in canonical arm order
+    /// once per round, so the reassembled history/trace/expense/best is
+    /// identical regardless of which thread finished first. Budget was
+    /// already reserved at evaluation time; merging never re-charges it.
+    pub fn merge(&mut self, shard: &mut LedgerShard<'_>) {
+        for rec in shard.records.drain(..) {
+            if let Some(memo) = &mut self.memo {
+                memo.entry(rec.cfg.clone()).or_insert(rec.value);
+            }
+            self.record(rec.cfg, rec.value, rec.charged);
+        }
+        for (cfg, n) in &shard.pulls {
+            let count = self.pulls.entry(cfg.clone()).or_insert(0);
+            *count = (*count).max(*n);
+        }
+    }
+
+    /// [`merge`](Self::merge) every shard in slice order.
+    pub fn merge_all(&mut self, shards: &mut [LedgerShard<'_>]) {
+        for s in shards {
+            self.merge(s);
+        }
     }
 
     /// Number of evaluations performed so far.
@@ -242,6 +419,73 @@ impl<'a> EvalLedger<'a> {
     }
 }
 
+impl EvalSink for EvalLedger<'_> {
+    fn eval(&mut self, cfg: &Config) -> Option<f64> {
+        EvalLedger::eval(self, cfg)
+    }
+
+    fn exhausted(&self) -> bool {
+        EvalLedger::exhausted(self)
+    }
+}
+
+/// One arm's slice of an [`EvalLedger`]: evaluates against the shared
+/// atomic budget pool, records locally in pull order, and hands its
+/// records back through [`EvalLedger::merge`]. `Send`, so arms can run on
+/// worker threads while the parent ledger stays on the caller's thread.
+pub struct LedgerShard<'a> {
+    source: &'a dyn EvalSource,
+    pool: Arc<BudgetPool>,
+    /// Local cap: evaluations this shard may still admit (on top of the
+    /// shared pool's global cap).
+    allowance: usize,
+    /// Evaluations since the last merge, in local order.
+    records: Vec<ShardRecord>,
+    pulls: HashMap<Config, u64>,
+    memo: Option<HashMap<Config, f64>>,
+}
+
+impl LedgerShard<'_> {
+    /// Raise this shard's local allowance (e.g. a bandit round's pull
+    /// quota). The shared pool still caps globally: granting more than
+    /// the pool holds can never over-admit.
+    pub fn grant(&mut self, extra: usize) {
+        self.allowance = self.allowance.saturating_add(extra);
+    }
+
+    /// Local evaluations still admissible (ignoring the shared pool).
+    pub fn allowance(&self) -> usize {
+        self.allowance
+    }
+
+    /// Shared-pool view (same pool as the parent ledger and sibling
+    /// shards).
+    pub fn pool_remaining(&self) -> usize {
+        self.pool.remaining()
+    }
+
+    /// Records staged for the next merge.
+    pub fn pending(&self) -> usize {
+        self.records.len()
+    }
+}
+
+impl EvalSink for LedgerShard<'_> {
+    fn eval(&mut self, cfg: &Config) -> Option<f64> {
+        if self.allowance == 0 || !self.pool.try_reserve() {
+            return None;
+        }
+        self.allowance -= 1;
+        let (v, charged) = measure_next(self.source, &mut self.pulls, &mut self.memo, cfg);
+        self.records.push(ShardRecord { cfg: cfg.clone(), value: v, charged });
+        Some(v)
+    }
+
+    fn exhausted(&self) -> bool {
+        self.allowance == 0 || self.pool.remaining() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -258,8 +502,8 @@ mod tests {
     #[test]
     fn eval_consumes_budget_and_records_history() {
         let ds = ds();
-        let mut src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 9);
-        let mut led = EvalLedger::new(&mut src, 4);
+        let src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 9);
+        let mut led = EvalLedger::new(&src, 4);
         assert_eq!(led.evals(), 0);
         assert_eq!(led.remaining(), 4);
         let v = led.eval(&some_cfg()).unwrap();
@@ -273,8 +517,8 @@ mod tests {
     #[test]
     fn budget_is_physically_enforced() {
         let ds = ds();
-        let mut src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 9);
-        let mut led = EvalLedger::new(&mut src, 3);
+        let src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 9);
+        let mut led = EvalLedger::new(&src, 3);
         for _ in 0..3 {
             assert!(led.eval(&some_cfg()).is_some());
         }
@@ -290,9 +534,9 @@ mod tests {
     #[test]
     fn mean_mode_is_deterministic() {
         let ds = ds();
-        let mut a = LookupObjective::new(&ds, 3, Target::Time, MeasureMode::Mean, 1);
-        let mut b = LookupObjective::new(&ds, 3, Target::Time, MeasureMode::Mean, 999);
-        assert_eq!(a.measure(&some_cfg()), b.measure(&some_cfg()));
+        let a = LookupObjective::new(&ds, 3, Target::Time, MeasureMode::Mean, 1);
+        let b = LookupObjective::new(&ds, 3, Target::Time, MeasureMode::Mean, 999);
+        assert_eq!(a.measure(&some_cfg(), 0), b.measure(&some_cfg(), 7));
         assert!(a.deterministic());
     }
 
@@ -305,28 +549,54 @@ mod tests {
             ds.measurements(2, cid).iter().map(|&m| Target::Time.pick(m)).collect();
         let (lo, hi) = (crate::util::stats::min(&vals), crate::util::stats::max(&vals));
         for seed in 0..20 {
-            let mut o = LookupObjective::new(&ds, 2, Target::Time, MeasureMode::SingleDraw, seed);
+            let o = LookupObjective::new(&ds, 2, Target::Time, MeasureMode::SingleDraw, seed);
             assert!(!o.deterministic());
-            let v = o.measure(&cfg);
+            let v = o.measure(&cfg, 0);
             assert!(v >= lo && v <= hi);
         }
+    }
+
+    /// The measurement of (config, pull) is a pure function of the source
+    /// seed — independent of call order, call count, and thread.
+    #[test]
+    fn single_draw_is_order_independent() {
+        let ds = ds();
+        let o = LookupObjective::new(&ds, 2, Target::Time, MeasureMode::SingleDraw, 5);
+        let a = some_cfg();
+        let b = Config { provider: 1, choices: vec![0, 1, 0], nodes: 5 };
+        // Forward order.
+        let fwd: Vec<f64> =
+            vec![o.measure(&a, 0), o.measure(&a, 1), o.measure(&b, 0), o.measure(&b, 1)];
+        // Interleaved/reversed order, fresh source, same seed.
+        let o2 = LookupObjective::new(&ds, 2, Target::Time, MeasureMode::SingleDraw, 5);
+        let rev: Vec<f64> =
+            vec![o2.measure(&b, 1), o2.measure(&a, 1), o2.measure(&b, 0), o2.measure(&a, 0)];
+        assert_eq!(fwd[0], rev[3]);
+        assert_eq!(fwd[1], rev[1]);
+        assert_eq!(fwd[2], rev[2]);
+        assert_eq!(fwd[3], rev[0]);
+        // Different pulls of one config are decorrelated draws: across
+        // many pulls we must see more than one stored repetition.
+        let distinct: std::collections::HashSet<u64> =
+            (0..32).map(|p| o.measure(&a, p).to_bits()).collect();
+        assert!(distinct.len() > 1, "pull index never changed the draw");
     }
 
     #[test]
     fn p90_at_least_median() {
         let ds = ds();
-        let mut p90 = LookupObjective::new(&ds, 5, Target::Cost, MeasureMode::P90, 1);
-        let mut mean = LookupObjective::new(&ds, 5, Target::Cost, MeasureMode::Mean, 1);
+        let p90 = LookupObjective::new(&ds, 5, Target::Cost, MeasureMode::P90, 1);
+        let mean = LookupObjective::new(&ds, 5, Target::Cost, MeasureMode::Mean, 1);
         let cfg = some_cfg();
-        assert!(p90.measure(&cfg) >= mean.measure(&cfg) * 0.9);
+        assert!(p90.measure(&cfg, 0) >= mean.measure(&cfg, 0) * 0.9);
     }
 
     #[test]
     fn best_and_trace_track_minimum() {
         let ds = ds();
-        let mut src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 3);
+        let src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 3);
         let grid = ds.domain.full_grid();
-        let mut led = EvalLedger::new(&mut src, 10);
+        let mut led = EvalLedger::new(&src, 10);
         for c in grid.iter().take(10) {
             led.eval(c);
         }
@@ -342,8 +612,8 @@ mod tests {
     #[test]
     fn memo_hits_replay_value_and_consume_budget_but_not_expense() {
         let ds = ds();
-        let mut src = LookupObjective::new(&ds, 2, Target::Cost, MeasureMode::Mean, 1);
-        let mut led = EvalLedger::new(&mut src, 5).with_memo();
+        let src = LookupObjective::new(&ds, 2, Target::Cost, MeasureMode::Mean, 1);
+        let mut led = EvalLedger::new(&src, 5).with_memo();
         let cfg = some_cfg();
         let v1 = led.eval(&cfg).unwrap();
         let v2 = led.eval(&cfg).unwrap();
@@ -357,17 +627,155 @@ mod tests {
     #[should_panic(expected = "memoization requires a deterministic measure mode")]
     fn memo_refused_for_single_draw() {
         let ds = ds();
-        let mut src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::SingleDraw, 1);
-        let _ = EvalLedger::new(&mut src, 5).with_memo();
+        let src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::SingleDraw, 1);
+        let _ = EvalLedger::new(&src, 5).with_memo();
     }
 
     #[test]
     #[should_panic(expected = "evaluation budget exhausted")]
     fn must_eval_panics_rather_than_overspending() {
         let ds = ds();
-        let mut src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 1);
-        let mut led = EvalLedger::new(&mut src, 1);
+        let src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 1);
+        let mut led = EvalLedger::new(&src, 1);
         led.must_eval(&some_cfg());
         led.must_eval(&some_cfg());
+    }
+
+    #[test]
+    fn measure_mode_parse_roundtrip() {
+        for mode in [MeasureMode::SingleDraw, MeasureMode::Mean, MeasureMode::P90] {
+            assert_eq!(MeasureMode::parse(mode.name()), Some(mode));
+        }
+        assert_eq!(MeasureMode::parse("single-draw"), Some(MeasureMode::SingleDraw));
+        assert_eq!(MeasureMode::parse("median"), None);
+    }
+
+    // -- shard layer --------------------------------------------------------
+
+    /// Distinct configs of distinct providers (the bandit disjointness
+    /// contract).
+    fn provider_cfg(p: usize) -> Config {
+        let d = crate::domain::Domain::paper();
+        d.provider_grid(p)[0].clone()
+    }
+
+    #[test]
+    fn shards_share_the_pool_and_merge_in_canonical_order() {
+        let ds = ds();
+        let src = LookupObjective::new(&ds, 1, Target::Cost, MeasureMode::SingleDraw, 7);
+        let mut led = EvalLedger::new(&src, 10);
+        let mut shards = led.shard(2, 0);
+        assert_eq!(shards.len(), 2);
+        // No allowance granted yet: shards refuse.
+        assert!(shards[0].eval(&provider_cfg(0)).is_none());
+        shards[0].grant(2);
+        shards[1].grant(2);
+        // Interleave evaluations "out of order" across shards.
+        let b0 = shards[1].eval(&provider_cfg(1)).unwrap();
+        let a0 = shards[0].eval(&provider_cfg(0)).unwrap();
+        let b1 = shards[1].eval(&provider_cfg(1)).unwrap();
+        let a1 = shards[0].eval(&provider_cfg(0)).unwrap();
+        assert_eq!(led.remaining(), 6, "shard reservations hit the shared pool");
+        assert_eq!(led.evals(), 0, "nothing merged yet");
+        led.merge_all(&mut shards);
+        // Canonical order: shard 0's pulls, then shard 1's.
+        let vals: Vec<f64> = led.history().iter().map(|(_, v)| *v).collect();
+        assert_eq!(vals, vec![a0, a1, b0, b1]);
+        assert_eq!(led.evals(), 4);
+        assert_eq!(led.total_expense(), a0 + a1 + b0 + b1);
+        assert!(shards.iter().all(|s| s.pending() == 0), "merge drains records");
+    }
+
+    /// The same (config, pull) measured through a shard equals the value
+    /// the parent ledger would have measured: shard execution cannot
+    /// change measurement semantics.
+    #[test]
+    fn shard_measurements_match_direct_ledger_measurements() {
+        let ds = ds();
+        let cfg = provider_cfg(0);
+        let src = LookupObjective::new(&ds, 4, Target::Cost, MeasureMode::SingleDraw, 13);
+        let mut direct = EvalLedger::new(&src, 4);
+        let direct_vals: Vec<f64> = (0..4).map(|_| direct.eval(&cfg).unwrap()).collect();
+
+        let src2 = LookupObjective::new(&ds, 4, Target::Cost, MeasureMode::SingleDraw, 13);
+        let mut led = EvalLedger::new(&src2, 4);
+        let mut shards = led.shard(1, 4);
+        let shard_vals: Vec<f64> = (0..4).map(|_| shards[0].eval(&cfg).unwrap()).collect();
+        assert_eq!(direct_vals, shard_vals);
+    }
+
+    /// Pull counters survive merge: a config measured through a shard
+    /// continues its pull sequence when the parent (or a later shard)
+    /// measures it next.
+    #[test]
+    fn pull_counters_continue_across_merges() {
+        let ds = ds();
+        let cfg = provider_cfg(2);
+        let src = LookupObjective::new(&ds, 3, Target::Cost, MeasureMode::SingleDraw, 21);
+        // Reference: 4 sequential pulls on one ledger.
+        let mut led = EvalLedger::new(&src, 4);
+        let want: Vec<f64> = (0..4).map(|_| led.eval(&cfg).unwrap()).collect();
+
+        // Same pulls split 2 + 2 across a shard round-trip.
+        let src2 = LookupObjective::new(&ds, 3, Target::Cost, MeasureMode::SingleDraw, 21);
+        let mut led2 = EvalLedger::new(&src2, 4);
+        let mut shards = led2.shard(1, 2);
+        let mut got = vec![shards[0].eval(&cfg).unwrap(), shards[0].eval(&cfg).unwrap()];
+        led2.merge_all(&mut shards);
+        got.push(led2.eval(&cfg).unwrap());
+        got.push(led2.eval(&cfg).unwrap());
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn shard_memo_inherits_and_folds_back() {
+        let ds = ds();
+        let cfg = provider_cfg(1);
+        let src = LookupObjective::new(&ds, 2, Target::Cost, MeasureMode::Mean, 1);
+        let mut led = EvalLedger::new(&src, 6).with_memo();
+        let v0 = led.eval(&cfg).unwrap();
+        let mut shards = led.shard(1, 3);
+        // Shard sees the parent's memo: repeat eval is a hit, not a charge.
+        let v1 = shards[0].eval(&cfg).unwrap();
+        assert_eq!(v0, v1);
+        led.merge_all(&mut shards);
+        assert_eq!(led.evals(), 2);
+        assert_eq!(led.total_expense(), v0, "shard memo hit was not re-charged");
+        // And post-merge parent evals still hit the memo.
+        let v2 = led.eval(&cfg).unwrap();
+        assert_eq!(v0, v2);
+        assert_eq!(led.total_expense(), v0);
+    }
+
+    /// Concurrency stress: many shards with effectively unlimited local
+    /// allowance hammering one small pool never over-admit, and every
+    /// admitted evaluation is accounted for after merge.
+    #[test]
+    fn budget_pool_never_over_admits_under_concurrent_reservations() {
+        let ds = ds();
+        let src = LookupObjective::new(&ds, 6, Target::Cost, MeasureMode::SingleDraw, 3);
+        for (budget, n_shards) in [(100usize, 8usize), (7, 8), (1, 4), (0, 4)] {
+            let mut led = EvalLedger::new(&src, budget);
+            let shards = led.shard(n_shards, usize::MAX);
+            let mut shards = crate::util::threadpool::parallel_map_owned(
+                shards,
+                n_shards,
+                |mut shard| {
+                    let cfg = provider_cfg(0);
+                    // Try far more than the pool holds.
+                    for _ in 0..(2 * budget + 8) {
+                        let _ = shard.eval(&cfg);
+                    }
+                    shard
+                },
+            );
+            let admitted: usize = shards.iter().map(|s| s.pending()).sum();
+            assert_eq!(admitted, budget, "{n_shards} shards over/under-admitted");
+            assert_eq!(led.remaining(), 0);
+            led.merge_all(&mut shards);
+            assert_eq!(led.evals(), budget);
+            // Still nothing more to give.
+            assert!(led.eval(&provider_cfg(0)).is_none());
+        }
     }
 }

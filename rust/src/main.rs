@@ -166,6 +166,8 @@ fn cmd_optimize(args: &[String]) -> i32 {
         .opt("method", "cb-rbfopt", "optimizer name")
         .opt("budget", "33", "search budget (evaluations)")
         .opt("seed", "0", "random seed")
+        .opt("trial-workers", "1", "parallel arm workers (bandit methods; results identical)")
+        .opt("measure-mode", "single_draw", "evaluation aggregation: single_draw | mean | p90")
         .opt("dataset", "", "offline dataset CSV (empty = regenerate)")
         .opt("artifacts", "", "artifact directory (default: ./artifacts)")
         .flag("native", "use native surrogates instead of PJRT artifacts");
@@ -185,12 +187,21 @@ fn cmd_optimize(args: &[String]) -> i32 {
         fail(&format!("unknown method '{method}'"));
     }
 
+    let measure_mode = multicloud::dataset::objective::MeasureMode::parse(a.get("measure-mode"))
+        .unwrap_or_else(|| fail("bad measure-mode (single_draw | mean | p90)"));
+    let trial_workers = a.usize("trial-workers").unwrap();
+    let max_workers = multicloud::coordinator::spec::MAX_TRIAL_WORKERS;
+    if trial_workers == 0 || trial_workers > max_workers {
+        fail(&format!("trial-workers must be in 1..={max_workers}"));
+    }
     let spec = multicloud::coordinator::experiment::TrialSpec {
         method,
         workload,
         target,
         budget: a.usize("budget").unwrap(),
         seed: a.u64("seed").unwrap(),
+        trial_workers,
+        measure_mode,
     };
     let r = multicloud::coordinator::experiment::run_trial(&ds, backend.as_ref(), &spec);
     let (_, true_min) = ds.true_min(workload, target);
@@ -235,6 +246,8 @@ fn cmd_experiment(args: &[String]) -> i32 {
         0 => multicloud::util::threadpool::default_workers(),
         w => w,
     };
+    grid.trial_workers = spec.trial_workers;
+    grid.measure_mode = spec.measure_mode;
     grid.verbose = true;
     let curves = grid.run();
 

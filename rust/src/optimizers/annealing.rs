@@ -150,10 +150,10 @@ mod tests {
     fn run(name: &str, budget: usize, seed: u64) -> (SearchResult, usize) {
         let ds = OfflineDataset::generate(33, 3);
         let backend = NativeBackend;
-        let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
+        let ctx = SearchContext::new(&ds.domain, Target::Cost, &backend);
         let opt = crate::optimizers::by_name(name).unwrap();
-        let mut src = LookupObjective::new(&ds, 13, Target::Cost, MeasureMode::SingleDraw, seed);
-        let mut ledger = EvalLedger::new(&mut src, budget);
+        let src = LookupObjective::new(&ds, 13, Target::Cost, MeasureMode::SingleDraw, seed);
+        let mut ledger = EvalLedger::new(&src, budget);
         let r = opt.run(&ctx, &mut ledger, &mut Rng::new(seed));
         let e = ledger.evals();
         (r, e)
@@ -172,7 +172,7 @@ mod tests {
     fn neighbour_changes_exactly_one_coordinate_without_jump() {
         let ds = OfflineDataset::generate(34, 2);
         let backend = NativeBackend;
-        let ctx = SearchContext { domain: &ds.domain, target: Target::Time, backend: &backend };
+        let ctx = SearchContext::new(&ds.domain, Target::Time, &backend);
         let mut rng = Rng::new(3);
         let cur = Config { provider: 2, choices: vec![0, 1, 0], nodes: 3 };
         for _ in 0..200 {
@@ -190,7 +190,7 @@ mod tests {
     fn provider_jump_happens_with_probability() {
         let ds = OfflineDataset::generate(35, 2);
         let backend = NativeBackend;
-        let ctx = SearchContext { domain: &ds.domain, target: Target::Time, backend: &backend };
+        let ctx = SearchContext::new(&ds.domain, Target::Time, &backend);
         let mut rng = Rng::new(4);
         let cur = Config { provider: 0, choices: vec![0, 0], nodes: 2 };
         let jumps =

@@ -20,7 +20,7 @@
 //! no-repeat rule is its advantage).
 
 use super::{Optimizer, SearchContext, SearchResult};
-use crate::dataset::objective::EvalLedger;
+use crate::dataset::objective::{EvalLedger, EvalSink};
 use crate::dataset::Target;
 use crate::domain::{encode, Config};
 use crate::surrogate::rf::{RandomForest, RfParams};
@@ -73,7 +73,8 @@ impl BoPreset {
 }
 
 /// Steppable BO over a fixed candidate set. The `'a` lifetime ties the
-/// incremental GP session to the backend it came from.
+/// incremental GP session to the backend it came from. `Send`, so bandit
+/// optimizers can pull arm states on worker threads.
 pub struct BoState<'a> {
     pub cands: Vec<Config>,
     enc: Vec<Vec<f64>>,
@@ -83,17 +84,22 @@ pub struct BoState<'a> {
     pub(crate) ys: Vec<f64>,
     evaluated: Vec<bool>,
     rf_seed: u64,
-    /// Incremental GP session (GP presets only).
-    gp: Option<Box<dyn GpSession + 'a>>,
+    /// Incremental GP session (GP presets only), pinned to `enc` so
+    /// per-iteration predictions reuse cached candidate-distance rows.
+    gp: Option<Box<dyn GpSession + Send + 'a>>,
 }
 
 impl<'a> BoState<'a> {
     pub fn new(ctx: &SearchContext<'a>, cands: Vec<Config>, preset: BoPreset) -> BoState<'a> {
         assert!(!cands.is_empty());
-        let enc = cands.iter().map(|c| encode(ctx.domain, c)).collect();
+        let enc: Vec<Vec<f64>> = cands.iter().map(|c| encode(ctx.domain, c)).collect();
         let evaluated = vec![false; cands.len()];
         let gp = match preset.surrogate {
-            SurrogateKind::Gp => Some(ctx.backend.gp_session()),
+            SurrogateKind::Gp => {
+                let mut session = ctx.backend.gp_session();
+                session.pin_candidates(&enc);
+                Some(session)
+            }
             SurrogateKind::Rf => None,
         };
         BoState {
@@ -141,7 +147,7 @@ impl<'a> BoState<'a> {
                 .gp
                 .as_mut()
                 .expect("GP preset carries a session")
-                .predict(&self.enc),
+                .predict_pinned(),
             SurrogateKind::Rf => {
                 self.rf_seed += 1;
                 let mut rf =
@@ -162,14 +168,15 @@ impl<'a> BoState<'a> {
     }
 
     /// One BO iteration: propose, evaluate, record. Returns the observed
-    /// value, or None once the ledger's budget is exhausted (nothing is
-    /// proposed or recorded in that case).
-    pub fn step(&mut self, ledger: &mut EvalLedger, rng: &mut Rng) -> Option<f64> {
-        if ledger.exhausted() {
+    /// value, or None once the sink's budget is exhausted (nothing is
+    /// proposed or recorded in that case). The sink is a whole ledger or
+    /// one arm's [`LedgerShard`](crate::dataset::objective::LedgerShard).
+    pub fn step(&mut self, sink: &mut dyn EvalSink, rng: &mut Rng) -> Option<f64> {
+        if sink.exhausted() {
             return None;
         }
         let i = self.propose(rng);
-        let v = ledger.eval(&self.cands[i])?;
+        let v = sink.eval(&self.cands[i])?;
         self.obs_x.push(self.enc[i].clone());
         if let Some(gp) = &mut self.gp {
             gp.observe(self.enc[i].clone(), v);
@@ -206,7 +213,7 @@ impl Optimizer for FlattenedBo {
 
     fn run(&self, ctx: &SearchContext, ledger: &mut EvalLedger, rng: &mut Rng) -> SearchResult {
         let mut state = BoState::new(ctx, ctx.domain.full_grid(), (self.preset_for)(ctx.target));
-        while state.step(ledger, rng).is_some() {}
+        while state.step(&mut *ledger, rng).is_some() {}
         SearchResult::from_ledger(ledger)
     }
 }
@@ -245,7 +252,7 @@ impl Optimizer for IndependentBo {
             let share = budget / k + usize::from(p < budget % k);
             let mut state = BoState::new(ctx, ctx.domain.provider_grid(p), preset);
             for _ in 0..share {
-                if state.step(ledger, rng).is_none() {
+                if state.step(&mut *ledger, rng).is_none() {
                     break;
                 }
             }
@@ -262,7 +269,7 @@ mod tests {
     use crate::surrogate::NativeBackend;
 
     fn ctx<'a>(ds: &'a OfflineDataset, backend: &'a NativeBackend, t: Target) -> SearchContext<'a> {
-        SearchContext { domain: &ds.domain, target: t, backend }
+        SearchContext::new(&ds.domain, t, backend)
     }
 
     #[test]
@@ -270,8 +277,8 @@ mod tests {
         let ds = OfflineDataset::generate(1, 3);
         let backend = NativeBackend;
         let c = ctx(&ds, &backend, Target::Cost);
-        let mut src = LookupObjective::new(&ds, 2, Target::Cost, MeasureMode::SingleDraw, 1);
-        let mut ledger = EvalLedger::new(&mut src, 10);
+        let src = LookupObjective::new(&ds, 2, Target::Cost, MeasureMode::SingleDraw, 1);
+        let mut ledger = EvalLedger::new(&src, 10);
         let mut st = BoState::new(&c, ds.domain.provider_grid(0), BoPreset::cherrypick());
         let mut rng = Rng::new(5);
         while st.step(&mut ledger, &mut rng).is_some() {}
@@ -286,8 +293,8 @@ mod tests {
         let ds = OfflineDataset::generate(2, 3);
         let backend = NativeBackend;
         let c = ctx(&ds, &backend, Target::Cost);
-        let mut src = LookupObjective::new(&ds, 5, Target::Cost, MeasureMode::Mean, 2);
-        let mut ledger = EvalLedger::new(&mut src, 44);
+        let src = LookupObjective::new(&ds, 5, Target::Cost, MeasureMode::Mean, 2);
+        let mut ledger = EvalLedger::new(&src, 44);
         let r = FlattenedBo::cherrypick().run(&c, &mut ledger, &mut Rng::new(3));
         let (_, true_min) = ds.true_min(5, Target::Cost);
         let mean = ds.random_strategy_value(5, Target::Cost);
@@ -299,8 +306,8 @@ mod tests {
         let ds = OfflineDataset::generate(3, 3);
         let backend = NativeBackend;
         let c = ctx(&ds, &backend, Target::Time);
-        let mut src = LookupObjective::new(&ds, 1, Target::Time, MeasureMode::SingleDraw, 4);
-        let mut ledger = EvalLedger::new(&mut src, 10);
+        let src = LookupObjective::new(&ds, 1, Target::Time, MeasureMode::SingleDraw, 4);
+        let mut ledger = EvalLedger::new(&src, 10);
         IndependentBo::cherrypick().run(&c, &mut ledger, &mut Rng::new(6));
         // 10 = 4 + 3 + 3 across providers 0,1,2 in order.
         let per: Vec<usize> = (0..3)
@@ -320,8 +327,8 @@ mod tests {
         let ds = OfflineDataset::generate(4, 3);
         let backend = NativeBackend;
         let c = ctx(&ds, &backend, Target::Cost);
-        let mut src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::SingleDraw, 8);
-        let mut ledger = EvalLedger::new(&mut src, 16);
+        let src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::SingleDraw, 8);
+        let mut ledger = EvalLedger::new(&src, 16);
         let preset = BoPreset { allow_repeats: false, ..BoPreset::cherrypick() };
         let mut st = BoState::new(&c, ds.domain.provider_grid(1), preset); // 16 configs
         let mut rng = Rng::new(9);
@@ -340,8 +347,8 @@ mod tests {
         let backend = NativeBackend;
         let c = ctx(&ds, &backend, Target::Cost);
         let run = || {
-            let mut src = LookupObjective::new(&ds, 3, Target::Cost, MeasureMode::Mean, 5);
-            let mut ledger = EvalLedger::new(&mut src, 14);
+            let src = LookupObjective::new(&ds, 3, Target::Cost, MeasureMode::Mean, 5);
+            let mut ledger = EvalLedger::new(&src, 14);
             let mut st = BoState::new(&c, ds.domain.provider_grid(2), BoPreset::cherrypick());
             let mut rng = Rng::new(2);
             while st.step(&mut ledger, &mut rng).is_some() {}

@@ -15,6 +15,16 @@
 //! K = 3 and eta = 2 the total budget is exactly 11*b1, matching the
 //! paper's budget grid B in {11, 22, ..., 88}.
 //!
+//! **Parallel arm execution.** Arm pulls within a round are independent
+//! (disjoint provider grids, per-arm component state), so each round runs
+//! all active arms concurrently on `util::threadpool` when
+//! `SearchContext::arm_workers > 1`. Each arm owns a [`LedgerShard`] of
+//! the trial ledger (budget drawn from the shared atomic pool) plus its
+//! own component state and forked RNG; after the round, shards merge back
+//! in canonical arm order. Round quotas are fixed *before* the round in
+//! arm order, so a truncated budget lands on the same arms regardless of
+//! thread scheduling — parallel runs are bit-identical to sequential.
+//!
 //! Output (Algorithm 1 line 11): the best (configuration, nodes) pair *of
 //! the surviving provider* — not the globally best observation, which may
 //! sit on an eliminated arm.
@@ -22,9 +32,10 @@
 use super::bo::{BoPreset, BoState};
 use super::rbfopt::RbfOptState;
 use super::{Optimizer, SearchContext, SearchResult};
-use crate::dataset::objective::EvalLedger;
+use crate::dataset::objective::{EvalLedger, EvalSink, LedgerShard};
 use crate::domain::Config;
 use crate::util::rng::Rng;
+use crate::util::threadpool::parallel_map_owned;
 
 /// Component black-box optimizer choices evaluated in the paper.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -43,12 +54,12 @@ impl ArmState<'_> {
     fn step(
         &mut self,
         ctx: &SearchContext,
-        ledger: &mut EvalLedger,
+        sink: &mut dyn EvalSink,
         rng: &mut Rng,
     ) -> Option<f64> {
         match self {
-            ArmState::Bo(s) => s.step(ledger, rng),
-            ArmState::Rbf(s) => s.step(ctx, ledger, rng),
+            ArmState::Bo(s) => s.step(sink, rng),
+            ArmState::Rbf(s) => s.step(ctx, sink, rng),
         }
     }
 
@@ -58,6 +69,21 @@ impl ArmState<'_> {
             ArmState::Rbf(s) => s.best(),
         }
     }
+}
+
+/// Everything one arm owns for the lifetime of a trial: component state,
+/// ledger shard, decorrelated RNG, and its scheduling/elimination status.
+/// Moved onto a worker thread each round and back.
+struct ArmTask<'c, 'l> {
+    arm: ArmState<'c>,
+    shard: LedgerShard<'l>,
+    rng: Rng,
+    /// Pulls granted for the current round (set before the round starts).
+    quota: usize,
+    /// Best observed loss on this arm so far.
+    loss: f64,
+    /// Still in the tournament (not eliminated).
+    alive: bool,
 }
 
 pub struct CloudBandit {
@@ -72,7 +98,7 @@ impl CloudBandit {
         CloudBandit { component, eta }
     }
 
-    fn make_arm<'a>(&self, ctx: &SearchContext<'a>, provider: usize) -> ArmState<'a> {
+    fn make_arm<'c>(&self, ctx: &SearchContext<'c>, provider: usize) -> ArmState<'c> {
         let grid = ctx.domain.provider_grid(provider);
         match self.component {
             Component::CherryPick => {
@@ -97,6 +123,19 @@ pub fn b1_for_budget(total: usize, k: usize, eta: f64) -> usize {
     ((total as f64 / unit).floor() as usize).max(1)
 }
 
+/// Run one round's granted pulls on an arm, then refresh its loss.
+fn pull_arm(ctx: &SearchContext, task: &mut ArmTask) {
+    task.shard.grant(task.quota);
+    for _ in 0..task.quota {
+        if task.arm.step(ctx, &mut task.shard, &mut task.rng).is_none() {
+            break;
+        }
+    }
+    if let Some((_, v)) = task.arm.best() {
+        task.loss = v;
+    }
+}
+
 impl Optimizer for CloudBandit {
     fn name(&self) -> String {
         match self.component {
@@ -108,56 +147,67 @@ impl Optimizer for CloudBandit {
     fn run(&self, ctx: &SearchContext, ledger: &mut EvalLedger, rng: &mut Rng) -> SearchResult {
         let k = ctx.domain.provider_count();
         let b1 = b1_for_budget(ledger.remaining(), k, self.eta);
-        let mut arms: Vec<Option<ArmState>> =
-            (0..k).map(|p| Some(self.make_arm(ctx, p))).collect();
-        let mut losses: Vec<f64> = vec![f64::INFINITY; k];
-        let mut b_m = b1 as f64;
+        let mut tasks: Vec<ArmTask> = ledger
+            .shard(k, 0)
+            .into_iter()
+            .enumerate()
+            .map(|(p, shard)| ArmTask {
+                arm: self.make_arm(ctx, p),
+                shard,
+                rng: rng.fork(p as u64),
+                quota: 0,
+                loss: f64::INFINITY,
+                alive: true,
+            })
+            .collect();
 
-        'schedule: for _round in 0..k {
-            let active: Vec<usize> = (0..k).filter(|&a| arms[a].is_some()).collect();
-            if active.is_empty() {
-                break;
+        let mut b_m = b1 as f64;
+        for _round in 0..k {
+            // Fix round quotas in arm order before any pull: the schedule
+            // grants b_m pulls per active arm, truncated front-to-back by
+            // the remaining budget (sequential semantics — scheduling
+            // cannot shift budget between arms).
+            let pulls = b_m.round() as usize;
+            let mut left = ledger.remaining();
+            for t in tasks.iter_mut() {
+                t.quota = if t.alive { pulls.min(left) } else { 0 };
+                left -= t.quota;
             }
-            // Pull every active arm b_m times (budget permitting).
-            for &a in &active {
-                let arm = arms[a].as_mut().unwrap();
-                for _ in 0..(b_m.round() as usize) {
-                    if arm.step(ctx, ledger, rng).is_none() {
-                        if let Some((_, v)) = arm.best() {
-                            losses[a] = v;
-                        }
-                        break 'schedule;
-                    }
-                }
-                if let Some((_, v)) = arm.best() {
-                    losses[a] = v;
-                }
+            // Pull every active arm, concurrently when workers allow.
+            tasks = parallel_map_owned(tasks, ctx.arm_workers, |mut t| {
+                pull_arm(ctx, &mut t);
+                t
+            });
+            // Deterministic merge in canonical arm order.
+            for t in tasks.iter_mut() {
+                ledger.merge(&mut t.shard);
             }
             // Eliminate the worst active arm (not in the final round).
+            let active: Vec<usize> = (0..k).filter(|&a| tasks[a].alive).collect();
             if active.len() > 1 {
                 let worst = *active
                     .iter()
-                    .max_by(|&&x, &&y| losses[x].partial_cmp(&losses[y]).unwrap())
+                    .max_by(|&&x, &&y| tasks[x].loss.partial_cmp(&tasks[y].loss).unwrap())
                     .unwrap();
-                arms[worst] = None;
+                tasks[worst].alive = false;
             }
             b_m *= self.eta;
         }
 
         // Spend any integer-rounding leftover on the surviving arm.
-        let winner_idx = (0..k)
-            .filter(|&a| arms[a].is_some())
-            .min_by(|&x, &y| losses[x].partial_cmp(&losses[y]).unwrap())
+        let winner = (0..k)
+            .filter(|&a| tasks[a].alive)
+            .min_by(|&x, &y| tasks[x].loss.partial_cmp(&tasks[y].loss).unwrap())
             .expect("CloudBandit finished with no arms");
-        while !ledger.exhausted() {
-            let arm = arms[winner_idx].as_mut().unwrap();
-            if arm.step(ctx, ledger, rng).is_none() {
-                break;
-            }
+        {
+            let t = &mut tasks[winner];
+            t.shard.grant(ledger.remaining());
+            while t.arm.step(ctx, &mut t.shard, &mut t.rng).is_some() {}
+            ledger.merge(&mut t.shard);
         }
 
         let (best_config, best_value) =
-            arms[winner_idx].as_ref().unwrap().best().expect("winner arm never pulled");
+            tasks[winner].arm.best().expect("winner arm never pulled");
         let mut result = SearchResult::from_ledger(ledger);
         result.best_config = best_config;
         result.best_value = best_value;
@@ -181,14 +231,25 @@ mod tests {
         assert_eq!(b1_for_budget(5, 3, 2.0), 1); // floor, min 1
     }
 
-    fn run_cb(component: Component, budget: usize, seed: u64) -> (SearchResult, Vec<(usize, f64)>) {
+    fn run_cb_workers(
+        component: Component,
+        budget: usize,
+        seed: u64,
+        workers: usize,
+    ) -> (SearchResult, Vec<(usize, f64)>, f64) {
         let ds = OfflineDataset::generate(31, 3);
         let backend = NativeBackend;
-        let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
-        let mut src = LookupObjective::new(&ds, 22, Target::Cost, MeasureMode::SingleDraw, seed);
-        let mut ledger = EvalLedger::new(&mut src, budget);
+        let ctx = SearchContext::new(&ds.domain, Target::Cost, &backend).with_arm_workers(workers);
+        let src = LookupObjective::new(&ds, 22, Target::Cost, MeasureMode::SingleDraw, seed);
+        let mut ledger = EvalLedger::new(&src, budget);
         let r = CloudBandit::new(component, 2.0).run(&ctx, &mut ledger, &mut Rng::new(seed));
         let prov = ledger.history().iter().map(|(c, v)| (c.provider, *v)).collect();
+        let expense = ledger.total_expense();
+        (r, prov, expense)
+    }
+
+    fn run_cb(component: Component, budget: usize, seed: u64) -> (SearchResult, Vec<(usize, f64)>) {
+        let (r, prov, _) = run_cb_workers(component, budget, seed, 1);
         (r, prov)
     }
 
@@ -228,9 +289,47 @@ mod tests {
 
     #[test]
     fn works_with_budget_below_schedule_unit() {
-        // B < 11: b1 = 1, schedule truncated by the ledger's cap.
+        // B < 11: b1 = 1, schedule truncated by the shared budget pool.
         let (r, hist) = run_cb(Component::RbfOpt, 7, 3);
         assert_eq!(hist.len(), 7);
         assert!(r.best_value.is_finite());
+    }
+
+    /// The tentpole guarantee: parallel arm execution is bit-identical to
+    /// sequential — same history (configs, values, order), same best,
+    /// same expense, same trace — for both components across budgets and
+    /// seeds, including budgets that truncate the schedule mid-round.
+    #[test]
+    fn parallel_arms_are_bit_identical_to_sequential() {
+        for component in [Component::CherryPick, Component::RbfOpt] {
+            for budget in [7, 11, 22, 33] {
+                for seed in [1u64, 9] {
+                    let (r1, h1, e1) = run_cb_workers(component, budget, seed, 1);
+                    for workers in [2usize, 4] {
+                        let (rw, hw, ew) = run_cb_workers(component, budget, seed, workers);
+                        assert_eq!(
+                            h1, hw,
+                            "{component:?} B={budget} seed={seed} workers={workers}: history diverged"
+                        );
+                        assert_eq!(r1.best_config, rw.best_config);
+                        assert_eq!(r1.best_value.to_bits(), rw.best_value.to_bits());
+                        assert_eq!(r1.trace, rw.trace);
+                        assert_eq!(e1.to_bits(), ew.to_bits(), "expense diverged");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Budgets not on the 11·b1 grid truncate a round; the front-to-back
+    /// quota rule must keep the truncation on the same arms in parallel.
+    #[test]
+    fn truncated_rounds_stay_deterministic_under_parallelism() {
+        for budget in [1usize, 2, 5, 13, 29] {
+            let (_, h1, _) = run_cb_workers(Component::CherryPick, budget, 3, 1);
+            let (_, h4, _) = run_cb_workers(Component::CherryPick, budget, 3, 4);
+            assert_eq!(h1, h4, "B={budget}");
+            assert_eq!(h1.len(), budget);
+        }
     }
 }

@@ -87,9 +87,9 @@ mod tests {
     fn respects_budget_and_improves_over_first_sample() {
         let ds = OfflineDataset::generate(6, 3);
         let backend = NativeBackend;
-        let ctx = SearchContext { domain: &ds.domain, target: Target::Time, backend: &backend };
-        let mut src = LookupObjective::new(&ds, 9, Target::Time, MeasureMode::Mean, 3);
-        let mut ledger = EvalLedger::new(&mut src, 30);
+        let ctx = SearchContext::new(&ds.domain, Target::Time, &backend);
+        let src = LookupObjective::new(&ds, 9, Target::Time, MeasureMode::Mean, 3);
+        let mut ledger = EvalLedger::new(&src, 30);
         let r = CoordinateDescent.run(&ctx, &mut ledger, &mut Rng::new(4));
         assert_eq!(r.evals_used, 30);
         assert!(r.best_value <= r.trace[0]);
@@ -101,9 +101,9 @@ mod tests {
         // first (a coordinate move never switches provider).
         let ds = OfflineDataset::generate(6, 3);
         let backend = NativeBackend;
-        let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
-        let mut src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 3);
-        let mut ledger = EvalLedger::new(&mut src, 2);
+        let ctx = SearchContext::new(&ds.domain, Target::Cost, &backend);
+        let src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 3);
+        let mut ledger = EvalLedger::new(&src, 2);
         CoordinateDescent.run(&ctx, &mut ledger, &mut Rng::new(8));
         let h = ledger.history();
         assert_eq!(h.len(), 2);

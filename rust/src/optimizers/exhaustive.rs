@@ -46,11 +46,11 @@ mod tests {
     fn finds_the_true_optimum_in_mean_mode() {
         let ds = OfflineDataset::generate(4, 3);
         let backend = NativeBackend;
-        let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
-        let mut src = LookupObjective::new(&ds, 11, Target::Cost, MeasureMode::Mean, 1);
+        let ctx = SearchContext::new(&ds.domain, Target::Cost, &backend);
+        let src = LookupObjective::new(&ds, 11, Target::Cost, MeasureMode::Mean, 1);
         let budget = ExhaustiveSearch.provisioned_budget(&ctx, 0);
         assert_eq!(budget, 88);
-        let mut ledger = EvalLedger::new(&mut src, budget);
+        let mut ledger = EvalLedger::new(&src, budget);
         let r = ExhaustiveSearch.run(&ctx, &mut ledger, &mut Rng::new(2));
         assert_eq!(r.evals_used, 88);
         let (true_cfg, true_val) = ds.true_min(11, Target::Cost);
@@ -62,9 +62,9 @@ mod tests {
     fn truncated_by_a_smaller_ledger() {
         let ds = OfflineDataset::generate(4, 3);
         let backend = NativeBackend;
-        let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
-        let mut src = LookupObjective::new(&ds, 2, Target::Cost, MeasureMode::Mean, 1);
-        let mut ledger = EvalLedger::new(&mut src, 10);
+        let ctx = SearchContext::new(&ds.domain, Target::Cost, &backend);
+        let src = LookupObjective::new(&ds, 2, Target::Cost, MeasureMode::Mean, 1);
+        let mut ledger = EvalLedger::new(&src, 10);
         let r = ExhaustiveSearch.run(&ctx, &mut ledger, &mut Rng::new(3));
         assert_eq!(r.evals_used, 10, "ledger cap wins over the full sweep");
     }

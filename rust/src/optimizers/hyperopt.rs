@@ -141,9 +141,9 @@ mod tests {
     fn proposals_are_valid_configs() {
         let ds = OfflineDataset::generate(12, 3);
         let backend = NativeBackend;
-        let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
-        let mut src = LookupObjective::new(&ds, 14, Target::Cost, MeasureMode::SingleDraw, 2);
-        let mut ledger = EvalLedger::new(&mut src, 30);
+        let ctx = SearchContext::new(&ds.domain, Target::Cost, &backend);
+        let src = LookupObjective::new(&ds, 14, Target::Cost, MeasureMode::SingleDraw, 2);
+        let mut ledger = EvalLedger::new(&src, 30);
         HyperOptLite::default().run(&ctx, &mut ledger, &mut Rng::new(3));
         for (cfg, _) in ledger.history() {
             // config_id panics on invalid configs; also checks nodes value.
@@ -159,11 +159,11 @@ mod tests {
         let ds = OfflineDataset::generate(13, 3);
         let backend = NativeBackend;
         let w = 3;
-        let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
+        let ctx = SearchContext::new(&ds.domain, Target::Cost, &backend);
         let (best_cfg_id, _) = ds.true_min(w, Target::Cost);
         let best_provider = ds.domain.full_grid()[best_cfg_id].provider;
-        let mut src = LookupObjective::new(&ds, w, Target::Cost, MeasureMode::SingleDraw, 4);
-        let mut ledger = EvalLedger::new(&mut src, 60);
+        let src = LookupObjective::new(&ds, w, Target::Cost, MeasureMode::SingleDraw, 4);
+        let mut ledger = EvalLedger::new(&src, 60);
         HyperOptLite::default().run(&ctx, &mut ledger, &mut Rng::new(5));
         let late = &ledger.history()[30..];
         let hits = late.iter().filter(|(c, _)| c.provider == best_provider).count();
@@ -174,10 +174,10 @@ mod tests {
     fn deterministic_for_fixed_seed() {
         let ds = OfflineDataset::generate(14, 3);
         let backend = NativeBackend;
-        let ctx = SearchContext { domain: &ds.domain, target: Target::Time, backend: &backend };
+        let ctx = SearchContext::new(&ds.domain, Target::Time, &backend);
         let run = |seed| {
-            let mut src = LookupObjective::new(&ds, 8, Target::Time, MeasureMode::SingleDraw, 6);
-            let mut ledger = EvalLedger::new(&mut src, 25);
+            let src = LookupObjective::new(&ds, 8, Target::Time, MeasureMode::SingleDraw, 6);
+            let mut ledger = EvalLedger::new(&src, 25);
             HyperOptLite::default().run(&ctx, &mut ledger, &mut Rng::new(seed))
         };
         let (a, b) = (run(7), run(7));

@@ -40,6 +40,23 @@ pub struct SearchContext<'a> {
     pub domain: &'a Domain,
     pub target: Target,
     pub backend: &'a dyn Backend,
+    /// Worker threads for parallel arm execution inside one trial (the
+    /// bandit optimizers pull all active arms of a round concurrently).
+    /// 1 = sequential. Results are bit-identical at any setting — the
+    /// knob only trades wall-clock for cores — so it is excluded from
+    /// seed derivation everywhere.
+    pub arm_workers: usize,
+}
+
+impl<'a> SearchContext<'a> {
+    pub fn new(domain: &'a Domain, target: Target, backend: &'a dyn Backend) -> SearchContext<'a> {
+        SearchContext { domain, target, backend, arm_workers: 1 }
+    }
+
+    pub fn with_arm_workers(mut self, workers: usize) -> SearchContext<'a> {
+        self.arm_workers = workers.max(1);
+        self
+    }
 }
 
 /// Outcome of one search run.
@@ -147,9 +164,9 @@ pub(crate) mod testutil {
     ) -> (SearchResult, usize) {
         let opt = by_name(name).unwrap_or_else(|| panic!("unknown optimizer {name}"));
         let backend = NativeBackend;
-        let ctx = SearchContext { domain: &ds.domain, target, backend: &backend };
-        let mut src = LookupObjective::new(ds, workload, target, MeasureMode::SingleDraw, seed);
-        let mut ledger = EvalLedger::new(&mut src, opt.provisioned_budget(&ctx, budget));
+        let ctx = SearchContext::new(&ds.domain, target, &backend);
+        let src = LookupObjective::new(ds, workload, target, MeasureMode::SingleDraw, seed);
+        let mut ledger = EvalLedger::new(&src, opt.provisioned_budget(&ctx, budget));
         let mut rng = Rng::new(seed ^ 0xABCD);
         let res = opt.run(&ctx, &mut ledger, &mut rng);
         let evals = ledger.evals();
@@ -175,9 +192,9 @@ mod tests {
     #[test]
     fn from_ledger_tracks_best_so_far() {
         let ds = OfflineDataset::generate(77, 3);
-        let mut src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 1);
+        let src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 1);
         let grid = ds.domain.full_grid();
-        let mut ledger = EvalLedger::new(&mut src, 4);
+        let mut ledger = EvalLedger::new(&src, 4);
         for c in grid.iter().take(4) {
             ledger.eval(c);
         }
@@ -216,25 +233,30 @@ mod tests {
 
     /// The ledger is the enforcement point: even handed a smaller budget
     /// than a method would schedule for itself (including exhaustive's
-    /// full-grid sweep), no optimizer can spend past the cap.
+    /// full-grid sweep), no optimizer can spend past the cap — sequential
+    /// or with parallel arm execution (shard reservations come out of one
+    /// shared atomic pool).
     #[test]
     fn ledger_prevents_overspend_for_every_optimizer() {
         let ds = OfflineDataset::generate(5, 3);
         let backend = NativeBackend;
         for name in ALL_OPTIMIZERS {
             let opt = by_name(name).unwrap();
-            let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
-            for budget in [1usize, 5, 9] {
-                let mut src =
-                    LookupObjective::new(&ds, 1, Target::Cost, MeasureMode::SingleDraw, 7);
-                let mut ledger = EvalLedger::new(&mut src, budget);
-                let res = opt.run(&ctx, &mut ledger, &mut Rng::new(11));
-                assert!(
-                    ledger.evals() <= budget,
-                    "{name} spent {} > hard cap {budget}",
-                    ledger.evals()
-                );
-                assert!(res.best_value.is_finite(), "{name} at budget {budget}");
+            for workers in [1usize, 4] {
+                let ctx = SearchContext::new(&ds.domain, Target::Cost, &backend)
+                    .with_arm_workers(workers);
+                for budget in [1usize, 5, 9] {
+                    let src =
+                        LookupObjective::new(&ds, 1, Target::Cost, MeasureMode::SingleDraw, 7);
+                    let mut ledger = EvalLedger::new(&src, budget);
+                    let res = opt.run(&ctx, &mut ledger, &mut Rng::new(11));
+                    assert!(
+                        ledger.evals() <= budget,
+                        "{name} (workers={workers}) spent {} > hard cap {budget}",
+                        ledger.evals()
+                    );
+                    assert!(res.best_value.is_finite(), "{name} at budget {budget}");
+                }
             }
         }
     }
@@ -245,12 +267,12 @@ mod tests {
     fn memoized_ledger_does_not_double_charge_repeats() {
         let ds = OfflineDataset::generate(6, 3);
         let backend = NativeBackend;
-        let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
+        let ctx = SearchContext::new(&ds.domain, Target::Cost, &backend);
         // CherryPick allows repeat proposals, so a long run on a small
         // provider grid is guaranteed to revisit configurations.
         let opt = by_name("cherrypick-x1").unwrap();
-        let mut src = LookupObjective::new(&ds, 2, Target::Cost, MeasureMode::Mean, 3);
-        let mut ledger = EvalLedger::new(&mut src, 40).with_memo();
+        let src = LookupObjective::new(&ds, 2, Target::Cost, MeasureMode::Mean, 3);
+        let mut ledger = EvalLedger::new(&src, 40).with_memo();
         opt.run(&ctx, &mut ledger, &mut Rng::new(4));
         assert_eq!(ledger.evals(), 40);
         // Expense equals the sum over *distinct* configurations only.

@@ -32,10 +32,10 @@ mod tests {
     fn uses_exactly_the_budget_and_is_seed_deterministic() {
         let ds = OfflineDataset::generate(1, 2);
         let backend = NativeBackend;
-        let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
+        let ctx = SearchContext::new(&ds.domain, Target::Cost, &backend);
         let run = |seed| {
-            let mut src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 5);
-            let mut ledger = EvalLedger::new(&mut src, 22);
+            let src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 5);
+            let mut ledger = EvalLedger::new(&src, 22);
             RandomSearch.run(&ctx, &mut ledger, &mut Rng::new(seed))
         };
         let a = run(9);
@@ -52,9 +52,9 @@ mod tests {
     fn trace_is_monotone_nonincreasing() {
         let ds = OfflineDataset::generate(2, 2);
         let backend = NativeBackend;
-        let ctx = SearchContext { domain: &ds.domain, target: Target::Time, backend: &backend };
-        let mut src = LookupObjective::new(&ds, 3, Target::Time, MeasureMode::SingleDraw, 7);
-        let mut ledger = EvalLedger::new(&mut src, 40);
+        let ctx = SearchContext::new(&ds.domain, Target::Time, &backend);
+        let src = LookupObjective::new(&ds, 3, Target::Time, MeasureMode::SingleDraw, 7);
+        let mut ledger = EvalLedger::new(&src, 40);
         let r = RandomSearch.run(&ctx, &mut ledger, &mut Rng::new(1));
         assert!(r.trace.windows(2).all(|w| w[1] <= w[0]));
     }

@@ -12,7 +12,7 @@
 //! the AOT PJRT artifact when available.
 
 use super::{Optimizer, SearchContext, SearchResult};
-use crate::dataset::objective::EvalLedger;
+use crate::dataset::objective::{EvalLedger, EvalSink};
 use crate::domain::{encode, Config};
 use crate::util::rng::Rng;
 
@@ -99,18 +99,19 @@ impl RbfOptState {
         best.0
     }
 
-    /// One iteration; None once the ledger's budget is exhausted.
+    /// One iteration; None once the sink's budget is exhausted. The sink
+    /// is a whole ledger or one arm's shard.
     pub fn step(
         &mut self,
         ctx: &SearchContext,
-        ledger: &mut EvalLedger,
+        sink: &mut dyn EvalSink,
         rng: &mut Rng,
     ) -> Option<f64> {
-        if ledger.exhausted() {
+        if sink.exhausted() {
             return None;
         }
         let i = self.propose(ctx, rng);
-        let v = ledger.eval(&self.cands[i])?;
+        let v = sink.eval(&self.cands[i])?;
         self.iter += 1;
         self.obs_x.push(self.enc[i].clone());
         self.obs_cfg_idx.push(i);
@@ -130,7 +131,7 @@ impl Optimizer for RbfOpt {
 
     fn run(&self, ctx: &SearchContext, ledger: &mut EvalLedger, rng: &mut Rng) -> SearchResult {
         let mut st = RbfOptState::new(ctx, ctx.domain.full_grid());
-        while st.step(ctx, ledger, rng).is_some() {}
+        while st.step(ctx, &mut *ledger, rng).is_some() {}
         SearchResult::from_ledger(ledger)
     }
 }
@@ -146,9 +147,9 @@ mod tests {
     fn never_repeats_until_grid_exhausted() {
         let ds = OfflineDataset::generate(5, 3);
         let backend = NativeBackend;
-        let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
-        let mut src = LookupObjective::new(&ds, 3, Target::Cost, MeasureMode::SingleDraw, 1);
-        let mut ledger = EvalLedger::new(&mut src, 16);
+        let ctx = SearchContext::new(&ds.domain, Target::Cost, &backend);
+        let src = LookupObjective::new(&ds, 3, Target::Cost, MeasureMode::SingleDraw, 1);
+        let mut ledger = EvalLedger::new(&src, 16);
         let mut st = RbfOptState::new(&ctx, ds.domain.provider_grid(1)); // 16
         let mut rng = Rng::new(2);
         while st.step(&ctx, &mut ledger, &mut rng).is_some() {}
@@ -162,9 +163,9 @@ mod tests {
     fn outperforms_first_samples_with_budget() {
         let ds = OfflineDataset::generate(7, 3);
         let backend = NativeBackend;
-        let ctx = SearchContext { domain: &ds.domain, target: Target::Time, backend: &backend };
-        let mut src = LookupObjective::new(&ds, 12, Target::Time, MeasureMode::Mean, 3);
-        let mut ledger = EvalLedger::new(&mut src, 33);
+        let ctx = SearchContext::new(&ds.domain, Target::Time, &backend);
+        let src = LookupObjective::new(&ds, 12, Target::Time, MeasureMode::Mean, 3);
+        let mut ledger = EvalLedger::new(&src, 33);
         let r = RbfOpt.run(&ctx, &mut ledger, &mut Rng::new(4));
         assert_eq!(r.evals_used, 33);
         let mean = ds.random_strategy_value(12, Target::Time);

@@ -9,14 +9,21 @@
 //! eliminated when its optimistic bound is worse than some other arm's
 //! pessimistic bound.
 //!
+//! Like CloudBandit, each round-robin sweep pulls all active arms
+//! concurrently when `SearchContext::arm_workers > 1`: every arm owns a
+//! [`LedgerShard`] (drawing from the shared atomic budget pool), its own
+//! GP session and forked RNG; shards merge back in arm order after each
+//! sweep, so parallel runs are bit-identical to sequential ones.
+//!
 //! The paper warns the diminishing-returns assumption need not hold in
 //! clouds — and indeed RB degrades at large budgets (Fig. 3), which this
 //! implementation reproduces.
 
 use super::bo::{BoPreset, BoState};
 use super::{Optimizer, SearchContext, SearchResult};
-use crate::dataset::objective::EvalLedger;
+use crate::dataset::objective::{EvalLedger, LedgerShard};
 use crate::util::rng::Rng;
+use crate::util::threadpool::parallel_map_owned;
 
 pub struct RisingBandits {
     /// Window (pulls) for estimating the improvement slope.
@@ -31,36 +38,40 @@ impl Default for RisingBandits {
     }
 }
 
-struct Arm<'a> {
-    state: BoState<'a>,
+/// Best value of a best-so-far curve (INFINITY when unpulled).
+fn best_val(curve: &[f64]) -> f64 {
+    *curve.last().unwrap_or(&f64::INFINITY)
+}
+
+/// Improvement per pull over the trailing window (>= 0).
+fn slope(curve: &[f64], window: usize) -> f64 {
+    let n = curve.len();
+    if n < 2 {
+        return f64::INFINITY; // unknown: maximal optimism
+    }
+    let w = window.min(n - 1);
+    ((curve[n - 1 - w] - curve[n - 1]) / w as f64).max(0.0)
+}
+
+/// Optimistic final value given `remaining` further pulls.
+fn lower_bound(curve: &[f64], window: usize, remaining: usize) -> f64 {
+    let s = slope(curve, window);
+    if s.is_infinite() {
+        return f64::NEG_INFINITY;
+    }
+    best_val(curve) - s * remaining as f64
+}
+
+/// One arm's trial-lifetime state, moved onto a worker thread per sweep.
+struct Arm<'c, 'l> {
+    state: BoState<'c>,
+    shard: LedgerShard<'l>,
+    rng: Rng,
     /// Best-so-far after each pull.
     curve: Vec<f64>,
     active: bool,
-}
-
-impl Arm<'_> {
-    fn best_val(&self) -> f64 {
-        *self.curve.last().unwrap_or(&f64::INFINITY)
-    }
-
-    /// Improvement per pull over the trailing window (>= 0).
-    fn slope(&self, window: usize) -> f64 {
-        let n = self.curve.len();
-        if n < 2 {
-            return f64::INFINITY; // unknown: maximal optimism
-        }
-        let w = window.min(n - 1);
-        ((self.curve[n - 1 - w] - self.curve[n - 1]) / w as f64).max(0.0)
-    }
-
-    /// Optimistic final value given `remaining` further pulls.
-    fn lower_bound(&self, window: usize, remaining: usize) -> f64 {
-        let s = self.slope(window);
-        if s.is_infinite() {
-            return f64::NEG_INFINITY;
-        }
-        self.best_val() - s * remaining as f64
-    }
+    /// Pulls granted for the current sweep (0 or 1).
+    quota: usize,
 }
 
 impl Optimizer for RisingBandits {
@@ -70,8 +81,11 @@ impl Optimizer for RisingBandits {
 
     fn run(&self, ctx: &SearchContext, ledger: &mut EvalLedger, rng: &mut Rng) -> SearchResult {
         let k = ctx.domain.provider_count();
-        let mut arms: Vec<Arm> = (0..k)
-            .map(|p| Arm {
+        let mut arms: Vec<Arm> = ledger
+            .shard(k, 0)
+            .into_iter()
+            .enumerate()
+            .map(|(p, shard)| Arm {
                 // [22] gives no BO details; default GP-BO (EI), like our
                 // CherryPick preset but with fewer init points per arm.
                 state: BoState::new(
@@ -79,20 +93,40 @@ impl Optimizer for RisingBandits {
                     ctx.domain.provider_grid(p),
                     BoPreset { n_init: 2, ..BoPreset::cherrypick() },
                 ),
+                shard,
+                rng: rng.fork(p as u64),
                 curve: Vec::new(),
                 active: true,
+                quota: 0,
             })
             .collect();
 
-        'outer: while !ledger.exhausted() {
-            // Round-robin over active arms.
-            for a in 0..k {
-                if !arms[a].active {
-                    continue;
+        loop {
+            // Round-robin sweep: one pull per active arm, quotas fixed
+            // front-to-back within the remaining budget so truncation is
+            // scheduling-independent.
+            let mut left = ledger.remaining();
+            let mut granted = 0usize;
+            for a in arms.iter_mut() {
+                a.quota = usize::from(a.active && left > 0);
+                left -= a.quota;
+                granted += a.quota;
+            }
+            if granted == 0 {
+                break;
+            }
+            arms = parallel_map_owned(arms, ctx.arm_workers, |mut a| {
+                if a.quota > 0 {
+                    a.shard.grant(a.quota);
+                    if let Some(v) = a.state.step(&mut a.shard, &mut a.rng) {
+                        let best = best_val(&a.curve).min(v);
+                        a.curve.push(best);
+                    }
                 }
-                let Some(v) = arms[a].state.step(ledger, rng) else { break 'outer };
-                let best = arms[a].best_val().min(v);
-                arms[a].curve.push(best);
+                a
+            });
+            for a in arms.iter_mut() {
+                ledger.merge(&mut a.shard);
             }
 
             // Elimination pass (keep at least one arm).
@@ -104,11 +138,13 @@ impl Optimizer for RisingBandits {
                     if !arms[i].active || arms[i].curve.len() < self.min_pulls {
                         continue;
                     }
-                    let lb_i = arms[i].lower_bound(self.slope_window, remaining_rounds);
+                    let lb_i = lower_bound(&arms[i].curve, self.slope_window, remaining_rounds);
                     // Another active arm already guarantees a better value.
                     let dominated = (0..k).any(|j| {
-                        j != i && arms[j].active && arms[j].curve.len() >= self.min_pulls
-                            && arms[j].best_val() < lb_i
+                        j != i
+                            && arms[j].active
+                            && arms[j].curve.len() >= self.min_pulls
+                            && best_val(&arms[j].curve) < lb_i
                     });
                     if dominated {
                         to_kill = Some(i);
@@ -125,7 +161,7 @@ impl Optimizer for RisingBandits {
         let winner = arms
             .iter()
             .filter(|a| a.active && !a.curve.is_empty())
-            .min_by(|x, y| x.best_val().partial_cmp(&y.best_val()).unwrap())
+            .min_by(|x, y| best_val(&x.curve).partial_cmp(&best_val(&y.curve)).unwrap())
             .expect("no active arm with observations");
         let (cfg, val) = winner.state.best().unwrap();
         let mut result = SearchResult::from_ledger(ledger);
@@ -144,31 +180,23 @@ mod tests {
 
     #[test]
     fn slope_and_bounds() {
-        let d = crate::domain::Domain::paper();
-        let backend = NativeBackend;
-        let ctx = SearchContext { domain: &d, target: Target::Cost, backend: &backend };
-        let mk = |curve: Vec<f64>| Arm {
-            state: BoState::new(&ctx, d.provider_grid(0), BoPreset::cherrypick()),
-            curve,
-            active: true,
-        };
-        let flat = mk(vec![5.0, 5.0, 5.0, 5.0]);
-        assert_eq!(flat.slope(3), 0.0);
-        assert_eq!(flat.lower_bound(3, 100), 5.0);
-        let falling = mk(vec![10.0, 8.0, 6.0, 4.0]);
-        assert!((falling.slope(3) - 2.0).abs() < 1e-12);
-        assert!((falling.lower_bound(3, 2) - 0.0).abs() < 1e-12);
-        let fresh = mk(vec![7.0]);
-        assert_eq!(fresh.lower_bound(3, 5), f64::NEG_INFINITY);
+        let flat = [5.0, 5.0, 5.0, 5.0];
+        assert_eq!(slope(&flat, 3), 0.0);
+        assert_eq!(lower_bound(&flat, 3, 100), 5.0);
+        let falling = [10.0, 8.0, 6.0, 4.0];
+        assert!((slope(&falling, 3) - 2.0).abs() < 1e-12);
+        assert!((lower_bound(&falling, 3, 2) - 0.0).abs() < 1e-12);
+        let fresh = [7.0];
+        assert_eq!(lower_bound(&fresh, 3, 5), f64::NEG_INFINITY);
     }
 
     #[test]
     fn runs_within_budget_and_returns_valid_config() {
         let ds = OfflineDataset::generate(21, 3);
         let backend = NativeBackend;
-        let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
-        let mut src = LookupObjective::new(&ds, 17, Target::Cost, MeasureMode::SingleDraw, 1);
-        let mut ledger = EvalLedger::new(&mut src, 22);
+        let ctx = SearchContext::new(&ds.domain, Target::Cost, &backend);
+        let src = LookupObjective::new(&ds, 17, Target::Cost, MeasureMode::SingleDraw, 1);
+        let mut ledger = EvalLedger::new(&src, 22);
         let r = RisingBandits::default().run(&ctx, &mut ledger, &mut Rng::new(2));
         assert!(ledger.evals() <= 22);
         let _ = ds.domain.config_id(&r.best_config);
@@ -180,9 +208,9 @@ mod tests {
         // being pulled when one provider is clearly dominated.
         let ds = OfflineDataset::generate(22, 3);
         let backend = NativeBackend;
-        let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
-        let mut src = LookupObjective::new(&ds, 5, Target::Cost, MeasureMode::SingleDraw, 3);
-        let mut ledger = EvalLedger::new(&mut src, 66);
+        let ctx = SearchContext::new(&ds.domain, Target::Cost, &backend);
+        let src = LookupObjective::new(&ds, 5, Target::Cost, MeasureMode::SingleDraw, 3);
+        let mut ledger = EvalLedger::new(&src, 66);
         RisingBandits::default().run(&ctx, &mut ledger, &mut Rng::new(4));
         // Last 9 evaluations: how many distinct providers still pulled?
         let h = ledger.history();
@@ -191,5 +219,32 @@ mod tests {
         provs.sort_unstable();
         provs.dedup();
         assert!(provs.len() <= 3); // smoke: structure holds (often < 3)
+    }
+
+    /// Parallel sweeps are bit-identical to sequential ones — the shard
+    /// merge reassembles one canonical history regardless of scheduling.
+    #[test]
+    fn parallel_sweeps_match_sequential_bit_for_bit() {
+        let ds = OfflineDataset::generate(23, 3);
+        let backend = NativeBackend;
+        for budget in [5usize, 22, 40] {
+            for seed in [2u64, 8] {
+                let run = |workers: usize| {
+                    let ctx = SearchContext::new(&ds.domain, Target::Cost, &backend)
+                        .with_arm_workers(workers);
+                    let src =
+                        LookupObjective::new(&ds, 11, Target::Cost, MeasureMode::SingleDraw, seed);
+                    let mut ledger = EvalLedger::new(&src, budget);
+                    let r = RisingBandits::default().run(&ctx, &mut ledger, &mut Rng::new(seed));
+                    (r, ledger.history().to_vec(), ledger.total_expense())
+                };
+                let (r1, h1, e1) = run(1);
+                let (r4, h4, e4) = run(4);
+                assert_eq!(h1, h4, "B={budget} seed={seed}");
+                assert_eq!(r1.best_config, r4.best_config);
+                assert_eq!(r1.best_value.to_bits(), r4.best_value.to_bits());
+                assert_eq!(e1.to_bits(), e4.to_bits());
+            }
+        }
     }
 }

@@ -91,9 +91,9 @@ mod tests {
     fn never_repeats_configurations_within_grid() {
         let ds = OfflineDataset::generate(8, 3);
         let backend = NativeBackend;
-        let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
-        let mut src = LookupObjective::new(&ds, 6, Target::Cost, MeasureMode::SingleDraw, 1);
-        let mut ledger = EvalLedger::new(&mut src, 44);
+        let ctx = SearchContext::new(&ds.domain, Target::Cost, &backend);
+        let src = LookupObjective::new(&ds, 6, Target::Cost, MeasureMode::SingleDraw, 1);
+        let mut ledger = EvalLedger::new(&src, 44);
         SmacLite::default().run(&ctx, &mut ledger, &mut Rng::new(2));
         let mut ids: Vec<usize> =
             ledger.history().iter().map(|(c, _)| ds.domain.config_id(c)).collect();
@@ -106,10 +106,10 @@ mod tests {
     fn finds_good_configs_with_moderate_budget() {
         let ds = OfflineDataset::generate(9, 3);
         let backend = NativeBackend;
-        let ctx = SearchContext { domain: &ds.domain, target: Target::Time, backend: &backend };
+        let ctx = SearchContext::new(&ds.domain, Target::Time, &backend);
         let w = 20;
-        let mut src = LookupObjective::new(&ds, w, Target::Time, MeasureMode::Mean, 5);
-        let mut ledger = EvalLedger::new(&mut src, 33);
+        let src = LookupObjective::new(&ds, w, Target::Time, MeasureMode::Mean, 5);
+        let mut ledger = EvalLedger::new(&src, 33);
         let r = SmacLite::default().run(&ctx, &mut ledger, &mut Rng::new(6));
         let (_, tmin) = ds.true_min(w, Target::Time);
         let mean = ds.random_strategy_value(w, Target::Time);
@@ -121,9 +121,9 @@ mod tests {
     fn interleaving_disabled_still_works() {
         let ds = OfflineDataset::generate(10, 3);
         let backend = NativeBackend;
-        let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
-        let mut src = LookupObjective::new(&ds, 2, Target::Cost, MeasureMode::SingleDraw, 7);
-        let mut ledger = EvalLedger::new(&mut src, 20);
+        let ctx = SearchContext::new(&ds.domain, Target::Cost, &backend);
+        let src = LookupObjective::new(&ds, 2, Target::Cost, MeasureMode::SingleDraw, 7);
+        let mut ledger = EvalLedger::new(&src, 20);
         let opt = SmacLite { random_interleave: 0, ..Default::default() };
         let r = opt.run(&ctx, &mut ledger, &mut Rng::new(8));
         assert_eq!(r.evals_used, 20);

@@ -119,8 +119,8 @@ mod tests {
     #[test]
     fn predictor_runs_and_spends_grid_evals() {
         let ds = OfflineDataset::generate(17, 3);
-        let mut src = LookupObjective::new(&ds, 4, Target::Time, MeasureMode::Mean, 1);
-        let mut ledger = EvalLedger::new(&mut src, ds.domain.size());
+        let src = LookupObjective::new(&ds, 4, Target::Time, MeasureMode::Mean, 1);
+        let mut ledger = EvalLedger::new(&src, ds.domain.size());
         let out = LinearPredictor.run(&ds.domain, &mut ledger);
         assert_eq!(out.online_evals, 88);
         assert_eq!(ledger.evals(), 88);

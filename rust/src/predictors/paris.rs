@@ -120,8 +120,8 @@ mod tests {
     fn runs_with_six_online_evals_and_recommends_sanely() {
         let ds = OfflineDataset::generate(19, 3);
         let w = 10;
-        let mut src = LookupObjective::new(&ds, w, Target::Cost, MeasureMode::Mean, 2);
-        let mut ledger = EvalLedger::new(&mut src, 6);
+        let src = LookupObjective::new(&ds, w, Target::Cost, MeasureMode::Mean, 2);
+        let mut ledger = EvalLedger::new(&src, 6);
         let out = ParisPredictor::default().run(&ds, w, Target::Cost, &mut ledger);
         assert_eq!(out.online_evals, 6);
         assert_eq!(ledger.evals(), 6);

@@ -170,6 +170,12 @@ pub struct IncrementalGp {
     /// failed (that lengthscale then sits out model selection, exactly
     /// like a failed `fit_from_d2`).
     chol: Vec<Option<Matrix>>,
+    /// Pinned candidate set (the BO loop predicts over one fixed grid).
+    pinned: Vec<Vec<f64>>,
+    /// pinned_d2[i][j] = d²(x_i, pinned[j]); one row appended per
+    /// observation, so `predict_pinned` never recomputes the O(n·m·d)
+    /// distance pass the unpinned path pays every iteration.
+    pinned_d2: Vec<Vec<f64>>,
 }
 
 impl Default for IncrementalGp {
@@ -182,7 +188,58 @@ impl Default for IncrementalGp {
             x: Vec::new(),
             y: Vec::new(),
             chol: vec![None; LS_GRID.len()],
+            pinned: Vec::new(),
+            pinned_d2: Vec::new(),
         }
+    }
+}
+
+impl IncrementalGp {
+    /// Model selection over the cached factors: the (grid index, alpha)
+    /// maximizing the log marginal likelihood on standardized targets.
+    fn select_model(&self, z: &[f64]) -> (usize, Vec<f64>) {
+        let n = z.len();
+        let mut best: Option<(usize, Vec<f64>, f64)> = None;
+        for li in 0..LS_GRID.len() {
+            let Some(l) = &self.chol[li] else { continue };
+            let alpha = solve_upper_t(l, &solve_lower(l, z));
+            let quad: f64 = z.iter().zip(&alpha).map(|(a, b)| a * b).sum();
+            let logdet: f64 = (0..n).map(|i| l[(i, i)].ln()).sum();
+            let lml = -0.5 * quad - logdet - 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln();
+            if best.as_ref().map(|(_, _, b)| lml > *b).unwrap_or(true) {
+                best = Some((li, alpha, lml));
+            }
+        }
+        let (li, alpha, _) =
+            best.expect("GP fit failed for every lengthscale (should be impossible with jitter)");
+        (li, alpha)
+    }
+
+    /// Posterior from precomputed observation-candidate squared
+    /// distances (`d2[i][j] = d²(x_i, cand_j)`, `m` candidates).
+    fn posterior_from_d2(&mut self, m: usize, d2: &[Vec<f64>]) -> Prediction {
+        assert!(!self.x.is_empty(), "GP predict with no observations");
+        let n = self.x.len();
+        let (z, ym, ys) = standardize(&self.y);
+        let (li, alpha) = self.select_model(&z);
+        let ls = LS_GRID[li];
+        self.last_lengthscale = ls;
+        let l = self.chol[li].as_ref().unwrap();
+
+        let mut mean = Vec::with_capacity(m);
+        let mut std = Vec::with_capacity(m);
+        let mut kxc = vec![0.0; n];
+        for j in 0..m {
+            for i in 0..n {
+                kxc[i] = matern52(d2[i][j], ls, self.signal_var);
+            }
+            let mu: f64 = kxc.iter().zip(&alpha).map(|(a, b)| a * b).sum();
+            let v = solve_lower(l, &kxc);
+            let var = (self.signal_var - v.iter().map(|t| t * t).sum::<f64>()).max(1e-12);
+            mean.push(mu * ys + ym);
+            std.push(var.sqrt() * ys);
+        }
+        Prediction { mean, std }
     }
 }
 
@@ -207,46 +264,38 @@ impl GpSession for IncrementalGp {
             self.chol[li] =
                 appended.or_else(|| full_chol(&self.x, ls, self.signal_var, self.noise));
         }
+        // Grow the pinned-candidate distance cache by one row.
+        if !self.pinned.is_empty() {
+            let xn = &self.x[n_prev];
+            self.pinned_d2.push(self.pinned.iter().map(|c| sqdist(xn, c)).collect());
+        }
     }
 
     fn predict(&mut self, cands: &[Vec<f64>]) -> Prediction {
-        assert!(!self.x.is_empty(), "GP predict with no observations");
-        let n = self.x.len();
-        let (z, ym, ys) = standardize(&self.y);
+        let d2: Vec<Vec<f64>> = self
+            .x
+            .iter()
+            .map(|xi| cands.iter().map(|c| sqdist(xi, c)).collect())
+            .collect();
+        self.posterior_from_d2(cands.len(), &d2)
+    }
 
-        // Model selection: maximize the LML over cached factors.
-        let mut best: Option<(usize, Vec<f64>, f64)> = None;
-        for li in 0..LS_GRID.len() {
-            let Some(l) = &self.chol[li] else { continue };
-            let alpha = solve_upper_t(l, &solve_lower(l, &z));
-            let quad: f64 = z.iter().zip(&alpha).map(|(a, b)| a * b).sum();
-            let logdet: f64 = (0..n).map(|i| l[(i, i)].ln()).sum();
-            let lml =
-                -0.5 * quad - logdet - 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln();
-            if best.as_ref().map(|(_, _, b)| lml > *b).unwrap_or(true) {
-                best = Some((li, alpha, lml));
-            }
-        }
-        let (li, alpha, _) =
-            best.expect("GP fit failed for every lengthscale (should be impossible with jitter)");
-        let ls = LS_GRID[li];
-        self.last_lengthscale = ls;
-        let l = self.chol[li].as_ref().unwrap();
+    fn pin_candidates(&mut self, cands: &[Vec<f64>]) {
+        self.pinned = cands.to_vec();
+        self.pinned_d2 = self
+            .x
+            .iter()
+            .map(|xi| cands.iter().map(|c| sqdist(xi, c)).collect())
+            .collect();
+    }
 
-        let mut mean = Vec::with_capacity(cands.len());
-        let mut std = Vec::with_capacity(cands.len());
-        let mut kxc = vec![0.0; n];
-        for c in cands {
-            for (i, xi) in self.x.iter().enumerate() {
-                kxc[i] = matern52(sqdist(xi, c), ls, self.signal_var);
-            }
-            let mu: f64 = kxc.iter().zip(&alpha).map(|(a, b)| a * b).sum();
-            let v = solve_lower(l, &kxc);
-            let var = (self.signal_var - v.iter().map(|t| t * t).sum::<f64>()).max(1e-12);
-            mean.push(mu * ys + ym);
-            std.push(var.sqrt() * ys);
-        }
-        Prediction { mean, std }
+    fn predict_pinned(&mut self) -> Prediction {
+        assert!(!self.pinned.is_empty(), "predict_pinned without pinned candidates");
+        let d2 = std::mem::take(&mut self.pinned_d2);
+        let m = self.pinned.len();
+        let p = self.posterior_from_d2(m, &d2);
+        self.pinned_d2 = d2;
+        p
     }
 
     fn n_obs(&self) -> usize {
@@ -437,6 +486,40 @@ mod tests {
         for j in 0..x.len() {
             assert!((ps.mean[j] - pf.mean[j]).abs() < 1e-6);
             assert!((ps.std[j] - pf.std[j]).abs() < 1e-6);
+        }
+    }
+
+    /// The pinned-candidate fast path must be bit-identical to the
+    /// unpinned path: the cached d² rows are the same f64s `predict`
+    /// recomputes, fed through the same posterior code.
+    #[test]
+    fn pinned_predictions_are_bit_identical_to_unpinned() {
+        let (x, y) = toy_data(18, 4, 7);
+        let cands: Vec<Vec<f64>> = toy_data(9, 4, 8).0;
+        let mut pinned = IncrementalGp::default();
+        pinned.pin_candidates(&cands);
+        let mut plain = IncrementalGp::default();
+        for (xi, &yi) in x.iter().zip(&y) {
+            pinned.observe(xi.clone(), yi);
+            plain.observe(xi.clone(), yi);
+            let a = pinned.predict_pinned();
+            let b = plain.predict(&cands);
+            assert_eq!(pinned.last_lengthscale, plain.last_lengthscale);
+            for j in 0..cands.len() {
+                assert_eq!(a.mean[j].to_bits(), b.mean[j].to_bits());
+                assert_eq!(a.std[j].to_bits(), b.std[j].to_bits());
+            }
+        }
+        // Pinning after observations (the replay/rebuild path) agrees too.
+        let mut late = IncrementalGp::default();
+        for (xi, &yi) in x.iter().zip(&y) {
+            late.observe(xi.clone(), yi);
+        }
+        late.pin_candidates(&cands);
+        let a = late.predict_pinned();
+        let b = plain.predict(&cands);
+        for j in 0..cands.len() {
+            assert_eq!(a.mean[j].to_bits(), b.mean[j].to_bits());
         }
     }
 

@@ -40,9 +40,15 @@ pub trait Backend: Sync {
     /// one at a time and each `predict` conditions on everything so far.
     /// The default replays a full fit through [`gp_fit_predict`] (the
     /// reference semantics); `NativeBackend` overrides it with the O(n²)
-    /// incremental-Cholesky session ([`gp::IncrementalGp`]).
-    fn gp_session(&self) -> Box<dyn GpSession + '_> {
-        Box::new(ReplayGpSession { backend: self, x: Vec::new(), y: Vec::new() })
+    /// incremental-Cholesky session ([`gp::IncrementalGp`]). Sessions are
+    /// `Send` so bandit arms can carry them onto worker threads.
+    fn gp_session(&self) -> Box<dyn GpSession + Send + '_> {
+        Box::new(ReplayGpSession {
+            backend: self,
+            x: Vec::new(),
+            y: Vec::new(),
+            pinned: Vec::new(),
+        })
     }
 }
 
@@ -57,6 +63,19 @@ pub trait GpSession {
     /// Posterior mean/std over candidates given all observations so far.
     fn predict(&mut self, cands: &[Vec<f64>]) -> Prediction;
 
+    /// Pin the session to a fixed candidate set. BO loops predict over
+    /// the same grid every iteration, so sessions may precompute and
+    /// cache per-candidate state (the native session caches the
+    /// observation-candidate squared-distance rows, grown one row per
+    /// `observe`). Predictions over the pinned set come from
+    /// [`predict_pinned`](Self::predict_pinned) and are bit-identical to
+    /// `predict` on the same candidates.
+    fn pin_candidates(&mut self, cands: &[Vec<f64>]);
+
+    /// Posterior over the pinned candidate set. Panics if no set was
+    /// pinned.
+    fn predict_pinned(&mut self) -> Prediction;
+
     /// Number of observations recorded.
     fn n_obs(&self) -> usize;
 }
@@ -68,6 +87,7 @@ pub struct ReplayGpSession<'a, B: Backend + ?Sized> {
     backend: &'a B,
     x: Vec<Vec<f64>>,
     y: Vec<f64>,
+    pinned: Vec<Vec<f64>>,
 }
 
 impl<B: Backend + ?Sized> GpSession for ReplayGpSession<'_, B> {
@@ -78,6 +98,15 @@ impl<B: Backend + ?Sized> GpSession for ReplayGpSession<'_, B> {
 
     fn predict(&mut self, cands: &[Vec<f64>]) -> Prediction {
         self.backend.gp_fit_predict(&self.x, &self.y, cands)
+    }
+
+    fn pin_candidates(&mut self, cands: &[Vec<f64>]) {
+        self.pinned = cands.to_vec();
+    }
+
+    fn predict_pinned(&mut self) -> Prediction {
+        assert!(!self.pinned.is_empty(), "predict_pinned without pinned candidates");
+        self.backend.gp_fit_predict(&self.x, &self.y, &self.pinned)
     }
 
     fn n_obs(&self) -> usize {
@@ -114,7 +143,7 @@ impl Backend for NativeBackend {
         rbf::constant_prediction(x, y, cands)
     }
 
-    fn gp_session(&self) -> Box<dyn GpSession + '_> {
+    fn gp_session(&self) -> Box<dyn GpSession + Send + '_> {
         Box::new(gp::IncrementalGp::default())
     }
 }
@@ -313,6 +342,13 @@ mod tests {
         for i in 0..cands.len() {
             assert_eq!(ps.mean[i], pf.mean[i]);
             assert_eq!(ps.std[i], pf.std[i]);
+        }
+        // Pinned predictions replay the same full fit.
+        sess.pin_candidates(&cands);
+        let pp = sess.predict_pinned();
+        for i in 0..cands.len() {
+            assert_eq!(pp.mean[i], pf.mean[i]);
+            assert_eq!(pp.std[i], pf.std[i]);
         }
     }
 

@@ -23,20 +23,36 @@ where
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
+    let refs: Vec<&T> = items.iter().collect();
+    parallel_map_owned(refs, workers, |t| f(t))
+}
+
+/// Like `parallel_map` but each item is moved into `f` and the (possibly
+/// transformed) results come back in input order. This is the substrate
+/// for parallel arm execution inside one bandit trial: each arm task owns
+/// mutable state (component-optimizer state, ledger shard, RNG) that a
+/// shared-reference `parallel_map` closure could not touch.
+pub fn parallel_map_owned<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
     let n = items.len();
     if n == 0 {
         return Vec::new();
     }
     let workers = workers.max(1).min(n);
     if workers == 1 {
-        return items.iter().map(|t| f(t)).collect();
+        return items.into_iter().map(f).collect();
     }
 
     let cursor = AtomicUsize::new(0);
+    let inputs: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
     let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
-    let items_ref = &items;
     let f_ref = &f;
     let cursor_ref = &cursor;
+    let inputs_ref = &inputs;
     let slots_ref = &slots;
 
     std::thread::scope(|scope| {
@@ -47,7 +63,8 @@ where
                     if i >= n {
                         break;
                     }
-                    let r = f_ref(&items_ref[i]);
+                    let item = inputs_ref[i].lock().unwrap().take().expect("item taken twice");
+                    let r = f_ref(item);
                     *slots_ref[i].lock().unwrap() = Some(r);
                 })
             })
@@ -132,6 +149,39 @@ mod tests {
         let _ = parallel_map(vec![0usize, 1, 2], 2, |&x| {
             if x == 1 {
                 panic!("boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn owned_map_preserves_order_and_moves_state() {
+        // Each item carries mutable state the closure consumes and
+        // returns transformed.
+        let items: Vec<Vec<usize>> = (0..200).map(|i| vec![i]).collect();
+        let out = parallel_map_owned(items, 8, |mut v| {
+            v.push(v[0] * 2);
+            v
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, [i, i * 2]);
+        }
+    }
+
+    #[test]
+    fn owned_map_single_worker_and_empty() {
+        let out = parallel_map_owned(vec![1, 2, 3], 1, |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+        let empty: Vec<usize> = parallel_map_owned(Vec::<usize>::new(), 4, |x| x);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "owned boom")]
+    fn owned_map_panic_propagates() {
+        let _ = parallel_map_owned(vec![0usize, 1, 2], 2, |x| {
+            if x == 1 {
+                panic!("owned boom");
             }
             x
         });

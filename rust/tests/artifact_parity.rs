@@ -88,9 +88,9 @@ fn optimizers_run_end_to_end_on_artifact_backend() {
     let ds = OfflineDataset::generate(123, 3);
     for name in ["cherrypick-x1", "cb-rbfopt", "cb-cherrypick"] {
         let opt = by_name(name).unwrap();
-        let ctx = SearchContext { domain: &ds.domain, target: Target::Cost, backend: &backend };
-        let mut src = LookupObjective::new(&ds, 9, Target::Cost, MeasureMode::SingleDraw, 11);
-        let mut ledger = EvalLedger::new(&mut src, 22);
+        let ctx = SearchContext::new(&ds.domain, Target::Cost, &backend);
+        let src = LookupObjective::new(&ds, 9, Target::Cost, MeasureMode::SingleDraw, 11);
+        let mut ledger = EvalLedger::new(&src, 22);
         let mut rng = Rng::new(13);
         let res = opt.run(&ctx, &mut ledger, &mut rng);
         assert!(ledger.evals() <= 22);
@@ -109,9 +109,9 @@ fn artifact_and_native_agree_on_proposals_early() {
     let ds = OfflineDataset::generate(55, 3);
     let run = |b: &dyn Backend| {
         let opt = by_name("cherrypick-x1").unwrap();
-        let ctx = SearchContext { domain: &ds.domain, target: Target::Time, backend: b };
-        let mut src = LookupObjective::new(&ds, 20, Target::Time, MeasureMode::Mean, 7);
-        let mut ledger = EvalLedger::new(&mut src, 12);
+        let ctx = SearchContext::new(&ds.domain, Target::Time, b);
+        let src = LookupObjective::new(&ds, 20, Target::Time, MeasureMode::Mean, 7);
+        let mut ledger = EvalLedger::new(&src, 12);
         let mut rng = Rng::new(99);
         opt.run(&ctx, &mut ledger, &mut rng).best_value
     };

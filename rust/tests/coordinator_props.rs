@@ -31,12 +31,17 @@ fn prop_no_optimizer_exceeds_its_budget() {
             target: if g.bool() { Target::Time } else { Target::Cost },
             budget: g.usize_in(1, 40),
             seed: g.usize_in(0, 1000) as u64,
+            // Budget enforcement must hold under parallel arm execution
+            // too: shard reservations share one atomic pool.
+            trial_workers: g.usize_in(1, 4),
+            ..TrialSpec::default()
         };
         let r = run_trial(ds, &backend, &spec);
         assert!(
             r.evals <= spec.budget,
-            "{} used {} > budget {}",
+            "{} (workers={}) used {} > budget {}",
             r.spec.method,
+            spec.trial_workers,
             r.evals,
             spec.budget
         );
@@ -51,17 +56,36 @@ fn prop_trials_are_replayable() {
     let backend = NativeBackend;
     testkit::check("trial determinism", 15, |g| {
         let spec = TrialSpec {
-            method: g.pick(&["rs", "smac", "cb-rbfopt", "hyperopt"]).to_string(),
+            method: g
+                .pick(&["rs", "smac", "cb-rbfopt", "cb-cherrypick", "rb", "hyperopt"])
+                .to_string(),
             workload: g.usize_in(0, 29),
             target: Target::Cost,
             budget: g.usize_in(5, 25),
             seed: g.usize_in(0, 99) as u64,
+            ..TrialSpec::default()
         };
         let a = run_trial(ds, &backend, &spec);
         let b = run_trial(ds, &backend, &spec);
         assert_eq!(a.regret, b.regret);
         assert_eq!(a.evals, b.evals);
         assert_eq!(a.search_expense, b.search_expense);
+        // Parallel arm execution is part of the determinism contract:
+        // any worker count replays the sequential trial bit-for-bit.
+        let par = run_trial(
+            ds,
+            &backend,
+            &TrialSpec { trial_workers: g.usize_in(2, 4), ..spec.clone() },
+        );
+        assert_eq!(a.regret.to_bits(), par.regret.to_bits(), "{}", spec.method);
+        assert_eq!(a.evals, par.evals, "{}", spec.method);
+        assert_eq!(
+            a.search_expense.to_bits(),
+            par.search_expense.to_bits(),
+            "{}",
+            spec.method
+        );
+        assert_eq!(a.chosen_value.to_bits(), par.chosen_value.to_bits(), "{}", spec.method);
     });
 }
 

@@ -32,15 +32,15 @@ fn optimizers_run_on_inference_workloads() {
     let backend = NativeBackend;
     for name in ["rs", "smac", "cb-rbfopt", "hyperopt"] {
         let opt = by_name(name).unwrap();
-        let ctx = SearchContext { domain: &ds.domain, target: Target::Time, backend: &backend };
-        let mut src = multicloud::dataset::objective::LookupObjective::new(
+        let ctx = SearchContext::new(&ds.domain, Target::Time, &backend);
+        let src = multicloud::dataset::objective::LookupObjective::new(
             &ds,
             2,
             Target::Time,
             multicloud::dataset::objective::MeasureMode::SingleDraw,
             5,
         );
-        let mut ledger = multicloud::dataset::objective::EvalLedger::new(&mut src, 22);
+        let mut ledger = multicloud::dataset::objective::EvalLedger::new(&src, 22);
         let mut rng = multicloud::util::rng::Rng::new(6);
         let r = opt.run(&ctx, &mut ledger, &mut rng);
         assert_eq!(ledger.evals(), 22, "{name}");
