@@ -10,7 +10,9 @@ use crate::predictors::ernest::LinearPredictor;
 use crate::predictors::paris::ParisPredictor;
 use crate::surrogate::Backend;
 use crate::util::rng::Rng;
-use crate::util::threadpool::{default_workers, parallel_map_progress};
+use crate::util::threadpool::{
+    default_workers, parallel_map_progress, parallel_map_progress_spawn,
+};
 
 /// Names of the predictive baselines (no budget axis).
 pub const PREDICTORS: [&str; 2] = ["predict-linear", "predict-rf"];
@@ -159,7 +161,9 @@ pub struct RegretGrid<'a> {
     /// methods). Total parallelism is `workers × trial_workers`; the grid
     /// defaults to 1 so saturating the cores with trials stays the
     /// default and nested parallelism is an explicit opt-in (useful for
-    /// small grids of expensive bandit trials).
+    /// small grids of expensive bandit trials). `0` sizes it adaptively
+    /// as `max(1, cores / grid workers)` — results are bit-identical at
+    /// any setting either way.
     pub trial_workers: usize,
     /// Measure mode for every trial; deterministic modes run memoized
     /// ledgers (the "cache measurements" deployment preset).
@@ -196,6 +200,14 @@ impl<'a> RegretGrid<'a> {
         } else {
             self.workload_filter.clone()
         };
+        // Adaptive arm workers (trial_workers = 0): split the machine
+        // across the grid workers — the ROADMAP "adaptive trial_workers"
+        // sizing. Purely a latency knob; trial results are identical.
+        let trial_workers = if self.trial_workers == 0 {
+            (default_workers() / self.workers.max(1)).max(1)
+        } else {
+            self.trial_workers
+        };
         let mut specs: Vec<TrialSpec> = Vec::new();
         for target in &self.targets {
             for method in &self.methods {
@@ -215,7 +227,7 @@ impl<'a> RegretGrid<'a> {
                                 target: *target,
                                 budget,
                                 seed: seed as u64,
-                                trial_workers: self.trial_workers,
+                                trial_workers,
                                 measure_mode: self.measure_mode,
                             });
                         }
@@ -226,16 +238,21 @@ impl<'a> RegretGrid<'a> {
 
         let total = specs.len();
         let verbose = self.verbose;
-        let results: Vec<TrialResult> = parallel_map_progress(
-            specs,
-            self.workers,
-            |spec| run_trial(self.ds, self.backend, spec),
-            move |done, _| {
-                if verbose && (done % 500 == 0 || done == total) {
-                    eprintln!("  [experiment] {done}/{total} trials");
-                }
-            },
-        );
+        let run_one = |spec: &TrialSpec| run_trial(self.ds, self.backend, spec);
+        let report = move |done: usize, _: usize| {
+            if verbose && (done % 500 == 0 || done == total) {
+                eprintln!("  [experiment] {done}/{total} trials");
+            }
+        };
+        // Trials normally run on the process worker team. With nested
+        // arm workers the trial level gets dedicated threads instead: a
+        // team-executed trial would run its own arm fan-out inline (see
+        // util::threadpool), so the nested level would never engage.
+        let results: Vec<TrialResult> = if trial_workers > 1 {
+            parallel_map_progress_spawn(specs, self.workers, run_one, report)
+        } else {
+            parallel_map_progress(specs, self.workers, run_one, report)
+        };
 
         // Aggregate.
         let mut curves = Vec::new();
@@ -304,7 +321,7 @@ mod tests {
     fn trial_workers_do_not_change_results() {
         let ds = OfflineDataset::generate(40, 3);
         let backend = NativeBackend;
-        for method in ["cb-cherrypick", "cb-rbfopt", "rb"] {
+        for method in ["cb-cherrypick", "cb-rbfopt", "rb", "cherrypick-x3", "bilal-x3"] {
             let base = TrialSpec {
                 method: method.into(),
                 workload: 5,

@@ -8,54 +8,208 @@
 //!   {"op": "optimize", "workload": "kmeans:santander", "target": "cost",
 //!    "method": "cb-rbfopt", "budget": 33, "seed": 1,
 //!    "trial_workers": 3, "measure_mode": "single_draw"}
+//!   {"op": "batch", "requests": [{...}, {...}, ...]}
 //!   {"op": "list_workloads"}
 //!   {"op": "list_methods"}
+//!   {"op": "stats"}
 //!   {"op": "ping"}
 //!
-//! `trial_workers` (optional, default 1) runs the bandit optimizers'
-//! arms in parallel inside the request — results are bit-identical at
-//! any setting, only latency changes. `measure_mode` (optional, default
-//! "single_draw") selects the evaluation aggregation; deterministic
-//! modes run memoized.
+//! ## Serving architecture
+//!
+//! All requests flow through one shared [`Scheduler`]:
+//!
+//! * **One worker team per process.** Compute parallelism (bandit arm
+//!   fan-out, batch fan-out) runs on the persistent
+//!   [`global_team`](crate::util::threadpool::global_team) — no thread is
+//!   spawned per request or per bandit sweep.
+//! * **Bounded admission.** `serve` accepts connections into a bounded
+//!   queue drained by a fixed pool of connection workers
+//!   ([`Service::with_conn_workers`]); when the queue is full the
+//!   acceptor stops pulling from the TCP backlog instead of spawning
+//!   unbounded threads.
+//! * **Adaptive arm workers.** A request that leaves `trial_workers`
+//!   unset (or 0) gets `max(1, cores / in-flight requests)` arm workers —
+//!   a lone request fans its bandit arms across the machine, a busy
+//!   server leans on request-level parallelism instead. Explicit values
+//!   are honored as before. Either way results are bit-identical; the
+//!   knob only moves latency.
+//! * **Cross-request response cache.** Deterministic-mode requests
+//!   (`measure_mode` of `mean`/`p90`) are answered from a cache keyed by
+//!   (workload, target, method, budget, seed, measure_mode): a repeat
+//!   request returns the byte-identical response with zero new source
+//!   measurements. `single_draw` requests are never cached (repeat
+//!   evaluations legitimately re-draw).
+//! * **Batch op.** `{"op":"batch","requests":[...]}` fans a request list
+//!   across the team and returns per-request responses in input order;
+//!   a failing entry yields an error object in its slot without
+//!   poisoning the rest. Entries executed on team threads run their own
+//!   arm fan-out inline — request-level parallelism already saturates
+//!   the team, so per-entry arm workers would only add queue pressure.
 //!
 //! Response (optimize):
 //!   {"ok": true, "config": "gcp/family=e2/...", "value": 0.123,
 //!    "evals": 33, "search_expense": 4.56, "regret": 0.01}
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, TrySendError};
+use std::sync::{Arc, Mutex};
 
-use crate::coordinator::experiment::{run_trial, TrialSpec};
+use crate::coordinator::experiment::{run_trial, TrialSpec, PREDICTORS};
 use crate::coordinator::spec::MAX_TRIAL_WORKERS;
 use crate::dataset::objective::MeasureMode;
 use crate::dataset::{OfflineDataset, Target};
 use crate::optimizers::ALL_OPTIMIZERS;
 use crate::surrogate::Backend;
 use crate::util::json::{parse, Value};
+use crate::util::threadpool::{default_workers, global_team, parallel_map_owned, WorkerTeam};
+
+/// Largest request list one batch op accepts.
+pub const MAX_BATCH: usize = 256;
+
+/// Cache key for deterministic-mode responses. `trial_workers` is
+/// deliberately absent: worker counts never change results, so requests
+/// differing only in parallelism share one cache entry.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct ResponseKey {
+    workload: usize,
+    target: Target,
+    method: String,
+    budget: usize,
+    seed: u64,
+    mode: MeasureMode,
+}
+
+/// Process-wide request scheduler: owns the admission count, the
+/// adaptive arm-worker sizing, and the cross-request response cache.
+/// One per [`Service`]; all connections and batch entries share it.
+pub struct Scheduler {
+    /// The process compute team all request parallelism lands on.
+    team: &'static WorkerTeam,
+    in_flight: AtomicUsize,
+    cache: Mutex<HashMap<ResponseKey, Value>>,
+    cache_hits: AtomicU64,
+    trials_run: AtomicU64,
+}
+
+/// RAII in-flight marker for one admitted request.
+struct Admission<'a>(&'a Scheduler);
+
+impl Drop for Admission<'_> {
+    fn drop(&mut self) {
+        self.0.in_flight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+impl Scheduler {
+    fn new() -> Scheduler {
+        Scheduler {
+            team: global_team(),
+            in_flight: AtomicUsize::new(0),
+            cache: Mutex::new(HashMap::new()),
+            cache_hits: AtomicU64::new(0),
+            trials_run: AtomicU64::new(0),
+        }
+    }
+
+    /// Admit one request; the returned guard keeps it counted in-flight.
+    fn admit(&self) -> Admission<'_> {
+        self.in_flight.fetch_add(1, Ordering::AcqRel);
+        Admission(self)
+    }
+
+    /// Requests currently executing (including batch entries).
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Acquire)
+    }
+
+    /// Arm workers for a request that left `trial_workers` unset: divide
+    /// the machine across the requests currently in flight.
+    pub fn effective_arm_workers(&self) -> usize {
+        (default_workers() / self.in_flight().max(1)).clamp(1, MAX_TRIAL_WORKERS)
+    }
+
+    /// Worker threads in the process compute team.
+    pub fn team_threads(&self) -> usize {
+        self.team.threads()
+    }
+
+    /// Responses served straight from the cross-request cache so far.
+    pub fn cache_hits(&self) -> u64 {
+        self.cache_hits.load(Ordering::Relaxed)
+    }
+
+    /// Optimization trials actually executed (cache misses + uncacheable).
+    pub fn trials_run(&self) -> u64 {
+        self.trials_run.load(Ordering::Relaxed)
+    }
+
+    /// Deterministic-mode responses currently cached.
+    pub fn cached_responses(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    fn cache_lookup(&self, key: &ResponseKey) -> Option<Value> {
+        let hit = self.cache.lock().unwrap().get(key).cloned();
+        if hit.is_some() {
+            self.cache_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    fn cache_store(&self, key: ResponseKey, resp: Value) {
+        // First writer wins; a racing duplicate computed the identical
+        // response (deterministic mode), so either entry serves.
+        self.cache.lock().unwrap().entry(key).or_insert(resp);
+    }
+}
 
 pub struct Service {
     ds: Arc<OfflineDataset>,
     backend: Arc<dyn Backend + Send + Sync>,
+    scheduler: Scheduler,
+    conn_workers: usize,
 }
 
 impl Service {
     pub fn new(ds: Arc<OfflineDataset>, backend: Arc<dyn Backend + Send + Sync>) -> Service {
-        Service { ds, backend }
+        Service {
+            ds,
+            backend,
+            scheduler: Scheduler::new(),
+            conn_workers: default_workers().clamp(2, 32),
+        }
+    }
+
+    /// Size the connection-worker pool (the bound on concurrently served
+    /// connections; further connections wait in the accept queue).
+    pub fn with_conn_workers(mut self, workers: usize) -> Service {
+        self.conn_workers = workers.max(1);
+        self
+    }
+
+    /// The shared request scheduler (stats + sizing).
+    pub fn scheduler(&self) -> &Scheduler {
+        &self.scheduler
     }
 
     /// Handle one request line; always returns a JSON response line.
     pub fn handle(&self, line: &str) -> String {
-        match self.handle_inner(line) {
+        match parse(line)
+            .map_err(|e| format!("bad json: {e}"))
+            .and_then(|req| self.handle_request(&req, 0))
+        {
             Ok(v) => v.to_string_compact(),
             Err(e) => Value::obj(vec![("ok", false.into()), ("error", e.into())])
                 .to_string_compact(),
         }
     }
 
-    fn handle_inner(&self, line: &str) -> Result<Value, String> {
-        let req = parse(line).map_err(|e| format!("bad json: {e}"))?;
+    /// Dispatch one parsed request. `depth` guards against nested batch
+    /// ops (a batch entry may not itself be a batch).
+    fn handle_request(&self, req: &Value, depth: usize) -> Result<Value, String> {
         let op = req.get("op").and_then(|v| v.as_str()).unwrap_or("optimize");
         match op {
             "ping" => Ok(Value::obj(vec![("ok", true.into()), ("pong", true.into())])),
@@ -69,75 +223,167 @@ impl Service {
                     ALL_OPTIMIZERS.iter().map(|m| Value::str(*m)).collect();
                 Ok(Value::obj(vec![("ok", true.into()), ("methods", Value::Arr(names))]))
             }
-            "optimize" => {
-                let workload_id = req
-                    .get("workload")
-                    .and_then(|v| v.as_str())
-                    .ok_or("missing 'workload'")?;
-                let workload = self
-                    .ds
-                    .workload_index(workload_id)
-                    .ok_or_else(|| format!("unknown workload '{workload_id}'"))?;
-                let target = Target::parse(
-                    req.get("target").and_then(|v| v.as_str()).unwrap_or("cost"),
-                )
-                .ok_or("target must be 'time' or 'cost'")?;
-                let method = req
-                    .get("method")
-                    .and_then(|v| v.as_str())
-                    .unwrap_or("cb-rbfopt")
-                    .to_string();
-                let budget =
-                    req.get("budget").and_then(|v| v.as_usize()).unwrap_or(33);
-                let seed = req.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
-                if budget == 0 || budget > 10_000 {
-                    return Err("budget out of range".into());
-                }
-                let trial_workers = match req.get("trial_workers") {
-                    None => 1,
-                    Some(v) => v
-                        .as_usize()
-                        .ok_or("trial_workers must be a non-negative integer")?,
-                };
-                if trial_workers == 0 || trial_workers > MAX_TRIAL_WORKERS {
-                    return Err(format!("trial_workers must be in 1..={MAX_TRIAL_WORKERS}"));
-                }
-                let measure_mode = match req.get("measure_mode") {
-                    None => MeasureMode::SingleDraw,
-                    Some(v) => {
-                        let s = v.as_str().ok_or("measure_mode must be a string")?;
-                        MeasureMode::parse(s).ok_or_else(|| {
-                            format!("bad measure_mode '{s}' (single_draw | mean | p90)")
-                        })?
-                    }
-                };
-
-                let spec = TrialSpec {
-                    method,
-                    workload,
-                    target,
-                    budget,
-                    seed,
-                    trial_workers,
-                    measure_mode,
-                };
-                let r = run_trial(&self.ds, self.backend.as_ref(), &spec);
+            "stats" => {
+                let s = &self.scheduler;
                 Ok(Value::obj(vec![
                     ("ok", true.into()),
-                    ("workload", workload_id.into()),
-                    ("target", target.name().into()),
-                    ("method", spec.method.as_str().into()),
-                    ("value", r.chosen_value.into()),
-                    ("regret", r.regret.into()),
-                    ("evals", r.evals.into()),
-                    ("search_expense", r.search_expense.into()),
+                    ("in_flight", s.in_flight().into()),
+                    ("trials_run", (s.trials_run() as usize).into()),
+                    ("cache_hits", (s.cache_hits() as usize).into()),
+                    ("cached_responses", s.cached_responses().into()),
+                    ("team_threads", s.team_threads().into()),
+                    ("conn_workers", self.conn_workers.into()),
+                ]))
+            }
+            "optimize" => self.handle_optimize(req),
+            "batch" => {
+                if depth > 0 {
+                    return Err("batch requests cannot be nested".into());
+                }
+                let reqs = req
+                    .get("requests")
+                    .and_then(Value::as_arr)
+                    .ok_or("batch needs a 'requests' array")?;
+                if reqs.is_empty() {
+                    return Err("batch 'requests' is empty".into());
+                }
+                if reqs.len() > MAX_BATCH {
+                    return Err(format!("batch larger than {MAX_BATCH} requests"));
+                }
+                // Fan the entries across the team; every entry yields a
+                // response in its input slot (errors become error
+                // objects, never poison siblings).
+                let items: Vec<&Value> = reqs.iter().collect();
+                let responses = parallel_map_owned(items, default_workers(), |r| {
+                    // Contain panics per entry: one panicking trial must
+                    // produce an error object in its own slot, not
+                    // collapse the sibling responses.
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        self.handle_request(r, depth + 1)
+                    }))
+                    .unwrap_or_else(|_| Err("internal error handling request".into()))
+                    .unwrap_or_else(|e| {
+                        Value::obj(vec![("ok", false.into()), ("error", e.into())])
+                    })
+                });
+                Ok(Value::obj(vec![
+                    ("ok", true.into()),
+                    ("responses", Value::Arr(responses)),
                 ]))
             }
             other => Err(format!("unknown op '{other}'")),
         }
     }
 
+    fn handle_optimize(&self, req: &Value) -> Result<Value, String> {
+        let workload_id = req
+            .get("workload")
+            .and_then(|v| v.as_str())
+            .ok_or("missing 'workload'")?;
+        let workload = self
+            .ds
+            .workload_index(workload_id)
+            .ok_or_else(|| format!("unknown workload '{workload_id}'"))?;
+        let target = Target::parse(
+            req.get("target").and_then(|v| v.as_str()).unwrap_or("cost"),
+        )
+        .ok_or("target must be 'time' or 'cost'")?;
+        let method = req
+            .get("method")
+            .and_then(|v| v.as_str())
+            .unwrap_or("cb-rbfopt")
+            .to_string();
+        // Validate here: `run_trial` panics on unknown methods, and a
+        // panic would kill a pooled connection worker.
+        if !ALL_OPTIMIZERS.contains(&method.as_str()) && !PREDICTORS.contains(&method.as_str()) {
+            return Err(format!("unknown method '{method}'"));
+        }
+        let budget = req.get("budget").and_then(|v| v.as_usize()).unwrap_or(33);
+        let seed = req.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        if budget == 0 || budget > 10_000 {
+            return Err("budget out of range".into());
+        }
+        // 0 (or absent) = adaptive: sized below, after admission.
+        let trial_workers = match req.get("trial_workers") {
+            None => 0,
+            Some(v) => v
+                .as_usize()
+                .ok_or("trial_workers must be a non-negative integer")?,
+        };
+        if trial_workers > MAX_TRIAL_WORKERS {
+            return Err(format!(
+                "trial_workers must be in 0..={MAX_TRIAL_WORKERS} (0 = adaptive)"
+            ));
+        }
+        let measure_mode = match req.get("measure_mode") {
+            None => MeasureMode::SingleDraw,
+            Some(v) => {
+                let s = v.as_str().ok_or("measure_mode must be a string")?;
+                MeasureMode::parse(s).ok_or_else(|| {
+                    format!("bad measure_mode '{s}' (single_draw | mean | p90)")
+                })?
+            }
+        };
+
+        // Count this request in-flight from here on: the adaptive sizing
+        // below divides the machine by what is actually running.
+        let _admission = self.scheduler.admit();
+
+        // Deterministic modes answer repeats from the response cache —
+        // zero new measurements, byte-identical response.
+        let key = ResponseKey {
+            workload,
+            target,
+            method: method.clone(),
+            budget,
+            seed,
+            mode: measure_mode,
+        };
+        if measure_mode.deterministic() {
+            if let Some(hit) = self.scheduler.cache_lookup(&key) {
+                return Ok(hit);
+            }
+        }
+
+        let trial_workers = if trial_workers == 0 {
+            self.scheduler.effective_arm_workers()
+        } else {
+            trial_workers
+        };
+        let spec = TrialSpec {
+            method,
+            workload,
+            target,
+            budget,
+            seed,
+            trial_workers,
+            measure_mode,
+        };
+        let r = run_trial(&self.ds, self.backend.as_ref(), &spec);
+        self.scheduler.trials_run.fetch_add(1, Ordering::Relaxed);
+        let resp = Value::obj(vec![
+            ("ok", true.into()),
+            ("workload", workload_id.into()),
+            ("target", target.name().into()),
+            ("method", spec.method.as_str().into()),
+            ("value", r.chosen_value.into()),
+            ("regret", r.regret.into()),
+            ("evals", r.evals.into()),
+            ("search_expense", r.search_expense.into()),
+        ]);
+        if measure_mode.deterministic() {
+            self.scheduler.cache_store(key, resp.clone());
+        }
+        Ok(resp)
+    }
+
     /// Serve until `stop` is set. Returns the bound local port.
+    ///
+    /// Bounded accept loop: connections are queued (capacity 2× the
+    /// connection-worker pool) and served by a fixed pool of persistent
+    /// connection workers; when the queue is full the acceptor simply
+    /// stops draining the TCP backlog — admission control instead of a
+    /// thread per connection.
     pub fn serve(
         self: Arc<Self>,
         addr: &str,
@@ -148,14 +394,43 @@ impl Service {
         listener.set_nonblocking(true)?;
         let svc = self;
         let handle = std::thread::spawn(move || {
-            let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+            let n_workers = svc.conn_workers.max(1);
+            let (tx, rx) = sync_channel::<TcpStream>(2 * n_workers);
+            let rx = Arc::new(Mutex::new(rx));
+            let workers: Vec<_> = (0..n_workers)
+                .map(|_| {
+                    let rx = Arc::clone(&rx);
+                    let svc = svc.clone();
+                    std::thread::spawn(move || loop {
+                        // Guard is a temporary: held while popping only.
+                        let conn = rx.lock().unwrap().recv();
+                        match conn {
+                            Ok(stream) => {
+                                let _ = handle_conn(&svc, stream);
+                            }
+                            Err(_) => break, // acceptor gone: shutdown
+                        }
+                    })
+                })
+                .collect();
+
             while !stop.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
-                        let svc = svc.clone();
-                        workers.push(std::thread::spawn(move || {
-                            let _ = handle_conn(&svc, stream);
-                        }));
+                        let mut pending = Some(stream);
+                        while let Some(s) = pending.take() {
+                            match tx.try_send(s) {
+                                Ok(()) => {}
+                                Err(TrySendError::Full(s)) => {
+                                    if stop.load(Ordering::Relaxed) {
+                                        break; // shed on shutdown
+                                    }
+                                    std::thread::sleep(std::time::Duration::from_millis(5));
+                                    pending = Some(s);
+                                }
+                                Err(TrySendError::Disconnected(_)) => break,
+                            }
+                        }
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         std::thread::sleep(std::time::Duration::from_millis(20));
@@ -163,6 +438,7 @@ impl Service {
                     Err(_) => break,
                 }
             }
+            drop(tx); // close the queue: workers drain and exit
             for w in workers {
                 let _ = w.join();
             }
@@ -180,7 +456,17 @@ fn handle_conn(svc: &Service, stream: TcpStream) -> std::io::Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        let resp = svc.handle(&line);
+        // Connection workers are a fixed pool: a panic escaping here
+        // would permanently shrink it, so any unexpected panic in the
+        // request path degrades to an error response instead.
+        let resp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| svc.handle(&line)))
+            .unwrap_or_else(|_| {
+                Value::obj(vec![
+                    ("ok", false.into()),
+                    ("error", "internal error handling request".into()),
+                ])
+                .to_string_compact()
+            });
         writer.write_all(resp.as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
@@ -206,6 +492,8 @@ mod tests {
         assert!(w.contains("kmeans:santander"), "{w}");
         let m = svc.handle(r#"{"op":"list_methods"}"#);
         assert!(m.contains("cb-rbfopt"), "{m}");
+        let s = svc.handle(r#"{"op":"stats"}"#);
+        assert!(s.contains("team_threads"), "{s}");
     }
 
     #[test]
@@ -220,19 +508,24 @@ mod tests {
         assert!(v.get("value").unwrap().as_f64().unwrap() > 0.0);
     }
 
-    /// `trial_workers` changes request latency, never the answer.
+    /// `trial_workers` changes request latency, never the answer — and
+    /// leaving it unset (adaptive sizing) answers identically too.
     #[test]
     fn parallel_optimize_requests_match_sequential() {
         let svc = service();
-        let req = |workers: usize| {
+        let req = |workers: &str| {
             format!(
-                r#"{{"op":"optimize","workload":"kmeans:buzz","target":"cost","method":"cb-rbfopt","budget":22,"seed":5,"trial_workers":{workers}}}"#
+                r#"{{"op":"optimize","workload":"kmeans:buzz","target":"cost","method":"cb-rbfopt","budget":22,"seed":5{workers}}}"#
             )
         };
-        let seq = svc.handle(&req(1));
-        let par = svc.handle(&req(4));
+        let seq = svc.handle(&req(r#","trial_workers":1"#));
+        let par = svc.handle(&req(r#","trial_workers":4"#));
+        let adaptive = svc.handle(&req(""));
+        let auto = svc.handle(&req(r#","trial_workers":0"#));
         assert!(seq.contains("\"ok\":true") || seq.contains("\"ok\": true"), "{seq}");
         assert_eq!(seq, par, "trial_workers changed the response");
+        assert_eq!(seq, adaptive, "adaptive sizing changed the response");
+        assert_eq!(seq, auto, "trial_workers=0 changed the response");
     }
 
     #[test]
@@ -246,6 +539,169 @@ mod tests {
         assert_eq!(v.get("evals").unwrap().as_usize(), Some(95));
     }
 
+    /// The cross-request cache: a repeated deterministic-mode request is
+    /// answered byte-identically with zero new source measurements; a
+    /// `single_draw` request is never cached.
+    #[test]
+    fn repeated_deterministic_request_is_served_from_cache() {
+        let svc = service();
+        let req = r#"{"op":"optimize","workload":"kmeans:buzz","target":"cost","method":"rs","budget":14,"seed":7,"measure_mode":"mean"}"#;
+        let first = svc.handle(req);
+        assert!(first.contains("\"ok\":true"), "{first}");
+        assert_eq!(svc.scheduler().cache_hits(), 0);
+        let trials_before = svc.scheduler().trials_run();
+        let reads_before = svc.ds.measurement_reads();
+        let second = svc.handle(req);
+        assert_eq!(first, second, "cached response must be byte-identical");
+        assert_eq!(svc.scheduler().cache_hits(), 1, "second request must hit the cache");
+        assert_eq!(svc.scheduler().trials_run(), trials_before, "no new trial");
+        assert_eq!(
+            svc.ds.measurement_reads(),
+            reads_before,
+            "cached response performed source measurements"
+        );
+        // Same key fields but a different seed is a different entry.
+        let other = svc.handle(
+            r#"{"op":"optimize","workload":"kmeans:buzz","target":"cost","method":"rs","budget":14,"seed":8,"measure_mode":"mean"}"#,
+        );
+        assert!(other.contains("\"ok\":true"));
+        assert_eq!(svc.scheduler().cache_hits(), 1);
+        // SingleDraw is uncacheable: repeating it runs a fresh trial.
+        let sd = r#"{"op":"optimize","workload":"kmeans:buzz","target":"cost","method":"rs","budget":5,"seed":7}"#;
+        let a = svc.handle(sd);
+        let trials_mid = svc.scheduler().trials_run();
+        let b = svc.handle(sd);
+        assert_eq!(a, b, "SingleDraw is still deterministic per spec");
+        assert_eq!(svc.scheduler().trials_run(), trials_mid + 1, "SingleDraw reruns");
+        assert_eq!(svc.scheduler().cache_hits(), 1);
+    }
+
+    /// N client threads hammering one Service with a mixed op workload
+    /// get responses byte-identical to serial execution on a fresh
+    /// service.
+    #[test]
+    fn concurrent_mixed_ops_match_serial_execution() {
+        let mixed: Vec<String> = {
+            let mut v = vec![
+                r#"{"op":"ping"}"#.to_string(),
+                r#"{"op":"list_workloads"}"#.to_string(),
+                r#"{"op":"list_methods"}"#.to_string(),
+                r#"{"op":"optimize","workload":"kmeans:buzz","method":"rs","budget":9,"seed":1}"#.to_string(),
+                r#"{"op":"optimize","workload":"kmeans:buzz","method":"cb-rbfopt","budget":11,"seed":2,"trial_workers":2}"#.to_string(),
+                r#"{"op":"optimize","workload":"xgboost:credit_card","method":"rb","budget":12,"seed":3,"measure_mode":"mean"}"#.to_string(),
+                r#"{"op":"optimize","workload":"kmeans:buzz","method":"cherrypick-x3","budget":10,"seed":4,"measure_mode":"p90"}"#.to_string(),
+                r#"{"op":"optimize","workload":"nope"}"#.to_string(),
+            ];
+            // Repeats exercise the response cache under contention.
+            v.push(v[5].clone());
+            v.push(v[6].clone());
+            v
+        };
+        // Serial reference on a fresh service.
+        let serial_svc = service();
+        let expected: Vec<String> = mixed.iter().map(|r| serial_svc.handle(r)).collect();
+
+        let svc = Arc::new(service());
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4)
+                .map(|t| {
+                    let svc = Arc::clone(&svc);
+                    let mixed = &mixed;
+                    let expected = &expected;
+                    scope.spawn(move || {
+                        // Each thread replays the whole workload, rotated
+                        // so threads collide on different ops at once.
+                        for i in 0..mixed.len() {
+                            let j = (i + t) % mixed.len();
+                            let got = svc.handle(&mixed[j]);
+                            assert_eq!(
+                                got, expected[j],
+                                "thread {t} request {j} diverged from serial"
+                            );
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+    }
+
+    /// The batch op fans entries across the team and answers each slot
+    /// exactly as an individual request would, in input order.
+    #[test]
+    fn batch_op_matches_individual_requests() {
+        let entries = [
+            r#"{"op":"optimize","workload":"kmeans:buzz","method":"rs","budget":7,"seed":1}"#,
+            r#"{"op":"optimize","workload":"kmeans:buzz","method":"cb-cherrypick","budget":11,"seed":2}"#,
+            r#"{"op":"optimize","workload":"xgboost:credit_card","method":"rb","budget":9,"seed":3,"measure_mode":"mean"}"#,
+            r#"{"op":"ping"}"#,
+            r#"{"op":"optimize","workload":"nope:nope"}"#,
+        ];
+        let individual_svc = service();
+        let expected: Vec<String> =
+            entries.iter().map(|r| individual_svc.handle(r)).collect();
+
+        let svc = service();
+        let batch = format!(r#"{{"op":"batch","requests":[{}]}}"#, entries.join(","));
+        let resp = svc.handle(&batch);
+        let v = parse(&resp).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true), "{resp}");
+        let responses = v.get("responses").unwrap().as_arr().unwrap();
+        assert_eq!(responses.len(), entries.len());
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(
+                r.to_string_compact(),
+                expected[i],
+                "batch slot {i} diverged from the individual request"
+            );
+        }
+        // The error entry failed without poisoning its siblings.
+        assert_eq!(responses[4].get("ok").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn batch_validation_errors() {
+        let svc = service();
+        for bad in [
+            r#"{"op":"batch"}"#,
+            r#"{"op":"batch","requests":[]}"#,
+            r#"{"op":"batch","requests":"x"}"#,
+            r#"{"op":"batch","requests":[{"op":"batch","requests":[{"op":"ping"}]}]}"#,
+        ] {
+            let resp = svc.handle(bad);
+            let v = parse(&resp).unwrap();
+            if bad.contains("\"requests\":[{") {
+                // Outer batch is fine; the nested entry must error.
+                let rs = v.get("responses").unwrap().as_arr().unwrap();
+                assert_eq!(rs[0].get("ok").unwrap().as_bool(), Some(false), "{resp}");
+            } else {
+                assert_eq!(v.get("ok").unwrap().as_bool(), Some(false), "{bad} -> {resp}");
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_sizing_tracks_in_flight_requests() {
+        let svc = service();
+        let s = svc.scheduler();
+        assert_eq!(s.in_flight(), 0);
+        let cores = default_workers();
+        {
+            let _a = s.admit();
+            assert_eq!(s.in_flight(), 1);
+            assert_eq!(s.effective_arm_workers(), cores.clamp(1, MAX_TRIAL_WORKERS));
+            let _b = s.admit();
+            assert_eq!(s.in_flight(), 2);
+            assert_eq!(
+                s.effective_arm_workers(),
+                (cores / 2).clamp(1, MAX_TRIAL_WORKERS)
+            );
+        }
+        assert_eq!(s.in_flight(), 0, "admission guards must release");
+    }
+
     #[test]
     fn malformed_requests_get_errors_not_panics() {
         let svc = service();
@@ -253,9 +709,9 @@ mod tests {
             "not json",
             r#"{"op":"optimize"}"#,
             r#"{"op":"optimize","workload":"nope:nope"}"#,
+            r#"{"op":"optimize","workload":"kmeans:buzz","method":"warp-drive"}"#,
             r#"{"op":"optimize","workload":"kmeans:buzz","target":"speed"}"#,
             r#"{"op":"optimize","workload":"kmeans:buzz","budget":0}"#,
-            r#"{"op":"optimize","workload":"kmeans:buzz","trial_workers":0}"#,
             r#"{"op":"optimize","workload":"kmeans:buzz","trial_workers":9999}"#,
             r#"{"op":"optimize","workload":"kmeans:buzz","trial_workers":"4"}"#,
             r#"{"op":"optimize","workload":"kmeans:buzz","trial_workers":-2}"#,
@@ -282,6 +738,38 @@ mod tests {
             BufReader::new(conn.try_clone().unwrap()).read_line(&mut line).unwrap();
             assert!(line.contains("pong"), "{line}");
         }
+        stop.store(true, Ordering::Relaxed);
+        handle.join().unwrap();
+    }
+
+    /// More concurrent connections than connection workers: the bounded
+    /// accept loop queues the overflow and still answers everyone.
+    #[test]
+    fn bounded_conn_pool_serves_more_clients_than_workers() {
+        use std::io::{BufRead, BufReader, Write};
+        let svc = Arc::new(service().with_conn_workers(2));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (port, handle) = svc.clone().serve("127.0.0.1:0", stop.clone()).unwrap();
+        std::thread::scope(|scope| {
+            let joins: Vec<_> = (0..8)
+                .map(|i| {
+                    scope.spawn(move || {
+                        let mut conn =
+                            std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+                        let req = format!(
+                            "{{\"op\":\"optimize\",\"workload\":\"kmeans:buzz\",\"method\":\"rs\",\"budget\":5,\"seed\":{i}}}\n"
+                        );
+                        conn.write_all(req.as_bytes()).unwrap();
+                        let mut line = String::new();
+                        BufReader::new(conn).read_line(&mut line).unwrap();
+                        assert!(line.contains("\"ok\":true"), "{line}");
+                    })
+                })
+                .collect();
+            for j in joins {
+                j.join().unwrap();
+            }
+        });
         stop.store(true, Ordering::Relaxed);
         handle.join().unwrap();
     }

@@ -17,7 +17,8 @@
 //! `workloads` is optional (default: all 30). Optional knobs:
 //! `"measure_mode": "single_draw" | "mean" | "p90"` (deterministic modes
 //! run memoized ledgers) and `"trial_workers": N` (parallel arm execution
-//! inside each bandit trial; results are identical at any setting).
+//! inside each bandit trial; results are identical at any setting —
+//! `0` sizes it adaptively as `max(1, cores / grid workers)`).
 //! Methods are validated against the optimizer registry + predictive
 //! baselines at parse time so a bad spec fails before any compute is
 //! spent.
@@ -43,7 +44,9 @@ pub struct ExperimentSpec {
     pub workloads: Vec<String>,
     /// Measurement aggregation per evaluation (default `single_draw`).
     pub measure_mode: MeasureMode,
-    /// Arm workers per trial (default 1 = sequential arms).
+    /// Arm workers per trial (default 1 = sequential arms; 0 = adaptive:
+    /// the grid sizes it as `max(1, cores / grid workers)`). Results are
+    /// bit-identical at any setting.
     pub trial_workers: usize,
 }
 
@@ -128,8 +131,10 @@ impl ExperimentSpec {
             None => 1,
             Some(w) => w.as_usize().ok_or("trial_workers must be a non-negative integer")?,
         };
-        if trial_workers == 0 || trial_workers > MAX_TRIAL_WORKERS {
-            return Err(format!("trial_workers must be in 1..={MAX_TRIAL_WORKERS}"));
+        if trial_workers > MAX_TRIAL_WORKERS {
+            return Err(format!(
+                "trial_workers must be in 0..={MAX_TRIAL_WORKERS} (0 = adaptive)"
+            ));
         }
 
         Ok(ExperimentSpec {
@@ -188,6 +193,10 @@ mod tests {
         .unwrap();
         assert_eq!(s.measure_mode, MeasureMode::Mean);
         assert_eq!(s.trial_workers, 4);
+        // 0 = adaptive sizing, resolved by the grid at run time.
+        let auto =
+            ExperimentSpec::parse(r#"{"methods":["rs"],"trial_workers":0}"#).unwrap();
+        assert_eq!(auto.trial_workers, 0);
     }
 
     #[test]
@@ -198,8 +207,8 @@ mod tests {
         assert!(ExperimentSpec::parse(r#"{"methods":["rs"],"seeds":0}"#).is_err());
         assert!(ExperimentSpec::parse(r#"{"methods":["rs"],"targets":["speed"]}"#).is_err());
         assert!(ExperimentSpec::parse(r#"{"methods":["rs"],"measure_mode":"median"}"#).is_err());
-        assert!(ExperimentSpec::parse(r#"{"methods":["rs"],"trial_workers":0}"#).is_err());
         assert!(ExperimentSpec::parse(r#"{"methods":["rs"],"trial_workers":1000}"#).is_err());
+        assert!(ExperimentSpec::parse(r#"{"methods":["rs"],"trial_workers":-1}"#).is_err());
         assert!(ExperimentSpec::parse("not json").is_err());
     }
 

@@ -56,6 +56,13 @@ pub struct OfflineDataset {
     pub reps: usize,
     /// data[workload][config_id][rep] = (runtime_s, cost_usd)
     data: Vec<Vec<Vec<(f64, f64)>>>,
+    /// Source measurements performed by the *evaluation path*
+    /// ([`objective::LookupObjective::measure`] bumps this) — the proxy
+    /// for "cloud deployments performed". Ground-truth bookkeeping
+    /// (`mean_value`/`true_min`) deliberately does not count: the
+    /// serving tests assert that a response answered from the
+    /// scheduler's cross-request cache adds zero reads.
+    pub(crate) reads: std::sync::atomic::AtomicU64,
 }
 
 impl OfflineDataset {
@@ -88,7 +95,13 @@ impl OfflineDataset {
                     .collect()
             })
             .collect();
-        OfflineDataset { domain, workloads, reps, data }
+        OfflineDataset {
+            domain,
+            workloads,
+            reps,
+            data,
+            reads: std::sync::atomic::AtomicU64::new(0),
+        }
     }
 
     pub fn workload_count(&self) -> usize {
@@ -102,6 +115,12 @@ impl OfflineDataset {
     /// All repetitions for (workload, config).
     pub fn measurements(&self, workload: usize, config_id: usize) -> &[(f64, f64)] {
         &self.data[workload][config_id]
+    }
+
+    /// Evaluation-path source measurements performed since construction
+    /// (see the `reads` field).
+    pub fn measurement_reads(&self) -> u64 {
+        self.reads.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     /// Mean target value over repetitions (the "ground truth" used for
@@ -238,7 +257,13 @@ impl OfflineDataset {
             }
             data.push(per_cfg);
         }
-        Ok(OfflineDataset { domain, workloads, reps: reps.unwrap_or(0), data })
+        Ok(OfflineDataset {
+            domain,
+            workloads,
+            reps: reps.unwrap_or(0),
+            data,
+            reads: std::sync::atomic::AtomicU64::new(0),
+        })
     }
 
     /// Load from a CSV file, or generate-and-save if the file is missing.

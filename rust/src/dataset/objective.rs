@@ -28,15 +28,20 @@
 //! bookkeeping cannot drift and the coordinator reads expense/evals/trace
 //! from one place.
 //!
-//! Determinism contract for shards: arms must evaluate **disjoint**
-//! configuration subsets (true by construction for per-provider arms).
-//! Under that contract, sequential and parallel execution produce
-//! bit-identical merged ledgers; the budget cap holds unconditionally
-//! either way.
+//! Determinism contract for shards: for non-deterministic sources
+//! (`SingleDraw`) arms must evaluate **disjoint** configuration subsets
+//! (true by construction for per-provider arms). For deterministic,
+//! memoized sources the contract extends to **overlapping** arms: the
+//! memo is one concurrent map shared by the ledger and every shard
+//! (checked at record time, so concurrent arms share measurements), and
+//! expense charging is decided at merge time in the caller's canonical
+//! order — never by which thread measured first — so sequential and
+//! parallel execution produce bit-identical merged ledgers either way.
+//! The budget cap holds unconditionally in all modes.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use super::{OfflineDataset, Target};
 use crate::domain::Config;
@@ -45,7 +50,7 @@ use crate::util::rng::{splitmix64, Rng};
 /// How one evaluation aggregates the stored repetitions (paper §III-A:
 /// "a single measurement or any chosen metric based on multiple
 /// measurements, such as the mean or the 90th percentile").
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum MeasureMode {
     /// One stored repetition chosen per evaluation from a seeded
     /// per-(config, pull) stream (the paper's default online behaviour).
@@ -134,6 +139,10 @@ impl<'a> LookupObjective<'a> {
 
 impl EvalSource for LookupObjective<'_> {
     fn measure(&self, cfg: &Config, pull: u64) -> f64 {
+        // One evaluation = one source measurement (the "cloud
+        // deployment" proxy the serving cache tests count). Ground-truth
+        // bookkeeping reads the store without passing through here.
+        self.ds.reads.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let cid = self.ds.domain.config_id(cfg);
         let ms = self.ds.measurements(self.workload, cid);
         match self.mode {
@@ -214,13 +223,22 @@ pub trait EvalSink {
 struct ShardRecord {
     cfg: Config,
     value: f64,
-    charged: bool,
+    /// Whether this shard actually performed a source measurement (false
+    /// on a memo hit). For memoized ledgers the *charge* is re-decided
+    /// canonically at merge time; this flag only feeds the non-memoized
+    /// path, where it is always true.
+    fresh: bool,
 }
+
+/// The measurement memo shared by a ledger and all of its shards: one
+/// concurrent map, so overlapping arms running on different threads
+/// reuse each other's measurements instead of re-reading the source.
+type SharedMemo = Arc<Mutex<HashMap<Config, f64>>>;
 
 fn measure_next(
     source: &dyn EvalSource,
     pulls: &mut HashMap<Config, u64>,
-    memo: &mut Option<HashMap<Config, f64>>,
+    memo: &Option<SharedMemo>,
     cfg: &Config,
 ) -> (f64, bool) {
     let mut draw = |pulls: &mut HashMap<Config, u64>| {
@@ -230,14 +248,19 @@ fn measure_next(
         v
     };
     match memo {
-        Some(memo) => match memo.get(cfg) {
-            Some(&v) => (v, false),
-            None => {
-                let v = draw(pulls);
-                memo.insert(cfg.clone(), v);
-                (v, true)
+        Some(memo) => {
+            // Checked (and populated) under the lock at record time, so a
+            // configuration is measured at most once across all shards.
+            let mut memo = memo.lock().unwrap();
+            match memo.get(cfg) {
+                Some(&v) => (v, false),
+                None => {
+                    let v = draw(pulls);
+                    memo.insert(cfg.clone(), v);
+                    (v, true)
+                }
             }
-        },
+        }
         None => (draw(pulls), true),
     }
 }
@@ -255,7 +278,15 @@ pub struct EvalLedger<'a> {
     /// Sum of the target metric over every *charged* evaluation (memo
     /// hits are free: the measurement was already paid for).
     expense: f64,
-    memo: Option<HashMap<Config, f64>>,
+    /// Shared concurrent memo (deterministic measure modes only): one map
+    /// for the ledger and every shard split off it.
+    memo: Option<SharedMemo>,
+    /// Canonical charging record for memoized ledgers: configurations
+    /// whose first (charged) appearance has been recorded. Kept on the
+    /// parent only and consulted in record/merge order, so C_opt is a
+    /// pure function of the merged history — never of which thread
+    /// happened to measure a configuration first.
+    charged_cfgs: Option<HashSet<Config>>,
     /// Per-configuration pull counts driving [`EvalSource::measure`].
     pulls: HashMap<Config, u64>,
 }
@@ -276,6 +307,7 @@ impl<'a> EvalLedger<'a> {
             best_idx: None,
             expense: 0.0,
             memo: None,
+            charged_cfgs: None,
             pulls: HashMap::new(),
         }
     }
@@ -292,7 +324,8 @@ impl<'a> EvalLedger<'a> {
             self.source.deterministic(),
             "memoization requires a deterministic measure mode (Mean/P90)"
         );
-        self.memo = Some(HashMap::new());
+        self.memo = Some(Arc::new(Mutex::new(HashMap::new())));
+        self.charged_cfgs = Some(HashSet::new());
         self
     }
 
@@ -312,7 +345,17 @@ impl<'a> EvalLedger<'a> {
     }
 
     /// Append one evaluation outcome to history/trace/best/expense.
-    fn record(&mut self, cfg: Config, v: f64, charged: bool) {
+    ///
+    /// `fresh` is whether a real source measurement backed this record.
+    /// For memoized ledgers the charge is decided *here*, against the
+    /// parent's canonical charged-set — the first record of a
+    /// configuration (in record/merge order) pays, every later one is
+    /// free — so expense is identical however work was scheduled.
+    fn record(&mut self, cfg: Config, v: f64, fresh: bool) {
+        let charged = match &mut self.charged_cfgs {
+            Some(set) => set.insert(cfg.clone()),
+            None => fresh,
+        };
         if charged {
             self.expense += v;
         }
@@ -331,8 +374,8 @@ impl<'a> EvalLedger<'a> {
         if !self.pool.try_reserve() {
             return None;
         }
-        let (v, charged) = measure_next(self.source, &mut self.pulls, &mut self.memo, cfg);
-        self.record(cfg.clone(), v, charged);
+        let (v, fresh) = measure_next(self.source, &mut self.pulls, &self.memo, cfg);
+        self.record(cfg.clone(), v, fresh);
         Some(v)
     }
 
@@ -350,9 +393,13 @@ impl<'a> EvalLedger<'a> {
     /// a local allowance of `per_shard_budget` evaluations, extensible
     /// per round via [`LedgerShard::grant`].
     ///
-    /// Shards inherit the parent's pull counters and memo (if enabled) at
-    /// split time; merge folds them back. Determinism requires shards to
-    /// evaluate disjoint configuration subsets (see module docs).
+    /// Shards inherit the parent's pull counters at split time and
+    /// *share* the parent's memo map (if enabled): a configuration
+    /// measured by any shard — or by the parent — is a memo hit for
+    /// everyone else from that moment on, even mid-round. Merge folds
+    /// pull counters back. Determinism requires disjoint configuration
+    /// subsets only for non-deterministic sources (see module docs);
+    /// memoized shards may overlap freely.
     pub fn shard(&self, n: usize, per_shard_budget: usize) -> Vec<LedgerShard<'a>> {
         (0..n)
             .map(|_| LedgerShard {
@@ -369,14 +416,14 @@ impl<'a> EvalLedger<'a> {
     /// Drain one shard's staged records into this ledger, in the shard's
     /// local (pull) order. Callers merge shards in canonical arm order
     /// once per round, so the reassembled history/trace/expense/best is
-    /// identical regardless of which thread finished first. Budget was
-    /// already reserved at evaluation time; merging never re-charges it.
+    /// identical regardless of which thread finished first — for
+    /// memoized ledgers the charge of each record is reconciled here
+    /// against the canonical charged-set, not taken from the racy
+    /// measured-it-first flag. Budget was already reserved at evaluation
+    /// time; merging never re-charges it.
     pub fn merge(&mut self, shard: &mut LedgerShard<'_>) {
         for rec in shard.records.drain(..) {
-            if let Some(memo) = &mut self.memo {
-                memo.entry(rec.cfg.clone()).or_insert(rec.value);
-            }
-            self.record(rec.cfg, rec.value, rec.charged);
+            self.record(rec.cfg, rec.value, rec.fresh);
         }
         for (cfg, n) in &shard.pulls {
             let count = self.pulls.entry(cfg.clone()).or_insert(0);
@@ -442,7 +489,9 @@ pub struct LedgerShard<'a> {
     /// Evaluations since the last merge, in local order.
     records: Vec<ShardRecord>,
     pulls: HashMap<Config, u64>,
-    memo: Option<HashMap<Config, f64>>,
+    /// Shared with the parent ledger and sibling shards (see
+    /// [`EvalLedger::shard`]).
+    memo: Option<SharedMemo>,
 }
 
 impl LedgerShard<'_> {
@@ -476,8 +525,8 @@ impl EvalSink for LedgerShard<'_> {
             return None;
         }
         self.allowance -= 1;
-        let (v, charged) = measure_next(self.source, &mut self.pulls, &mut self.memo, cfg);
-        self.records.push(ShardRecord { cfg: cfg.clone(), value: v, charged });
+        let (v, fresh) = measure_next(self.source, &mut self.pulls, &self.memo, cfg);
+        self.records.push(ShardRecord { cfg: cfg.clone(), value: v, fresh });
         Some(v)
     }
 
@@ -745,6 +794,50 @@ mod tests {
         let v2 = led.eval(&cfg).unwrap();
         assert_eq!(v0, v2);
         assert_eq!(led.total_expense(), v0);
+    }
+
+    /// Overlapping arms under a deterministic memoized source: shards
+    /// evaluating the SAME configurations concurrently share
+    /// measurements through the shared memo, and the merged ledger
+    /// (history, trace, expense) is identical to sequential execution —
+    /// charging is reconciled in canonical merge order, not by which
+    /// thread measured first.
+    #[test]
+    fn overlapping_memoized_shards_match_sequential_bit_for_bit() {
+        let ds = ds();
+        let run = |parallel: bool| {
+            let cfgs = [provider_cfg(0), provider_cfg(1)];
+            let src = LookupObjective::new(&ds, 2, Target::Cost, MeasureMode::Mean, 5);
+            let mut led = EvalLedger::new(&src, 8).with_memo();
+            let shards = led.shard(2, 4);
+            let work = |mut s: LedgerShard<'_>| {
+                for c in &cfgs {
+                    s.eval(c).unwrap();
+                    s.eval(c).unwrap();
+                }
+                s
+            };
+            let mut shards: Vec<LedgerShard<'_>> = if parallel {
+                crate::util::threadpool::parallel_map_owned(shards, 2, work)
+            } else {
+                shards.into_iter().map(work).collect()
+            };
+            led.merge_all(&mut shards);
+            let vals: Vec<u64> = led.history().iter().map(|(_, v)| v.to_bits()).collect();
+            (vals, led.trace().to_vec(), led.total_expense().to_bits(), led.evals())
+        };
+        let seq = run(false);
+        // Both shards hit every config; expense charges each distinct
+        // config exactly once, whoever measured it.
+        let distinct: f64 = {
+            let src = LookupObjective::new(&ds, 2, Target::Cost, MeasureMode::Mean, 5);
+            src.measure(&provider_cfg(0), 0) + src.measure(&provider_cfg(1), 0)
+        };
+        assert_eq!(seq.2, distinct.to_bits());
+        assert_eq!(seq.3, 8);
+        for _ in 0..4 {
+            assert_eq!(seq, run(true), "parallel overlapping shards diverged");
+        }
     }
 
     /// Concurrency stress: many shards with effectively unlimited local

@@ -166,7 +166,7 @@ fn cmd_optimize(args: &[String]) -> i32 {
         .opt("method", "cb-rbfopt", "optimizer name")
         .opt("budget", "33", "search budget (evaluations)")
         .opt("seed", "0", "random seed")
-        .opt("trial-workers", "1", "parallel arm workers (bandit methods; results identical)")
+        .opt("trial-workers", "0", "parallel arm workers (0 = all cores; results identical)")
         .opt("measure-mode", "single_draw", "evaluation aggregation: single_draw | mean | p90")
         .opt("dataset", "", "offline dataset CSV (empty = regenerate)")
         .opt("artifacts", "", "artifact directory (default: ./artifacts)")
@@ -189,11 +189,13 @@ fn cmd_optimize(args: &[String]) -> i32 {
 
     let measure_mode = multicloud::dataset::objective::MeasureMode::parse(a.get("measure-mode"))
         .unwrap_or_else(|| fail("bad measure-mode (single_draw | mean | p90)"));
-    let trial_workers = a.usize("trial-workers").unwrap();
     let max_workers = multicloud::coordinator::spec::MAX_TRIAL_WORKERS;
-    if trial_workers == 0 || trial_workers > max_workers {
-        fail(&format!("trial-workers must be in 1..={max_workers}"));
-    }
+    let trial_workers = match a.usize("trial-workers").unwrap() {
+        // A lone trial owns the whole machine by default.
+        0 => multicloud::util::threadpool::default_workers().clamp(1, max_workers),
+        w if w <= max_workers => w,
+        _ => fail(&format!("trial-workers must be in 0..={max_workers} (0 = adaptive)")),
+    };
     let spec = multicloud::coordinator::experiment::TrialSpec {
         method,
         workload,
@@ -407,17 +409,23 @@ fn cmd_savings(args: &[String]) -> i32 {
 fn cmd_serve(args: &[String]) -> i32 {
     let c = Command::new("serve", "TCP optimization service (line-delimited JSON)")
         .opt("addr", "127.0.0.1:7077", "bind address")
+        .opt("conn-workers", "0", "connection worker pool size (0 = auto)")
         .opt("dataset", "", "offline dataset CSV (empty = regenerate)")
         .flag("native", "use native surrogates");
     let a = parse_or_exit(c, args);
     let ds = Arc::new(load_dataset(a.get("dataset")));
     let backend: Arc<dyn Backend + Send + Sync> =
         Arc::from(load_backend(a.flag("native"), &artifact_dir(None)));
-    let svc = Arc::new(Service::new(ds, backend));
+    let mut svc = Service::new(ds, backend);
+    let conn_workers = a.usize("conn-workers").unwrap_or_else(|e| fail(&e));
+    if conn_workers > 0 {
+        svc = svc.with_conn_workers(conn_workers);
+    }
+    let svc = Arc::new(svc);
     let stop = Arc::new(AtomicBool::new(false));
     let (port, handle) = svc.serve(a.get("addr"), stop).unwrap_or_else(|e| fail(&e.to_string()));
     println!(
-        "listening on port {port} (line-delimited JSON; op: optimize | list_workloads | list_methods | ping)"
+        "listening on port {port} (line-delimited JSON; op: optimize | batch | list_workloads | list_methods | stats | ping)"
     );
     handle.join().ok();
     0

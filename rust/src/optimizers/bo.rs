@@ -20,12 +20,13 @@
 //! no-repeat rule is its advantage).
 
 use super::{Optimizer, SearchContext, SearchResult};
-use crate::dataset::objective::{EvalLedger, EvalSink};
+use crate::dataset::objective::{EvalLedger, EvalSink, LedgerShard};
 use crate::dataset::Target;
 use crate::domain::{encode, Config};
 use crate::surrogate::rf::{RandomForest, RfParams};
 use crate::surrogate::{Acquisition, GpSession, Prediction, Surrogate};
 use crate::util::rng::Rng;
+use crate::util::threadpool::parallel_map_owned;
 
 /// Which surrogate a preset uses.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -236,6 +237,15 @@ impl IndependentBo {
     }
 }
 
+/// One provider's independent BO loop: state, ledger shard, forked RNG,
+/// and its fixed budget share. Moved onto a worker thread whole.
+struct ProviderTask<'c, 'l> {
+    state: BoState<'c>,
+    shard: LedgerShard<'l>,
+    rng: Rng,
+    share: usize,
+}
+
 impl Optimizer for IndependentBo {
     fn name(&self) -> String {
         self.label.into()
@@ -243,19 +253,38 @@ impl Optimizer for IndependentBo {
 
     /// The ledger's budget is split equally across the K providers (B/K
     /// each, paper §III-B2); the leftover B mod K goes to the first
-    /// providers.
+    /// providers. Because every share is fixed up front and the
+    /// providers are fully independent (disjoint grids, forked RNGs,
+    /// own surrogate state), each loop runs on its own [`LedgerShard`]
+    /// — concurrently when `SearchContext::arm_workers > 1` — and the
+    /// shards merge back in provider order, bit-identical to the
+    /// sequential schedule at any worker count.
     fn run(&self, ctx: &SearchContext, ledger: &mut EvalLedger, rng: &mut Rng) -> SearchResult {
         let k = ctx.domain.provider_count();
         let budget = ledger.remaining();
         let preset = (self.preset_for)(ctx.target);
-        for p in 0..k {
-            let share = budget / k + usize::from(p < budget % k);
-            let mut state = BoState::new(ctx, ctx.domain.provider_grid(p), preset);
-            for _ in 0..share {
-                if state.step(&mut *ledger, rng).is_none() {
+        let tasks: Vec<ProviderTask> = ledger
+            .shard(k, 0)
+            .into_iter()
+            .enumerate()
+            .map(|(p, shard)| ProviderTask {
+                state: BoState::new(ctx, ctx.domain.provider_grid(p), preset),
+                shard,
+                rng: rng.fork(p as u64),
+                share: budget / k + usize::from(p < budget % k),
+            })
+            .collect();
+        let mut tasks = parallel_map_owned(tasks, ctx.arm_workers, |mut t| {
+            t.shard.grant(t.share);
+            for _ in 0..t.share {
+                if t.state.step(&mut t.shard, &mut t.rng).is_none() {
                     break;
                 }
             }
+            t
+        });
+        for t in tasks.iter_mut() {
+            ledger.merge(&mut t.shard);
         }
         SearchResult::from_ledger(ledger)
     }
@@ -314,6 +343,55 @@ mod tests {
             .map(|p| ledger.history().iter().filter(|(c, _)| c.provider == p).count())
             .collect();
         assert_eq!(per, vec![4, 3, 3]);
+    }
+
+    /// Parallel per-provider loops are bit-identical to sequential ones
+    /// for both x3 flavours (GP and RF surrogates) across budgets,
+    /// seeds, and targets — shares are fixed up front, RNGs forked per
+    /// provider, and shards merge in provider order.
+    #[test]
+    fn independent_bo_parallel_matches_sequential_bit_for_bit() {
+        let ds = OfflineDataset::generate(9, 3);
+        let backend = NativeBackend;
+        let flavours: [(fn() -> IndependentBo, &str); 2] = [
+            (IndependentBo::cherrypick, "cherrypick-x3"),
+            (IndependentBo::bilal, "bilal-x3"),
+        ];
+        for (make, label) in flavours {
+            for target in [Target::Cost, Target::Time] {
+                for budget in [3usize, 10, 22] {
+                    for seed in [1u64, 6] {
+                        let run = |workers: usize| {
+                            let c = SearchContext::new(&ds.domain, target, &backend)
+                                .with_arm_workers(workers);
+                            let src = LookupObjective::new(
+                                &ds,
+                                8,
+                                target,
+                                MeasureMode::SingleDraw,
+                                seed,
+                            );
+                            let mut ledger = EvalLedger::new(&src, budget);
+                            let r = make().run(&c, &mut ledger, &mut Rng::new(seed));
+                            (
+                                r.best_config.clone(),
+                                r.best_value.to_bits(),
+                                ledger.history().to_vec(),
+                                ledger.total_expense().to_bits(),
+                            )
+                        };
+                        let seq = run(1);
+                        for workers in [2usize, 4] {
+                            assert_eq!(
+                                seq,
+                                run(workers),
+                                "{label} target={target:?} B={budget} seed={seed} workers={workers}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -17,7 +17,8 @@
 //!
 //! **Parallel arm execution.** Arm pulls within a round are independent
 //! (disjoint provider grids, per-arm component state), so each round runs
-//! all active arms concurrently on `util::threadpool` when
+//! all active arms concurrently on the persistent
+//! `util::threadpool::WorkerTeam` (no per-round thread spawns) when
 //! `SearchContext::arm_workers > 1`. Each arm owns a [`LedgerShard`] of
 //! the trial ledger (budget drawn from the shared atomic pool) plus its
 //! own component state and forked RNG; after the round, shards merge back

@@ -13,7 +13,12 @@
 //! concurrently when `SearchContext::arm_workers > 1`: every arm owns a
 //! [`LedgerShard`] (drawing from the shared atomic budget pool), its own
 //! GP session and forked RNG; shards merge back in arm order after each
-//! sweep, so parallel runs are bit-identical to sequential ones.
+//! sweep, so parallel runs are bit-identical to sequential ones. Sweeps
+//! run on the persistent process [`WorkerTeam`] — one channel send per
+//! arm instead of a thread spawn/join per sweep, which matters here
+//! because RB fans out once per single-pull sweep.
+//!
+//! [`WorkerTeam`]: crate::util::threadpool::WorkerTeam
 //!
 //! The paper warns the diminishing-returns assumption need not hold in
 //! clouds — and indeed RB degrades at large budgets (Fig. 3), which this

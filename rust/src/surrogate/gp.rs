@@ -47,6 +47,36 @@ struct Fitted {
     lml: f64,
 }
 
+/// The posterior loop shared by every GP prediction path (full refit,
+/// incremental, kernel-row cached): for each of `m` candidates,
+/// `fill_kxc(j, &mut kxc)` writes K(X, cand_j) and the same mean /
+/// variance math runs on top. One body, so the bit-identity contract
+/// between the paths rests on shared code, not on hand-synchronized
+/// copies of the loop.
+fn posterior_over(
+    l: &Matrix,
+    alpha: &[f64],
+    signal_var: f64,
+    ym: f64,
+    ys: f64,
+    m: usize,
+    mut fill_kxc: impl FnMut(usize, &mut [f64]),
+) -> Prediction {
+    let n = alpha.len();
+    let mut mean = Vec::with_capacity(m);
+    let mut std = Vec::with_capacity(m);
+    let mut kxc = vec![0.0; n];
+    for j in 0..m {
+        fill_kxc(j, &mut kxc);
+        let mu: f64 = kxc.iter().zip(alpha).map(|(a, b)| a * b).sum();
+        let v = solve_lower(l, &kxc);
+        let var = (signal_var - v.iter().map(|t| t * t).sum::<f64>()).max(1e-12);
+        mean.push(mu * ys + ym);
+        std.push(var.sqrt() * ys);
+    }
+    Prediction { mean, std }
+}
+
 /// Fit from a precomputed observation-observation squared-distance matrix
 /// (the distance computation is shared across the lengthscale grid — the
 /// §Perf L3 optimization, ~4x fewer O(n^2 d) passes per BO iteration).
@@ -108,21 +138,12 @@ impl Surrogate for GpSurrogate {
             best.expect("GP fit failed for every lengthscale (should be impossible with jitter)");
         self.last_lengthscale = ls;
 
-        let mut mean = Vec::with_capacity(m);
-        let mut std = Vec::with_capacity(m);
-        let mut kxc = vec![0.0; n];
-        for j in 0..m {
+        let sv = self.signal_var;
+        posterior_over(&fitted.l, &fitted.alpha, sv, ym, ys, m, |j, kxc| {
             for i in 0..n {
-                kxc[i] = matern52(d2xc[(i, j)], ls, self.signal_var);
+                kxc[i] = matern52(d2xc[(i, j)], ls, sv);
             }
-            let mu: f64 = kxc.iter().zip(&fitted.alpha).map(|(a, b)| a * b).sum();
-            let v = solve_lower(&fitted.l, &kxc);
-            let var =
-                (self.signal_var - v.iter().map(|t| t * t).sum::<f64>()).max(1e-12);
-            mean.push(mu * ys + ym);
-            std.push(var.sqrt() * ys);
-        }
-        Prediction { mean, std }
+        })
     }
 }
 
@@ -176,6 +197,13 @@ pub struct IncrementalGp {
     /// observation, so `predict_pinned` never recomputes the O(n·m·d)
     /// distance pass the unpinned path pays every iteration.
     pinned_d2: Vec<Vec<f64>>,
+    /// pinned_k[li][i][j] = matern52(pinned_d2[i][j], LS_GRID[li]): the
+    /// kernel rows one level below the distance cache. Only the appended
+    /// row is computed per observation, so `predict_pinned` also skips
+    /// the O(n·m) re-kernelization of cached distances that
+    /// `posterior_from_d2` pays per predict. Rebuilt wholesale when the
+    /// candidate set is (re)pinned.
+    pinned_k: Vec<Vec<Vec<f64>>>,
 }
 
 impl Default for IncrementalGp {
@@ -190,6 +218,7 @@ impl Default for IncrementalGp {
             chol: vec![None; LS_GRID.len()],
             pinned: Vec::new(),
             pinned_d2: Vec::new(),
+            pinned_k: vec![Vec::new(); LS_GRID.len()],
         }
     }
 }
@@ -219,27 +248,18 @@ impl IncrementalGp {
     /// distances (`d2[i][j] = d²(x_i, cand_j)`, `m` candidates).
     fn posterior_from_d2(&mut self, m: usize, d2: &[Vec<f64>]) -> Prediction {
         assert!(!self.x.is_empty(), "GP predict with no observations");
-        let n = self.x.len();
         let (z, ym, ys) = standardize(&self.y);
         let (li, alpha) = self.select_model(&z);
         let ls = LS_GRID[li];
         self.last_lengthscale = ls;
         let l = self.chol[li].as_ref().unwrap();
 
-        let mut mean = Vec::with_capacity(m);
-        let mut std = Vec::with_capacity(m);
-        let mut kxc = vec![0.0; n];
-        for j in 0..m {
-            for i in 0..n {
-                kxc[i] = matern52(d2[i][j], ls, self.signal_var);
+        let sv = self.signal_var;
+        posterior_over(l, &alpha, sv, ym, ys, m, |j, kxc| {
+            for (i, row) in d2.iter().enumerate() {
+                kxc[i] = matern52(row[j], ls, sv);
             }
-            let mu: f64 = kxc.iter().zip(&alpha).map(|(a, b)| a * b).sum();
-            let v = solve_lower(l, &kxc);
-            let var = (self.signal_var - v.iter().map(|t| t * t).sum::<f64>()).max(1e-12);
-            mean.push(mu * ys + ym);
-            std.push(var.sqrt() * ys);
-        }
-        Prediction { mean, std }
+        })
     }
 }
 
@@ -264,10 +284,17 @@ impl GpSession for IncrementalGp {
             self.chol[li] =
                 appended.or_else(|| full_chol(&self.x, ls, self.signal_var, self.noise));
         }
-        // Grow the pinned-candidate distance cache by one row.
+        // Grow the pinned-candidate distance and kernel-row caches by
+        // one row each; every earlier row is unchanged by construction
+        // (the kernel depends only on inputs and the fixed grid).
         if !self.pinned.is_empty() {
             let xn = &self.x[n_prev];
-            self.pinned_d2.push(self.pinned.iter().map(|c| sqdist(xn, c)).collect());
+            let d2_row: Vec<f64> = self.pinned.iter().map(|c| sqdist(xn, c)).collect();
+            for (li, &ls) in LS_GRID.iter().enumerate() {
+                self.pinned_k[li]
+                    .push(d2_row.iter().map(|&d2| matern52(d2, ls, self.signal_var)).collect());
+            }
+            self.pinned_d2.push(d2_row);
         }
     }
 
@@ -287,15 +314,36 @@ impl GpSession for IncrementalGp {
             .iter()
             .map(|xi| cands.iter().map(|c| sqdist(xi, c)).collect())
             .collect();
+        // Invalidate and rebuild the kernel rows for the new grid.
+        self.pinned_k = LS_GRID
+            .iter()
+            .map(|&ls| {
+                self.pinned_d2
+                    .iter()
+                    .map(|row| row.iter().map(|&d2| matern52(d2, ls, self.signal_var)).collect())
+                    .collect()
+            })
+            .collect();
     }
 
     fn predict_pinned(&mut self) -> Prediction {
         assert!(!self.pinned.is_empty(), "predict_pinned without pinned candidates");
-        let d2 = std::mem::take(&mut self.pinned_d2);
+        assert!(!self.x.is_empty(), "GP predict with no observations");
         let m = self.pinned.len();
-        let p = self.posterior_from_d2(m, &d2);
-        self.pinned_d2 = d2;
-        p
+        let (z, ym, ys) = standardize(&self.y);
+        let (li, alpha) = self.select_model(&z);
+        self.last_lengthscale = LS_GRID[li];
+        let l = self.chol[li].as_ref().unwrap();
+        // Same shared posterior loop as `posterior_from_d2`, but the
+        // kernel values come straight from the per-lengthscale row
+        // cache — matern52 applied to the identical d² at observe/pin
+        // time, so the result is bit-identical to the uncached path.
+        let rows = &self.pinned_k[li];
+        posterior_over(l, &alpha, self.signal_var, ym, ys, m, |j, kxc| {
+            for (i, row) in rows.iter().enumerate() {
+                kxc[i] = row[j];
+            }
+        })
     }
 
     fn n_obs(&self) -> usize {
@@ -520,6 +568,37 @@ mod tests {
         let b = plain.predict(&cands);
         for j in 0..cands.len() {
             assert_eq!(a.mean[j].to_bits(), b.mean[j].to_bits());
+        }
+    }
+
+    /// Re-pinning to a different grid invalidates the kernel-row cache
+    /// wholesale; predictions on the new grid (and after further
+    /// observations growing the cache row by row) stay bit-identical to
+    /// the uncached path.
+    #[test]
+    fn repinning_invalidates_kernel_row_cache() {
+        let (x, y) = toy_data(14, 3, 11);
+        let grid_a: Vec<Vec<f64>> = toy_data(6, 3, 12).0;
+        let grid_b: Vec<Vec<f64>> = toy_data(9, 3, 13).0;
+        let mut cached = IncrementalGp::default();
+        cached.pin_candidates(&grid_a);
+        let mut plain = IncrementalGp::default();
+        for (xi, &yi) in x.iter().take(8).zip(&y) {
+            cached.observe(xi.clone(), yi);
+            plain.observe(xi.clone(), yi);
+        }
+        // Switch grids mid-session, then keep observing.
+        cached.pin_candidates(&grid_b);
+        for (xi, &yi) in x.iter().zip(&y).skip(8) {
+            cached.observe(xi.clone(), yi);
+            plain.observe(xi.clone(), yi);
+        }
+        let a = cached.predict_pinned();
+        let b = plain.predict(&grid_b);
+        assert_eq!(cached.last_lengthscale, plain.last_lengthscale);
+        for j in 0..grid_b.len() {
+            assert_eq!(a.mean[j].to_bits(), b.mean[j].to_bits());
+            assert_eq!(a.std[j].to_bits(), b.std[j].to_bits());
         }
     }
 

@@ -1,22 +1,313 @@
 //! Work-queue parallelism (substrate: no tokio/rayon offline).
 //!
-//! The coordinator fans thousands of independent trials (workload x method
-//! x budget x seed) across cores. `parallel_map` preserves input order in
-//! the output, pulls work from a shared atomic cursor (so long trials don't
-//! straggle behind a static partition), and propagates panics.
+//! Two layers:
+//!
+//! * [`WorkerTeam`] — a **persistent** team of worker threads fed jobs
+//!   over a channel. One team lives for the whole process
+//!   ([`global_team`]); the coordinator's trial grids, the bandit
+//!   optimizers' per-round arm fan-outs, and the TCP service's batch op
+//!   all run on it, so a Rising-Bandits sweep (one pull per arm, dozens
+//!   of sweeps per trial) pays a channel send instead of a thread
+//!   spawn/join per sweep.
+//! * [`parallel_map`] / [`parallel_map_owned`] — order-preserving batch
+//!   helpers rebased onto the team. They pull work from a shared atomic
+//!   cursor (so long items don't straggle behind a static partition) and
+//!   propagate worker panics to the caller.
+//!
+//! Scheduling contract: the *caller always participates* in its own
+//! batch, and a batch executed from a team worker thread runs inline on
+//! that thread. Together these make the team deadlock-free by
+//! construction — no job ever blocks on another job — and keep results
+//! bit-identical to sequential execution at any team size (outputs are
+//! slotted by input index, never by completion order).
 
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Number of workers to use by default: the machine's parallelism.
 pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
-/// Apply `f` to every item on `workers` threads; results keep input order.
+thread_local! {
+    /// True on threads owned by a [`WorkerTeam`]. Batches started from a
+    /// team thread run inline (see module docs).
+    static ON_TEAM_THREAD: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Whether the current thread is a [`WorkerTeam`] worker.
+pub fn on_team_thread() -> bool {
+    ON_TEAM_THREAD.with(|f| f.get())
+}
+
+/// A job enqueued on the team. Lifetimes are erased at submission
+/// ([`WorkerTeam::run_owned`] blocks until every job it submitted has
+/// finished executing, so the borrows a job captures always outlive it).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Outstanding-job counter for one batch: the caller may not return
+/// while any job it submitted could still run (jobs borrow the caller's
+/// stack frame).
+struct Outstanding {
+    count: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Outstanding {
+    fn new() -> Outstanding {
+        Outstanding { count: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    fn inc(&self) {
+        *self.count.lock().unwrap() += 1;
+    }
+
+    fn dec(&self) {
+        let mut count = self.count.lock().unwrap();
+        *count -= 1;
+        // Notify while still holding the lock: the waiter cannot observe
+        // zero (and free this batch's stack frame) until the guard
+        // drops, so this thread never touches freed memory.
+        self.cv.notify_all();
+    }
+
+    fn wait_zero(&self) {
+        let mut count = self.count.lock().unwrap();
+        while *count > 0 {
+            count = self.cv.wait(count).unwrap();
+        }
+    }
+}
+
+/// A persistent team of worker threads fed jobs over a channel.
 ///
-/// `f` must be `Sync` (it is shared, not cloned). Panics in workers are
-/// re-raised on the caller thread after all workers exit.
+/// * **Long-lived**: threads are spawned once and reused by every batch;
+///   submitting a batch costs channel sends, not thread spawns.
+/// * **Panic-propagating**: a panicking job never kills its worker
+///   thread — the payload is carried back to the batch's caller and
+///   resumed there, after the batch fully drains.
+/// * **Drop-joins**: dropping the team closes the job channel and joins
+///   every worker.
+pub struct WorkerTeam {
+    tx: Mutex<Option<Sender<Job>>>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    threads: usize,
+}
+
+impl WorkerTeam {
+    /// Spawn a team of `threads` persistent workers (0 is clamped to 1).
+    pub fn new(threads: usize) -> WorkerTeam {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..threads)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                std::thread::spawn(move || {
+                    ON_TEAM_THREAD.with(|f| f.set(true));
+                    loop {
+                        // The receiver guard is a temporary: held while
+                        // popping, released before the job runs.
+                        let job = rx.lock().unwrap().recv();
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // channel closed: team dropped
+                        }
+                    }
+                })
+            })
+            .collect();
+        WorkerTeam { tx: Mutex::new(Some(tx)), handles: Mutex::new(handles), threads }
+    }
+
+    /// Worker threads in the team.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Submit one job; falls back to running it inline if the team is
+    /// shutting down (the channel is closed).
+    fn submit(&self, job: Job) {
+        let failed = {
+            let guard = self.tx.lock().unwrap();
+            match guard.as_ref() {
+                Some(tx) => tx.send(job).err().map(|e| e.0),
+                None => Some(job),
+            }
+        };
+        if let Some(job) = failed {
+            job();
+        }
+    }
+
+    /// Apply `f` to every owned item on up to `workers` concurrent
+    /// pullers (the caller plus team workers); results keep input order.
+    ///
+    /// Bit-identity: each item is processed exactly once and its result
+    /// is written to the slot of its input index, so the output is
+    /// independent of team size, scheduling, and completion order.
+    ///
+    /// Blocks until every job submitted for this batch has finished
+    /// executing (not merely until all items are done): jobs borrow the
+    /// batch state on this stack frame, so returning earlier would
+    /// dangle them — a queued job cannot be cancelled, only awaited.
+    /// Consequently, when every team worker is busy with another batch's
+    /// long items, a caller that drained its own cursor still waits for
+    /// its (by then no-op) seeded jobs to be popped — bounded by the
+    /// in-flight items' remaining runtime, since all jobs are one item
+    /// long. Worker panics are re-raised here after the drain.
+    pub fn run_owned<T, R, F>(&self, items: Vec<T>, workers: usize, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = workers.max(1).min(n);
+        // Inline paths: sequential request, or already on a team thread
+        // (a nested batch must not wait on queue slots its own ancestors
+        // occupy — running inline keeps the team deadlock-free).
+        if workers == 1 || on_team_thread() {
+            return items.into_iter().map(f).collect();
+        }
+
+        let batch = Batch {
+            cursor: AtomicUsize::new(0),
+            inputs: items.into_iter().map(|t| Mutex::new(Some(t))).collect(),
+            slots: (0..n).map(|_| Mutex::new(None)).collect(),
+            panic_slot: Mutex::new(None),
+            outstanding: Outstanding::new(),
+            f,
+        };
+
+        // Seed `workers - 1` one-item team jobs; the caller is the last
+        // puller. Jobs are ITEM-granular and resubmit themselves while
+        // work remains, so the team queue round-robins between
+        // concurrent batches at item granularity — one batch's long tail
+        // cannot capture a worker for another batch's whole duration.
+        for _ in 0..workers - 1 {
+            submit_batch_job(self, &batch);
+        }
+        // The caller drains the cursor alongside the team.
+        while batch.run_one() {}
+        batch.outstanding.wait_zero();
+
+        let Batch { slots, panic_slot, .. } = batch;
+        if let Some(p) = panic_slot.into_inner().unwrap() {
+            std::panic::resume_unwind(p);
+        }
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("worker skipped a slot"))
+            .collect()
+    }
+}
+
+impl Drop for WorkerTeam {
+    fn drop(&mut self) {
+        // Close the channel, then join every worker.
+        *self.tx.lock().unwrap() = None;
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Shared state of one `run_owned` batch, living on the caller's stack
+/// frame for the duration of the call.
+struct Batch<T, R, F> {
+    cursor: AtomicUsize,
+    inputs: Vec<Mutex<Option<T>>>,
+    slots: Vec<Mutex<Option<R>>>,
+    panic_slot: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    outstanding: Outstanding,
+    f: F,
+}
+
+impl<T, R, F> Batch<T, R, F>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    /// Items not yet claimed by any puller.
+    fn has_work(&self) -> bool {
+        self.cursor.load(Ordering::Relaxed) < self.inputs.len()
+    }
+
+    /// Claim and process one item; `false` when the cursor is drained.
+    /// A panic in `f` is caught (first payload wins) so a job can never
+    /// kill its worker thread; the item's slot stays empty, which is
+    /// fine because the caller re-raises before collecting results.
+    fn run_one(&self) -> bool {
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+        if i >= self.inputs.len() {
+            return false;
+        }
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let item = self.inputs[i].lock().unwrap().take().expect("item taken twice");
+            let out = (self.f)(item);
+            *self.slots[i].lock().unwrap() = Some(out);
+        }));
+        if let Err(p) = r {
+            let mut slot = self.panic_slot.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(p);
+            }
+        }
+        true
+    }
+}
+
+/// Enqueue one one-item job for `batch` on `team`. The job processes a
+/// single item, resubmits itself while unclaimed items remain, and only
+/// then marks itself no longer outstanding (resubmit-before-decrement,
+/// so the caller's zero-wait can never fire while a successor is in
+/// flight).
+fn submit_batch_job<T, R, F>(team: &WorkerTeam, batch: &Batch<T, R, F>)
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    batch.outstanding.inc();
+    let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+        batch.run_one();
+        if batch.has_work() {
+            submit_batch_job(team, batch);
+        }
+        batch.outstanding.dec();
+    });
+    // SAFETY: `run_owned` blocks on `outstanding.wait_zero()` until
+    // every job submitted for its batch has fully finished executing
+    // (the resubmit-before-decrement order makes the count conservative),
+    // so the borrows the job captures — `batch` on the caller's stack
+    // and `team` behind the caller's `&self` — strictly outlive its
+    // execution. The transmute only erases the lifetime bound of the
+    // trait object; the layout is identical.
+    let job: Job = unsafe { std::mem::transmute(job) };
+    team.submit(job);
+}
+
+/// The process-wide team every batch helper runs on, sized to the
+/// machine's parallelism and spawned on first use. The TCP service's
+/// scheduler shares this same team, so one process owns exactly one set
+/// of compute threads regardless of how many requests are in flight.
+pub fn global_team() -> &'static WorkerTeam {
+    static TEAM: OnceLock<WorkerTeam> = OnceLock::new();
+    TEAM.get_or_init(|| WorkerTeam::new(default_workers()))
+}
+
+/// Apply `f` to every item on up to `workers` concurrent pullers of the
+/// process [`global_team`]; results keep input order. `f` must be `Sync`
+/// (it is shared, not cloned). Panics in workers are re-raised on the
+/// caller thread after the batch drains.
 pub fn parallel_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
 where
     T: Send + Sync,
@@ -27,12 +318,26 @@ where
     parallel_map_owned(refs, workers, |t| f(t))
 }
 
-/// Like `parallel_map` but each item is moved into `f` and the (possibly
-/// transformed) results come back in input order. This is the substrate
-/// for parallel arm execution inside one bandit trial: each arm task owns
-/// mutable state (component-optimizer state, ledger shard, RNG) that a
-/// shared-reference `parallel_map` closure could not touch.
+/// Like [`parallel_map`] but each item is moved into `f` and the
+/// (possibly transformed) results come back in input order. This is the
+/// substrate for parallel arm execution inside one bandit trial: each
+/// arm task owns mutable state (component-optimizer state, ledger shard,
+/// RNG) that a shared-reference `parallel_map` closure could not touch.
+/// Runs on the persistent [`global_team`] — no per-call thread spawns.
 pub fn parallel_map_owned<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    global_team().run_owned(items, workers, f)
+}
+
+/// Reference implementation of [`parallel_map_owned`] that spawns scoped
+/// threads per call (the pre-team behaviour). Kept for the
+/// `perf_service` bench, which quantifies exactly the spawn/join
+/// overhead the persistent team amortizes, and for differential tests.
+pub fn parallel_map_owned_spawn<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
 where
     T: Send,
     R: Send,
@@ -82,8 +387,8 @@ where
         .collect()
 }
 
-/// Like `parallel_map` but with a progress callback invoked (from worker
-/// threads) after each completed item with the number done so far.
+/// Like [`parallel_map`] but with a progress callback invoked (from
+/// worker threads) after each completed item with the number done so far.
 pub fn parallel_map_progress<T, R, F, P>(items: Vec<T>, workers: usize, f: F, progress: P) -> Vec<R>
 where
     T: Send + Sync,
@@ -97,6 +402,39 @@ where
     let progress_ref = &progress;
     let f_ref = &f;
     parallel_map(items, workers, move |t| {
+        let r = f_ref(t);
+        let d = done_ref.fetch_add(1, Ordering::Relaxed) + 1;
+        progress_ref(d, n);
+        r
+    })
+}
+
+/// Like [`parallel_map_progress`] but on dedicated scoped threads
+/// (spawn-per-batch) instead of the team. Use when each item runs a
+/// nested team batch of its own — e.g. grid trials with arm workers > 1:
+/// a team-executed item runs its nested batch inline (see module docs),
+/// so the nested level would never actually parallelize. Dedicated
+/// threads at the outer level keep both levels genuinely concurrent; the
+/// spawn cost is paid once per batch, amortized over all items.
+pub fn parallel_map_progress_spawn<T, R, F, P>(
+    items: Vec<T>,
+    workers: usize,
+    f: F,
+    progress: P,
+) -> Vec<R>
+where
+    T: Send + Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+    P: Fn(usize, usize) + Sync,
+{
+    let done = AtomicUsize::new(0);
+    let n = items.len();
+    let done_ref = &done;
+    let progress_ref = &progress;
+    let f_ref = &f;
+    let refs: Vec<&T> = items.iter().collect();
+    parallel_map_owned_spawn(refs, workers, move |t| {
         let r = f_ref(t);
         let d = done_ref.fetch_add(1, Ordering::Relaxed) + 1;
         progress_ref(d, n);
@@ -155,6 +493,24 @@ mod tests {
     }
 
     #[test]
+    fn team_survives_a_panicking_batch() {
+        // A panic is propagated to the batch caller but must not kill the
+        // team's threads: the next batch on the same team still works.
+        let team = WorkerTeam::new(3);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            team.run_owned((0..16).collect::<Vec<usize>>(), 3, |x| {
+                if x == 7 {
+                    panic!("one bad item");
+                }
+                x
+            })
+        }));
+        assert!(r.is_err());
+        let out = team.run_owned(vec![1usize, 2, 3], 3, |x| x * 10);
+        assert_eq!(out, vec![10, 20, 30]);
+    }
+
+    #[test]
     fn owned_map_preserves_order_and_moves_state() {
         // Each item carries mutable state the closure consumes and
         // returns transformed.
@@ -185,6 +541,78 @@ mod tests {
             }
             x
         });
+    }
+
+    #[test]
+    fn team_and_spawn_paths_agree() {
+        let items: Vec<usize> = (0..300).collect();
+        let a = parallel_map_owned(items.clone(), 6, |x| x * x + 1);
+        let b = parallel_map_owned_spawn(items, 6, |x| x * x + 1);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn nested_batches_run_inline_without_deadlock() {
+        // Outer batch on the team; each item starts an inner batch. Inner
+        // batches run inline on their team thread (on_team_thread), so
+        // this terminates even when outer items outnumber team threads.
+        let team = WorkerTeam::new(2);
+        let out = team.run_owned((0..8).collect::<Vec<usize>>(), 8, |x| {
+            let inner = parallel_map_owned((0..5).collect::<Vec<usize>>(), 4, |y| y + x);
+            inner.iter().sum::<usize>()
+        });
+        for (x, s) in out.iter().enumerate() {
+            assert_eq!(*s, 10 + 5 * x);
+        }
+    }
+
+    #[test]
+    fn concurrent_batches_share_one_team() {
+        // Many caller threads hammer the global team at once; every batch
+        // gets its own correct, ordered results.
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..6)
+                .map(|t| {
+                    scope.spawn(move || {
+                        let items: Vec<usize> = (0..120).collect();
+                        let out = parallel_map_owned(items, 4, move |x| x * 3 + t);
+                        for (i, v) in out.iter().enumerate() {
+                            assert_eq!(*v, i * 3 + t);
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let team = WorkerTeam::new(4);
+        assert_eq!(team.threads(), 4);
+        let out = team.run_owned(vec![1usize, 2, 3, 4], 4, |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4, 5]);
+        drop(team); // must not hang or leak threads
+    }
+
+    #[test]
+    fn progress_spawn_variant_matches_team_variant() {
+        let items: Vec<usize> = (0..200).collect();
+        let calls = AtomicUsize::new(0);
+        let a = parallel_map_progress_spawn(
+            items.clone(),
+            4,
+            |&x| x * 7,
+            |done, total| {
+                assert!(done <= total);
+                calls.fetch_add(1, Ordering::Relaxed);
+            },
+        );
+        assert_eq!(calls.load(Ordering::Relaxed), 200);
+        let b = parallel_map_progress(items, 4, |&x| x * 7, |_, _| {});
+        assert_eq!(a, b);
     }
 
     #[test]
