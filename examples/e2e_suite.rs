@@ -50,9 +50,10 @@ fn main() {
     match ArtifactBackend::load(&artifact_dir(None)) {
         Ok(b) => {
             let grid88 = ds.domain.full_grid();
-            let enc: Vec<Vec<f64>> =
+            let rows: Vec<Vec<f64>> =
                 grid88.iter().map(|c| multicloud::domain::encode(&ds.domain, c)).collect();
-            let x = enc[..16].to_vec();
+            let enc = multicloud::linalg::Matrix::from_rows(&rows);
+            let x = multicloud::linalg::Matrix::from_rows(&rows[..16]);
             let y: Vec<f64> = (0..16).map(|i| ds.mean_value(0, i, Target::Cost)).collect();
             let pa = b.gp_fit_predict(&x, &y, &enc);
             let pn = NativeBackend.gp_fit_predict(&x, &y, &enc);

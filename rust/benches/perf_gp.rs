@@ -1,26 +1,34 @@
 //! §Perf L2/runtime bench: surrogate fit+predict latency, native vs PJRT
 //! artifact, across observation counts — the per-iteration hot path of
-//! every BO-family optimizer. Also times the incremental-Cholesky GP
-//! session against the full refit (the O(n²) vs O(n³)-per-iteration
-//! story behind the EvalLedger/IncrementalGp redesign), isolates
-//! artifact execution vs buffer marshalling, and measures the
-//! executable-pool effect.
+//! every BO-family optimizer. Times three generations of the GP predict
+//! path against each other (full refit, incremental with per-candidate
+//! solves, whitened pinned cache), isolates artifact execution vs buffer
+//! marshalling, and measures the executable-pool effect.
+//!
+//! Emits `results/BENCH_gp.json` (machine-readable, via
+//! `benchkit::Suite::to_json`) so the perf trajectory of the hot loop is
+//! tracked across PRs, alongside the human-readable CSV.
 
 use multicloud::benchkit::{black_box, Suite};
 use multicloud::dataset::{OfflineDataset, Target};
 use multicloud::domain::encode;
+use multicloud::linalg::Matrix;
 use multicloud::runtime::{artifact_dir, ArtifactBackend};
 use multicloud::surrogate::{Backend, NativeBackend};
 use multicloud::util::rng::Rng;
 
-fn problem(n: usize) -> (Vec<Vec<f64>>, Vec<f64>, Vec<Vec<f64>>) {
+fn problem(n: usize) -> (Matrix, Vec<f64>, Matrix) {
     let ds = OfflineDataset::generate(2022, 3);
     let grid = ds.domain.full_grid();
     let mut rng = Rng::new(42);
     let idx = rng.sample_indices(grid.len(), n.min(grid.len()));
-    let x: Vec<Vec<f64>> = idx.iter().map(|&i| encode(&ds.domain, &grid[i])).collect();
+    let x = Matrix::from_rows(
+        &idx.iter().map(|&i| encode(&ds.domain, &grid[i])).collect::<Vec<Vec<f64>>>(),
+    );
     let y: Vec<f64> = idx.iter().map(|&i| ds.mean_value(5, i, Target::Cost)).collect();
-    let cands: Vec<Vec<f64>> = grid.iter().map(|c| encode(&ds.domain, c)).collect();
+    let cands = Matrix::from_rows(
+        &grid.iter().map(|c| encode(&ds.domain, c)).collect::<Vec<Vec<f64>>>(),
+    );
     (x, y, cands)
 }
 
@@ -43,24 +51,59 @@ fn main() {
     // n observations with one predict per step — exactly what every
     // GP-backed optimizer iteration pays. "full refit" rebuilds the
     // Cholesky per step (the pre-EvalLedger behaviour); "incremental"
-    // appends a rank-1 border per step.
+    // appends a rank-1 border per step but still pays one triangular
+    // solve per candidate per predict; "whitened pinned" is the cached
+    // V = L⁻¹K(X,C) path the BO loop actually runs — O(n·m) dots per
+    // predict, zero per-candidate solves.
     for n in [8usize, 32, 88] {
         let (x, y, cands) = problem(n);
-        suite.bench(&format!("gp full-refit run n=0..{n} m=88"), || {
+        suite.bench(&format!("gp full-refit run n=0..{n} m=88 (old)"), || {
             let mut acc = 0.0;
             for i in 1..=n {
-                acc += native.gp_fit_predict(&x[..i], &y[..i], &cands).mean[0];
+                let xi = Matrix::from_rows(
+                    &(0..i).map(|r| x.row(r).to_vec()).collect::<Vec<Vec<f64>>>(),
+                );
+                acc += native.gp_fit_predict(&xi, &y[..i], &cands).mean[0];
             }
             black_box(acc)
         });
-        suite.bench(&format!("gp incremental run n=0..{n} m=88"), || {
+        suite.bench(&format!("gp incremental run n=0..{n} m=88 (per-cand solves)"), || {
             let mut sess = native.gp_session();
             let mut acc = 0.0;
             for i in 0..n {
-                sess.observe(x[i].clone(), y[i]);
+                sess.observe(x.row(i).to_vec(), y[i]);
                 acc += sess.predict(&cands).mean[0];
             }
             black_box(acc)
+        });
+        suite.bench(&format!("gp whitened pinned run n=0..{n} m=88 (new)"), || {
+            let mut sess = native.gp_session();
+            sess.pin_candidates(&cands);
+            let mut acc = 0.0;
+            for i in 0..n {
+                sess.observe(x.row(i).to_vec(), y[i]);
+                acc += sess.predict_pinned().mean[0];
+            }
+            black_box(acc)
+        });
+    }
+
+    // Steady-state per-prediction cost at fixed n: the marginal predict
+    // the tail of a large-budget trial pays on every iteration.
+    for n in [32usize, 88] {
+        let (x, y, cands) = problem(n);
+        let mut unpinned = native.gp_session();
+        let mut pinned = native.gp_session();
+        pinned.pin_candidates(&cands);
+        for i in 0..n {
+            unpinned.observe(x.row(i).to_vec(), y[i]);
+            pinned.observe(x.row(i).to_vec(), y[i]);
+        }
+        suite.bench(&format!("gp predict (per-cand solves) n={n} m=88"), || {
+            black_box(unpinned.predict(&cands)).mean[0]
+        });
+        suite.bench(&format!("gp predict_pinned (whitened) n={n} m=88"), || {
+            black_box(pinned.predict_pinned()).mean[0]
         });
     }
 
@@ -86,4 +129,5 @@ fn main() {
     suite.finish();
     std::fs::create_dir_all("results").ok();
     std::fs::write("results/perf_gp.csv", suite.to_csv()).ok();
+    std::fs::write("results/BENCH_gp.json", suite.to_json()).ok();
 }

@@ -8,6 +8,7 @@ use multicloud::benchkit::{black_box, Suite};
 use multicloud::dataset::objective::{EvalLedger, LookupObjective, MeasureMode};
 use multicloud::dataset::{OfflineDataset, Target};
 use multicloud::domain::encode;
+use multicloud::linalg::Matrix;
 use multicloud::optimizers::{by_name, SearchContext};
 use multicloud::runtime::{artifact_dir, ArtifactBackend};
 use multicloud::surrogate::{Backend, NativeBackend};
@@ -32,9 +33,10 @@ fn main() {
 
     let ds = OfflineDataset::generate(2022, 3);
     let grid = ds.domain.full_grid();
-    let cands: Vec<Vec<f64>> = grid.iter().map(|c| encode(&ds.domain, c)).collect();
+    let rows: Vec<Vec<f64>> = grid.iter().map(|c| encode(&ds.domain, c)).collect();
+    let cands = Matrix::from_rows(&rows);
     for n in [4usize, 44, 88] {
-        let x: Vec<Vec<f64>> = cands[..n].to_vec();
+        let x = Matrix::from_rows(&rows[..n]);
         let y: Vec<f64> = (0..n).map(|i| ds.mean_value(2, i, Target::Cost)).collect();
         suite.bench(&format!("gp artifact full fit_predict n={n} (4 execs)"), || {
             black_box(art.gp_fit_predict(&x, &y, &cands)).mean[0]

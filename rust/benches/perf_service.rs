@@ -107,4 +107,5 @@ fn main() {
     suite.finish();
     std::fs::create_dir_all("results").ok();
     std::fs::write("results/perf_service.csv", suite.to_csv()).ok();
+    std::fs::write("results/BENCH_service.json", suite.to_json()).ok();
 }

@@ -159,6 +159,34 @@ impl Suite {
         }
     }
 
+    /// Machine-readable JSON dump (`results/BENCH_*.json`): one object
+    /// per bench with the raw latency stats and derived throughput, so
+    /// the perf trajectory can be diffed across PRs by tooling instead
+    /// of by eyeballing tables.
+    pub fn to_json(&self) -> String {
+        use crate::util::json::Value;
+        let results: Vec<Value> = self
+            .results
+            .iter()
+            .map(|r| {
+                Value::obj(vec![
+                    ("name", r.name.as_str().into()),
+                    ("iters", r.iters.into()),
+                    ("mean_ns", r.mean_ns.into()),
+                    ("p50_ns", r.p50_ns.into()),
+                    ("p95_ns", r.p95_ns.into()),
+                    ("units_per_iter", r.units_per_iter.into()),
+                    ("throughput_per_s", r.throughput().into()),
+                ])
+            })
+            .collect();
+        Value::obj(vec![
+            ("title", self.title.as_str().into()),
+            ("results", Value::Arr(results)),
+        ])
+        .to_string_pretty()
+    }
+
     /// CSV dump for EXPERIMENTS.md §Perf bookkeeping.
     pub fn to_csv(&self) -> String {
         let mut rows = vec![vec![
@@ -226,5 +254,18 @@ mod tests {
         s.record("grid", 2e9, 100.0);
         assert_eq!(s.results().len(), 1);
         assert!((s.results()[0].throughput() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let mut s = Suite::new("suite-title");
+        s.record("gp predict", 1e6, 88.0);
+        let v = crate::util::json::parse(&s.to_json()).unwrap();
+        assert_eq!(v.get("title").unwrap().as_str(), Some("suite-title"));
+        let rs = v.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].get("name").unwrap().as_str(), Some("gp predict"));
+        assert_eq!(rs[0].get("mean_ns").unwrap().as_f64(), Some(1e6));
+        assert!(rs[0].get("throughput_per_s").unwrap().as_f64().unwrap() > 0.0);
     }
 }

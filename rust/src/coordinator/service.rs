@@ -12,6 +12,7 @@
 //!   {"op": "list_workloads"}
 //!   {"op": "list_methods"}
 //!   {"op": "stats"}
+//!   {"op": "clear_cache"}
 //!   {"op": "ping"}
 //!
 //! ## Serving architecture
@@ -33,24 +34,32 @@
 //!   server leans on request-level parallelism instead. Explicit values
 //!   are honored as before. Either way results are bit-identical; the
 //!   knob only moves latency.
-//! * **Cross-request response cache.** Deterministic-mode requests
-//!   (`measure_mode` of `mean`/`p90`) are answered from a cache keyed by
-//!   (workload, target, method, budget, seed, measure_mode): a repeat
-//!   request returns the byte-identical response with zero new source
-//!   measurements. `single_draw` requests are never cached (repeat
+//! * **Cross-request response cache (bounded LRU).** Deterministic-mode
+//!   requests (`measure_mode` of `mean`/`p90`) are answered from a cache
+//!   keyed by (workload, target, method, budget, seed, measure_mode): a
+//!   repeat request returns the byte-identical response with zero new
+//!   source measurements. The cache holds at most
+//!   [`Service::with_cache_cap`] entries (default [`DEFAULT_CACHE_CAP`])
+//!   and evicts least-recently-used, so a long-lived server stays
+//!   bounded under adversarial key churn; `{"op":"clear_cache"}` drops
+//!   it wholesale. `single_draw` requests are never cached (repeat
 //!   evaluations legitimately re-draw).
 //! * **Batch op.** `{"op":"batch","requests":[...]}` fans a request list
 //!   across the team and returns per-request responses in input order;
 //!   a failing entry yields an error object in its slot without
-//!   poisoning the rest. Entries executed on team threads run their own
-//!   arm fan-out inline — request-level parallelism already saturates
-//!   the team, so per-entry arm workers would only add queue pressure.
+//!   poisoning the rest. Identical *deterministic* entries are
+//!   pre-grouped so each distinct key runs exactly one trial (the
+//!   duplicates receive copies of the representative's response) —
+//!   a guarantee, not the cache race it used to be. Entries executed on
+//!   team threads run their own arm fan-out inline — request-level
+//!   parallelism already saturates the team, so per-entry arm workers
+//!   would only add queue pressure.
 //!
 //! Response (optimize):
 //!   {"ok": true, "config": "gcp/family=e2/...", "value": 0.123,
 //!    "evals": 33, "search_expense": 4.56, "regret": 0.01}
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -69,6 +78,9 @@ use crate::util::threadpool::{default_workers, global_team, parallel_map_owned, 
 /// Largest request list one batch op accepts.
 pub const MAX_BATCH: usize = 256;
 
+/// Default bound on cached deterministic-mode responses (LRU beyond it).
+pub const DEFAULT_CACHE_CAP: usize = 1024;
+
 /// Cache key for deterministic-mode responses. `trial_workers` is
 /// deliberately absent: worker counts never change results, so requests
 /// differing only in parallelism share one cache entry.
@@ -82,6 +94,68 @@ struct ResponseKey {
     mode: MeasureMode,
 }
 
+/// Bounded LRU store behind the cross-request response cache: a key map
+/// carrying each entry's last-use tick plus a tick-ordered index, so a
+/// hit is O(log n) and eviction pops the stalest tick. Plain maps (no
+/// external LRU crate — this tree builds offline with zero deps).
+struct ResponseCache {
+    cap: usize,
+    tick: u64,
+    map: HashMap<ResponseKey, (Value, u64)>,
+    order: BTreeMap<u64, ResponseKey>,
+}
+
+impl ResponseCache {
+    fn new(cap: usize) -> ResponseCache {
+        ResponseCache { cap: cap.max(1), tick: 0, map: HashMap::new(), order: BTreeMap::new() }
+    }
+
+    /// Look up and mark as most-recently-used.
+    fn get(&mut self, key: &ResponseKey) -> Option<Value> {
+        self.tick += 1;
+        let tick = self.tick;
+        let (resp, last) = self.map.get_mut(key)?;
+        let stale = std::mem::replace(last, tick);
+        let resp = resp.clone();
+        self.order.remove(&stale);
+        self.order.insert(tick, key.clone());
+        Some(resp)
+    }
+
+    /// Insert (first writer wins), evicting least-recently-used entries
+    /// past the cap. Returns how many entries were evicted.
+    fn insert(&mut self, key: ResponseKey, resp: Value) -> usize {
+        if self.map.contains_key(&key) {
+            // A racing duplicate computed the identical response
+            // (deterministic mode), so the existing entry serves.
+            return 0;
+        }
+        let mut evicted = 0;
+        while self.map.len() >= self.cap {
+            let Some((&stalest, _)) = self.order.iter().next() else { break };
+            if let Some(victim) = self.order.remove(&stalest) {
+                self.map.remove(&victim);
+                evicted += 1;
+            }
+        }
+        self.tick += 1;
+        self.order.insert(self.tick, key.clone());
+        self.map.insert(key, (resp, self.tick));
+        evicted
+    }
+
+    fn clear(&mut self) -> usize {
+        let n = self.map.len();
+        self.map.clear();
+        self.order.clear();
+        n
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+}
+
 /// Process-wide request scheduler: owns the admission count, the
 /// adaptive arm-worker sizing, and the cross-request response cache.
 /// One per [`Service`]; all connections and batch entries share it.
@@ -89,8 +163,9 @@ pub struct Scheduler {
     /// The process compute team all request parallelism lands on.
     team: &'static WorkerTeam,
     in_flight: AtomicUsize,
-    cache: Mutex<HashMap<ResponseKey, Value>>,
+    cache: Mutex<ResponseCache>,
     cache_hits: AtomicU64,
+    cache_evictions: AtomicU64,
     trials_run: AtomicU64,
 }
 
@@ -104,12 +179,13 @@ impl Drop for Admission<'_> {
 }
 
 impl Scheduler {
-    fn new() -> Scheduler {
+    fn new(cache_cap: usize) -> Scheduler {
         Scheduler {
             team: global_team(),
             in_flight: AtomicUsize::new(0),
-            cache: Mutex::new(HashMap::new()),
+            cache: Mutex::new(ResponseCache::new(cache_cap)),
             cache_hits: AtomicU64::new(0),
+            cache_evictions: AtomicU64::new(0),
             trials_run: AtomicU64::new(0),
         }
     }
@@ -141,6 +217,11 @@ impl Scheduler {
         self.cache_hits.load(Ordering::Relaxed)
     }
 
+    /// Entries evicted from the response cache so far (LRU past the cap).
+    pub fn cache_evictions(&self) -> u64 {
+        self.cache_evictions.load(Ordering::Relaxed)
+    }
+
     /// Optimization trials actually executed (cache misses + uncacheable).
     pub fn trials_run(&self) -> u64 {
         self.trials_run.load(Ordering::Relaxed)
@@ -151,8 +232,13 @@ impl Scheduler {
         self.cache.lock().unwrap().len()
     }
 
+    /// Drop every cached response; returns how many were held.
+    pub fn clear_cache(&self) -> usize {
+        self.cache.lock().unwrap().clear()
+    }
+
     fn cache_lookup(&self, key: &ResponseKey) -> Option<Value> {
-        let hit = self.cache.lock().unwrap().get(key).cloned();
+        let hit = self.cache.lock().unwrap().get(key);
         if hit.is_some() {
             self.cache_hits.fetch_add(1, Ordering::Relaxed);
         }
@@ -160,9 +246,10 @@ impl Scheduler {
     }
 
     fn cache_store(&self, key: ResponseKey, resp: Value) {
-        // First writer wins; a racing duplicate computed the identical
-        // response (deterministic mode), so either entry serves.
-        self.cache.lock().unwrap().entry(key).or_insert(resp);
+        let evicted = self.cache.lock().unwrap().insert(key, resp);
+        if evicted > 0 {
+            self.cache_evictions.fetch_add(evicted as u64, Ordering::Relaxed);
+        }
     }
 }
 
@@ -173,12 +260,44 @@ pub struct Service {
     conn_workers: usize,
 }
 
+/// Parsed + validated fields of one optimize request (the single source
+/// of request defaults: target `cost`, method `cb-rbfopt`, budget 33,
+/// seed 0, adaptive workers, `single_draw`).
+struct OptimizeParams {
+    workload: usize,
+    workload_id: String,
+    target: Target,
+    method: String,
+    budget: usize,
+    seed: u64,
+    /// 0 = adaptive (sized at execution time from in-flight load).
+    trial_workers: usize,
+    measure_mode: MeasureMode,
+}
+
+impl OptimizeParams {
+    /// The response identity: everything that can change the answer.
+    /// `trial_workers` is deliberately absent — worker counts never
+    /// change results — so it also backs batch dedup at exactly the
+    /// response-cache granularity.
+    fn key(&self) -> ResponseKey {
+        ResponseKey {
+            workload: self.workload,
+            target: self.target,
+            method: self.method.clone(),
+            budget: self.budget,
+            seed: self.seed,
+            mode: self.measure_mode,
+        }
+    }
+}
+
 impl Service {
     pub fn new(ds: Arc<OfflineDataset>, backend: Arc<dyn Backend + Send + Sync>) -> Service {
         Service {
             ds,
             backend,
-            scheduler: Scheduler::new(),
+            scheduler: Scheduler::new(DEFAULT_CACHE_CAP),
             conn_workers: default_workers().clamp(2, 32),
         }
     }
@@ -187,6 +306,15 @@ impl Service {
     /// connections; further connections wait in the accept queue).
     pub fn with_conn_workers(mut self, workers: usize) -> Service {
         self.conn_workers = workers.max(1);
+        self
+    }
+
+    /// Bound the cross-request response cache (entries, min 1): beyond
+    /// it the least-recently-used response is evicted. Long-lived
+    /// servers stay memory-bounded no matter how many distinct
+    /// deterministic keys clients churn through.
+    pub fn with_cache_cap(mut self, cap: usize) -> Service {
+        self.scheduler.cache.lock().unwrap().cap = cap.max(1);
         self
     }
 
@@ -230,10 +358,16 @@ impl Service {
                     ("in_flight", s.in_flight().into()),
                     ("trials_run", (s.trials_run() as usize).into()),
                     ("cache_hits", (s.cache_hits() as usize).into()),
+                    ("cache_evictions", (s.cache_evictions() as usize).into()),
                     ("cached_responses", s.cached_responses().into()),
+                    ("cache_cap", s.cache.lock().unwrap().cap.into()),
                     ("team_threads", s.team_threads().into()),
                     ("conn_workers", self.conn_workers.into()),
                 ]))
+            }
+            "clear_cache" => {
+                let cleared = self.scheduler.clear_cache();
+                Ok(Value::obj(vec![("ok", true.into()), ("cleared", cleared.into())]))
             }
             "optimize" => self.handle_optimize(req),
             "batch" => {
@@ -250,22 +384,55 @@ impl Service {
                 if reqs.len() > MAX_BATCH {
                     return Err(format!("batch larger than {MAX_BATCH} requests"));
                 }
-                // Fan the entries across the team; every entry yields a
-                // response in its input slot (errors become error
-                // objects, never poison siblings).
-                let items: Vec<&Value> = reqs.iter().collect();
-                let responses = parallel_map_owned(items, default_workers(), |r| {
-                    // Contain panics per entry: one panicking trial must
-                    // produce an error object in its own slot, not
-                    // collapse the sibling responses.
-                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        self.handle_request(r, depth + 1)
-                    }))
-                    .unwrap_or_else(|_| Err("internal error handling request".into()))
-                    .unwrap_or_else(|e| {
-                        Value::obj(vec![("ok", false.into()), ("error", e.into())])
+                // Parse optimize entries once up front: the parse feeds
+                // both dedup (pre-grouping identical deterministic keys
+                // so each distinct key runs exactly one trial — a
+                // guarantee, where relying on the response cache alone
+                // would let racing duplicates both run) and execution
+                // (representatives run from their parsed params, no
+                // re-parse).
+                let mut plans: Vec<Option<OptimizeParams>> = reqs
+                    .iter()
+                    .map(|r| match r.get("op").and_then(|v| v.as_str()) {
+                        None | Some("optimize") => self.parse_optimize(r).ok(),
+                        Some(_) => None,
                     })
-                });
+                    .collect();
+                let mut rep_of: Vec<usize> = Vec::with_capacity(reqs.len());
+                let mut first_seen: HashMap<ResponseKey, usize> = HashMap::new();
+                for (i, plan) in plans.iter().enumerate() {
+                    match plan.as_ref().filter(|p| p.measure_mode.deterministic()) {
+                        Some(p) => rep_of.push(*first_seen.entry(p.key()).or_insert(i)),
+                        None => rep_of.push(i),
+                    }
+                }
+                // Fan the representative entries across the team; every
+                // representative yields a response for its slot (errors
+                // become error objects, never poison siblings).
+                let uniques: Vec<(usize, Option<OptimizeParams>)> = (0..reqs.len())
+                    .filter(|&i| rep_of[i] == i)
+                    .map(|i| (i, plans[i].take()))
+                    .collect();
+                let slot_of: HashMap<usize, usize> =
+                    uniques.iter().enumerate().map(|(s, &(i, _))| (i, s)).collect();
+                let unique_responses =
+                    parallel_map_owned(uniques, default_workers(), |(i, plan)| {
+                        // Contain panics per entry: one panicking trial
+                        // must produce an error object in its own slot,
+                        // not collapse the sibling responses.
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match plan {
+                            Some(p) => Ok(self.run_optimize(p)),
+                            None => self.handle_request(&reqs[i], depth + 1),
+                        }))
+                        .unwrap_or_else(|_| Err("internal error handling request".into()))
+                        .unwrap_or_else(|e| {
+                            Value::obj(vec![("ok", false.into()), ("error", e.into())])
+                        })
+                    });
+                let responses: Vec<Value> = rep_of
+                    .iter()
+                    .map(|rep| unique_responses[slot_of[rep]].clone())
+                    .collect();
                 Ok(Value::obj(vec![
                     ("ok", true.into()),
                     ("responses", Value::Arr(responses)),
@@ -275,7 +442,10 @@ impl Service {
         }
     }
 
-    fn handle_optimize(&self, req: &Value) -> Result<Value, String> {
+    /// Parse + validate an optimize request (also the batch-dedup
+    /// front-end: validation must happen here so entries that would
+    /// error never collapse onto a healthy representative).
+    fn parse_optimize(&self, req: &Value) -> Result<OptimizeParams, String> {
         let workload_id = req
             .get("workload")
             .and_then(|v| v.as_str())
@@ -303,7 +473,7 @@ impl Service {
         if budget == 0 || budget > 10_000 {
             return Err("budget out of range".into());
         }
-        // 0 (or absent) = adaptive: sized below, after admission.
+        // 0 (or absent) = adaptive: sized at execution, after admission.
         let trial_workers = match req.get("trial_workers") {
             None => 0,
             Some(v) => v
@@ -324,57 +494,69 @@ impl Service {
                 })?
             }
         };
+        Ok(OptimizeParams {
+            workload,
+            workload_id: workload_id.to_string(),
+            target,
+            method,
+            budget,
+            seed,
+            trial_workers,
+            measure_mode,
+        })
+    }
 
+    fn handle_optimize(&self, req: &Value) -> Result<Value, String> {
+        let p = self.parse_optimize(req)?;
+        Ok(self.run_optimize(p))
+    }
+
+    /// Execute a parsed + validated optimize request (infallible past
+    /// validation: cache hit or a real trial).
+    fn run_optimize(&self, p: OptimizeParams) -> Value {
         // Count this request in-flight from here on: the adaptive sizing
         // below divides the machine by what is actually running.
         let _admission = self.scheduler.admit();
 
         // Deterministic modes answer repeats from the response cache —
         // zero new measurements, byte-identical response.
-        let key = ResponseKey {
-            workload,
-            target,
-            method: method.clone(),
-            budget,
-            seed,
-            mode: measure_mode,
-        };
-        if measure_mode.deterministic() {
+        let key = p.key();
+        if p.measure_mode.deterministic() {
             if let Some(hit) = self.scheduler.cache_lookup(&key) {
-                return Ok(hit);
+                return hit;
             }
         }
 
-        let trial_workers = if trial_workers == 0 {
+        let trial_workers = if p.trial_workers == 0 {
             self.scheduler.effective_arm_workers()
         } else {
-            trial_workers
+            p.trial_workers
         };
         let spec = TrialSpec {
-            method,
-            workload,
-            target,
-            budget,
-            seed,
+            method: p.method,
+            workload: p.workload,
+            target: p.target,
+            budget: p.budget,
+            seed: p.seed,
             trial_workers,
-            measure_mode,
+            measure_mode: p.measure_mode,
         };
         let r = run_trial(&self.ds, self.backend.as_ref(), &spec);
         self.scheduler.trials_run.fetch_add(1, Ordering::Relaxed);
         let resp = Value::obj(vec![
             ("ok", true.into()),
-            ("workload", workload_id.into()),
-            ("target", target.name().into()),
+            ("workload", p.workload_id.into()),
+            ("target", p.target.name().into()),
             ("method", spec.method.as_str().into()),
             ("value", r.chosen_value.into()),
             ("regret", r.regret.into()),
             ("evals", r.evals.into()),
             ("search_expense", r.search_expense.into()),
         ]);
-        if measure_mode.deterministic() {
+        if p.measure_mode.deterministic() {
             self.scheduler.cache_store(key, resp.clone());
         }
-        Ok(resp)
+        resp
     }
 
     /// Serve until `stop` is set. Returns the bound local port.
@@ -574,6 +756,106 @@ mod tests {
         assert_eq!(a, b, "SingleDraw is still deterministic per spec");
         assert_eq!(svc.scheduler().trials_run(), trials_mid + 1, "SingleDraw reruns");
         assert_eq!(svc.scheduler().cache_hits(), 1);
+    }
+
+    /// The LRU cap: the cache never exceeds it, evicts the stalest key,
+    /// and a hit refreshes recency (so the hot key survives churn).
+    #[test]
+    fn response_cache_evicts_least_recently_used_at_cap() {
+        let svc = service().with_cache_cap(2);
+        let req = |seed: usize| {
+            format!(
+                r#"{{"op":"optimize","workload":"kmeans:buzz","target":"cost","method":"rs","budget":6,"seed":{seed},"measure_mode":"mean"}}"#
+            )
+        };
+        svc.handle(&req(1)); // cache: [1]
+        svc.handle(&req(2)); // cache: [1, 2]
+        assert_eq!(svc.scheduler().cached_responses(), 2);
+        assert_eq!(svc.scheduler().cache_evictions(), 0);
+        // Touch 1 so 2 becomes the LRU victim, then insert 3.
+        svc.handle(&req(1));
+        assert_eq!(svc.scheduler().cache_hits(), 1);
+        svc.handle(&req(3)); // evicts 2 -> cache: [1, 3]
+        assert_eq!(svc.scheduler().cached_responses(), 2, "cap must hold");
+        assert_eq!(svc.scheduler().cache_evictions(), 1);
+        // 1 and 3 still hit; 2 reruns the trial.
+        let trials = svc.scheduler().trials_run();
+        svc.handle(&req(1));
+        svc.handle(&req(3));
+        assert_eq!(svc.scheduler().trials_run(), trials, "1 and 3 must still be cached");
+        svc.handle(&req(2));
+        assert_eq!(svc.scheduler().trials_run(), trials + 1, "2 was evicted and reruns");
+        // The stats op reports the new counters.
+        let stats = svc.handle(r#"{"op":"stats"}"#);
+        let v = parse(&stats).unwrap();
+        assert_eq!(v.get("cache_cap").unwrap().as_usize(), Some(2), "{stats}");
+        assert!(v.get("cache_evictions").unwrap().as_usize().unwrap() >= 1, "{stats}");
+    }
+
+    /// `clear_cache` drops every cached response (reporting the count)
+    /// and subsequent repeats rerun their trials.
+    #[test]
+    fn clear_cache_op_empties_the_response_cache() {
+        let svc = service();
+        let req = r#"{"op":"optimize","workload":"kmeans:buzz","target":"cost","method":"rs","budget":6,"seed":1,"measure_mode":"mean"}"#;
+        svc.handle(req);
+        assert_eq!(svc.scheduler().cached_responses(), 1);
+        let resp = svc.handle(r#"{"op":"clear_cache"}"#);
+        let v = parse(&resp).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true), "{resp}");
+        assert_eq!(v.get("cleared").unwrap().as_usize(), Some(1), "{resp}");
+        assert_eq!(svc.scheduler().cached_responses(), 0);
+        let trials = svc.scheduler().trials_run();
+        svc.handle(req);
+        assert_eq!(svc.scheduler().trials_run(), trials + 1, "cleared key must rerun");
+        // Clearing an empty cache is a no-op reporting 0... after the
+        // rerun repopulated one entry.
+        let again = svc.handle(r#"{"op":"clear_cache"}"#);
+        assert_eq!(parse(&again).unwrap().get("cleared").unwrap().as_usize(), Some(1));
+    }
+
+    /// Identical deterministic entries inside one batch run exactly one
+    /// trial (pre-grouped, not cache-raced) — including entries that are
+    /// only *semantically* identical (different `trial_workers`, key
+    /// order, or number spelling); `single_draw` duplicates still run
+    /// per slot.
+    #[test]
+    fn batch_dedups_identical_deterministic_entries() {
+        let det = r#"{"op":"optimize","workload":"kmeans:buzz","method":"rs","budget":7,"seed":1,"measure_mode":"mean"}"#;
+        // Same response key as `det`: worker count is not part of the
+        // response identity, and the textual shape differs.
+        let det_tw = r#"{"op":"optimize","method":"rs","workload":"kmeans:buzz","budget":7,"seed":1.0,"measure_mode":"mean","trial_workers":2}"#;
+        let sd = r#"{"op":"optimize","workload":"kmeans:buzz","method":"rs","budget":7,"seed":1}"#;
+        let svc = service();
+        let batch =
+            format!(r#"{{"op":"batch","requests":[{det},{det},{sd},{det_tw},{sd}]}}"#);
+        let resp = svc.handle(&batch);
+        let v = parse(&resp).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true), "{resp}");
+        let responses = v.get("responses").unwrap().as_arr().unwrap();
+        assert_eq!(responses.len(), 5);
+        // 1 trial for the three semantically-equal deterministic slots +
+        // 2 for the single_draw slots.
+        assert_eq!(svc.scheduler().trials_run(), 3, "deterministic dup must run once");
+        for (i, j) in [(0usize, 1usize), (0, 3)] {
+            assert_eq!(
+                responses[i].to_string_compact(),
+                responses[j].to_string_compact(),
+                "deduped slots must carry the representative's response"
+            );
+        }
+        // Parity with individual requests on a fresh service.
+        let fresh = service();
+        assert_eq!(responses[0].to_string_compact(), fresh.handle(det));
+        assert_eq!(responses[2].to_string_compact(), fresh.handle(sd));
+        // An entry that would error (invalid trial_workers) never
+        // collapses onto a healthy representative.
+        let bad_tw = r#"{"op":"optimize","workload":"kmeans:buzz","method":"rs","budget":7,"seed":1,"measure_mode":"mean","trial_workers":9999}"#;
+        let batch2 = format!(r#"{{"op":"batch","requests":[{det},{bad_tw}]}}"#);
+        let v2 = parse(&svc.handle(&batch2)).unwrap();
+        let r2 = v2.get("responses").unwrap().as_arr().unwrap();
+        assert_eq!(r2[0].get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(r2[1].get("ok").unwrap().as_bool(), Some(false), "invalid entry must error");
     }
 
     /// N client threads hammering one Service with a mixed op workload

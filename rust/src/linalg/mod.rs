@@ -40,6 +40,18 @@ impl Matrix {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Append one row in place (amortized O(cols)). A matrix created as
+    /// `zeros(0, 0)` adopts the width of its first pushed row, so callers
+    /// that learn the dimensionality from the data can still stream rows.
+    pub fn push_row(&mut self, row: &[f64]) {
+        if self.rows == 0 && self.cols == 0 {
+            self.cols = row.len();
+        }
+        assert_eq!(row.len(), self.cols, "push_row width mismatch");
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
     pub fn transpose(&self) -> Matrix {
         let mut t = Matrix::zeros(self.cols, self.rows);
         for i in 0..self.rows {
@@ -137,8 +149,33 @@ pub fn cholesky(a: &Matrix) -> Option<Matrix> {
     Some(l)
 }
 
+/// Count of [`solve_lower`] calls on this thread (debug builds only;
+/// always 0 in release). Backs the whitened-cache tests asserting that
+/// `predict_pinned` performs no per-candidate triangular solves. The
+/// counter is thread-local so concurrently running tests cannot pollute
+/// each other's deltas.
+#[cfg(debug_assertions)]
+thread_local! {
+    static SOLVE_LOWER_CALLS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Number of [`solve_lower`] invocations performed by the current thread
+/// (debug builds; release builds return 0 and pay no counting cost).
+pub fn solve_lower_calls() -> u64 {
+    #[cfg(debug_assertions)]
+    {
+        SOLVE_LOWER_CALLS.with(|c| c.get())
+    }
+    #[cfg(not(debug_assertions))]
+    {
+        0
+    }
+}
+
 /// Solve L y = b (forward substitution), L lower-triangular.
 pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    #[cfg(debug_assertions)]
+    SOLVE_LOWER_CALLS.with(|c| c.set(c.get() + 1));
     let n = l.rows;
     assert_eq!(b.len(), n);
     let mut y = vec![0.0; n];
@@ -150,6 +187,35 @@ pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
         y[i] = s / l[(i, i)];
     }
     y
+}
+
+/// Solve L V = B for an n×m right-hand side by blocked forward
+/// substitution — one pass over B with contiguous row arithmetic, used to
+/// (re)build whitened candidate matrices `V = L⁻¹ K(X, C)` wholesale.
+/// Column j of the result is bit-identical to `solve_lower(l, column_j)`:
+/// the per-entry operation order is the same, so incremental consumers
+/// can mix this with row-at-a-time appends without drift.
+pub fn solve_lower_multi(l: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(l.rows, l.cols);
+    assert_eq!(b.rows, l.rows);
+    let (n, m) = (b.rows, b.cols);
+    let mut v = b.clone();
+    for i in 0..n {
+        let (done, rest) = v.data.split_at_mut(i * m);
+        let row_i = &mut rest[..m];
+        for k in 0..i {
+            let lik = l[(i, k)];
+            let row_k = &done[k * m..(k + 1) * m];
+            for (vi, &vk) in row_i.iter_mut().zip(row_k) {
+                *vi -= lik * vk;
+            }
+        }
+        let d = l[(i, i)];
+        for vi in row_i.iter_mut() {
+            *vi /= d;
+        }
+    }
+    v
 }
 
 /// Solve L^T x = b (back substitution), L lower-triangular.
@@ -430,6 +496,65 @@ mod tests {
         // Appending a row that destroys positive definiteness fails.
         let l2 = cholesky_append(&l1, &[4.0], 1.0);
         assert!(l2.is_none());
+    }
+
+    #[test]
+    fn push_row_grows_and_adopts_width() {
+        let mut m = Matrix::zeros(0, 0);
+        m.push_row(&[1.0, 2.0, 3.0]);
+        m.push_row(&[4.0, 5.0, 6.0]);
+        assert_eq!((m.rows, m.cols), (2, 3));
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+        // Fixed-width empty matrices enforce their declared width.
+        let mut f = Matrix::zeros(0, 2);
+        f.push_row(&[7.0, 8.0]);
+        assert_eq!(f[(0, 1)], 8.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "push_row width mismatch")]
+    fn push_row_rejects_ragged_rows() {
+        let mut m = Matrix::zeros(0, 2);
+        m.push_row(&[1.0]);
+    }
+
+    /// Multi-RHS forward substitution must be *bit-identical* per column
+    /// to the vector solve — the whitened-cache rebuild/append parity in
+    /// the GP session rests on this.
+    #[test]
+    fn solve_lower_multi_matches_vector_solve_bitwise() {
+        let mut rng = Rng::new(11);
+        let a = random_spd(9, &mut rng);
+        let l = cholesky(&a).unwrap();
+        let mut b = Matrix::zeros(9, 5);
+        for i in 0..9 {
+            for j in 0..5 {
+                b[(i, j)] = rng.normal();
+            }
+        }
+        let v = solve_lower_multi(&l, &b);
+        for j in 0..5 {
+            let col: Vec<f64> = (0..9).map(|i| b[(i, j)]).collect();
+            let want = solve_lower(&l, &col);
+            for i in 0..9 {
+                assert_eq!(v[(i, j)].to_bits(), want[i].to_bits(), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_lower_counter_counts_on_this_thread() {
+        let mut rng = Rng::new(12);
+        let a = random_spd(4, &mut rng);
+        let l = cholesky(&a).unwrap();
+        let before = solve_lower_calls();
+        let _ = solve_lower(&l, &[1.0, 2.0, 3.0, 4.0]);
+        let _ = solve_lower(&l, &[4.0, 3.0, 2.0, 1.0]);
+        if cfg!(debug_assertions) {
+            assert_eq!(solve_lower_calls() - before, 2);
+        } else {
+            assert_eq!(solve_lower_calls(), 0);
+        }
     }
 
     #[test]

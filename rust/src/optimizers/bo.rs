@@ -23,6 +23,7 @@ use super::{Optimizer, SearchContext, SearchResult};
 use crate::dataset::objective::{EvalLedger, EvalSink, LedgerShard};
 use crate::dataset::Target;
 use crate::domain::{encode, Config};
+use crate::linalg::Matrix;
 use crate::surrogate::rf::{RandomForest, RfParams};
 use crate::surrogate::{Acquisition, GpSession, Prediction, Surrogate};
 use crate::util::rng::Rng;
@@ -78,22 +79,27 @@ impl BoPreset {
 /// optimizers can pull arm states on worker threads.
 pub struct BoState<'a> {
     pub cands: Vec<Config>,
-    enc: Vec<Vec<f64>>,
+    /// Encoded candidate grid, one configuration per row (row-major so
+    /// the surrogate distance kernels stream contiguously).
+    enc: Matrix,
     preset: BoPreset,
-    obs_x: Vec<Vec<f64>>,
+    /// Encoded observations, grown one row per step.
+    obs_x: Matrix,
     pub(crate) obs_cfg_idx: Vec<usize>,
     pub(crate) ys: Vec<f64>,
     evaluated: Vec<bool>,
     rf_seed: u64,
     /// Incremental GP session (GP presets only), pinned to `enc` so
-    /// per-iteration predictions reuse cached candidate-distance rows.
+    /// per-iteration predictions hit the whitened candidate cache.
     gp: Option<Box<dyn GpSession + Send + 'a>>,
 }
 
 impl<'a> BoState<'a> {
     pub fn new(ctx: &SearchContext<'a>, cands: Vec<Config>, preset: BoPreset) -> BoState<'a> {
         assert!(!cands.is_empty());
-        let enc: Vec<Vec<f64>> = cands.iter().map(|c| encode(ctx.domain, c)).collect();
+        let enc = Matrix::from_rows(
+            &cands.iter().map(|c| encode(ctx.domain, c)).collect::<Vec<Vec<f64>>>(),
+        );
         let evaluated = vec![false; cands.len()];
         let gp = match preset.surrogate {
             SurrogateKind::Gp => {
@@ -103,11 +109,12 @@ impl<'a> BoState<'a> {
             }
             SurrogateKind::Rf => None,
         };
+        let obs_x = Matrix::zeros(0, enc.cols);
         BoState {
             cands,
             enc,
             preset,
-            obs_x: Vec::new(),
+            obs_x,
             obs_cfg_idx: Vec::new(),
             ys: Vec::new(),
             evaluated,
@@ -133,7 +140,7 @@ impl<'a> BoState<'a> {
 
     fn propose(&mut self, rng: &mut Rng) -> usize {
         // Init design: uniform random (distinct while possible).
-        if self.obs_x.len() < self.preset.n_init {
+        if self.obs_x.rows < self.preset.n_init {
             let unseen: Vec<usize> =
                 (0..self.cands.len()).filter(|&i| !self.evaluated[i]).collect();
             return if unseen.is_empty() {
@@ -178,9 +185,9 @@ impl<'a> BoState<'a> {
         }
         let i = self.propose(rng);
         let v = sink.eval(&self.cands[i])?;
-        self.obs_x.push(self.enc[i].clone());
+        self.obs_x.push_row(self.enc.row(i));
         if let Some(gp) = &mut self.gp {
-            gp.observe(self.enc[i].clone(), v);
+            gp.observe(self.enc.row(i).to_vec(), v);
         }
         self.obs_cfg_idx.push(i);
         self.ys.push(v);

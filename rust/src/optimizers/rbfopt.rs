@@ -14,6 +14,7 @@
 use super::{Optimizer, SearchContext, SearchResult};
 use crate::dataset::objective::{EvalLedger, EvalSink};
 use crate::domain::{encode, Config};
+use crate::linalg::Matrix;
 use crate::util::rng::Rng;
 
 /// Exploration-weight cycle (RBFOpt's search cycles from pure surrogate
@@ -22,8 +23,10 @@ pub const WEIGHT_CYCLE: [f64; 4] = [0.0, 0.2, 0.5, 1.0];
 
 pub struct RbfOptState {
     cands: Vec<Config>,
-    enc: Vec<Vec<f64>>,
-    obs_x: Vec<Vec<f64>>,
+    /// Encoded candidate grid, one configuration per row.
+    enc: Matrix,
+    /// Encoded observations, grown one row per step.
+    obs_x: Matrix,
     obs_cfg_idx: Vec<usize>,
     ys: Vec<f64>,
     evaluated: Vec<bool>,
@@ -34,12 +37,15 @@ pub struct RbfOptState {
 impl RbfOptState {
     pub fn new(ctx: &SearchContext, cands: Vec<Config>) -> RbfOptState {
         assert!(!cands.is_empty());
-        let enc = cands.iter().map(|c| encode(ctx.domain, c)).collect();
+        let enc = Matrix::from_rows(
+            &cands.iter().map(|c| encode(ctx.domain, c)).collect::<Vec<Vec<f64>>>(),
+        );
         let evaluated = vec![false; cands.len()];
+        let obs_x = Matrix::zeros(0, enc.cols);
         RbfOptState {
             cands,
             enc,
-            obs_x: Vec::new(),
+            obs_x,
             obs_cfg_idx: Vec::new(),
             ys: Vec::new(),
             evaluated,
@@ -67,7 +73,7 @@ impl RbfOptState {
         if unseen.is_empty() {
             return rng.usize_below(self.cands.len());
         }
-        if self.obs_x.len() < self.n_init {
+        if self.obs_x.rows < self.n_init {
             return *rng.choice(&unseen);
         }
 
@@ -113,7 +119,7 @@ impl RbfOptState {
         let i = self.propose(ctx, rng);
         let v = sink.eval(&self.cands[i])?;
         self.iter += 1;
-        self.obs_x.push(self.enc[i].clone());
+        self.obs_x.push_row(self.enc.row(i));
         self.obs_cfg_idx.push(i);
         self.ys.push(v);
         self.evaluated[i] = true;

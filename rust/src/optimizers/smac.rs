@@ -16,6 +16,7 @@
 use super::{Optimizer, SearchContext, SearchResult};
 use crate::dataset::objective::EvalLedger;
 use crate::domain::encode;
+use crate::linalg::Matrix;
 use crate::surrogate::rf::{RandomForest, RfParams};
 use crate::surrogate::{Acquisition, Surrogate};
 use crate::util::rng::Rng;
@@ -40,9 +41,11 @@ impl Optimizer for SmacLite {
 
     fn run(&self, ctx: &SearchContext, ledger: &mut EvalLedger, rng: &mut Rng) -> SearchResult {
         let cands = ctx.domain.full_grid();
-        let enc: Vec<Vec<f64>> = cands.iter().map(|c| encode(ctx.domain, c)).collect();
+        let enc = Matrix::from_rows(
+            &cands.iter().map(|c| encode(ctx.domain, c)).collect::<Vec<Vec<f64>>>(),
+        );
         let mut evaluated = vec![false; cands.len()];
-        let mut obs_x: Vec<Vec<f64>> = Vec::new();
+        let mut obs_x = Matrix::zeros(0, enc.cols);
         let mut ys: Vec<f64> = Vec::new();
         let mut rf_seed = 0u64;
 
@@ -52,7 +55,7 @@ impl Optimizer for SmacLite {
             let i = if unseen.is_empty() {
                 // Grid exhausted (budget == domain size): random re-draw.
                 rng.usize_below(cands.len())
-            } else if obs_x.len() < self.n_init
+            } else if obs_x.rows < self.n_init
                 || (self.random_interleave > 0
                     && it % self.random_interleave == self.random_interleave - 1)
             {
@@ -72,7 +75,7 @@ impl Optimizer for SmacLite {
             };
             let Some(v) = ledger.eval(&cands[i]) else { break };
             evaluated[i] = true;
-            obs_x.push(enc[i].clone());
+            obs_x.push_row(enc.row(i));
             ys.push(v);
             it += 1;
         }

@@ -17,6 +17,7 @@ use super::PredictionOutcome;
 use crate::dataset::objective::EvalLedger;
 use crate::dataset::{OfflineDataset, Target};
 use crate::domain::{encode, Config};
+use crate::linalg::Matrix;
 use crate::surrogate::rf::{RandomForest, RfParams};
 
 /// Indices (within a provider's grid) of the 2 reference configurations.
@@ -60,8 +61,10 @@ impl ParisPredictor {
                 })
                 .collect();
 
-            // Offline training set: all other workloads.
-            let mut x: Vec<Vec<f64>> = Vec::new();
+            // Offline training set: all other workloads. Feature rows
+            // (encoding + fingerprint) stream straight into one
+            // row-major matrix — the RF fit reads contiguous rows.
+            let mut x = Matrix::zeros(0, 0);
             let mut y: Vec<f64> = Vec::new();
             for w in 0..ds.workload_count() {
                 if w == workload {
@@ -78,7 +81,7 @@ impl ParisPredictor {
                     let cid = domain.config_id(cfg);
                     let mut feat = encode(domain, cfg);
                     feat.extend_from_slice(&train_fp);
-                    x.push(feat);
+                    x.push_row(&feat);
                     y.push(ds.mean_value(w, cid, target).max(1e-9).ln());
                 }
             }

@@ -80,6 +80,7 @@ pub use pjrt::ArtifactBackend;
 #[cfg(not(feature = "pjrt"))]
 mod stub {
     use super::{Manifest, RuntimeResult};
+    use crate::linalg::Matrix;
     use crate::surrogate::rbf::RbfPrediction;
     use crate::surrogate::{Backend, NativeBackend, Prediction};
 
@@ -109,16 +110,16 @@ mod stub {
     }
 
     impl Backend for ArtifactBackend {
-        fn gp_fit_predict(&self, x: &[Vec<f64>], y: &[f64], cands: &[Vec<f64>]) -> Prediction {
+        fn gp_fit_predict(&self, x: &Matrix, y: &[f64], cands: &Matrix) -> Prediction {
             self.fallback.gp_fit_predict(x, y, cands)
         }
 
         fn rbf_fit_predict(
             &self,
-            x: &[Vec<f64>],
+            x: &Matrix,
             y: &[f64],
             ridge: f64,
-            cands: &[Vec<f64>],
+            cands: &Matrix,
         ) -> RbfPrediction {
             self.fallback.rbf_fit_predict(x, y, ridge, cands)
         }
@@ -134,7 +135,8 @@ mod pjrt {
     use std::sync::Mutex;
 
     use super::{Manifest, RuntimeResult};
-    use crate::surrogate::gp::LS_GRID;
+    use crate::linalg::Matrix;
+    use crate::surrogate::gp::{select_ls_downsampled, LML_SUBSET_MAX, LS_GRID};
     use crate::surrogate::rbf::RbfPrediction;
     use crate::surrogate::{standardize, Backend, NativeBackend, Prediction};
 
@@ -250,22 +252,25 @@ mod pjrt {
         #[allow(clippy::type_complexity)]
         fn pack(
             &self,
-            x: &[Vec<f64>],
+            x: &Matrix,
             y: &[f64],
-            cands: &[Vec<f64>],
+            cands: &Matrix,
         ) -> RuntimeResult<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, usize, usize)> {
             let (n_max, m_max, d) = (self.manifest.n_max, self.manifest.m_max, self.manifest.d);
-            let n = x.len();
-            let m = cands.len();
+            let n = x.rows;
+            let m = cands.rows;
             if n > n_max || m > m_max {
                 return Err(format!("{n} observations / {m} candidates exceed AOT shapes"));
             }
+            if x.cols != d {
+                return Err(format!("encoded width {} != artifact d {d}", x.cols));
+            }
+            if cands.cols != d {
+                return Err(format!("candidate width {} != artifact d {d}", cands.cols));
+            }
             let mut xb = vec![0f32; n_max * d];
-            for (i, row) in x.iter().enumerate() {
-                if row.len() != d {
-                    return Err(format!("encoded width {} != artifact d {d}", row.len()));
-                }
-                for (j, &v) in row.iter().enumerate() {
+            for i in 0..n {
+                for (j, &v) in x.row(i).iter().enumerate() {
                     xb[i * d + j] = v as f32;
                 }
             }
@@ -276,8 +281,8 @@ mod pjrt {
             let mut mask = vec![0f32; n_max];
             mask[..n].fill(1.0);
             let mut cb = vec![0f32; m_max * d];
-            for (i, row) in cands.iter().enumerate() {
-                for (j, &v) in row.iter().enumerate() {
+            for i in 0..m {
+                for (j, &v) in cands.row(i).iter().enumerate() {
                     cb[i * d + j] = v as f32;
                 }
             }
@@ -331,8 +336,8 @@ mod pjrt {
     }
 
     impl Backend for ArtifactBackend {
-        fn gp_fit_predict(&self, x: &[Vec<f64>], y: &[f64], cands: &[Vec<f64>]) -> Prediction {
-            if x.len() > self.manifest.n_max || cands.len() > self.manifest.m_max {
+        fn gp_fit_predict(&self, x: &Matrix, y: &[f64], cands: &Matrix) -> Prediction {
+            if x.rows > self.manifest.n_max || cands.rows > self.manifest.m_max {
                 return self.fallback.gp_fit_predict(x, y, cands);
             }
             // Same convention as the native GP: standardize y, grid-search
@@ -344,8 +349,29 @@ mod pjrt {
             };
             let best_z = z.iter().copied().fold(f64::INFINITY, f64::min) as f32;
 
+            // Past LML_SUBSET_MAX observations the native paths rank the
+            // lengthscale grid on a strided subset (downsampled LML) —
+            // the ranking is pure Rust, so the artifact path runs the
+            // *same* rule and then executes only the winner's graph,
+            // keeping lengthscale selection identical across backends
+            // (the interchangeability contract) and cutting the ×4 grid
+            // cost of large-n artifact fits too.
+            let subset_winner = if x.rows > LML_SUBSET_MAX {
+                // Rank with the *native* f64 hyperparameters so the
+                // subset rule is bit-identical to NativeBackend's (the
+                // f32 graph constants round 1e-2 differently).
+                let native = crate::surrogate::gp::GpSurrogate::default();
+                select_ls_downsampled(x, &z, native.signal_var, native.noise)
+            } else {
+                None
+            };
+            let grid: Vec<f64> = match subset_winner {
+                Some(li) => vec![LS_GRID[li]],
+                None => LS_GRID.to_vec(),
+            };
+
             let mut best: Option<(f64, Vec<f64>, Vec<f64>)> = None;
-            for &ls in &LS_GRID {
+            for &ls in &grid {
                 let hyp = [ls as f32, SIGNAL_VAR, NOISE, best_z, KAPPA];
                 match self.exec_gp(&xb, &zb, &mask, &cb, hyp, m) {
                     Ok((mean, std, lml)) => {
@@ -365,12 +391,12 @@ mod pjrt {
 
         fn rbf_fit_predict(
             &self,
-            x: &[Vec<f64>],
+            x: &Matrix,
             y: &[f64],
             ridge: f64,
-            cands: &[Vec<f64>],
+            cands: &Matrix,
         ) -> RbfPrediction {
-            if x.len() > self.manifest.n_max || cands.len() > self.manifest.m_max {
+            if x.rows > self.manifest.n_max || cands.rows > self.manifest.m_max {
                 return self.fallback.rbf_fit_predict(x, y, ridge, cands);
             }
             let (xb, yb, mask, cb, _n, m) = match self.pack(x, y, cands) {

@@ -5,9 +5,33 @@
 //! interchangeable and cross-checked by the parity integration test:
 //! same kernel, same jitter, same y-standardization convention, same
 //! lengthscale grid selected by log marginal likelihood.
+//!
+//! ## Per-iteration cost (§Perf)
+//!
+//! The BO hot loop predicts over one fixed candidate grid (m points)
+//! after every observation (n so far). Three generations of that cost:
+//!
+//! * full refit: 4 lengthscales × O(n³) Cholesky + m × O(n²) solves;
+//! * incremental (PR 1-3): O(n²) factor append per observe, but still
+//!   m × O(n²) triangular solves per predict inside `posterior_over`;
+//! * **whitened cache (this file)**: each factor carries the whitened
+//!   candidate matrix `V = L⁻¹ K(X, C)` and its per-column squared
+//!   norms. An observe grows `V` by one row in O(n·m) via the appended
+//!   factor's border row; a predict is one O(n²) solve `w = L⁻¹z` plus
+//!   O(n·m) dot products — `mean_j = V_jᵀw`, `var_j = sv − ‖V_j‖²` —
+//!   with **zero** per-candidate solves (asserted by the debug
+//!   [`solve_lower_calls`](crate::linalg::solve_lower_calls) counter).
+//!
+//! For n > [`LML_SUBSET_MAX`] the lengthscale is additionally selected
+//! on a strided observation subset (downsampled LML), so large-budget
+//! tails pay the full-size solve once instead of once per grid point —
+//! shared by the full-refit and incremental paths so both select the
+//! same lengthscale and stay within the 1e-6 parity contract.
 
 use super::{standardize, GpSession, Prediction, Surrogate};
-use crate::linalg::{cholesky, cholesky_append, solve_lower, solve_upper_t, Matrix};
+use crate::linalg::{
+    cholesky, cholesky_append, solve_lower, solve_lower_multi, solve_upper_t, Matrix,
+};
 
 /// Matches `JITTER` in python/compile/model.py.
 pub const JITTER: f64 = 1e-5;
@@ -15,6 +39,12 @@ pub const JITTER: f64 = 1e-5;
 /// Lengthscale grid searched by marginal likelihood at each fit. The
 /// encoded domain lives on the unit hypercube, so order-1 scales cover it.
 pub const LS_GRID: [f64; 4] = [0.35, 0.7, 1.4, 2.8];
+
+/// Above this many observations, lengthscale selection runs on a strided
+/// subset of at most this size (downsampled LML); the winning lengthscale
+/// then gets the single full-size fit/solve. Cuts the ×4 grid cost of
+/// large-budget BO tails.
+pub const LML_SUBSET_MAX: usize = 48;
 
 #[derive(Clone, Debug)]
 pub struct GpSurrogate {
@@ -41,18 +71,43 @@ fn sqdist(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
 }
 
+/// All pairwise squared distances between the rows of `a` and the rows
+/// of `b` (`out[(i, j)] = d²(a_i, b_j)`). Single definition shared by
+/// the full-refit, unpinned, and pin-time paths — the bit-parity
+/// contracts between them rest on this being one implementation, not
+/// three hand-synchronized loops.
+fn cross_d2(a: &Matrix, b: &Matrix) -> Matrix {
+    // sqdist zips rows and would silently truncate to the shorter one;
+    // mismatched encodings are caller bugs and must surface.
+    debug_assert!(
+        a.rows == 0 || b.rows == 0 || a.cols == b.cols,
+        "encoded width mismatch: {} vs {}",
+        a.cols,
+        b.cols
+    );
+    let (n, m) = (a.rows, b.rows);
+    let mut out = Matrix::zeros(n, m);
+    for i in 0..n {
+        let ai = a.row(i);
+        for j in 0..m {
+            out[(i, j)] = sqdist(ai, b.row(j));
+        }
+    }
+    out
+}
+
 struct Fitted {
     l: Matrix,
     alpha: Vec<f64>,
     lml: f64,
 }
 
-/// The posterior loop shared by every GP prediction path (full refit,
-/// incremental, kernel-row cached): for each of `m` candidates,
+/// The posterior loop shared by the unpinned GP prediction paths (full
+/// refit, incremental `predict`): for each of `m` candidates,
 /// `fill_kxc(j, &mut kxc)` writes K(X, cand_j) and the same mean /
-/// variance math runs on top. One body, so the bit-identity contract
-/// between the paths rests on shared code, not on hand-synchronized
-/// copies of the loop.
+/// variance math runs on top. The pinned path (`predict_pinned`) instead
+/// reads the whitened cache and performs no per-candidate solves; the
+/// parity tests pin the two within 1e-6.
 fn posterior_over(
     l: &Matrix,
     alpha: &[f64],
@@ -77,11 +132,12 @@ fn posterior_over(
     Prediction { mean, std }
 }
 
-/// Fit from a precomputed observation-observation squared-distance matrix
-/// (the distance computation is shared across the lengthscale grid — the
-/// §Perf L3 optimization, ~4x fewer O(n^2 d) passes per BO iteration).
-fn fit_from_d2(d2: &Matrix, z: &[f64], ls: f64, sv: f64, noise: f64) -> Option<Fitted> {
-    let n = z.len();
+/// Kernel build + factorization from a precomputed squared-distance
+/// matrix — the shared first half of [`fit_from_d2`], also used to
+/// (re)build cached subset factors so cached and from-scratch selection
+/// factor the identical matrix.
+fn kernel_chol_from_d2(d2: &Matrix, ls: f64, sv: f64, noise: f64) -> Option<Matrix> {
+    let n = d2.rows;
     let mut k = Matrix::zeros(n, n);
     for i in 0..n {
         for j in 0..=i {
@@ -91,51 +147,153 @@ fn fit_from_d2(d2: &Matrix, z: &[f64], ls: f64, sv: f64, noise: f64) -> Option<F
         }
         k[(i, i)] += noise + JITTER;
     }
-    let l = cholesky(&k)?;
-    let alpha = solve_upper_t(&l, &solve_lower(&l, z));
+    cholesky(&k)
+}
+
+/// Log marginal likelihood of standardized targets under a factored
+/// kernel, returning `(w = L⁻¹z, alpha = K⁻¹z, lml)` — the shared
+/// second half of [`fit_from_d2`]. Every model-selection path (full
+/// refit, incremental small-n, cached subset) scores lengthscales
+/// through this one function, so near-tie LMLs cannot resolve
+/// differently across paths.
+fn lml_from_chol(l: &Matrix, z: &[f64]) -> (Vec<f64>, Vec<f64>, f64) {
+    let n = z.len();
+    let w = solve_lower(l, z);
+    let alpha = solve_upper_t(l, &w);
     let quad: f64 = z.iter().zip(&alpha).map(|(a, b)| a * b).sum();
     let logdet: f64 = (0..n).map(|i| l[(i, i)].ln()).sum();
     let lml = -0.5 * quad - logdet - 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln();
+    (w, alpha, lml)
+}
+
+/// Fit from a precomputed observation-observation squared-distance matrix
+/// (the distance computation is shared across the lengthscale grid — the
+/// §Perf L3 optimization, ~4x fewer O(n^2 d) passes per BO iteration).
+fn fit_from_d2(d2: &Matrix, z: &[f64], ls: f64, sv: f64, noise: f64) -> Option<Fitted> {
+    let l = kernel_chol_from_d2(d2, ls, sv, noise)?;
+    let (_, alpha, lml) = lml_from_chol(&l, z);
     Some(Fitted { l, alpha, lml })
 }
 
-impl Surrogate for GpSurrogate {
-    fn fit_predict(&mut self, x: &[Vec<f64>], y: &[f64], cands: &[Vec<f64>]) -> Prediction {
-        assert!(!x.is_empty(), "GP fit with no observations");
-        assert_eq!(x.len(), y.len());
-        let (z, ym, ys) = standardize(y);
-        let n = x.len();
-        let m = cands.len();
+/// The strided observation subset used for downsampled-LML selection at
+/// a given n: a pure function of n, so the indices (and everything built
+/// from them) are reusable across predicts until n grows past the next
+/// membership change.
+fn subset_indices(n: usize) -> (usize, Vec<usize>) {
+    let stride = n.div_ceil(LML_SUBSET_MAX);
+    (stride, (0..n).step_by(stride).collect())
+}
 
-        // Shared distance matrices (reused by all 4 lengthscale fits).
+/// Pairwise squared distances between the subset rows of `x`.
+fn subset_d2(x: &Matrix, idx: &[usize]) -> Matrix {
+    let s = idx.len();
+    let mut d2 = Matrix::zeros(s, s);
+    for (a, &i) in idx.iter().enumerate() {
+        for (b, &j) in idx.iter().enumerate().take(a) {
+            let v = sqdist(x.row(i), x.row(j));
+            d2[(a, b)] = v;
+            d2[(b, a)] = v;
+        }
+    }
+    d2
+}
+
+/// Downsampled-LML lengthscale selection: rank the grid on a strided
+/// subset of at most [`LML_SUBSET_MAX`] observations. Shared by the
+/// full-refit, incremental, *and* PJRT-artifact paths — all compute the
+/// subset kernel from the same inputs with the same ops, so they select
+/// identically and the native/artifact interchangeability contract
+/// survives the n > 48 regime. Returns None when no subset fit
+/// succeeded (callers fall back to full-grid selection).
+///
+/// This raw-rows entry point serves the PJRT artifact backend (feature
+/// `pjrt`, which has no precomputed distance matrix); the native paths
+/// use the gather/cached variants below.
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
+pub(crate) fn select_ls_downsampled(x: &Matrix, z: &[f64], sv: f64, noise: f64) -> Option<usize> {
+    let (_, idx) = subset_indices(x.rows);
+    let d2 = subset_d2(x, &idx);
+    rank_ls_on_subset(&d2, &idx, z, sv, noise)
+}
+
+/// As [`select_ls_downsampled`], but gathering the subset entries from a
+/// precomputed full n×n distance matrix instead of recomputing them —
+/// identical f64s, so the two entry points rank identically.
+fn select_ls_downsampled_from_d2(d2xx: &Matrix, z: &[f64], sv: f64, noise: f64) -> Option<usize> {
+    let (_, idx) = subset_indices(d2xx.rows);
+    let s = idx.len();
+    let mut d2 = Matrix::zeros(s, s);
+    for (a, &i) in idx.iter().enumerate() {
+        for (b, &j) in idx.iter().enumerate().take(a) {
+            let v = d2xx[(i, j)];
+            d2[(a, b)] = v;
+            d2[(b, a)] = v;
+        }
+    }
+    rank_ls_on_subset(&d2, &idx, z, sv, noise)
+}
+
+/// The shared ranking tail of the downsampled-selection entry points.
+fn rank_ls_on_subset(d2: &Matrix, idx: &[usize], z: &[f64], sv: f64, noise: f64) -> Option<usize> {
+    let zs: Vec<f64> = idx.iter().map(|&i| z[i]).collect();
+    let mut best: Option<(usize, f64)> = None;
+    for (li, &ls) in LS_GRID.iter().enumerate() {
+        if let Some(f) = fit_from_d2(d2, &zs, ls, sv, noise) {
+            if best.map(|(_, b)| f.lml > b).unwrap_or(true) {
+                best = Some((li, f.lml));
+            }
+        }
+    }
+    best.map(|(li, _)| li)
+}
+
+impl Surrogate for GpSurrogate {
+    fn fit_predict(&mut self, x: &Matrix, y: &[f64], cands: &Matrix) -> Prediction {
+        assert!(x.rows > 0, "GP fit with no observations");
+        assert_eq!(x.rows, y.len());
+        let (z, ym, ys) = standardize(y);
+        let n = x.rows;
+        let m = cands.rows;
+
+        // Shared distance matrices (reused by all lengthscale fits).
         let mut d2xx = Matrix::zeros(n, n);
         for i in 0..n {
             for j in 0..i {
-                let v = sqdist(&x[i], &x[j]);
+                let v = sqdist(x.row(i), x.row(j));
                 d2xx[(i, j)] = v;
                 d2xx[(j, i)] = v;
             }
         }
-        let mut d2xc = Matrix::zeros(n, m);
-        for i in 0..n {
-            for (j, c) in cands.iter().enumerate() {
-                d2xc[(i, j)] = sqdist(&x[i], c);
-            }
-        }
+        let d2xc = cross_d2(x, cands);
 
         // Model selection: pick the lengthscale maximizing the marginal
         // likelihood (the artifact path does the same via repeated
-        // executions with different hyp vectors).
-        let mut best: Option<(f64, Fitted)> = None;
-        for &ls in &LS_GRID {
-            if let Some(f) = fit_from_d2(&d2xx, &z, ls, self.signal_var, self.noise) {
-                if best.as_ref().map(|(_, b)| f.lml > b.lml).unwrap_or(true) {
-                    best = Some((ls, f));
+        // executions with different hyp vectors). Past LML_SUBSET_MAX
+        // the grid is ranked on a strided subset and only the winner
+        // pays the full O(n³) fit; a degenerate subset falls back to the
+        // full-grid loop.
+        let mut best: Option<(usize, Fitted)> = None;
+        if n > LML_SUBSET_MAX {
+            if let Some(li) = select_ls_downsampled_from_d2(&d2xx, &z, self.signal_var, self.noise)
+            {
+                let ls = LS_GRID[li];
+                if let Some(f) = fit_from_d2(&d2xx, &z, ls, self.signal_var, self.noise) {
+                    best = Some((li, f));
                 }
             }
         }
-        let (ls, fitted) =
+        if best.is_none() {
+            for (li, &ls) in LS_GRID.iter().enumerate() {
+                if let Some(f) = fit_from_d2(&d2xx, &z, ls, self.signal_var, self.noise) {
+                    if best.as_ref().map(|(_, b)| f.lml > b.lml).unwrap_or(true) {
+                        best = Some((li, f));
+                    }
+                }
+            }
+        }
+        let (li, fitted) =
             best.expect("GP fit failed for every lengthscale (should be impossible with jitter)");
+        let ls = LS_GRID[li];
         self.last_lengthscale = ls;
 
         let sv = self.signal_var;
@@ -152,12 +310,12 @@ impl Surrogate for GpSurrogate {
 
 /// Build the full Cholesky factor of K(X,X) + (noise + jitter) I for one
 /// lengthscale — the reference path the incremental appends must match.
-fn full_chol(x: &[Vec<f64>], ls: f64, sv: f64, noise: f64) -> Option<Matrix> {
-    let n = x.len();
+fn full_chol(x: &Matrix, ls: f64, sv: f64, noise: f64) -> Option<Matrix> {
+    let n = x.rows;
     let mut k = Matrix::zeros(n, n);
     for i in 0..n {
         for j in 0..=i {
-            let v = matern52(sqdist(&x[i], &x[j]), ls, sv);
+            let v = matern52(sqdist(x.row(i), x.row(j)), ls, sv);
             k[(i, j)] = v;
             k[(j, i)] = v;
         }
@@ -166,17 +324,36 @@ fn full_chol(x: &[Vec<f64>], ls: f64, sv: f64, noise: f64) -> Option<Matrix> {
     cholesky(&k)
 }
 
-/// Stateful Matern-5/2 GP session with **incremental** Cholesky updates.
+/// Whitened candidate state for one lengthscale: `v = L⁻¹ K(X, C)` over
+/// the pinned candidate set, plus the running per-column squared norms
+/// feeding the O(1)-per-candidate posterior variance.
+struct Whitened {
+    /// n×m; row i is the whitening of observation i against all pinned
+    /// candidates. Grown one row per observe (O(n·m)).
+    v: Matrix,
+    /// colsq[j] = ‖V_j‖² accumulated in row order, so the incremental
+    /// update (`+= v_nj²`) is bit-identical to a wholesale rebuild.
+    colsq: Vec<f64>,
+}
+
+/// Stateful Matern-5/2 GP session with **incremental** Cholesky updates
+/// and a **whitened candidate cache** for the pinned BO grid.
 ///
 /// The kernel matrix depends only on the inputs, so one factorization is
 /// cached per [`LS_GRID`] entry and grown by a rank-1 border
 /// ([`cholesky_append`]) per new observation — O(n²) instead of the
-/// O(n³) full refit every BO iteration pays otherwise. Everything that
-/// depends on y (standardization, alpha, the log marginal likelihood
+/// O(n³) full refit every BO iteration pays otherwise. On top of each
+/// factor the session keeps the whitened pinned-candidate matrix
+/// `V = L⁻¹ K(X, C)` (see [`Whitened`]): the border row of an appended
+/// factor extends `V` by one row in O(n·m) from the cached kernel rows,
+/// and `predict_pinned` then needs one O(n²) solve `w = L⁻¹z` plus
+/// O(n·m) dots — no per-candidate triangular solves at all. Everything
+/// that depends on y (standardization, the log marginal likelihood
 /// driving lengthscale selection) is recomputed per predict from the
-/// cached factor via two triangular solves, so model selection is
-/// semantically identical to [`GpSurrogate::fit_predict`]; the parity
-/// tests below assert agreement within 1e-6.
+/// cached factor, so model selection is semantically identical to
+/// [`GpSurrogate::fit_predict`] — including the downsampled-LML rule
+/// past [`LML_SUBSET_MAX`] observations; the parity tests below assert
+/// agreement within 1e-6.
 pub struct IncrementalGp {
     /// Observation noise variance (on standardized y).
     pub noise: f64,
@@ -184,26 +361,45 @@ pub struct IncrementalGp {
     pub signal_var: f64,
     /// Chosen lengthscale from the last predict (for inspection/tests).
     pub last_lengthscale: f64,
-    x: Vec<Vec<f64>>,
+    /// n×d observed inputs (width adopted from the first observation).
+    x: Matrix,
     y: Vec<f64>,
     /// One cached factor per lengthscale-grid point; None when the
     /// bordered matrix lost positive definiteness and the rebuild also
     /// failed (that lengthscale then sits out model selection, exactly
     /// like a failed `fit_from_d2`).
     chol: Vec<Option<Matrix>>,
-    /// Pinned candidate set (the BO loop predicts over one fixed grid).
-    pinned: Vec<Vec<f64>>,
-    /// pinned_d2[i][j] = d²(x_i, pinned[j]); one row appended per
-    /// observation, so `predict_pinned` never recomputes the O(n·m·d)
-    /// distance pass the unpinned path pays every iteration.
-    pinned_d2: Vec<Vec<f64>>,
-    /// pinned_k[li][i][j] = matern52(pinned_d2[i][j], LS_GRID[li]): the
-    /// kernel rows one level below the distance cache. Only the appended
-    /// row is computed per observation, so `predict_pinned` also skips
-    /// the O(n·m) re-kernelization of cached distances that
-    /// `posterior_from_d2` pays per predict. Rebuilt wholesale when the
-    /// candidate set is (re)pinned.
-    pinned_k: Vec<Vec<Vec<f64>>>,
+    /// Pinned candidate set, m×d (the BO loop predicts over one fixed
+    /// grid); rows == 0 means nothing is pinned.
+    pinned: Matrix,
+    /// pinned_k[li][(i, j)] = matern52(d²(x_i, pinned_j), LS_GRID[li]):
+    /// cached kernel rows against the pinned grid. Only the appended row
+    /// (one O(m·d) distance pass + O(m) kernel map) is computed per
+    /// observation; rebuilt wholesale when the candidate set is
+    /// (re)pinned. Source data for whitened rebuilds.
+    pinned_k: Vec<Matrix>,
+    /// Whitened candidate matrix + column norms per lengthscale; None
+    /// exactly when `chol` is None or nothing is pinned. Appends ride
+    /// the factor appends; factor rebuilds trigger wholesale rewhitening
+    /// (bit-identical to the appended path by construction).
+    whitened: Vec<Option<Whitened>>,
+    /// Cached downsampled-LML state for the n > [`LML_SUBSET_MAX`]
+    /// regime. The subset is a pure function of n over the immutable
+    /// observation prefix, so its per-lengthscale factors are rebuilt
+    /// only when the subset membership changes (every `stride`-th
+    /// observe, or on a stride jump) — a steady-state predict ranks the
+    /// grid with one O(s²) solve pair per lengthscale instead of four
+    /// from-scratch O(s³) subset fits.
+    subset: Option<SubsetSelect>,
+}
+
+/// See [`IncrementalGp::subset`].
+struct SubsetSelect {
+    stride: usize,
+    idx: Vec<usize>,
+    /// One subset factor per [`LS_GRID`] entry (None = that subset fit
+    /// lost positive definiteness, exactly like a failed `fit_from_d2`).
+    chol: Vec<Option<Matrix>>,
 }
 
 impl Default for IncrementalGp {
@@ -213,137 +409,260 @@ impl Default for IncrementalGp {
             noise: base.noise,
             signal_var: base.signal_var,
             last_lengthscale: base.last_lengthscale,
-            x: Vec::new(),
+            x: Matrix::zeros(0, 0),
             y: Vec::new(),
             chol: vec![None; LS_GRID.len()],
-            pinned: Vec::new(),
-            pinned_d2: Vec::new(),
-            pinned_k: vec![Vec::new(); LS_GRID.len()],
+            pinned: Matrix::zeros(0, 0),
+            pinned_k: (0..LS_GRID.len()).map(|_| Matrix::zeros(0, 0)).collect(),
+            whitened: (0..LS_GRID.len()).map(|_| None).collect(),
+            subset: None,
         }
     }
 }
 
 impl IncrementalGp {
-    /// Model selection over the cached factors: the (grid index, alpha)
-    /// maximizing the log marginal likelihood on standardized targets.
-    fn select_model(&self, z: &[f64]) -> (usize, Vec<f64>) {
+    /// Model selection over the cached factors: the grid index maximizing
+    /// the log marginal likelihood on standardized targets, plus the
+    /// whitened target vector `w = L⁻¹z` for the winner (`wᵀw` is the
+    /// LML quadratic term, and the pinned posterior mean is `V_jᵀw`) and
+    /// the winner's `alpha = K⁻¹z` when selection already computed it
+    /// (the unpinned posterior consumes it; None on the subset path,
+    /// which never back-solves at full size). Past [`LML_SUBSET_MAX`]
+    /// observations the ranking runs on the cached strided-subset
+    /// factors — one full-size solve instead of four, plus bounded
+    /// O(s²) subset work.
+    fn select_model(&mut self, z: &[f64]) -> (usize, Vec<f64>, Option<Vec<f64>>) {
         let n = z.len();
-        let mut best: Option<(usize, Vec<f64>, f64)> = None;
-        for li in 0..LS_GRID.len() {
-            let Some(l) = &self.chol[li] else { continue };
-            let alpha = solve_upper_t(l, &solve_lower(l, z));
-            let quad: f64 = z.iter().zip(&alpha).map(|(a, b)| a * b).sum();
-            let logdet: f64 = (0..n).map(|i| l[(i, i)].ln()).sum();
-            let lml = -0.5 * quad - logdet - 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln();
-            if best.as_ref().map(|(_, _, b)| lml > *b).unwrap_or(true) {
-                best = Some((li, alpha, lml));
+        if n > LML_SUBSET_MAX {
+            if let Some(li) = self.select_ls_subset_cached(z) {
+                if let Some(l) = &self.chol[li] {
+                    return (li, solve_lower(l, z), None);
+                }
             }
         }
-        let (li, alpha, _) =
+        let mut best: Option<(usize, Vec<f64>, Vec<f64>, f64)> = None;
+        for li in 0..LS_GRID.len() {
+            let Some(l) = &self.chol[li] else { continue };
+            let (w, alpha, lml) = lml_from_chol(l, z);
+            if best.as_ref().map(|(_, _, _, b)| lml > *b).unwrap_or(true) {
+                best = Some((li, w, alpha, lml));
+            }
+        }
+        let (li, w, alpha, _) =
             best.expect("GP fit failed for every lengthscale (should be impossible with jitter)");
-        (li, alpha)
+        (li, w, Some(alpha))
+    }
+
+    /// Downsampled-LML ranking against the cached subset factors,
+    /// (re)building them only when the subset membership changed since
+    /// the last predict. The factors and the LML formula are the exact
+    /// ones `select_ls_downsampled` computes from scratch (shared
+    /// `subset_indices`/`subset_d2`/`kernel_chol_from_d2`/
+    /// `lml_from_chol`), so the cached ranking selects bit-identically
+    /// to the full-refit reference.
+    fn select_ls_subset_cached(&mut self, z: &[f64]) -> Option<usize> {
+        let (stride, idx) = subset_indices(self.x.rows);
+        let stale = self
+            .subset
+            .as_ref()
+            .map(|s| s.stride != stride || s.idx.len() != idx.len())
+            .unwrap_or(true);
+        if stale {
+            let d2 = subset_d2(&self.x, &idx);
+            let chol = LS_GRID
+                .iter()
+                .map(|&ls| kernel_chol_from_d2(&d2, ls, self.signal_var, self.noise))
+                .collect();
+            self.subset = Some(SubsetSelect { stride, idx, chol });
+        }
+        let sub = self.subset.as_ref().unwrap();
+        let zs: Vec<f64> = sub.idx.iter().map(|&i| z[i]).collect();
+        let mut best: Option<(usize, f64)> = None;
+        for (li, l) in sub.chol.iter().enumerate() {
+            let Some(l) = l else { continue };
+            let (_, _, lml) = lml_from_chol(l, &zs);
+            if best.map(|(_, b)| lml > b).unwrap_or(true) {
+                best = Some((li, lml));
+            }
+        }
+        best.map(|(li, _)| li)
     }
 
     /// Posterior from precomputed observation-candidate squared
-    /// distances (`d2[i][j] = d²(x_i, cand_j)`, `m` candidates).
-    fn posterior_from_d2(&mut self, m: usize, d2: &[Vec<f64>]) -> Prediction {
-        assert!(!self.x.is_empty(), "GP predict with no observations");
+    /// distances (`d2[(i, j)] = d²(x_i, cand_j)`, `m` candidates).
+    fn posterior_from_d2(&mut self, m: usize, d2: &Matrix) -> Prediction {
+        assert!(self.x.rows > 0, "GP predict with no observations");
         let (z, ym, ys) = standardize(&self.y);
-        let (li, alpha) = self.select_model(&z);
+        let (li, w, alpha) = self.select_model(&z);
         let ls = LS_GRID[li];
         self.last_lengthscale = ls;
         let l = self.chol[li].as_ref().unwrap();
+        let alpha = alpha.unwrap_or_else(|| solve_upper_t(l, &w));
 
         let sv = self.signal_var;
+        let n = self.x.rows;
         posterior_over(l, &alpha, sv, ym, ys, m, |j, kxc| {
-            for (i, row) in d2.iter().enumerate() {
-                kxc[i] = matern52(row[j], ls, sv);
+            for i in 0..n {
+                kxc[i] = matern52(d2[(i, j)], ls, sv);
             }
         })
+    }
+
+    /// Wholesale whitening of the cached kernel rows against a factor:
+    /// `V = L⁻¹ K`, column norms accumulated in row order (the same
+    /// per-element operation order the incremental append performs, so
+    /// rebuild and append never drift apart bitwise).
+    fn whiten(l: &Matrix, k: &Matrix) -> Whitened {
+        debug_assert_eq!(l.rows, k.rows);
+        let v = solve_lower_multi(l, k);
+        let mut colsq = vec![0.0; k.cols];
+        for i in 0..v.rows {
+            for (sq, &vij) in colsq.iter_mut().zip(v.row(i)) {
+                *sq += vij * vij;
+            }
+        }
+        Whitened { v, colsq }
     }
 }
 
 impl GpSession for IncrementalGp {
     fn observe(&mut self, x_new: Vec<f64>, y_new: f64) {
-        let n_prev = self.x.len();
-        self.x.push(x_new);
-        self.y.push(y_new);
+        let n_prev = self.x.rows;
+        let m = self.pinned.rows;
+
+        // Grow the pinned kernel-row caches by one row each before
+        // touching the factors: the whitened append below consumes the
+        // fresh kernel row. Every earlier row is unchanged by
+        // construction (the kernel depends only on inputs and the fixed
+        // grid), and the distance row is shared across the lengthscale
+        // grid.
+        if m > 0 {
+            debug_assert_eq!(x_new.len(), self.pinned.cols, "encoded width mismatch");
+            let d2_row: Vec<f64> = (0..m).map(|j| sqdist(&x_new, self.pinned.row(j))).collect();
+            for (li, &ls) in LS_GRID.iter().enumerate() {
+                let k_row: Vec<f64> =
+                    d2_row.iter().map(|&d2| matern52(d2, ls, self.signal_var)).collect();
+                self.pinned_k[li].push_row(&k_row);
+            }
+        }
+
         let diag = self.signal_var + self.noise + JITTER;
+        // Distances are lengthscale-independent: one pass over the prior
+        // observations serves all LS_GRID appends.
+        let d2_new: Vec<f64> =
+            (0..n_prev).map(|i| sqdist(self.x.row(i), &x_new)).collect();
         for (li, &ls) in LS_GRID.iter().enumerate() {
             let appended = match &self.chol[li] {
                 Some(l) if l.rows == n_prev => {
-                    let xn = &self.x[n_prev];
-                    let k_new: Vec<f64> = self.x[..n_prev]
+                    let k_new: Vec<f64> = d2_new
                         .iter()
-                        .map(|xi| matern52(sqdist(xi, xn), ls, self.signal_var))
+                        .map(|&d2| matern52(d2, ls, self.signal_var))
                         .collect();
                     cholesky_append(l, &k_new, diag)
                 }
                 _ => None,
             };
-            self.chol[li] =
-                appended.or_else(|| full_chol(&self.x, ls, self.signal_var, self.noise));
-        }
-        // Grow the pinned-candidate distance and kernel-row caches by
-        // one row each; every earlier row is unchanged by construction
-        // (the kernel depends only on inputs and the fixed grid).
-        if !self.pinned.is_empty() {
-            let xn = &self.x[n_prev];
-            let d2_row: Vec<f64> = self.pinned.iter().map(|c| sqdist(xn, c)).collect();
-            for (li, &ls) in LS_GRID.iter().enumerate() {
-                self.pinned_k[li]
-                    .push(d2_row.iter().map(|&d2| matern52(d2, ls, self.signal_var)).collect());
+            match appended {
+                Some(l_new) => {
+                    // O(n·m) whitened growth: forward-substitute the
+                    // appended kernel row through the border row of the
+                    // new factor — the exact row `solve_lower_multi`
+                    // would produce, so appends and rebuilds agree
+                    // bitwise.
+                    match (m > 0, &mut self.whitened[li]) {
+                        (true, Some(wh)) if wh.v.rows == n_prev => {
+                            let border = l_new.row(n_prev);
+                            let mut v_row = self.pinned_k[li].row(n_prev).to_vec();
+                            for i in 0..n_prev {
+                                let c = border[i];
+                                for (vj, &pj) in v_row.iter_mut().zip(wh.v.row(i)) {
+                                    *vj -= c * pj;
+                                }
+                            }
+                            let pivot = border[n_prev];
+                            for (vj, sq) in v_row.iter_mut().zip(wh.colsq.iter_mut()) {
+                                *vj /= pivot;
+                                *sq += *vj * *vj;
+                            }
+                            wh.v.push_row(&v_row);
+                        }
+                        (true, slot) => {
+                            *slot = Some(Self::whiten(&l_new, &self.pinned_k[li]));
+                        }
+                        (false, slot) => *slot = None,
+                    }
+                    self.chol[li] = Some(l_new);
+                }
+                None => {
+                    self.chol[li] =
+                        full_chol_appended(&self.x, &x_new, ls, self.signal_var, self.noise);
+                    self.whitened[li] = match (&self.chol[li], m > 0) {
+                        (Some(l), true) => Some(Self::whiten(l, &self.pinned_k[li])),
+                        _ => None,
+                    };
+                }
             }
-            self.pinned_d2.push(d2_row);
         }
+
+        self.x.push_row(&x_new);
+        self.y.push(y_new);
     }
 
-    fn predict(&mut self, cands: &[Vec<f64>]) -> Prediction {
-        let d2: Vec<Vec<f64>> = self
-            .x
-            .iter()
-            .map(|xi| cands.iter().map(|c| sqdist(xi, c)).collect())
-            .collect();
-        self.posterior_from_d2(cands.len(), &d2)
+    fn predict(&mut self, cands: &Matrix) -> Prediction {
+        let d2 = cross_d2(&self.x, cands);
+        self.posterior_from_d2(cands.rows, &d2)
     }
 
-    fn pin_candidates(&mut self, cands: &[Vec<f64>]) {
-        self.pinned = cands.to_vec();
-        self.pinned_d2 = self
-            .x
-            .iter()
-            .map(|xi| cands.iter().map(|c| sqdist(xi, c)).collect())
-            .collect();
-        // Invalidate and rebuild the kernel rows for the new grid.
+    fn pin_candidates(&mut self, cands: &Matrix) {
+        self.pinned = cands.clone();
+        let n = self.x.rows;
+        let m = cands.rows;
+        let d2 = cross_d2(&self.x, cands);
+        // Invalidate and rebuild the kernel rows and whitened matrices
+        // for the new grid.
         self.pinned_k = LS_GRID
             .iter()
             .map(|&ls| {
-                self.pinned_d2
-                    .iter()
-                    .map(|row| row.iter().map(|&d2| matern52(d2, ls, self.signal_var)).collect())
-                    .collect()
+                let mut k = Matrix::zeros(n, m);
+                for i in 0..n {
+                    for j in 0..m {
+                        k[(i, j)] = matern52(d2[(i, j)], ls, self.signal_var);
+                    }
+                }
+                k
             })
+            .collect();
+        self.whitened = (0..LS_GRID.len())
+            .map(|li| self.chol[li].as_ref().map(|l| Self::whiten(l, &self.pinned_k[li])))
             .collect();
     }
 
     fn predict_pinned(&mut self) -> Prediction {
-        assert!(!self.pinned.is_empty(), "predict_pinned without pinned candidates");
-        assert!(!self.x.is_empty(), "GP predict with no observations");
-        let m = self.pinned.len();
+        assert!(self.pinned.rows > 0, "predict_pinned without pinned candidates");
+        assert!(self.x.rows > 0, "GP predict with no observations");
+        let (n, m) = (self.x.rows, self.pinned.rows);
         let (z, ym, ys) = standardize(&self.y);
-        let (li, alpha) = self.select_model(&z);
+        let (li, w, _) = self.select_model(&z);
         self.last_lengthscale = LS_GRID[li];
-        let l = self.chol[li].as_ref().unwrap();
-        // Same shared posterior loop as `posterior_from_d2`, but the
-        // kernel values come straight from the per-lengthscale row
-        // cache — matern52 applied to the identical d² at observe/pin
-        // time, so the result is bit-identical to the uncached path.
-        let rows = &self.pinned_k[li];
-        posterior_over(l, &alpha, self.signal_var, ym, ys, m, |j, kxc| {
-            for (i, row) in rows.iter().enumerate() {
-                kxc[i] = row[j];
+        let wh = self.whitened[li]
+            .as_ref()
+            .expect("whitened cache is maintained alongside every live factor");
+        debug_assert_eq!(wh.v.rows, n);
+        // mean_j = V_jᵀ w (≡ kxcᵀ K⁻¹ z), accumulated row-major over the
+        // whitened matrix — contiguous scans, no per-candidate solve.
+        let mut mean = vec![0.0; m];
+        for i in 0..n {
+            let wi = w[i];
+            for (acc, &vij) in mean.iter_mut().zip(wh.v.row(i)) {
+                *acc += vij * wi;
             }
-        })
+        }
+        let sv = self.signal_var;
+        let std: Vec<f64> = wh.colsq.iter().map(|&sq| (sv - sq).max(1e-12).sqrt() * ys).collect();
+        for mj in mean.iter_mut() {
+            *mj = *mj * ys + ym;
+        }
+        Prediction { mean, std }
     }
 
     fn n_obs(&self) -> usize {
@@ -351,17 +670,25 @@ impl GpSession for IncrementalGp {
     }
 }
 
+/// Full factor over the already-stored rows plus the not-yet-pushed new
+/// one (the rebuild path of `observe`, which runs before `x` grows).
+fn full_chol_appended(x: &Matrix, x_new: &[f64], ls: f64, sv: f64, noise: f64) -> Option<Matrix> {
+    let mut grown = x.clone();
+    grown.push_row(x_new);
+    full_chol(&grown, ls, sv, noise)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
-    fn toy_data(n: usize, d: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+    fn toy_data(n: usize, d: usize, seed: u64) -> (Matrix, Vec<f64>) {
         let mut rng = Rng::new(seed);
-        let x: Vec<Vec<f64>> = (0..n).map(|_| (0..d).map(|_| rng.f64()).collect()).collect();
+        let rows: Vec<Vec<f64>> = (0..n).map(|_| (0..d).map(|_| rng.f64()).collect()).collect();
         let y: Vec<f64> =
-            x.iter().map(|xi| xi.iter().sum::<f64>().sin() * 3.0 + 10.0).collect();
-        (x, y)
+            rows.iter().map(|xi| xi.iter().sum::<f64>().sin() * 3.0 + 10.0).collect();
+        (Matrix::from_rows(&rows), y)
     }
 
     #[test]
@@ -380,8 +707,8 @@ mod tests {
     fn uncertainty_grows_away_from_data() {
         let (x, y) = toy_data(10, 3, 2);
         let mut gp = GpSurrogate::default();
-        let far = vec![vec![10.0; 3]];
-        let near = vec![x[0].clone()];
+        let far = Matrix::from_rows(&[vec![10.0; 3]]);
+        let near = Matrix::from_rows(&[x.row(0).to_vec()]);
         let p_far = gp.fit_predict(&x, &y, &far);
         let p_near = gp.fit_predict(&x, &y, &near);
         assert!(p_far.std[0] > 3.0 * p_near.std[0]);
@@ -391,7 +718,7 @@ mod tests {
     fn far_prediction_reverts_to_prior_mean() {
         let (x, y) = toy_data(15, 3, 3);
         let mut gp = GpSurrogate::default();
-        let p = gp.fit_predict(&x, &y, &[vec![50.0; 3]]);
+        let p = gp.fit_predict(&x, &y, &Matrix::from_rows(&[vec![50.0; 3]]));
         let ym = crate::util::stats::mean(&y);
         assert!((p.mean[0] - ym).abs() < 0.5);
     }
@@ -400,8 +727,9 @@ mod tests {
     fn lengthscale_selection_adapts() {
         // Smooth function -> long lengthscale beats the shortest one.
         let mut rng = Rng::new(4);
-        let x: Vec<Vec<f64>> = (0..30).map(|_| vec![rng.f64()]).collect();
-        let y: Vec<f64> = x.iter().map(|v| v[0] * 2.0 + 1.0).collect();
+        let rows: Vec<Vec<f64>> = (0..30).map(|_| vec![rng.f64()]).collect();
+        let y: Vec<f64> = rows.iter().map(|v| v[0] * 2.0 + 1.0).collect();
+        let x = Matrix::from_rows(&rows);
         let mut gp = GpSurrogate::default();
         gp.fit_predict(&x, &y, &x);
         assert!(gp.last_lengthscale > LS_GRID[0]);
@@ -418,14 +746,19 @@ mod tests {
     #[test]
     fn handles_single_observation() {
         let mut gp = GpSurrogate::default();
-        let p = gp.fit_predict(&[vec![0.5, 0.5]], &[3.0], &[vec![0.5, 0.5], vec![0.9, 0.1]]);
+        let p = gp.fit_predict(
+            &Matrix::from_rows(&[vec![0.5, 0.5]]),
+            &[3.0],
+            &Matrix::from_rows(&[vec![0.5, 0.5], vec![0.9, 0.1]]),
+        );
         assert_eq!(p.mean.len(), 2);
         assert!(p.mean.iter().all(|m| m.is_finite()));
     }
 
     /// Randomized incremental/full parity suite: a session grown one
     /// observation at a time must agree with the full-refit reference
-    /// within 1e-6 at every step, and select the same lengthscale.
+    /// within 1e-6 at every step — on both the unpinned path and the
+    /// whitened pinned path — and select the same lengthscale.
     #[test]
     fn incremental_matches_full_refit_within_1e6() {
         crate::testkit::check("incremental GP parity", 12, |g| {
@@ -433,80 +766,100 @@ mod tests {
             let n = g.usize_in(2, 24);
             let m = g.usize_in(1, 12);
             let rng = g.rng();
-            let x: Vec<Vec<f64>> =
+            let xrows: Vec<Vec<f64>> =
                 (0..n).map(|_| (0..d).map(|_| rng.f64()).collect()).collect();
-            let y: Vec<f64> = x
+            let y: Vec<f64> = xrows
                 .iter()
                 .map(|xi| xi.iter().sum::<f64>().sin() * 3.0 + 10.0 + 0.05 * rng.normal())
                 .collect();
-            let cands: Vec<Vec<f64>> =
-                (0..m).map(|_| (0..d).map(|_| rng.f64() * 1.5).collect()).collect();
+            let cands = Matrix::from_rows(
+                &(0..m)
+                    .map(|_| (0..d).map(|_| rng.f64() * 1.5).collect())
+                    .collect::<Vec<Vec<f64>>>(),
+            );
 
             let mut session = IncrementalGp::default();
+            let mut whitened = IncrementalGp::default();
+            whitened.pin_candidates(&cands);
             let mut reference = GpSurrogate::default();
             for i in 0..n {
-                session.observe(x[i].clone(), y[i]);
+                session.observe(xrows[i].clone(), y[i]);
+                whitened.observe(xrows[i].clone(), y[i]);
                 // Check parity at a few prefix lengths, always at the end.
                 if i + 1 == n || i % 5 == 4 {
                     let ps = session.predict(&cands);
-                    let pf = reference.fit_predict(&x[..=i], &y[..=i], &cands);
+                    let pw = whitened.predict_pinned();
+                    let pf =
+                        reference.fit_predict(&Matrix::from_rows(&xrows[..=i]), &y[..=i], &cands);
                     assert_eq!(session.last_lengthscale, reference.last_lengthscale);
+                    assert_eq!(whitened.last_lengthscale, reference.last_lengthscale);
                     for j in 0..m {
-                        assert!(
-                            (ps.mean[j] - pf.mean[j]).abs() < 1e-6,
-                            "n={} cand {j}: mean {} vs {}",
-                            i + 1,
-                            ps.mean[j],
-                            pf.mean[j]
-                        );
-                        assert!(
-                            (ps.std[j] - pf.std[j]).abs() < 1e-6,
-                            "n={} cand {j}: std {} vs {}",
-                            i + 1,
-                            ps.std[j],
-                            pf.std[j]
-                        );
+                        for (path, p) in [("unpinned", &ps), ("whitened", &pw)] {
+                            assert!(
+                                (p.mean[j] - pf.mean[j]).abs() < 1e-6,
+                                "{path} n={} cand {j}: mean {} vs {}",
+                                i + 1,
+                                p.mean[j],
+                                pf.mean[j]
+                            );
+                            assert!(
+                                (p.std[j] - pf.std[j]).abs() < 1e-6,
+                                "{path} n={} cand {j}: std {} vs {}",
+                                i + 1,
+                                p.std[j],
+                                pf.std[j]
+                            );
+                        }
                     }
                 }
             }
         });
     }
 
-    /// Parity at the paper's largest budget: 88 successive appends on
-    /// one factor must not drift past 1e-6 from the full refit (the
-    /// randomized suite above caps n at 24; this pins the deep end).
+    /// Parity at the paper's largest budget: 88 successive appends on one
+    /// factor must not drift past 1e-6 from the full refit. This also
+    /// pins the n > LML_SUBSET_MAX downsampled-LML regime: past 48
+    /// observations both paths rank lengthscales on the same strided
+    /// subset and must keep choosing identically.
     #[test]
     fn incremental_parity_at_budget_scale() {
         let mut rng = Rng::new(88);
         let d = 5;
         let n = 88;
-        let x: Vec<Vec<f64>> =
-            (0..n).map(|_| (0..d).map(|_| rng.f64()).collect()).collect();
-        let y: Vec<f64> = x
+        let xrows: Vec<Vec<f64>> = (0..n).map(|_| (0..d).map(|_| rng.f64()).collect()).collect();
+        let y: Vec<f64> = xrows
             .iter()
             .map(|xi| xi.iter().sum::<f64>().sin() * 3.0 + 10.0 + 0.05 * rng.normal())
             .collect();
-        let cands: Vec<Vec<f64>> =
-            (0..8).map(|_| (0..d).map(|_| rng.f64() * 1.5).collect()).collect();
+        let cands = Matrix::from_rows(
+            &(0..8).map(|_| (0..d).map(|_| rng.f64() * 1.5).collect()).collect::<Vec<Vec<f64>>>(),
+        );
         let mut session = IncrementalGp::default();
+        let mut whitened = IncrementalGp::default();
+        whitened.pin_candidates(&cands);
         let mut reference = GpSurrogate::default();
         for i in 0..n {
-            session.observe(x[i].clone(), y[i]);
-            if [24, 48, 88].contains(&(i + 1)) {
+            session.observe(xrows[i].clone(), y[i]);
+            whitened.observe(xrows[i].clone(), y[i]);
+            if [24, 48, 60, 88].contains(&(i + 1)) {
                 let ps = session.predict(&cands);
-                let pf = reference.fit_predict(&x[..=i], &y[..=i], &cands);
+                let pw = whitened.predict_pinned();
+                let pf = reference.fit_predict(&Matrix::from_rows(&xrows[..=i]), &y[..=i], &cands);
                 assert_eq!(session.last_lengthscale, reference.last_lengthscale);
-                for j in 0..cands.len() {
-                    assert!(
-                        (ps.mean[j] - pf.mean[j]).abs() < 1e-6
-                            && (ps.std[j] - pf.std[j]).abs() < 1e-6,
-                        "n={}: cand {j} mean {} vs {} / std {} vs {}",
-                        i + 1,
-                        ps.mean[j],
-                        pf.mean[j],
-                        ps.std[j],
-                        pf.std[j]
-                    );
+                assert_eq!(whitened.last_lengthscale, reference.last_lengthscale);
+                for j in 0..cands.rows {
+                    for (path, p) in [("unpinned", &ps), ("whitened", &pw)] {
+                        assert!(
+                            (p.mean[j] - pf.mean[j]).abs() < 1e-6
+                                && (p.std[j] - pf.std[j]).abs() < 1e-6,
+                            "{path} n={}: cand {j} mean {} vs {} / std {} vs {}",
+                            i + 1,
+                            p.mean[j],
+                            pf.mean[j],
+                            p.std[j],
+                            pf.std[j]
+                        );
+                    }
                 }
             }
         }
@@ -515,91 +868,153 @@ mod tests {
     #[test]
     fn incremental_handles_duplicate_observations() {
         // Duplicated inputs stress the appended pivot (kernel row equals
-        // an existing row up to jitter); the session must stay usable and
-        // keep matching the full refit.
+        // an existing row up to jitter): cholesky_append loses positive
+        // definiteness, the factor rebuilds with full_chol, and the
+        // whitened cache must rebuild with it — both the plain and the
+        // pinned session must stay usable and keep matching the full
+        // refit.
         let (x, y) = toy_data(6, 3, 9);
         let mut session = IncrementalGp::default();
+        let mut whitened = IncrementalGp::default();
+        whitened.pin_candidates(&x);
         let mut reference = GpSurrogate::default();
         let mut xs: Vec<Vec<f64>> = Vec::new();
-        let mut ys: Vec<f64> = Vec::new();
+        let mut ys_all: Vec<f64> = Vec::new();
         for _ in 0..3 {
-            for (xi, &yi) in x.iter().zip(&y) {
-                session.observe(xi.clone(), yi);
-                xs.push(xi.clone());
-                ys.push(yi);
+            for (i, &yi) in y.iter().enumerate() {
+                session.observe(x.row(i).to_vec(), yi);
+                whitened.observe(x.row(i).to_vec(), yi);
+                xs.push(x.row(i).to_vec());
+                ys_all.push(yi);
             }
         }
         let ps = session.predict(&x);
-        let pf = reference.fit_predict(&xs, &ys, &x);
-        for j in 0..x.len() {
+        let pw = whitened.predict_pinned();
+        let pf = reference.fit_predict(&Matrix::from_rows(&xs), &ys_all, &x);
+        for j in 0..x.rows {
             assert!((ps.mean[j] - pf.mean[j]).abs() < 1e-6);
             assert!((ps.std[j] - pf.std[j]).abs() < 1e-6);
+            assert!((pw.mean[j] - pf.mean[j]).abs() < 1e-6, "whitened mean after rebuild");
+            assert!((pw.std[j] - pf.std[j]).abs() < 1e-6, "whitened std after rebuild");
         }
     }
 
-    /// The pinned-candidate fast path must be bit-identical to the
-    /// unpinned path: the cached d² rows are the same f64s `predict`
-    /// recomputes, fed through the same posterior code.
+    /// The pinned whitened path must agree with the unpinned path within
+    /// the parity tolerance at every step (the two compute the same
+    /// posterior through different factorizations of the same solve).
     #[test]
-    fn pinned_predictions_are_bit_identical_to_unpinned() {
+    fn pinned_predictions_match_unpinned_path() {
         let (x, y) = toy_data(18, 4, 7);
-        let cands: Vec<Vec<f64>> = toy_data(9, 4, 8).0;
+        let cands = toy_data(9, 4, 8).0;
         let mut pinned = IncrementalGp::default();
         pinned.pin_candidates(&cands);
         let mut plain = IncrementalGp::default();
-        for (xi, &yi) in x.iter().zip(&y) {
-            pinned.observe(xi.clone(), yi);
-            plain.observe(xi.clone(), yi);
+        for (i, &yi) in y.iter().enumerate() {
+            pinned.observe(x.row(i).to_vec(), yi);
+            plain.observe(x.row(i).to_vec(), yi);
             let a = pinned.predict_pinned();
             let b = plain.predict(&cands);
             assert_eq!(pinned.last_lengthscale, plain.last_lengthscale);
-            for j in 0..cands.len() {
-                assert_eq!(a.mean[j].to_bits(), b.mean[j].to_bits());
-                assert_eq!(a.std[j].to_bits(), b.std[j].to_bits());
+            for j in 0..cands.rows {
+                assert!((a.mean[j] - b.mean[j]).abs() < 1e-6, "cand {j} mean");
+                // The variance path is algebraically identical (same
+                // whitened column norms) — bitwise equal.
+                assert_eq!(a.std[j].to_bits(), b.std[j].to_bits(), "cand {j} std");
             }
-        }
-        // Pinning after observations (the replay/rebuild path) agrees too.
-        let mut late = IncrementalGp::default();
-        for (xi, &yi) in x.iter().zip(&y) {
-            late.observe(xi.clone(), yi);
-        }
-        late.pin_candidates(&cands);
-        let a = late.predict_pinned();
-        let b = plain.predict(&cands);
-        for j in 0..cands.len() {
-            assert_eq!(a.mean[j].to_bits(), b.mean[j].to_bits());
         }
     }
 
-    /// Re-pinning to a different grid invalidates the kernel-row cache
-    /// wholesale; predictions on the new grid (and after further
-    /// observations growing the cache row by row) stay bit-identical to
-    /// the uncached path.
+    /// A session pinned after its observations (wholesale whitening via
+    /// `solve_lower_multi`) must be *bit-identical* to one pinned up
+    /// front (row-at-a-time whitened appends): the rebuild and append
+    /// paths perform the same operations in the same order.
     #[test]
-    fn repinning_invalidates_kernel_row_cache() {
+    fn late_pin_is_bit_identical_to_grown_pin() {
+        let (x, y) = toy_data(18, 4, 7);
+        let cands = toy_data(9, 4, 8).0;
+        let mut grown = IncrementalGp::default();
+        grown.pin_candidates(&cands);
+        let mut late = IncrementalGp::default();
+        for (i, &yi) in y.iter().enumerate() {
+            grown.observe(x.row(i).to_vec(), yi);
+            late.observe(x.row(i).to_vec(), yi);
+        }
+        late.pin_candidates(&cands);
+        let a = grown.predict_pinned();
+        let b = late.predict_pinned();
+        for j in 0..cands.rows {
+            assert_eq!(a.mean[j].to_bits(), b.mean[j].to_bits());
+            assert_eq!(a.std[j].to_bits(), b.std[j].to_bits());
+        }
+    }
+
+    /// Re-pinning to a different grid invalidates the kernel-row and
+    /// whitened caches wholesale; predictions on the new grid (and after
+    /// further observations growing the caches row by row) stay within
+    /// parity tolerance of the uncached path, with the variance path
+    /// still bitwise equal.
+    #[test]
+    fn repinning_invalidates_whitened_cache() {
         let (x, y) = toy_data(14, 3, 11);
-        let grid_a: Vec<Vec<f64>> = toy_data(6, 3, 12).0;
-        let grid_b: Vec<Vec<f64>> = toy_data(9, 3, 13).0;
+        let grid_a = toy_data(6, 3, 12).0;
+        let grid_b = toy_data(9, 3, 13).0;
         let mut cached = IncrementalGp::default();
         cached.pin_candidates(&grid_a);
         let mut plain = IncrementalGp::default();
-        for (xi, &yi) in x.iter().take(8).zip(&y) {
-            cached.observe(xi.clone(), yi);
-            plain.observe(xi.clone(), yi);
+        for (i, &yi) in y.iter().enumerate().take(8) {
+            cached.observe(x.row(i).to_vec(), yi);
+            plain.observe(x.row(i).to_vec(), yi);
         }
         // Switch grids mid-session, then keep observing.
         cached.pin_candidates(&grid_b);
-        for (xi, &yi) in x.iter().zip(&y).skip(8) {
-            cached.observe(xi.clone(), yi);
-            plain.observe(xi.clone(), yi);
+        for (i, &yi) in y.iter().enumerate().skip(8) {
+            cached.observe(x.row(i).to_vec(), yi);
+            plain.observe(x.row(i).to_vec(), yi);
         }
         let a = cached.predict_pinned();
         let b = plain.predict(&grid_b);
         assert_eq!(cached.last_lengthscale, plain.last_lengthscale);
-        for j in 0..grid_b.len() {
-            assert_eq!(a.mean[j].to_bits(), b.mean[j].to_bits());
+        for j in 0..grid_b.rows {
+            assert!((a.mean[j] - b.mean[j]).abs() < 1e-6);
             assert_eq!(a.std[j].to_bits(), b.std[j].to_bits());
         }
+    }
+
+    /// The whitened pinned path performs **zero per-candidate triangular
+    /// solves**: at n <= LML_SUBSET_MAX, exactly one `solve_lower` per
+    /// live lengthscale for model selection, regardless of how many
+    /// candidates are pinned. (Past the subset threshold, selection
+    /// instead costs up to |LS_GRID| bounded <=48-dim subset solves plus
+    /// the single full-size solve at the winner — still none per
+    /// candidate.) Debug builds only — the counter compiles out in
+    /// release.
+    #[cfg(debug_assertions)]
+    #[test]
+    fn predict_pinned_performs_no_per_candidate_solves() {
+        use crate::linalg::solve_lower_calls;
+        let (x, y) = toy_data(12, 3, 21);
+        let m = 60; // far more candidates than lengthscales
+        let cands = toy_data(m, 3, 22).0;
+        let mut sess = IncrementalGp::default();
+        sess.pin_candidates(&cands);
+        for (i, &yi) in y.iter().enumerate() {
+            sess.observe(x.row(i).to_vec(), yi);
+        }
+        let before = solve_lower_calls();
+        let p = sess.predict_pinned();
+        let solves = solve_lower_calls() - before;
+        assert_eq!(p.mean.len(), m);
+        assert_eq!(
+            solves,
+            LS_GRID.len() as u64,
+            "predict_pinned must solve once per lengthscale (model selection), \
+             never per candidate"
+        );
+        // The unpinned path by contrast pays one solve per candidate.
+        let before = solve_lower_calls();
+        let _ = sess.predict(&cands);
+        let unpinned = solve_lower_calls() - before;
+        assert_eq!(unpinned, (LS_GRID.len() + m) as u64);
     }
 
     #[test]
@@ -607,7 +1022,7 @@ mod tests {
         let mut s = IncrementalGp::default();
         s.observe(vec![0.5, 0.5], 3.0);
         assert_eq!(s.n_obs(), 1);
-        let p = s.predict(&[vec![0.5, 0.5], vec![0.9, 0.1]]);
+        let p = s.predict(&Matrix::from_rows(&[vec![0.5, 0.5], vec![0.9, 0.1]]));
         assert_eq!(p.mean.len(), 2);
         assert!(p.mean.iter().all(|m| m.is_finite()));
     }

@@ -18,22 +18,29 @@ pub mod rbf;
 pub mod rf;
 pub mod tpe;
 
+use crate::linalg::Matrix;
+
 /// Pluggable execution backend for the two surrogates that exist both
 /// natively and as AOT artifacts. The optimizer layer only ever talks to
 /// this trait; `NativeBackend` computes in-process, `runtime::ArtifactGp`
 /// executes the PJRT-compiled HLO. RF/TPE are native-only by design (the
 /// paper's hot-spot is the GP/RBF math).
+///
+/// Observations and candidates travel as row-major [`Matrix`] values
+/// (one encoded configuration per row), so the distance kernels on the
+/// hot path stream over contiguous memory instead of pointer-chasing
+/// nested `Vec`s.
 pub trait Backend: Sync {
     /// Matern-5/2 GP posterior over candidates (mean/std in y units).
-    fn gp_fit_predict(&self, x: &[Vec<f64>], y: &[f64], cands: &[Vec<f64>]) -> Prediction;
+    fn gp_fit_predict(&self, x: &Matrix, y: &[f64], cands: &Matrix) -> Prediction;
 
     /// Cubic-RBF interpolant values + min-distance over candidates.
     fn rbf_fit_predict(
         &self,
-        x: &[Vec<f64>],
+        x: &Matrix,
         y: &[f64],
         ridge: f64,
-        cands: &[Vec<f64>],
+        cands: &Matrix,
     ) -> rbf::RbfPrediction;
 
     /// Open a stateful GP session for one search run: observations arrive
@@ -45,9 +52,9 @@ pub trait Backend: Sync {
     fn gp_session(&self) -> Box<dyn GpSession + Send + '_> {
         Box::new(ReplayGpSession {
             backend: self,
-            x: Vec::new(),
+            x: Matrix::zeros(0, 0),
             y: Vec::new(),
-            pinned: Vec::new(),
+            pinned: Matrix::zeros(0, 0),
         })
     }
 }
@@ -60,17 +67,21 @@ pub trait GpSession {
     /// Record one (encoded configuration, observed value) pair.
     fn observe(&mut self, x: Vec<f64>, y: f64);
 
-    /// Posterior mean/std over candidates given all observations so far.
-    fn predict(&mut self, cands: &[Vec<f64>]) -> Prediction;
+    /// Posterior mean/std over candidates (one encoded configuration per
+    /// row) given all observations so far.
+    fn predict(&mut self, cands: &Matrix) -> Prediction;
 
     /// Pin the session to a fixed candidate set. BO loops predict over
     /// the same grid every iteration, so sessions may precompute and
     /// cache per-candidate state (the native session caches the
-    /// observation-candidate squared-distance rows, grown one row per
-    /// `observe`). Predictions over the pinned set come from
-    /// [`predict_pinned`](Self::predict_pinned) and are bit-identical to
-    /// `predict` on the same candidates.
-    fn pin_candidates(&mut self, cands: &[Vec<f64>]);
+    /// observation-candidate distance/kernel rows plus the whitened
+    /// candidate matrix `L⁻¹K(X, C)`, all grown one row per `observe`).
+    /// Predictions over the pinned set come from
+    /// [`predict_pinned`](Self::predict_pinned) and agree with `predict`
+    /// on the same candidates within the 1e-6 parity contract (the
+    /// whitened mean accumulates in a different — algebraically
+    /// identical — order).
+    fn pin_candidates(&mut self, cands: &Matrix);
 
     /// Posterior over the pinned candidate set. Panics if no set was
     /// pinned.
@@ -85,27 +96,27 @@ pub trait GpSession {
 /// incremental path (the PJRT artifact executes fixed-shape graphs).
 pub struct ReplayGpSession<'a, B: Backend + ?Sized> {
     backend: &'a B,
-    x: Vec<Vec<f64>>,
+    x: Matrix,
     y: Vec<f64>,
-    pinned: Vec<Vec<f64>>,
+    pinned: Matrix,
 }
 
 impl<B: Backend + ?Sized> GpSession for ReplayGpSession<'_, B> {
     fn observe(&mut self, x: Vec<f64>, y: f64) {
-        self.x.push(x);
+        self.x.push_row(&x);
         self.y.push(y);
     }
 
-    fn predict(&mut self, cands: &[Vec<f64>]) -> Prediction {
+    fn predict(&mut self, cands: &Matrix) -> Prediction {
         self.backend.gp_fit_predict(&self.x, &self.y, cands)
     }
 
-    fn pin_candidates(&mut self, cands: &[Vec<f64>]) {
-        self.pinned = cands.to_vec();
+    fn pin_candidates(&mut self, cands: &Matrix) {
+        self.pinned = cands.clone();
     }
 
     fn predict_pinned(&mut self) -> Prediction {
-        assert!(!self.pinned.is_empty(), "predict_pinned without pinned candidates");
+        assert!(self.pinned.rows > 0, "predict_pinned without pinned candidates");
         self.backend.gp_fit_predict(&self.x, &self.y, &self.pinned)
     }
 
@@ -118,16 +129,16 @@ impl<B: Backend + ?Sized> GpSession for ReplayGpSession<'_, B> {
 pub struct NativeBackend;
 
 impl Backend for NativeBackend {
-    fn gp_fit_predict(&self, x: &[Vec<f64>], y: &[f64], cands: &[Vec<f64>]) -> Prediction {
+    fn gp_fit_predict(&self, x: &Matrix, y: &[f64], cands: &Matrix) -> Prediction {
         gp::GpSurrogate::default().fit_predict(x, y, cands)
     }
 
     fn rbf_fit_predict(
         &self,
-        x: &[Vec<f64>],
+        x: &Matrix,
         y: &[f64],
         ridge: f64,
-        cands: &[Vec<f64>],
+        cands: &Matrix,
     ) -> rbf::RbfPrediction {
         // Escalate ridge on singular systems (duplicate evaluations).
         let mut r = ridge;
@@ -159,9 +170,10 @@ pub struct Prediction {
 pub trait Surrogate {
     /// Fit on observations and predict at candidate points.
     ///
-    /// `x`: n encoded configurations, `y`: n observed losses,
-    /// `cands`: m encoded candidates. Returns mean/std of length m.
-    fn fit_predict(&mut self, x: &[Vec<f64>], y: &[f64], cands: &[Vec<f64>]) -> Prediction;
+    /// `x`: n encoded configurations (one per row), `y`: n observed
+    /// losses, `cands`: m encoded candidates (one per row). Returns
+    /// mean/std of length m.
+    fn fit_predict(&mut self, x: &Matrix, y: &[f64], cands: &Matrix) -> Prediction;
 }
 
 /// Standard normal CDF via the same A&S 7.1.26 erf approximation baked
@@ -286,9 +298,9 @@ mod tests {
         // Two identical points with conflicting targets make the saddle
         // system singular at ridge 0; the backend must escalate the ridge
         // and return a finite blend instead of failing.
-        let x = vec![vec![0.5, 0.5], vec![0.5, 0.5]];
+        let x = Matrix::from_rows(&[vec![0.5, 0.5], vec![0.5, 0.5]]);
         let y = vec![1.0, 2.0];
-        let p = NativeBackend.rbf_fit_predict(&x, &y, 0.0, &[vec![0.5, 0.5]]);
+        let p = NativeBackend.rbf_fit_predict(&x, &y, 0.0, &Matrix::from_rows(&[vec![0.5, 0.5]]));
         assert!(p.pred[0].is_finite());
         assert!((p.pred[0] - 1.5).abs() < 0.25, "blend {}", p.pred[0]);
     }
@@ -298,9 +310,14 @@ mod tests {
         // Non-finite coordinates poison every kernel entry: no ridge can
         // fix the system, and the backend must fall back to the constant
         // interpolant instead of panicking.
-        let x = vec![vec![f64::NAN, 0.5]; 3];
+        let x = Matrix::from_rows(&[vec![f64::NAN, 0.5]; 3]);
         let y = vec![1.0, 2.0, 3.0];
-        let p = NativeBackend.rbf_fit_predict(&x, &y, 1e-6, &[vec![0.1, 0.1], vec![0.9, 0.9]]);
+        let p = NativeBackend.rbf_fit_predict(
+            &x,
+            &y,
+            1e-6,
+            &Matrix::from_rows(&[vec![0.1, 0.1], vec![0.9, 0.9]]),
+        );
         assert_eq!(p.pred, vec![2.0, 2.0]);
     }
 
@@ -310,43 +327,39 @@ mod tests {
         // one-shot fit on the same data (it literally replays one).
         struct ReplayOnly;
         impl Backend for ReplayOnly {
-            fn gp_fit_predict(
-                &self,
-                x: &[Vec<f64>],
-                y: &[f64],
-                cands: &[Vec<f64>],
-            ) -> Prediction {
+            fn gp_fit_predict(&self, x: &Matrix, y: &[f64], cands: &Matrix) -> Prediction {
                 NativeBackend.gp_fit_predict(x, y, cands)
             }
             fn rbf_fit_predict(
                 &self,
-                x: &[Vec<f64>],
+                x: &Matrix,
                 y: &[f64],
                 ridge: f64,
-                cands: &[Vec<f64>],
+                cands: &Matrix,
             ) -> rbf::RbfPrediction {
                 NativeBackend.rbf_fit_predict(x, y, ridge, cands)
             }
         }
         let backend = ReplayOnly;
         let mut sess = backend.gp_session();
-        let x = vec![vec![0.1, 0.2], vec![0.8, 0.3], vec![0.4, 0.9]];
+        let rows = [vec![0.1, 0.2], vec![0.8, 0.3], vec![0.4, 0.9]];
+        let x = Matrix::from_rows(&rows);
         let y = vec![1.0, 2.0, 1.5];
-        for (xi, &yi) in x.iter().zip(&y) {
+        for (xi, &yi) in rows.iter().zip(&y) {
             sess.observe(xi.clone(), yi);
         }
         assert_eq!(sess.n_obs(), 3);
-        let cands = vec![vec![0.5, 0.5], vec![0.0, 1.0]];
+        let cands = Matrix::from_rows(&[vec![0.5, 0.5], vec![0.0, 1.0]]);
         let ps = sess.predict(&cands);
         let pf = backend.gp_fit_predict(&x, &y, &cands);
-        for i in 0..cands.len() {
+        for i in 0..cands.rows {
             assert_eq!(ps.mean[i], pf.mean[i]);
             assert_eq!(ps.std[i], pf.std[i]);
         }
         // Pinned predictions replay the same full fit.
         sess.pin_candidates(&cands);
         let pp = sess.predict_pinned();
-        for i in 0..cands.len() {
+        for i in 0..cands.rows {
             assert_eq!(pp.mean[i], pf.mean[i]);
             assert_eq!(pp.std[i], pf.std[i]);
         }

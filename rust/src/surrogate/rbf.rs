@@ -6,6 +6,9 @@
 //! solves the same system via normal equations in f64); the parity test
 //! in rust/tests checks the two agree.
 //!
+//! Observations and candidates arrive as row-major [`Matrix`] values so
+//! the O(n²) distance pass streams over contiguous rows.
+//!
 //! Besides the interpolant value, the model reports each candidate's
 //! distance to the nearest observation — RBFOpt-lite's exploration signal.
 
@@ -13,7 +16,7 @@ use crate::linalg::{solve_general, Matrix};
 
 #[derive(Clone, Debug)]
 pub struct RbfFit {
-    centers: Vec<Vec<f64>>,
+    centers: Matrix,
     coef: Vec<f64>,
     tail: f64,
 }
@@ -35,14 +38,15 @@ fn phi(r: f64) -> f64 {
 /// Fit the interpolant. `ridge` regularizes the live diagonal (matches the
 /// artifact's `lam`). Returns None when the saddle system is singular
 /// (e.g. duplicated points with conflicting targets and zero ridge).
-pub fn fit(x: &[Vec<f64>], y: &[f64], ridge: f64) -> Option<RbfFit> {
-    assert_eq!(x.len(), y.len());
-    assert!(!x.is_empty());
-    let n = x.len();
+pub fn fit(x: &Matrix, y: &[f64], ridge: f64) -> Option<RbfFit> {
+    assert_eq!(x.rows, y.len());
+    assert!(x.rows > 0);
+    let n = x.rows;
     let mut a = Matrix::zeros(n + 1, n + 1);
     for i in 0..n {
+        let xi = x.row(i);
         for j in 0..n {
-            a[(i, j)] = phi(dist(&x[i], &x[j]));
+            a[(i, j)] = phi(dist(xi, x.row(j)));
         }
         a[(i, i)] += ridge;
         a[(i, n)] = 1.0;
@@ -51,32 +55,36 @@ pub fn fit(x: &[Vec<f64>], y: &[f64], ridge: f64) -> Option<RbfFit> {
     let mut rhs = y.to_vec();
     rhs.push(0.0);
     let z = solve_general(&a, &rhs)?;
-    Some(RbfFit { centers: x.to_vec(), coef: z[..n].to_vec(), tail: z[n] })
+    Some(RbfFit { centers: x.clone(), coef: z[..n].to_vec(), tail: z[n] })
 }
 
 /// Last-resort degenerate model: a constant interpolant at the mean of
 /// the finite targets, with brute-force nearest-observation distances.
 /// Used by the backend when even the largest ridge cannot make the
 /// saddle system solvable (e.g. non-finite inputs).
-pub fn constant_prediction(x: &[Vec<f64>], y: &[f64], cands: &[Vec<f64>]) -> RbfPrediction {
+pub fn constant_prediction(x: &Matrix, y: &[f64], cands: &Matrix) -> RbfPrediction {
     let finite: Vec<f64> = y.iter().copied().filter(|v| v.is_finite()).collect();
     let level = if finite.is_empty() { 0.0 } else { crate::util::stats::mean(&finite) };
-    let mindist = cands
-        .iter()
-        .map(|c| x.iter().map(|xi| dist(xi, c)).fold(f64::INFINITY, f64::min))
+    let mindist = (0..cands.rows)
+        .map(|j| {
+            let c = cands.row(j);
+            (0..x.rows).map(|i| dist(x.row(i), c)).fold(f64::INFINITY, f64::min)
+        })
         .collect();
-    RbfPrediction { pred: vec![level; cands.len()], mindist }
+    RbfPrediction { pred: vec![level; cands.rows], mindist }
 }
 
 impl RbfFit {
-    pub fn predict(&self, cands: &[Vec<f64>]) -> RbfPrediction {
-        let mut pred = Vec::with_capacity(cands.len());
-        let mut mindist = Vec::with_capacity(cands.len());
-        for c in cands {
+    pub fn predict(&self, cands: &Matrix) -> RbfPrediction {
+        let m = cands.rows;
+        let mut pred = Vec::with_capacity(m);
+        let mut mindist = Vec::with_capacity(m);
+        for j in 0..m {
+            let c = cands.row(j);
             let mut s = self.tail;
             let mut dmin = f64::INFINITY;
-            for (center, coef) in self.centers.iter().zip(&self.coef) {
-                let r = dist(center, c);
+            for (i, coef) in self.coef.iter().enumerate() {
+                let r = dist(self.centers.row(i), c);
                 s += coef * phi(r);
                 dmin = dmin.min(r);
             }
@@ -92,11 +100,11 @@ mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
-    fn toy(n: usize, d: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+    fn toy(n: usize, d: usize, seed: u64) -> (Matrix, Vec<f64>) {
         let mut rng = Rng::new(seed);
-        let x: Vec<Vec<f64>> = (0..n).map(|_| (0..d).map(|_| rng.f64()).collect()).collect();
-        let y: Vec<f64> = x.iter().map(|v| v.iter().map(|t| t * t).sum::<f64>()).collect();
-        (x, y)
+        let rows: Vec<Vec<f64>> = (0..n).map(|_| (0..d).map(|_| rng.f64()).collect()).collect();
+        let y: Vec<f64> = rows.iter().map(|v| v.iter().map(|t| t * t).sum::<f64>()).collect();
+        (Matrix::from_rows(&rows), y)
     }
 
     #[test]
@@ -114,12 +122,11 @@ mod tests {
     fn mindist_matches_bruteforce() {
         let (x, y) = toy(10, 4, 2);
         let fit = fit(&x, &y, 1e-8).unwrap();
-        let mut rng = Rng::new(3);
-        let cands: Vec<Vec<f64>> = (0..5).map(|_| (0..4).map(|_| rng.f64()).collect()).collect();
+        let cands = toy(5, 4, 3).0;
         let p = fit.predict(&cands);
-        for (c, got) in cands.iter().zip(&p.mindist) {
-            let want =
-                x.iter().map(|xi| dist(xi, c)).fold(f64::INFINITY, f64::min);
+        for (j, got) in p.mindist.iter().enumerate() {
+            let c = cands.row(j);
+            let want = (0..x.rows).map(|i| dist(x.row(i), c)).fold(f64::INFINITY, f64::min);
             assert!((got - want).abs() < 1e-12);
         }
     }
@@ -127,37 +134,37 @@ mod tests {
     #[test]
     fn smooth_generalization_between_points() {
         // 1-D line: interpolant of y = x should stay near x in-between.
-        let x: Vec<Vec<f64>> = (0..=10).map(|i| vec![i as f64 / 10.0]).collect();
-        let y: Vec<f64> = x.iter().map(|v| v[0]).collect();
-        let fit = fit(&x, &y, 0.0).unwrap();
-        let p = fit.predict(&[vec![0.55], vec![0.05]]);
+        let rows: Vec<Vec<f64>> = (0..=10).map(|i| vec![i as f64 / 10.0]).collect();
+        let y: Vec<f64> = rows.iter().map(|v| v[0]).collect();
+        let fit = fit(&Matrix::from_rows(&rows), &y, 0.0).unwrap();
+        let p = fit.predict(&Matrix::from_rows(&[vec![0.55], vec![0.05]]));
         assert!((p.pred[0] - 0.55).abs() < 0.05);
         assert!((p.pred[1] - 0.05).abs() < 0.05);
     }
 
     #[test]
     fn duplicate_points_need_ridge() {
-        let x = vec![vec![0.5, 0.5], vec![0.5, 0.5]];
+        let x = Matrix::from_rows(&[vec![0.5, 0.5], vec![0.5, 0.5]]);
         let y = vec![1.0, 2.0];
         assert!(fit(&x, &y, 0.0).is_none());
         let f = fit(&x, &y, 1e-3).unwrap();
-        let p = f.predict(&[vec![0.5, 0.5]]);
+        let p = f.predict(&Matrix::from_rows(&[vec![0.5, 0.5]]));
         assert!((p.pred[0] - 1.5).abs() < 0.1);
     }
 
     #[test]
     fn constant_prediction_uses_mean_and_distances() {
-        let x = vec![vec![0.0, 0.0], vec![1.0, 0.0]];
+        let x = Matrix::from_rows(&[vec![0.0, 0.0], vec![1.0, 0.0]]);
         let y = vec![2.0, 4.0];
-        let p = constant_prediction(&x, &y, &[vec![0.0, 3.0]]);
+        let p = constant_prediction(&x, &y, &Matrix::from_rows(&[vec![0.0, 3.0]]));
         assert_eq!(p.pred, vec![3.0]);
         assert!((p.mindist[0] - 3.0).abs() < 1e-12);
     }
 
     #[test]
     fn single_point_degenerates_to_constant() {
-        let f = fit(&[vec![0.3]], &[7.0], 1e-8).unwrap();
-        let p = f.predict(&[vec![0.9]]);
+        let f = fit(&Matrix::from_rows(&[vec![0.3]]), &[7.0], 1e-8).unwrap();
+        let p = f.predict(&Matrix::from_rows(&[vec![0.9]]));
         assert!((p.pred[0] - 7.0).abs() < 1e-6);
     }
 }

@@ -7,6 +7,7 @@
 //! subsets at each split, variance-reduction split criterion.
 
 use super::{Prediction, Surrogate};
+use crate::linalg::Matrix;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -62,19 +63,19 @@ impl RandomForest {
         RandomForest { params, trees: Vec::new() }
     }
 
-    pub fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
-        assert_eq!(x.len(), y.len());
-        assert!(!x.is_empty(), "RF fit with no data");
-        let d = x[0].len();
+    pub fn fit(&mut self, x: &Matrix, y: &[f64]) {
+        assert_eq!(x.rows, y.len());
+        assert!(x.rows > 0, "RF fit with no data");
+        let d = x.cols;
         let mtry = if self.params.mtry == 0 { d.div_ceil(3) } else { self.params.mtry.min(d) };
         let mut rng = Rng::new(self.params.seed);
         self.trees = (0..self.params.n_trees)
             .map(|t| {
                 let mut trng = rng.fork(t as u64);
                 let idx: Vec<usize> = if self.params.bootstrap {
-                    (0..x.len()).map(|_| trng.usize_below(x.len())).collect()
+                    (0..x.rows).map(|_| trng.usize_below(x.rows)).collect()
                 } else {
-                    (0..x.len()).collect()
+                    (0..x.rows).collect()
                 };
                 let mut tree = Tree { nodes: Vec::new() };
                 build(&mut tree, x, y, idx, mtry, self.params.min_leaf, &mut trng);
@@ -94,7 +95,7 @@ impl RandomForest {
 
 fn build(
     tree: &mut Tree,
-    x: &[Vec<f64>],
+    x: &Matrix,
     y: &[f64],
     idx: Vec<usize>,
     mtry: usize,
@@ -109,11 +110,11 @@ fn build(
         return tree.nodes.len() - 1;
     }
 
-    let d = x[0].len();
+    let d = x.cols;
     let feats = rng.sample_indices(d, mtry.min(d));
     let mut best: Option<(usize, f64, f64)> = None; // (feature, threshold, score)
     for &f in &feats {
-        let mut vals: Vec<f64> = idx.iter().map(|&i| x[i][f]).collect();
+        let mut vals: Vec<f64> = idx.iter().map(|&i| x[(i, f)]).collect();
         vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
         vals.dedup();
         if vals.len() < 2 {
@@ -123,7 +124,7 @@ fn build(
             let thr = 0.5 * (w[0] + w[1]);
             let (mut nl, mut sl, mut nr, mut sr) = (0usize, 0.0, 0usize, 0.0);
             for &i in &idx {
-                if x[i][f] <= thr {
+                if x[(i, f)] <= thr {
                     nl += 1;
                     sl += y[i];
                 } else {
@@ -147,7 +148,7 @@ fn build(
         return tree.nodes.len() - 1;
     };
 
-    let (li, ri): (Vec<usize>, Vec<usize>) = idx.iter().partition(|&&i| x[i][f] <= thr);
+    let (li, ri): (Vec<usize>, Vec<usize>) = idx.iter().partition(|&&i| x[(i, f)] <= thr);
     let placeholder = tree.nodes.len();
     tree.nodes.push(Node::Leaf { value: mean }); // replaced below
     let left = build(tree, x, y, li, mtry, min_leaf, rng);
@@ -157,11 +158,12 @@ fn build(
 }
 
 impl Surrogate for RandomForest {
-    fn fit_predict(&mut self, x: &[Vec<f64>], y: &[f64], cands: &[Vec<f64>]) -> Prediction {
+    fn fit_predict(&mut self, x: &Matrix, y: &[f64], cands: &Matrix) -> Prediction {
         self.fit(x, y);
-        let (mut mean, mut std) = (Vec::with_capacity(cands.len()), Vec::with_capacity(cands.len()));
-        for c in cands {
-            let (m, s) = self.predict_one(c);
+        let (mut mean, mut std) =
+            (Vec::with_capacity(cands.rows), Vec::with_capacity(cands.rows));
+        for j in 0..cands.rows {
+            let (m, s) = self.predict_one(cands.row(j));
             mean.push(m);
             std.push(s);
         }
@@ -174,12 +176,12 @@ mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
-    fn step_data(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+    fn step_data(n: usize, seed: u64) -> (Matrix, Vec<f64>) {
         // y = 10 if x0 > 0.5 else 0, plus small noise on x1 irrelevant dim.
         let mut rng = Rng::new(seed);
-        let x: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.f64(), rng.f64()]).collect();
-        let y: Vec<f64> = x.iter().map(|v| if v[0] > 0.5 { 10.0 } else { 0.0 }).collect();
-        (x, y)
+        let rows: Vec<Vec<f64>> = (0..n).map(|_| vec![rng.f64(), rng.f64()]).collect();
+        let y: Vec<f64> = rows.iter().map(|v| if v[0] > 0.5 { 10.0 } else { 0.0 }).collect();
+        (Matrix::from_rows(&rows), y)
     }
 
     #[test]
@@ -216,7 +218,7 @@ mod tests {
     #[test]
     fn no_bootstrap_single_tree_fits_exactly() {
         // A single un-bootstrapped tree with min_leaf 1 memorizes the data.
-        let x = vec![vec![0.0], vec![0.25], vec![0.5], vec![0.75], vec![1.0]];
+        let x = Matrix::from_rows(&[vec![0.0], vec![0.25], vec![0.5], vec![0.75], vec![1.0]]);
         let y = vec![1.0, 5.0, 2.0, 8.0, 3.0];
         let mut rf = RandomForest::new(RfParams {
             n_trees: 1,
@@ -226,15 +228,19 @@ mod tests {
             bootstrap: false,
         });
         rf.fit(&x, &y);
-        for (xi, yi) in x.iter().zip(&y) {
-            assert_eq!(rf.predict_one(xi).0, *yi);
+        for (i, yi) in y.iter().enumerate() {
+            assert_eq!(rf.predict_one(x.row(i)).0, *yi);
         }
     }
 
     #[test]
     fn handles_tiny_datasets() {
         let mut rf = RandomForest::new(RfParams::default());
-        let p = rf.fit_predict(&[vec![0.1], vec![0.9]], &[1.0, 2.0], &[vec![0.5]]);
+        let p = rf.fit_predict(
+            &Matrix::from_rows(&[vec![0.1], vec![0.9]]),
+            &[1.0, 2.0],
+            &Matrix::from_rows(&[vec![0.5]]),
+        );
         assert!(p.mean[0] >= 1.0 && p.mean[0] <= 2.0);
     }
 
@@ -243,10 +249,14 @@ mod tests {
         crate::testkit::check("rf predictions bounded by target range", 10, |g| {
             let n = g.usize_in(5, 40);
             let d = g.usize_in(1, 6);
-            let x: Vec<Vec<f64>> = (0..n).map(|_| g.vec_f64(d, 0.0, 1.0)).collect();
+            let x = Matrix::from_rows(
+                &(0..n).map(|_| g.vec_f64(d, 0.0, 1.0)).collect::<Vec<Vec<f64>>>(),
+            );
             let y = g.vec_f64(n, -5.0, 5.0);
             let mut rf = RandomForest::new(RfParams { n_trees: 10, ..Default::default() });
-            let cands: Vec<Vec<f64>> = (0..10).map(|_| g.vec_f64(d, 0.0, 1.0)).collect();
+            let cands = Matrix::from_rows(
+                &(0..10).map(|_| g.vec_f64(d, 0.0, 1.0)).collect::<Vec<Vec<f64>>>(),
+            );
             let p = rf.fit_predict(&x, &y, &cands);
             let (lo, hi) =
                 (crate::util::stats::min(&y) - 1e-9, crate::util::stats::max(&y) + 1e-9);

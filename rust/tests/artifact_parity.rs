@@ -8,6 +8,7 @@
 use multicloud::dataset::objective::{EvalLedger, LookupObjective, MeasureMode};
 use multicloud::dataset::{OfflineDataset, Target};
 use multicloud::domain::encode;
+use multicloud::linalg::Matrix;
 use multicloud::optimizers::{by_name, SearchContext};
 use multicloud::runtime::ArtifactBackend;
 use multicloud::surrogate::{Backend, NativeBackend};
@@ -25,14 +26,18 @@ fn load_backend() -> Option<ArtifactBackend> {
 }
 
 /// Sample n encoded observations + targets from a real workload surface.
-fn sample_problem(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>, Vec<Vec<f64>>) {
+fn sample_problem(n: usize, seed: u64) -> (Matrix, Vec<f64>, Matrix) {
     let ds = OfflineDataset::generate(77, 3);
     let grid = ds.domain.full_grid();
     let mut rng = Rng::new(seed);
     let idx = rng.sample_indices(grid.len(), n);
-    let x: Vec<Vec<f64>> = idx.iter().map(|&i| encode(&ds.domain, &grid[i])).collect();
+    let x = Matrix::from_rows(
+        &idx.iter().map(|&i| encode(&ds.domain, &grid[i])).collect::<Vec<Vec<f64>>>(),
+    );
     let y: Vec<f64> = idx.iter().map(|&i| ds.mean_value(3, i, Target::Cost)).collect();
-    let cands: Vec<Vec<f64>> = grid.iter().map(|c| encode(&ds.domain, c)).collect();
+    let cands = Matrix::from_rows(
+        &grid.iter().map(|c| encode(&ds.domain, c)).collect::<Vec<Vec<f64>>>(),
+    );
     (x, y, cands)
 }
 
@@ -45,7 +50,7 @@ fn gp_artifact_matches_native_posterior() {
         let pa = backend.gp_fit_predict(&x, &y, &cands);
         let pn = native.gp_fit_predict(&x, &y, &cands);
         let scale = y.iter().fold(0.0f64, |a, &b| a.max(b.abs())).max(1e-9);
-        for i in 0..cands.len() {
+        for i in 0..cands.rows {
             let dm = (pa.mean[i] - pn.mean[i]).abs() / scale;
             assert!(dm < 2e-3, "n={n} cand {i}: mean {} vs {}", pa.mean[i], pn.mean[i]);
             let ds_ = (pa.std[i] - pn.std[i]).abs() / scale;
@@ -65,7 +70,7 @@ fn rbf_artifact_matches_native_interpolant() {
         let (z, _, _) = multicloud::surrogate::standardize(&y);
         let pa = backend.rbf_fit_predict(&x, &z, 1e-6, &cands);
         let pn = native.rbf_fit_predict(&x, &z, 1e-6, &cands);
-        for i in 0..cands.len() {
+        for i in 0..cands.rows {
             assert!(
                 (pa.pred[i] - pn.pred[i]).abs() < 5e-2,
                 "n={n} cand {i}: pred {} vs {}",
