@@ -1,6 +1,6 @@
 //! Serving-path bench: what the persistent scheduler buys per request.
 //!
-//! Two measurements:
+//! Three measurements:
 //!
 //! * **requests/sec** through `Service::handle` for deterministic-mode
 //!   requests, cold (every request a distinct cache key, full trial) vs.
@@ -9,14 +9,24 @@
 //! * **per-sweep fan-out latency**: the Rising-Bandits-shaped pattern
 //!   (many small K-way fan-outs per trial) on the persistent worker team
 //!   vs. the old spawn-scoped-threads-per-sweep path
-//!   (`parallel_map_owned_spawn`), with a bit-identity check.
+//!   (`parallel_map_owned_spawn`), with a bit-identity check;
+//! * **connection scaling**: TCP round-trip latency of one active
+//!   client while 0 / 64 / 256 idle keep-alive connections are parked
+//!   on the poll event loop (4 connection workers) — the readiness
+//!   design's whole point is that this column stays flat — plus the
+//!   thread-per-connection fallback at 0 idle for reference.
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
+use std::time::Duration;
 
 use multicloud::benchkit::{black_box, Suite};
 use multicloud::coordinator::service::Service;
 use multicloud::dataset::OfflineDataset;
 use multicloud::surrogate::NativeBackend;
+use multicloud::util::net;
 use multicloud::util::threadpool::{parallel_map_owned, parallel_map_owned_spawn};
 
 fn main() {
@@ -103,6 +113,58 @@ fn main() {
         spawn / 1e6,
         spawn / team.max(1e-12)
     );
+
+    // -- connection scaling: one active client vs an idle herd --------------
+    //
+    // Round-trip a cached deterministic request (so the measurement is
+    // transport, not trial, time) while N idle keep-alive connections
+    // are parked on the server. Under the event loop the idle herd costs
+    // fds, not workers, so latency should stay flat across the sweep.
+    let active_req = br#"{"op":"optimize","workload":"kmeans:buzz","target":"cost","method":"rs","budget":6,"seed":1,"measure_mode":"mean"}"#;
+    let rtt = |suite: &mut Suite, label: &str, event_loop: bool, idle_conns: usize| {
+        let svc = Arc::new(
+            Service::new(Arc::clone(&ds), Arc::new(NativeBackend))
+                .with_conn_workers(4)
+                .with_event_loop(event_loop),
+        );
+        let stop = Arc::new(AtomicBool::new(false));
+        let (port, handle) =
+            Arc::clone(&svc).serve("127.0.0.1:0", Arc::clone(&stop)).expect("bind");
+        let connect = || {
+            let c = TcpStream::connect(("127.0.0.1", port)).expect("connect");
+            c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+            c
+        };
+        let idle: Vec<TcpStream> = (0..idle_conns).map(|_| connect()).collect();
+        let mut conn = connect();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        {
+            let mut roundtrip = || {
+                conn.write_all(active_req).unwrap();
+                conn.write_all(b"\n").unwrap();
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                assert!(line.contains("\"ok\":true"), "{line}");
+                line
+            };
+            roundtrip(); // warm the response cache off the clock
+            suite.bench(label, || black_box(roundtrip()));
+        }
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        // Close every client socket before joining so the threaded
+        // fallback's workers see EOF instead of waiting out a timeout.
+        drop(reader);
+        drop(conn);
+        drop(idle);
+        handle.join().unwrap();
+    };
+    if net::supported() {
+        for idle_conns in [0usize, 64, 256] {
+            let label = format!("event-loop rtt, {idle_conns} idle conns");
+            rtt(&mut suite, &label, true, idle_conns);
+        }
+    }
+    rtt(&mut suite, "fallback rtt, 0 idle conns", false, 0);
 
     suite.finish();
     std::fs::create_dir_all("results").ok();

@@ -62,6 +62,9 @@ pub struct TrialResult {
     /// Search expense: sum of the target metric over all evaluations.
     pub search_expense: f64,
     pub evals: usize,
+    /// Best-so-far observed value after each evaluation (the ledger's
+    /// convergence curve; the service returns it under `include_trace`).
+    pub trace: Vec<f64>,
 }
 
 /// Size a trial ledger, memoized when the measure mode is deterministic.
@@ -104,17 +107,17 @@ pub fn run_trial(ds: &OfflineDataset, backend: &dyn Backend, spec: &TrialSpec) -
     // from it uniformly instead of being re-derived from source internals.
     // Predictive baselines have no budget axis: their ledger is sized to
     // their fixed, known online cost (still landing in the accounting).
-    let (chosen, search_expense, evals) = match spec.method.as_str() {
+    let (chosen, search_expense, evals, trace) = match spec.method.as_str() {
         "predict-linear" => {
             let mut ledger = new_ledger(&source, ds.domain.size(), memoize);
             let chosen = LinearPredictor.run(&ds.domain, &mut ledger).chosen;
-            (chosen, ledger.total_expense(), ledger.evals())
+            (chosen, ledger.total_expense(), ledger.evals(), ledger.trace().to_vec())
         }
         "predict-rf" => {
             let mut ledger = new_ledger(&source, 2 * ds.domain.provider_count(), memoize);
             let chosen =
                 ParisPredictor::default().run(ds, spec.workload, spec.target, &mut ledger).chosen;
-            (chosen, ledger.total_expense(), ledger.evals())
+            (chosen, ledger.total_expense(), ledger.evals(), ledger.trace().to_vec())
         }
         name => {
             let opt = by_name(name).unwrap_or_else(|| panic!("unknown method {name}"));
@@ -123,7 +126,7 @@ pub fn run_trial(ds: &OfflineDataset, backend: &dyn Backend, spec: &TrialSpec) -
             let mut ledger =
                 new_ledger(&source, opt.provisioned_budget(&ctx, spec.budget), memoize);
             let chosen = opt.run(&ctx, &mut ledger, &mut rng).best_config;
-            (chosen, ledger.total_expense(), ledger.evals())
+            (chosen, ledger.total_expense(), ledger.evals(), ledger.trace().to_vec())
         }
     };
 
@@ -135,6 +138,7 @@ pub fn run_trial(ds: &OfflineDataset, backend: &dyn Backend, spec: &TrialSpec) -
         regret: metrics::regret(chosen_value, true_min),
         search_expense,
         evals,
+        trace,
     }
 }
 
@@ -313,6 +317,11 @@ mod tests {
         assert_eq!(a.regret, b.regret);
         assert_eq!(a.search_expense, b.search_expense);
         assert!(a.regret >= 0.0);
+        // The convergence trace is part of the deterministic result:
+        // one best-so-far point per evaluation, non-increasing.
+        assert_eq!(a.trace, b.trace);
+        assert_eq!(a.trace.len(), a.evals);
+        assert!(a.trace.windows(2).all(|w| w[1] <= w[0]));
     }
 
     /// `trial_workers` is a pure wall-clock knob: bandit trials produce

@@ -7,7 +7,8 @@
 //! Request:
 //!   {"op": "optimize", "workload": "kmeans:santander", "target": "cost",
 //!    "method": "cb-rbfopt", "budget": 33, "seed": 1,
-//!    "trial_workers": 3, "measure_mode": "single_draw"}
+//!    "trial_workers": 3, "measure_mode": "single_draw",
+//!    "include_trace": false}
 //!   {"op": "batch", "requests": [{...}, {...}, ...]}
 //!   {"op": "list_workloads"}
 //!   {"op": "list_methods"}
@@ -23,11 +24,22 @@
 //!   fan-out, batch fan-out) runs on the persistent
 //!   [`global_team`](crate::util::threadpool::global_team) — no thread is
 //!   spawned per request or per bandit sweep.
-//! * **Bounded admission.** `serve` accepts connections into a bounded
-//!   queue drained by a fixed pool of connection workers
-//!   ([`Service::with_conn_workers`]); when the queue is full the
-//!   acceptor stops pulling from the TCP backlog instead of spawning
-//!   unbounded threads.
+//! * **Readiness-driven connections (default on Unix).** One event-loop
+//!   thread owns the listener and every connection socket
+//!   (`poll(2)` via [`crate::util::net`]): it does nonblocking framed
+//!   reads into per-connection buffers, hands only *complete* request
+//!   lines to the connection-worker pool
+//!   ([`Service::with_conn_workers`]), and writes responses back
+//!   nonblockingly. Idle keep-alive connections therefore cost one fd
+//!   each — never a pinned worker — so `64` idle clients on a
+//!   two-worker pool cannot starve a new arrival. Per connection at
+//!   most one request executes at a time, so pipelined requests are
+//!   answered strictly in order, byte-identical to the threaded path.
+//! * **Thread-per-connection fallback.** [`Service::with_event_loop`]
+//!   (CLI `--event-loop on|off|auto`) switches to the classic bounded
+//!   accept queue + fixed worker pool, kept for non-Unix platforms and
+//!   for differential testing; both transports produce byte-identical
+//!   response streams.
 //! * **Adaptive arm workers.** A request that leaves `trial_workers`
 //!   unset (or 0) gets `max(1, cores / in-flight requests)` arm workers —
 //!   a lone request fans its bandit arms across the machine, a busy
@@ -58,6 +70,11 @@
 //! Response (optimize):
 //!   {"ok": true, "config": "gcp/family=e2/...", "value": 0.123,
 //!    "evals": 33, "search_expense": 4.56, "regret": 0.01}
+//!
+//! With `"include_trace": true` the response additionally carries
+//! `"trace": [best-so-far after each evaluation]` — the convergence
+//! curve, stored alongside the cached response so cached hits return it
+//! too (even when the cold request didn't ask for it).
 
 use std::collections::{BTreeMap, HashMap};
 use std::io::{BufRead, BufReader, Write};
@@ -78,6 +95,12 @@ use crate::util::threadpool::{default_workers, global_team, parallel_map_owned, 
 /// Largest request list one batch op accepts.
 pub const MAX_BATCH: usize = 256;
 
+/// Largest accepted request frame in bytes (one line, newline excluded).
+/// A connection that exceeds it gets one error response and a close —
+/// on both transports — so a garbage client cannot balloon server
+/// memory through an endless unterminated line.
+pub const MAX_FRAME: usize = 1 << 20;
+
 /// Default bound on cached deterministic-mode responses (LRU beyond it).
 pub const DEFAULT_CACHE_CAP: usize = 1024;
 
@@ -94,6 +117,15 @@ struct ResponseKey {
     mode: MeasureMode,
 }
 
+/// What the response cache holds per key: the response body plus the
+/// ledger's convergence trace, so a cached hit can honor
+/// `include_trace` even when the cold request never asked for it.
+#[derive(Clone)]
+struct CachedResponse {
+    resp: Value,
+    trace: Value,
+}
+
 /// Bounded LRU store behind the cross-request response cache: a key map
 /// carrying each entry's last-use tick plus a tick-ordered index, so a
 /// hit is O(log n) and eviction pops the stalest tick. Plain maps (no
@@ -101,7 +133,7 @@ struct ResponseKey {
 struct ResponseCache {
     cap: usize,
     tick: u64,
-    map: HashMap<ResponseKey, (Value, u64)>,
+    map: HashMap<ResponseKey, (CachedResponse, u64)>,
     order: BTreeMap<u64, ResponseKey>,
 }
 
@@ -111,7 +143,7 @@ impl ResponseCache {
     }
 
     /// Look up and mark as most-recently-used.
-    fn get(&mut self, key: &ResponseKey) -> Option<Value> {
+    fn get(&mut self, key: &ResponseKey) -> Option<CachedResponse> {
         self.tick += 1;
         let tick = self.tick;
         let (resp, last) = self.map.get_mut(key)?;
@@ -123,12 +155,13 @@ impl ResponseCache {
     }
 
     /// Insert (first writer wins), evicting least-recently-used entries
-    /// past the cap. Returns how many entries were evicted.
-    fn insert(&mut self, key: ResponseKey, resp: Value) -> usize {
+    /// past the cap. Returns whether the entry was inserted and how many
+    /// entries were evicted.
+    fn insert(&mut self, key: ResponseKey, resp: CachedResponse) -> (bool, usize) {
         if self.map.contains_key(&key) {
             // A racing duplicate computed the identical response
             // (deterministic mode), so the existing entry serves.
-            return 0;
+            return (false, 0);
         }
         let mut evicted = 0;
         while self.map.len() >= self.cap {
@@ -141,7 +174,7 @@ impl ResponseCache {
         self.tick += 1;
         self.order.insert(self.tick, key.clone());
         self.map.insert(key, (resp, self.tick));
-        evicted
+        (true, evicted)
     }
 
     fn clear(&mut self) -> usize {
@@ -165,6 +198,8 @@ pub struct Scheduler {
     in_flight: AtomicUsize,
     cache: Mutex<ResponseCache>,
     cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    cache_inserts: AtomicU64,
     cache_evictions: AtomicU64,
     trials_run: AtomicU64,
 }
@@ -185,6 +220,8 @@ impl Scheduler {
             in_flight: AtomicUsize::new(0),
             cache: Mutex::new(ResponseCache::new(cache_cap)),
             cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            cache_inserts: AtomicU64::new(0),
             cache_evictions: AtomicU64::new(0),
             trials_run: AtomicU64::new(0),
         }
@@ -217,6 +254,18 @@ impl Scheduler {
         self.cache_hits.load(Ordering::Relaxed)
     }
 
+    /// Deterministic-mode requests that missed the cache (every one runs
+    /// a trial, so `hits + misses` = deterministic requests served).
+    pub fn cache_misses(&self) -> u64 {
+        self.cache_misses.load(Ordering::Relaxed)
+    }
+
+    /// Entries actually inserted into the cache (misses minus racing
+    /// duplicates whose key was already present at store time).
+    pub fn cache_inserts(&self) -> u64 {
+        self.cache_inserts.load(Ordering::Relaxed)
+    }
+
     /// Entries evicted from the response cache so far (LRU past the cap).
     pub fn cache_evictions(&self) -> u64 {
         self.cache_evictions.load(Ordering::Relaxed)
@@ -237,18 +286,49 @@ impl Scheduler {
         self.cache.lock().unwrap().clear()
     }
 
-    fn cache_lookup(&self, key: &ResponseKey) -> Option<Value> {
+    fn cache_lookup(&self, key: &ResponseKey) -> Option<CachedResponse> {
         let hit = self.cache.lock().unwrap().get(key);
         if hit.is_some() {
             self.cache_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.cache_misses.fetch_add(1, Ordering::Relaxed);
         }
         hit
     }
 
-    fn cache_store(&self, key: ResponseKey, resp: Value) {
-        let evicted = self.cache.lock().unwrap().insert(key, resp);
+    fn cache_store(&self, key: ResponseKey, resp: CachedResponse) {
+        let (inserted, evicted) = self.cache.lock().unwrap().insert(key, resp);
+        if inserted {
+            self.cache_inserts.fetch_add(1, Ordering::Relaxed);
+        }
         if evicted > 0 {
             self.cache_evictions.fetch_add(evicted as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Transport-level gauges surfaced by the `stats` op. Written by the
+/// event loop (or the threaded workers, which only track
+/// `open_connections`), read by any request handler.
+struct NetStats {
+    /// Open client connections. Under the event loop: every accepted
+    /// socket. Under the threaded fallback: connections a worker is
+    /// actively serving (sockets parked in the accept queue are not
+    /// counted).
+    open_connections: AtomicUsize,
+    /// Open connections with nothing buffered and no request in flight
+    /// (event loop only: the idle keep-alive herd being held for free).
+    idle_connections: AtomicUsize,
+    /// Event-loop `poll` returns that reported at least one ready fd.
+    loop_wakeups: AtomicU64,
+}
+
+impl NetStats {
+    fn new() -> NetStats {
+        NetStats {
+            open_connections: AtomicUsize::new(0),
+            idle_connections: AtomicUsize::new(0),
+            loop_wakeups: AtomicU64::new(0),
         }
     }
 }
@@ -258,6 +338,10 @@ pub struct Service {
     backend: Arc<dyn Backend + Send + Sync>,
     scheduler: Scheduler,
     conn_workers: usize,
+    /// Serve with the poll-based event loop (default where supported);
+    /// `false` = thread-per-connection fallback.
+    event_loop: bool,
+    net: NetStats,
 }
 
 /// Parsed + validated fields of one optimize request (the single source
@@ -273,6 +357,12 @@ struct OptimizeParams {
     /// 0 = adaptive (sized at execution time from in-flight load).
     trial_workers: usize,
     measure_mode: MeasureMode,
+    /// Attach the convergence trace to the response. Like
+    /// `trial_workers`, deliberately absent from [`ResponseKey`]: the
+    /// trace is always computed and cached alongside the response, so
+    /// requests differing only in this flag share one entry (and one
+    /// trial).
+    include_trace: bool,
 }
 
 impl OptimizeParams {
@@ -299,14 +389,34 @@ impl Service {
             backend,
             scheduler: Scheduler::new(DEFAULT_CACHE_CAP),
             conn_workers: default_workers().clamp(2, 32),
+            event_loop: crate::util::net::supported(),
+            net: NetStats::new(),
         }
     }
 
-    /// Size the connection-worker pool (the bound on concurrently served
-    /// connections; further connections wait in the accept queue).
+    /// Size the connection-worker pool. Under the event loop this bounds
+    /// concurrently *executing* requests (open connections are decoupled
+    /// from it); under the threaded fallback it bounds concurrently
+    /// served connections, with further connections waiting in the
+    /// accept queue.
     pub fn with_conn_workers(mut self, workers: usize) -> Service {
         self.conn_workers = workers.max(1);
         self
+    }
+
+    /// Choose the serving transport: `true` = poll-based event loop
+    /// (silently unavailable off-Unix, where the fallback always runs),
+    /// `false` = thread-per-connection fallback. Responses are
+    /// byte-identical either way; only idle-connection scalability
+    /// differs.
+    pub fn with_event_loop(mut self, on: bool) -> Service {
+        self.event_loop = on && crate::util::net::supported();
+        self
+    }
+
+    /// Whether the poll-based event loop transport is active.
+    pub fn event_loop_enabled(&self) -> bool {
+        self.event_loop
     }
 
     /// Bound the cross-request response cache (entries, min 1): beyond
@@ -353,16 +463,23 @@ impl Service {
             }
             "stats" => {
                 let s = &self.scheduler;
+                let net = &self.net;
                 Ok(Value::obj(vec![
                     ("ok", true.into()),
                     ("in_flight", s.in_flight().into()),
                     ("trials_run", (s.trials_run() as usize).into()),
                     ("cache_hits", (s.cache_hits() as usize).into()),
+                    ("cache_misses", (s.cache_misses() as usize).into()),
+                    ("cache_inserts", (s.cache_inserts() as usize).into()),
                     ("cache_evictions", (s.cache_evictions() as usize).into()),
                     ("cached_responses", s.cached_responses().into()),
                     ("cache_cap", s.cache.lock().unwrap().cap.into()),
                     ("team_threads", s.team_threads().into()),
                     ("conn_workers", self.conn_workers.into()),
+                    ("event_loop", self.event_loop.into()),
+                    ("open_connections", net.open_connections.load(Ordering::Relaxed).into()),
+                    ("idle_connections", net.idle_connections.load(Ordering::Relaxed).into()),
+                    ("loop_wakeups", (net.loop_wakeups.load(Ordering::Relaxed) as usize).into()),
                 ]))
             }
             "clear_cache" => {
@@ -406,6 +523,11 @@ impl Service {
                         None => rep_of.push(i),
                     }
                 }
+                // `include_trace` is outside the dedup key (the trace is
+                // computed either way); remember which slots asked for it
+                // before the plans are moved into the representatives.
+                let want_trace: Vec<bool> =
+                    plans.iter().map(|p| p.as_ref().is_some_and(|p| p.include_trace)).collect();
                 // Fan the representative entries across the team; every
                 // representative yields a response for its slot (errors
                 // become error objects, never poison siblings).
@@ -415,23 +537,33 @@ impl Service {
                     .collect();
                 let slot_of: HashMap<usize, usize> =
                     uniques.iter().enumerate().map(|(s, &(i, _))| (i, s)).collect();
-                let unique_responses =
+                let unique_responses: Vec<(Value, Option<Value>)> =
                     parallel_map_owned(uniques, default_workers(), |(i, plan)| {
                         // Contain panics per entry: one panicking trial
                         // must produce an error object in its own slot,
                         // not collapse the sibling responses.
                         std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match plan {
-                            Some(p) => Ok(self.run_optimize(p)),
-                            None => self.handle_request(&reqs[i], depth + 1),
+                            Some(p) => {
+                                let (resp, trace) = self.run_optimize_data(p);
+                                Ok((resp, Some(trace)))
+                            }
+                            None => self.handle_request(&reqs[i], depth + 1).map(|v| (v, None)),
                         }))
                         .unwrap_or_else(|_| Err("internal error handling request".into()))
                         .unwrap_or_else(|e| {
-                            Value::obj(vec![("ok", false.into()), ("error", e.into())])
+                            (Value::obj(vec![("ok", false.into()), ("error", e.into())]), None)
                         })
                     });
                 let responses: Vec<Value> = rep_of
                     .iter()
-                    .map(|rep| unique_responses[slot_of[rep]].clone())
+                    .enumerate()
+                    .map(|(i, rep)| {
+                        let (resp, trace) = &unique_responses[slot_of[rep]];
+                        match trace {
+                            Some(t) if want_trace[i] => with_trace(resp, t),
+                            _ => resp.clone(),
+                        }
+                    })
                     .collect();
                 Ok(Value::obj(vec![
                     ("ok", true.into()),
@@ -494,6 +626,10 @@ impl Service {
                 })?
             }
         };
+        let include_trace = match req.get("include_trace") {
+            None => false,
+            Some(v) => v.as_bool().ok_or("include_trace must be a boolean")?,
+        };
         Ok(OptimizeParams {
             workload,
             workload_id: workload_id.to_string(),
@@ -503,17 +639,23 @@ impl Service {
             seed,
             trial_workers,
             measure_mode,
+            include_trace,
         })
     }
 
     fn handle_optimize(&self, req: &Value) -> Result<Value, String> {
         let p = self.parse_optimize(req)?;
-        Ok(self.run_optimize(p))
+        let include_trace = p.include_trace;
+        let (resp, trace) = self.run_optimize_data(p);
+        Ok(if include_trace { with_trace(&resp, &trace) } else { resp })
     }
 
     /// Execute a parsed + validated optimize request (infallible past
-    /// validation: cache hit or a real trial).
-    fn run_optimize(&self, p: OptimizeParams) -> Value {
+    /// validation: cache hit or a real trial). Returns the base response
+    /// plus the convergence trace — the caller attaches the trace only
+    /// when its request asked for it, but the trace always travels with
+    /// the cache entry so cached hits can answer `include_trace` too.
+    fn run_optimize_data(&self, p: OptimizeParams) -> (Value, Value) {
         // Count this request in-flight from here on: the adaptive sizing
         // below divides the machine by what is actually running.
         let _admission = self.scheduler.admit();
@@ -523,7 +665,7 @@ impl Service {
         let key = p.key();
         if p.measure_mode.deterministic() {
             if let Some(hit) = self.scheduler.cache_lookup(&key) {
-                return hit;
+                return (hit.resp, hit.trace);
             }
         }
 
@@ -553,19 +695,27 @@ impl Service {
             ("evals", r.evals.into()),
             ("search_expense", r.search_expense.into()),
         ]);
+        let trace = Value::Arr(r.trace.iter().map(|&v| Value::Num(v)).collect());
         if p.measure_mode.deterministic() {
-            self.scheduler.cache_store(key, resp.clone());
+            let entry = CachedResponse { resp: resp.clone(), trace: trace.clone() };
+            self.scheduler.cache_store(key, entry);
         }
-        resp
+        (resp, trace)
     }
 
     /// Serve until `stop` is set. Returns the bound local port.
     ///
-    /// Bounded accept loop: connections are queued (capacity 2× the
-    /// connection-worker pool) and served by a fixed pool of persistent
-    /// connection workers; when the queue is full the acceptor simply
-    /// stops draining the TCP backlog — admission control instead of a
-    /// thread per connection.
+    /// Transport is chosen by [`with_event_loop`](Self::with_event_loop):
+    ///
+    /// * **Event loop (default on Unix)** — one readiness-driven thread
+    ///   owns every socket; complete request frames are handed to a
+    ///   fixed pool of connection workers and responses written back
+    ///   nonblockingly. Idle keep-alive connections never occupy a
+    ///   worker.
+    /// * **Threaded fallback** — bounded accept queue (capacity 2× the
+    ///   pool) drained by a fixed pool of persistent connection workers;
+    ///   when the queue is full the acceptor stops draining the TCP
+    ///   backlog — admission control instead of a thread per connection.
     pub fn serve(
         self: Arc<Self>,
         addr: &str,
@@ -575,85 +725,607 @@ impl Service {
         let port = listener.local_addr()?.port();
         listener.set_nonblocking(true)?;
         let svc = self;
-        let handle = std::thread::spawn(move || {
-            let n_workers = svc.conn_workers.max(1);
-            let (tx, rx) = sync_channel::<TcpStream>(2 * n_workers);
-            let rx = Arc::new(Mutex::new(rx));
-            let workers: Vec<_> = (0..n_workers)
-                .map(|_| {
-                    let rx = Arc::clone(&rx);
-                    let svc = svc.clone();
-                    std::thread::spawn(move || loop {
-                        // Guard is a temporary: held while popping only.
-                        let conn = rx.lock().unwrap().recv();
-                        match conn {
-                            Ok(stream) => {
-                                let _ = handle_conn(&svc, stream);
-                            }
-                            Err(_) => break, // acceptor gone: shutdown
-                        }
-                    })
-                })
-                .collect();
+        #[cfg(unix)]
+        if svc.event_loop {
+            let handle = std::thread::spawn(move || event_loop::run(svc, listener, stop));
+            return Ok((port, handle));
+        }
+        let handle = std::thread::spawn(move || serve_threaded(svc, listener, stop));
+        Ok((port, handle))
+    }
+}
 
-            while !stop.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let mut pending = Some(stream);
-                        while let Some(s) = pending.take() {
-                            match tx.try_send(s) {
-                                Ok(()) => {}
-                                Err(TrySendError::Full(s)) => {
-                                    if stop.load(Ordering::Relaxed) {
-                                        break; // shed on shutdown
-                                    }
-                                    std::thread::sleep(std::time::Duration::from_millis(5));
-                                    pending = Some(s);
-                                }
-                                Err(TrySendError::Disconnected(_)) => break,
+/// One response line for transport-level failures.
+fn error_line(msg: &str) -> String {
+    Value::obj(vec![("ok", false.into()), ("error", msg.into())]).to_string_compact()
+}
+
+/// Clone a response object with the convergence trace attached.
+fn with_trace(resp: &Value, trace: &Value) -> Value {
+    match resp {
+        Value::Obj(kv) => {
+            let mut kv = kv.clone();
+            kv.push(("trace".to_string(), trace.clone()));
+            Value::Obj(kv)
+        }
+        other => other.clone(),
+    }
+}
+
+/// Run one request line through the service, containing panics: the
+/// serving pools are fixed-size, so a panic escaping a request would
+/// permanently shrink them — it degrades to an error response instead.
+fn handle_guarded(svc: &Service, line: &str) -> String {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| svc.handle(line)))
+        .unwrap_or_else(|_| error_line("internal error handling request"))
+}
+
+/// The thread-per-connection fallback acceptor (see [`Service::serve`]).
+fn serve_threaded(svc: Arc<Service>, listener: TcpListener, stop: Arc<AtomicBool>) {
+    let n_workers = svc.conn_workers.max(1);
+    let (tx, rx) = sync_channel::<TcpStream>(2 * n_workers);
+    let rx = Arc::new(Mutex::new(rx));
+    let workers: Vec<_> = (0..n_workers)
+        .map(|_| {
+            let rx = Arc::clone(&rx);
+            let svc = svc.clone();
+            std::thread::spawn(move || loop {
+                // Guard is a temporary: held while popping only.
+                let conn = rx.lock().unwrap().recv();
+                match conn {
+                    Ok(stream) => {
+                        svc.net.open_connections.fetch_add(1, Ordering::Relaxed);
+                        let _ = handle_conn(&svc, stream);
+                        svc.net.open_connections.fetch_sub(1, Ordering::Relaxed);
+                    }
+                    Err(_) => break, // acceptor gone: shutdown
+                }
+            })
+        })
+        .collect();
+
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let mut pending = Some(stream);
+                while let Some(s) = pending.take() {
+                    match tx.try_send(s) {
+                        Ok(()) => {}
+                        Err(TrySendError::Full(s)) => {
+                            if stop.load(Ordering::Relaxed) {
+                                break; // shed on shutdown
                             }
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                            pending = Some(s);
                         }
+                        Err(TrySendError::Disconnected(_)) => break,
                     }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(20));
-                    }
-                    Err(_) => break,
                 }
             }
-            drop(tx); // close the queue: workers drain and exit
-            for w in workers {
-                let _ = w.join();
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(20));
             }
-        });
-        Ok((port, handle))
+            Err(_) => break,
+        }
+    }
+    drop(tx); // close the queue: workers drain and exit
+    for w in workers {
+        let _ = w.join();
+    }
+}
+
+/// Outcome of reading one frame off a blocking connection.
+enum Frame {
+    /// A complete newline-terminated line (newline stripped).
+    Line(String),
+    /// EOF, or a non-UTF-8 frame: close the connection cleanly. A
+    /// trailing partial frame at EOF is discarded — its sender is gone
+    /// (mid-request disconnect), matching the event loop.
+    Closed,
+    /// The frame exceeded [`MAX_FRAME`]: report once, then close.
+    Oversize,
+}
+
+/// Read one newline-terminated frame with the [`MAX_FRAME`] size cap
+/// (the threaded transport's framing; the event loop applies the same
+/// rules to its nonblocking buffers).
+fn read_frame(reader: &mut BufReader<TcpStream>, buf: &mut Vec<u8>) -> std::io::Result<Frame> {
+    buf.clear();
+    loop {
+        let chunk = reader.fill_buf()?;
+        if chunk.is_empty() {
+            return Ok(Frame::Closed);
+        }
+        match chunk.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                buf.extend_from_slice(&chunk[..pos]);
+                reader.consume(pos + 1);
+                if buf.len() > MAX_FRAME {
+                    return Ok(Frame::Oversize);
+                }
+                return Ok(match String::from_utf8(std::mem::take(buf)) {
+                    Ok(s) => Frame::Line(s),
+                    Err(_) => Frame::Closed,
+                });
+            }
+            None => {
+                let n = chunk.len();
+                buf.extend_from_slice(chunk);
+                reader.consume(n);
+                if buf.len() > MAX_FRAME {
+                    return Ok(Frame::Oversize);
+                }
+            }
+        }
     }
 }
 
 fn handle_conn(svc: &Service, stream: TcpStream) -> std::io::Result<()> {
     stream.set_read_timeout(Some(std::time::Duration::from_secs(300)))?;
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+    let mut reader = BufReader::new(stream);
+    let mut buf = Vec::new();
+    loop {
+        match read_frame(&mut reader, &mut buf)? {
+            Frame::Closed => return Ok(()),
+            Frame::Oversize => {
+                let resp = error_line(&format!("frame larger than {MAX_FRAME} bytes"));
+                writer.write_all(resp.as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+                return Ok(());
+            }
+            Frame::Line(line) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let resp = handle_guarded(svc, &line);
+                writer.write_all(resp.as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+            }
         }
-        // Connection workers are a fixed pool: a panic escaping here
-        // would permanently shrink it, so any unexpected panic in the
-        // request path degrades to an error response instead.
-        let resp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| svc.handle(&line)))
-            .unwrap_or_else(|_| {
-                Value::obj(vec![
-                    ("ok", false.into()),
-                    ("error", "internal error handling request".into()),
-                ])
-                .to_string_compact()
-            });
-        writer.write_all(resp.as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
     }
-    Ok(())
+}
+
+/// The readiness-driven transport: one thread, all sockets, `poll(2)`.
+///
+/// The loop owns the listener and every connection. Per iteration it
+/// polls (50 ms timeout to observe `stop`), then:
+///
+/// 1. drains the worker outbox (finished responses → per-connection
+///    write buffers, next pending request dispatched),
+/// 2. accepts new connections while under [`MAX_CONNS`],
+/// 3. does nonblocking reads on readable connections, slicing complete
+///    newline frames into per-connection pending queues,
+/// 4. dispatches at most **one** in-flight request per connection to
+///    the connection-worker pool (strict per-connection FIFO — the
+///    ordering contract of the threaded transport), and
+/// 5. flushes write buffers nonblockingly, closing connections that
+///    finished (`closing`/EOF with everything drained).
+///
+/// Workers never touch sockets; the loop never runs requests. The two
+/// meet only at the outbox (a mutex-guarded vec + a [`WakePipe`]), so a
+/// slow trial can never stall reads, and 64 idle keep-alive connections
+/// cost 64 fds — not 64 pinned threads.
+#[cfg(unix)]
+mod event_loop {
+    use std::collections::{BTreeMap, VecDeque};
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Arc, Mutex};
+    use std::time::{Duration, Instant};
+
+    use super::{error_line, handle_guarded, Service, MAX_FRAME};
+    use crate::util::net::{poll, PollFd, WakePipe, POLLIN, POLLOUT};
+    use crate::util::threadpool::WorkerTeam;
+
+    /// Bytes pulled per readiness notification (level-triggered poll
+    /// re-reports leftover data, so one chunk per wakeup keeps the loop
+    /// fair across connections).
+    const READ_CHUNK: usize = 16 * 1024;
+    /// Complete-but-undispatched frames buffered per connection before
+    /// the loop stops reading from it (pipelining backpressure).
+    const MAX_PENDING: usize = 64;
+    /// Unflushed response bytes buffered per connection before the loop
+    /// stops reading from and dispatching for it (write-side
+    /// backpressure: a client that pipelines requests but never reads
+    /// its responses cannot balloon server memory — the threaded path
+    /// gets this for free from its blocking writes).
+    const MAX_WBUF: usize = MAX_FRAME;
+    /// Open-connection cap: past it the loop stops accepting and the
+    /// kernel backlog takes the overflow.
+    const MAX_CONNS: usize = 4096;
+    /// Reap a connection after this long with no socket progress and no
+    /// request in flight — parity with the threaded transport's 300 s
+    /// read timeout. Covers both silently-dead peers (no FIN/RST ever
+    /// arrives) and peers that stopped reading their responses, so
+    /// stale sockets cannot pin fds (or, at [`MAX_CONNS`], wedge the
+    /// acceptor) forever.
+    const IDLE_TIMEOUT: Duration = Duration::from_secs(300);
+    /// Bounded post-stop drain: connections with a request in flight,
+    /// pending frames, or unflushed response bytes get this long to
+    /// finish before the loop closes them — a request that raced the
+    /// shutdown still gets its reply, like the threaded fallback whose
+    /// workers finish their current connection. Bounded so a
+    /// never-reading peer cannot stall shutdown.
+    const SHUTDOWN_DRAIN: Duration = Duration::from_secs(5);
+
+    /// Per-connection state (the event loop's replacement for a pinned
+    /// worker thread's stack).
+    struct Conn {
+        stream: TcpStream,
+        /// Partial-frame accumulation (bytes read, no newline yet).
+        rbuf: Vec<u8>,
+        /// Response bytes not yet accepted by the socket.
+        wbuf: Vec<u8>,
+        wpos: usize,
+        /// Complete frames awaiting dispatch (per-connection FIFO).
+        pending: VecDeque<Vec<u8>>,
+        /// One request is on the worker pool; its response not yet back.
+        busy: bool,
+        /// Close once `wbuf` drains (protocol error or shutdown path).
+        closing: bool,
+        /// Peer sent EOF: finish buffered work, then close.
+        peer_closed: bool,
+        /// Frame exceeded [`MAX_FRAME`]: emit one error (after pending
+        /// responses, preserving order) and close.
+        oversized: bool,
+        /// Last socket progress (bytes read or written, or a response
+        /// queued); drives the [`IDLE_TIMEOUT`] reap.
+        last_activity: Instant,
+    }
+
+    impl Conn {
+        fn new(stream: TcpStream) -> Conn {
+            Conn {
+                stream,
+                rbuf: Vec::new(),
+                wbuf: Vec::new(),
+                wpos: 0,
+                pending: VecDeque::new(),
+                busy: false,
+                closing: false,
+                peer_closed: false,
+                oversized: false,
+                last_activity: Instant::now(),
+            }
+        }
+
+        /// Nothing buffered in either direction and no request running:
+        /// the connection is an idle keep-alive costing one fd.
+        fn idle(&self) -> bool {
+            !self.busy
+                && self.pending.is_empty()
+                && self.rbuf.is_empty()
+                && self.wpos >= self.wbuf.len()
+        }
+
+        fn write_drained(&self) -> bool {
+            self.wpos >= self.wbuf.len()
+        }
+
+        /// Finished: everything owed to the peer has been written.
+        fn done(&self) -> bool {
+            let drained =
+                self.write_drained() && !self.busy && self.pending.is_empty() && !self.oversized;
+            (self.closing && self.write_drained()) || (self.peer_closed && drained)
+        }
+
+        /// Unflushed response bytes awaiting the socket.
+        fn wbuf_backlog(&self) -> usize {
+            self.wbuf.len() - self.wpos
+        }
+
+        fn queue_response(&mut self, resp: &str) {
+            self.wbuf.extend_from_slice(resp.as_bytes());
+            self.wbuf.push(b'\n');
+            self.last_activity = Instant::now();
+        }
+    }
+
+    /// Finished responses travelling worker → loop. Workers push and
+    /// wake; the loop drains under one lock acquisition per iteration.
+    struct Outbox {
+        queue: Mutex<Vec<(u64, String)>>,
+        wake: WakePipe,
+    }
+
+    impl Outbox {
+        fn push(&self, token: u64, resp: String) {
+            self.queue.lock().unwrap().push((token, resp));
+            self.wake.wake();
+        }
+    }
+
+    pub(super) fn run(svc: Arc<Service>, listener: TcpListener, stop: Arc<AtomicBool>) {
+        let pool = WorkerTeam::host_pool(svc.conn_workers.max(1));
+        let outbox = Arc::new(Outbox {
+            queue: Mutex::new(Vec::new()),
+            wake: WakePipe::new().expect("event loop: wake pipe"),
+        });
+        let mut conns: BTreeMap<u64, Conn> = BTreeMap::new();
+        let mut next_token: u64 = 1;
+
+        while !stop.load(Ordering::Relaxed) {
+            // (Re)build the poll set: wake pipe, listener, connections.
+            let accepting = conns.len() < MAX_CONNS;
+            let mut fds = Vec::with_capacity(conns.len() + 2);
+            let mut tokens = Vec::with_capacity(conns.len() + 2);
+            fds.push(PollFd::new(outbox.wake.read_fd(), POLLIN));
+            tokens.push(0u64);
+            if accepting {
+                fds.push(PollFd::new(listener.as_raw_fd(), POLLIN));
+                tokens.push(0);
+            }
+            let conn_start = fds.len();
+            for (tok, c) in &conns {
+                let mut events = 0i16;
+                let readable_wanted = !c.peer_closed
+                    && !c.closing
+                    && !c.oversized
+                    && c.pending.len() < MAX_PENDING
+                    && c.rbuf.len() <= MAX_FRAME
+                    && c.wbuf_backlog() <= MAX_WBUF;
+                if readable_wanted {
+                    events |= POLLIN;
+                }
+                if !c.write_drained() {
+                    events |= POLLOUT;
+                }
+                fds.push(PollFd::new(c.stream.as_raw_fd(), events));
+                tokens.push(*tok);
+            }
+
+            let ready = match poll(&mut fds, 50) {
+                Ok(n) => n,
+                Err(_) => {
+                    // A persistent poll failure (e.g. ENOMEM) must not
+                    // busy-spin the loop: back off for one poll period
+                    // and retry, still observing `stop`.
+                    std::thread::sleep(std::time::Duration::from_millis(50));
+                    continue;
+                }
+            };
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            if ready > 0 {
+                svc.net.loop_wakeups.fetch_add(1, Ordering::Relaxed);
+            }
+
+            // 1. Worker responses. Drain the outbox unconditionally —
+            // it is one uncontended lock when empty, and doing so makes
+            // a missed wake merely a latency blip, never a stall.
+            if fds[0].readable() {
+                outbox.wake.drain();
+            }
+            let finished: Vec<(u64, String)> = std::mem::take(&mut *outbox.queue.lock().unwrap());
+            for (tok, resp) in finished {
+                // The connection may have died while its request ran;
+                // the response is then simply dropped.
+                if let Some(c) = conns.get_mut(&tok) {
+                    c.queue_response(&resp);
+                    c.busy = false;
+                }
+            }
+
+            // 2. New connections.
+            if accepting && fds[conn_start - 1].readable() {
+                while conns.len() < MAX_CONNS {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            if stream.set_nonblocking(true).is_err() {
+                                continue;
+                            }
+                            conns.insert(next_token, Conn::new(stream));
+                            next_token += 1;
+                        }
+                        Err(_) => break, // WouldBlock or transient error
+                    }
+                }
+            }
+
+            // 3. Socket readiness per connection.
+            let mut dead: Vec<u64> = Vec::new();
+            for (i, fd) in fds.iter().enumerate().skip(conn_start) {
+                let tok = tokens[i];
+                let Some(c) = conns.get_mut(&tok) else { continue };
+                if fd.error() {
+                    dead.push(tok);
+                    continue;
+                }
+                if fd.readable() {
+                    if !read_ready(c) {
+                        dead.push(tok);
+                        continue;
+                    }
+                } else if fd.hangup() {
+                    c.peer_closed = true;
+                }
+            }
+            // Remove unrecoverable connections before dispatching, so no
+            // request is handed to workers on behalf of a gone client.
+            for tok in dead.drain(..) {
+                conns.remove(&tok);
+            }
+
+            // 4 + 5. Dispatch pending work, flush writes, reap stale
+            // connections (no progress and nothing running for
+            // IDLE_TIMEOUT: dead peers and never-reading peers alike).
+            for (tok, c) in conns.iter_mut() {
+                dispatch(c, *tok, &svc, &pool, &outbox);
+                let stale = !c.busy && c.last_activity.elapsed() >= IDLE_TIMEOUT;
+                if !flush(c) || c.done() || stale {
+                    dead.push(*tok);
+                }
+            }
+            for tok in dead {
+                conns.remove(&tok);
+            }
+
+            // Transport gauges for the `stats` op.
+            svc.net.open_connections.store(conns.len(), Ordering::Relaxed);
+            let idle = conns.values().filter(|c| c.idle()).count();
+            svc.net.idle_connections.store(idle, Ordering::Relaxed);
+        }
+
+        // Post-stop drain (bounded): deliver what is owed — responses
+        // for requests already running or queued, unflushed bytes —
+        // then close. Idle keep-alives are shed immediately.
+        let deadline = Instant::now() + SHUTDOWN_DRAIN;
+        while Instant::now() < deadline {
+            conns.retain(|_, c| c.busy || !c.pending.is_empty() || c.wbuf_backlog() > 0);
+            if conns.is_empty() {
+                break;
+            }
+            let mut fds = Vec::with_capacity(conns.len() + 1);
+            fds.push(PollFd::new(outbox.wake.read_fd(), POLLIN));
+            for c in conns.values() {
+                let events = if c.wbuf_backlog() > 0 { POLLOUT } else { 0 };
+                fds.push(PollFd::new(c.stream.as_raw_fd(), events));
+            }
+            if poll(&mut fds, 50).is_err() {
+                std::thread::sleep(std::time::Duration::from_millis(50));
+            }
+            if fds[0].readable() {
+                outbox.wake.drain();
+            }
+            let finished: Vec<(u64, String)> = std::mem::take(&mut *outbox.queue.lock().unwrap());
+            for (tok, resp) in finished {
+                if let Some(c) = conns.get_mut(&tok) {
+                    c.queue_response(&resp);
+                    c.busy = false;
+                }
+            }
+            let mut dead: Vec<u64> = Vec::new();
+            for (tok, c) in conns.iter_mut() {
+                dispatch(c, *tok, &svc, &pool, &outbox);
+                if !flush(c) {
+                    dead.push(*tok);
+                }
+            }
+            for tok in dead {
+                conns.remove(&tok);
+            }
+        }
+
+        drop(conns); // close any socket still unfinished at the deadline
+        drop(pool); // join workers (in-flight requests finish first)
+        svc.net.open_connections.store(0, Ordering::Relaxed);
+        svc.net.idle_connections.store(0, Ordering::Relaxed);
+    }
+
+    /// Pull readable bytes and slice complete frames into `pending`.
+    /// Returns `false` when the connection is unrecoverable.
+    fn read_ready(c: &mut Conn) -> bool {
+        let mut chunk = [0u8; READ_CHUNK];
+        loop {
+            match c.stream.read(&mut chunk) {
+                Ok(0) => {
+                    c.peer_closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    c.rbuf.extend_from_slice(&chunk[..n]);
+                    c.last_activity = Instant::now();
+                    extract_frames(c);
+                    // One chunk per readiness keeps the loop fair;
+                    // level-triggered poll re-reports leftovers.
+                    break;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+        true
+    }
+
+    /// Move complete newline-terminated frames from `rbuf` to `pending`;
+    /// flag the connection oversized when a frame exceeds [`MAX_FRAME`] —
+    /// terminated or not — matching the threaded transport's
+    /// `read_frame`, so both reject exactly the same inputs.
+    fn extract_frames(c: &mut Conn) {
+        let mut start = 0;
+        while let Some(pos) = c.rbuf[start..].iter().position(|&b| b == b'\n') {
+            if pos > MAX_FRAME {
+                c.oversized = true;
+                break;
+            }
+            c.pending.push_back(c.rbuf[start..start + pos].to_vec());
+            start += pos + 1;
+        }
+        if start > 0 {
+            c.rbuf.drain(..start);
+        }
+        if c.oversized || c.rbuf.len() > MAX_FRAME {
+            c.oversized = true;
+            c.rbuf.clear();
+        }
+    }
+
+    /// Hand the next pending frame (if any, and none is in flight) to
+    /// the worker pool; emit the deferred oversize error once the queue
+    /// drains so responses keep request order.
+    fn dispatch(
+        c: &mut Conn,
+        token: u64,
+        svc: &Arc<Service>,
+        pool: &WorkerTeam,
+        outbox: &Arc<Outbox>,
+    ) {
+        while !c.busy && !c.closing && c.wbuf_backlog() <= MAX_WBUF {
+            let Some(raw) = c.pending.pop_front() else {
+                if c.oversized {
+                    c.queue_response(&error_line(&format!("frame larger than {MAX_FRAME} bytes")));
+                    c.oversized = false;
+                    c.closing = true;
+                }
+                break;
+            };
+            let Ok(line) = String::from_utf8(raw) else {
+                // Non-UTF-8 frame: close cleanly (threaded path parity).
+                c.pending.clear();
+                c.closing = true;
+                break;
+            };
+            if line.trim().is_empty() {
+                continue;
+            }
+            c.busy = true;
+            let svc = Arc::clone(svc);
+            let outbox = Arc::clone(outbox);
+            pool.execute(move || {
+                let resp = handle_guarded(&svc, &line);
+                outbox.push(token, resp);
+            });
+        }
+    }
+
+    /// Nonblocking write of whatever the socket will take. Returns
+    /// `false` when the connection is unrecoverable.
+    fn flush(c: &mut Conn) -> bool {
+        while c.wpos < c.wbuf.len() {
+            match c.stream.write(&c.wbuf[c.wpos..]) {
+                Ok(0) => return false,
+                Ok(n) => {
+                    c.wpos += n;
+                    c.last_activity = Instant::now();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+        if c.wpos >= c.wbuf.len() {
+            c.wbuf.clear();
+            c.wpos = 0;
+        }
+        true
+    }
 }
 
 #[cfg(test)]
@@ -812,6 +1484,76 @@ mod tests {
         // rerun repopulated one entry.
         let again = svc.handle(r#"{"op":"clear_cache"}"#);
         assert_eq!(parse(&again).unwrap().get("cleared").unwrap().as_usize(), Some(1));
+    }
+
+    /// `include_trace` returns the ledger's convergence curve — on the
+    /// cold run, on a cached hit, and even when the entry was cached by
+    /// a request that never asked for the trace. Cached and cold traces
+    /// are byte-identical.
+    #[test]
+    fn include_trace_returns_the_convergence_trace_cold_and_cached() {
+        let svc = service();
+        let traced = r#"{"op":"optimize","workload":"kmeans:buzz","target":"cost","method":"rs","budget":9,"seed":3,"measure_mode":"mean","include_trace":true}"#;
+        let plain = r#"{"op":"optimize","workload":"kmeans:buzz","target":"cost","method":"rs","budget":9,"seed":3,"measure_mode":"mean"}"#;
+
+        let cold = svc.handle(traced);
+        let v = parse(&cold).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true), "{cold}");
+        let trace = v.get("trace").unwrap().as_arr().unwrap();
+        assert_eq!(trace.len(), 9, "one best-so-far point per evaluation");
+        let vals: Vec<f64> = trace.iter().map(|t| t.as_f64().unwrap()).collect();
+        assert!(vals.windows(2).all(|w| w[1] <= w[0]), "trace must be non-increasing: {vals:?}");
+        assert!(vals.iter().all(|x| x.is_finite() && *x > 0.0));
+
+        // Cached hit: byte-identical, including the trace.
+        let cached = svc.handle(traced);
+        assert_eq!(cold, cached, "cached trace must equal the cold trace");
+        assert_eq!(svc.scheduler().cache_hits(), 1);
+
+        // The plain response has no trace field but shares the entry.
+        let trials = svc.scheduler().trials_run();
+        let plain_resp = svc.handle(plain);
+        assert!(parse(&plain_resp).unwrap().get("trace").is_none(), "{plain_resp}");
+        assert_eq!(svc.scheduler().trials_run(), trials, "same key: no new trial");
+
+        // A cache entry stored *without* the flag still serves the
+        // trace when a later request asks for it.
+        let svc2 = service();
+        svc2.handle(plain);
+        let trials2 = svc2.scheduler().trials_run();
+        let traced_from_cache = svc2.handle(traced);
+        assert_eq!(svc2.scheduler().trials_run(), trials2, "trace served from cache");
+        assert_eq!(svc2.scheduler().cache_hits(), 1);
+        assert_eq!(traced_from_cache, cold, "trace must not depend on who populated the cache");
+
+        // SingleDraw (uncached) requests also carry a trace on demand.
+        let sd = svc.handle(
+            r#"{"op":"optimize","workload":"kmeans:buzz","target":"cost","method":"rs","budget":5,"seed":1,"include_trace":true}"#,
+        );
+        let sd_trace = parse(&sd).unwrap().get("trace").unwrap().as_arr().unwrap().len();
+        assert_eq!(sd_trace, 5);
+    }
+
+    /// Batch slots control `include_trace` individually while still
+    /// deduping onto one trial per response key.
+    #[test]
+    fn batch_slots_attach_traces_per_request() {
+        let det = r#"{"op":"optimize","workload":"kmeans:buzz","method":"rs","budget":7,"seed":1,"measure_mode":"mean"}"#;
+        let det_traced = r#"{"op":"optimize","workload":"kmeans:buzz","method":"rs","budget":7,"seed":1,"measure_mode":"mean","include_trace":true}"#;
+        let svc = service();
+        let batch = format!(r#"{{"op":"batch","requests":[{det},{det_traced},{det}]}}"#);
+        let v = parse(&svc.handle(&batch)).unwrap();
+        let responses = v.get("responses").unwrap().as_arr().unwrap();
+        assert_eq!(svc.scheduler().trials_run(), 1, "one key, one trial");
+        assert!(responses[0].get("trace").is_none());
+        assert!(responses[2].get("trace").is_none());
+        let t = responses[1].get("trace").unwrap().as_arr().unwrap();
+        assert_eq!(t.len(), 7);
+        // Slots 0 and 2 are identical; slot 1 is slot 0 plus the trace.
+        let base = responses[0].to_string_compact();
+        let traced = responses[1].to_string_compact();
+        assert_eq!(base, responses[2].to_string_compact());
+        assert!(traced.starts_with(base.trim_end_matches('}')), "{traced} vs {base}");
     }
 
     /// Identical deterministic entries inside one batch run exactly one
@@ -1010,18 +1752,45 @@ mod tests {
     #[test]
     fn tcp_end_to_end() {
         use std::io::{BufRead, BufReader, Write};
-        let svc = Arc::new(service());
-        let stop = Arc::new(AtomicBool::new(false));
-        let (port, handle) = svc.serve("127.0.0.1:0", stop.clone()).unwrap();
-        {
-            let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
-            conn.write_all(b"{\"op\":\"ping\"}\n").unwrap();
-            let mut line = String::new();
-            BufReader::new(conn.try_clone().unwrap()).read_line(&mut line).unwrap();
-            assert!(line.contains("pong"), "{line}");
+        // Default transport (event loop where supported) and the
+        // threaded fallback both answer over a real socket.
+        for event_loop in [true, false] {
+            let svc = Arc::new(service().with_event_loop(event_loop));
+            let stop = Arc::new(AtomicBool::new(false));
+            let (port, handle) = svc.serve("127.0.0.1:0", stop.clone()).unwrap();
+            {
+                let mut conn = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+                conn.set_read_timeout(Some(std::time::Duration::from_secs(30))).unwrap();
+                conn.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+                let mut line = String::new();
+                BufReader::new(conn.try_clone().unwrap()).read_line(&mut line).unwrap();
+                assert!(line.contains("pong"), "event_loop={event_loop}: {line}");
+            }
+            stop.store(true, Ordering::Relaxed);
+            handle.join().unwrap();
         }
-        stop.store(true, Ordering::Relaxed);
-        handle.join().unwrap();
+    }
+
+    /// The stats op surfaces the transport fields on both transports.
+    #[test]
+    fn stats_reports_transport_fields() {
+        let svc = service();
+        let v = parse(&svc.handle(r#"{"op":"stats"}"#)).unwrap();
+        assert_eq!(v.get("event_loop").unwrap().as_bool(), Some(crate::util::net::supported()));
+        let fields = [
+            "open_connections",
+            "idle_connections",
+            "loop_wakeups",
+            "cache_misses",
+            "cache_inserts",
+        ];
+        for field in fields {
+            assert!(v.get(field).and_then(Value::as_usize).is_some(), "missing {field}");
+        }
+        let off = service().with_event_loop(false);
+        assert!(!off.event_loop_enabled());
+        let v = parse(&off.handle(r#"{"op":"stats"}"#)).unwrap();
+        assert_eq!(v.get("event_loop").unwrap().as_bool(), Some(false));
     }
 
     /// More concurrent connections than connection workers: the bounded
@@ -1029,7 +1798,7 @@ mod tests {
     #[test]
     fn bounded_conn_pool_serves_more_clients_than_workers() {
         use std::io::{BufRead, BufReader, Write};
-        let svc = Arc::new(service().with_conn_workers(2));
+        let svc = Arc::new(service().with_conn_workers(2).with_event_loop(false));
         let stop = Arc::new(AtomicBool::new(false));
         let (port, handle) = svc.clone().serve("127.0.0.1:0", stop.clone()).unwrap();
         std::thread::scope(|scope| {

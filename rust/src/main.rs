@@ -410,6 +410,12 @@ fn cmd_serve(args: &[String]) -> i32 {
     let c = Command::new("serve", "TCP optimization service (line-delimited JSON)")
         .opt("addr", "127.0.0.1:7077", "bind address")
         .opt("conn-workers", "0", "connection worker pool size (0 = auto)")
+        .opt(
+            "event-loop",
+            "auto",
+            "transport: on (poll-based readiness loop) | off (thread per connection) | auto",
+        )
+        .opt("cache-cap", "0", "response cache entries (0 = default)")
         .opt("dataset", "", "offline dataset CSV (empty = regenerate)")
         .flag("native", "use native surrogates");
     let a = parse_or_exit(c, args);
@@ -421,11 +427,28 @@ fn cmd_serve(args: &[String]) -> i32 {
     if conn_workers > 0 {
         svc = svc.with_conn_workers(conn_workers);
     }
+    let cache_cap = a.usize("cache-cap").unwrap_or_else(|e| fail(&e));
+    if cache_cap > 0 {
+        svc = svc.with_cache_cap(cache_cap);
+    }
+    let mode = a.choice("event-loop", &["on", "off", "auto"]).unwrap_or_else(|e| fail(&e));
+    match mode.as_str() {
+        "on" => {
+            if !multicloud::util::net::supported() {
+                fail("--event-loop on: not supported on this platform (use off or auto)");
+            }
+            svc = svc.with_event_loop(true);
+        }
+        "off" => svc = svc.with_event_loop(false),
+        _ => {} // auto: event loop where supported
+    }
     let svc = Arc::new(svc);
     let stop = Arc::new(AtomicBool::new(false));
+    let transport =
+        if svc.event_loop_enabled() { "poll event loop" } else { "thread per connection" };
     let (port, handle) = svc.serve(a.get("addr"), stop).unwrap_or_else(|e| fail(&e.to_string()));
     println!(
-        "listening on port {port} (line-delimited JSON; op: optimize | batch | list_workloads | list_methods | stats | ping)"
+        "listening on port {port} ({transport}; line-delimited JSON; op: optimize | batch | list_workloads | list_methods | stats | clear_cache | ping)"
     );
     handle.join().ok();
     0

@@ -141,6 +141,16 @@ impl Args {
         self.get(name).parse().map_err(|_| format!("--{name} must be a number"))
     }
 
+    /// Value of an enum-like option, validated against its allowed set.
+    pub fn choice(&self, name: &str, allowed: &[&str]) -> Result<String, String> {
+        let v = self.get(name);
+        if allowed.contains(&v) {
+            Ok(v.to_string())
+        } else {
+            Err(format!("--{name} must be one of: {}", allowed.join(" | ")))
+        }
+    }
+
     /// Comma-separated list.
     pub fn list(&self, name: &str) -> Vec<String> {
         let raw = self.get(name);
@@ -210,5 +220,17 @@ mod tests {
     #[test]
     fn flag_with_value_rejected() {
         assert!(cmd().parse(&s(&["--method", "rs", "--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn choice_validates_against_the_allowed_set() {
+        let c = Command::new("serve", "x").opt("event-loop", "auto", "transport");
+        let a = c.parse(&s(&[])).unwrap();
+        assert_eq!(a.choice("event-loop", &["on", "off", "auto"]).unwrap(), "auto");
+        let a = c.parse(&s(&["--event-loop", "off"])).unwrap();
+        assert_eq!(a.choice("event-loop", &["on", "off", "auto"]).unwrap(), "off");
+        let a = c.parse(&s(&["--event-loop=warp"])).unwrap();
+        let e = a.choice("event-loop", &["on", "off", "auto"]).unwrap_err();
+        assert!(e.contains("on | off | auto"), "{e}");
     }
 }

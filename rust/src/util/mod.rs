@@ -1,11 +1,13 @@
 //! Shared substrates: deterministic RNG, statistics, JSON/CSV codecs,
-//! a work-queue thread pool and CLI parsing. These stand in for the crates
-//! (serde, rayon, clap, ...) that are unavailable in the offline build
-//! environment — see DESIGN.md §Substitutions.
+//! a work-queue thread pool, poll(2) readiness primitives and CLI
+//! parsing. These stand in for the crates (serde, rayon, clap, mio, ...)
+//! that are unavailable in the offline build environment — see DESIGN.md
+//! §Substitutions.
 
 pub mod cli;
 pub mod csv;
 pub mod json;
+pub mod net;
 pub mod rng;
 pub mod stats;
 pub mod threadpool;

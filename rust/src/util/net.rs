@@ -1,0 +1,259 @@
+//! Readiness primitives for the TCP service's event loop (substrate:
+//! no mio/tokio offline).
+//!
+//! Thin safe wrappers over raw `extern "C"` libc calls — `poll(2)` for
+//! readiness multiplexing and `pipe(2)`/`fcntl(2)` for a nonblocking
+//! self-wake channel — so one thread can own every connection socket and
+//! sleep until *something* (a readable socket, a writable socket, or a
+//! worker finishing a response) needs it. Zero new crates: the only
+//! platform surface used is the stable POSIX ABI, declared inline.
+//!
+//! Only compiled on Unix. [`supported`] reports availability at runtime
+//! so callers (the service's `--event-loop auto` switch) can fall back
+//! to thread-per-connection elsewhere.
+
+/// Whether the poll-based event loop can run on this platform.
+pub fn supported() -> bool {
+    cfg!(unix)
+}
+
+#[cfg(unix)]
+pub use imp::{poll, PollFd, WakePipe, POLLERR, POLLHUP, POLLIN, POLLNVAL, POLLOUT};
+
+#[cfg(unix)]
+mod imp {
+    use std::io;
+    use std::os::raw::{c_int, c_void};
+    use std::os::unix::io::RawFd;
+
+    /// Readiness bits (identical values across the Unixes we target).
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+    pub const POLLNVAL: i16 = 0x020;
+
+    const F_GETFL: c_int = 3;
+    const F_SETFL: c_int = 4;
+    #[cfg(any(target_os = "linux", target_os = "android"))]
+    const O_NONBLOCK: c_int = 0o4000;
+    #[cfg(not(any(target_os = "linux", target_os = "android")))]
+    const O_NONBLOCK: c_int = 0x0004;
+
+    #[cfg(any(target_os = "linux", target_os = "android"))]
+    type NfdsT = std::os::raw::c_ulong;
+    #[cfg(not(any(target_os = "linux", target_os = "android")))]
+    type NfdsT = std::os::raw::c_uint;
+
+    /// One entry of a `poll(2)` set. `#[repr(C)]`-identical to the libc
+    /// `struct pollfd`, so a `&mut [PollFd]` is passed straight through.
+    #[repr(C)]
+    #[derive(Clone, Copy, Debug)]
+    pub struct PollFd {
+        pub fd: RawFd,
+        /// Requested readiness ([`POLLIN`] | [`POLLOUT`]); error
+        /// conditions ([`POLLERR`]/[`POLLHUP`]/[`POLLNVAL`]) are always
+        /// reported regardless.
+        pub events: i16,
+        /// Readiness reported by the last [`poll`] call.
+        pub revents: i16,
+    }
+
+    impl PollFd {
+        pub fn new(fd: RawFd, events: i16) -> PollFd {
+            PollFd { fd, events, revents: 0 }
+        }
+
+        pub fn readable(&self) -> bool {
+            self.revents & POLLIN != 0
+        }
+
+        pub fn writable(&self) -> bool {
+            self.revents & POLLOUT != 0
+        }
+
+        pub fn hangup(&self) -> bool {
+            self.revents & POLLHUP != 0
+        }
+
+        pub fn error(&self) -> bool {
+            self.revents & (POLLERR | POLLNVAL) != 0
+        }
+    }
+
+    /// The raw POSIX surface, declared inline (no libc crate offline).
+    mod ffi {
+        use super::{c_int, c_void, NfdsT, PollFd};
+        extern "C" {
+            pub fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: c_int) -> c_int;
+            pub fn pipe(fds: *mut c_int) -> c_int;
+            pub fn fcntl(fd: c_int, cmd: c_int, arg: c_int) -> c_int;
+            pub fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+            pub fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+            pub fn close(fd: c_int) -> c_int;
+        }
+    }
+
+    /// Block until any entry is ready or `timeout_ms` elapses (-1 =
+    /// forever). Returns how many entries have nonzero `revents`;
+    /// retries transparently on `EINTR`.
+    pub fn poll(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+        loop {
+            let n = unsafe { ffi::poll(fds.as_mut_ptr(), fds.len() as NfdsT, timeout_ms) };
+            if n >= 0 {
+                return Ok(n as usize);
+            }
+            let e = io::Error::last_os_error();
+            if e.kind() != io::ErrorKind::Interrupted {
+                return Err(e);
+            }
+        }
+    }
+
+    fn set_nonblocking(fd: RawFd) -> io::Result<()> {
+        let flags = unsafe { ffi::fcntl(fd, F_GETFL, 0) };
+        if flags < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        if unsafe { ffi::fcntl(fd, F_SETFL, flags | O_NONBLOCK) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    /// Self-wake channel for the event loop: worker threads call
+    /// [`wake`](WakePipe::wake) after depositing a response, making the
+    /// loop's `poll` return immediately instead of waiting out its
+    /// timeout. Both ends are nonblocking — a full pipe means a wake is
+    /// already pending, so dropping the byte is correct.
+    pub struct WakePipe {
+        read_fd: RawFd,
+        write_fd: RawFd,
+    }
+
+    impl WakePipe {
+        pub fn new() -> io::Result<WakePipe> {
+            let mut fds: [c_int; 2] = [0; 2];
+            if unsafe { ffi::pipe(fds.as_mut_ptr()) } != 0 {
+                return Err(io::Error::last_os_error());
+            }
+            let pipe = WakePipe { read_fd: fds[0], write_fd: fds[1] };
+            set_nonblocking(pipe.read_fd)?;
+            set_nonblocking(pipe.write_fd)?;
+            Ok(pipe)
+        }
+
+        /// The fd to include (with [`POLLIN`]) in the loop's poll set.
+        pub fn read_fd(&self) -> RawFd {
+            self.read_fd
+        }
+
+        /// Nudge the poller. Callable from any thread; never blocks.
+        pub fn wake(&self) {
+            let byte = [1u8];
+            let _ = unsafe { ffi::write(self.write_fd, byte.as_ptr() as *const c_void, 1) };
+        }
+
+        /// Consume pending wake bytes so the next `poll` sleeps again.
+        pub fn drain(&self) {
+            let mut buf = [0u8; 64];
+            loop {
+                let n =
+                    unsafe { ffi::read(self.read_fd, buf.as_mut_ptr() as *mut c_void, buf.len()) };
+                if n < buf.len() as isize {
+                    break;
+                }
+            }
+        }
+    }
+
+    impl Drop for WakePipe {
+        fn drop(&mut self) {
+            unsafe {
+                ffi::close(self.read_fd);
+                ffi::close(self.write_fd);
+            }
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+        use std::sync::Arc;
+
+        #[test]
+        fn wake_makes_pipe_readable_and_drain_clears_it() {
+            let pipe = WakePipe::new().unwrap();
+            let mut fds = [PollFd::new(pipe.read_fd(), POLLIN)];
+            // Nothing pending: poll times out with zero ready entries.
+            assert_eq!(poll(&mut fds, 0).unwrap(), 0);
+            assert!(!fds[0].readable());
+
+            pipe.wake();
+            pipe.wake(); // coalesced wakes are fine
+            let mut fds = [PollFd::new(pipe.read_fd(), POLLIN)];
+            assert_eq!(poll(&mut fds, 1000).unwrap(), 1);
+            assert!(fds[0].readable());
+
+            pipe.drain();
+            let mut fds = [PollFd::new(pipe.read_fd(), POLLIN)];
+            assert_eq!(poll(&mut fds, 0).unwrap(), 0);
+        }
+
+        #[test]
+        fn wake_from_another_thread_unblocks_a_sleeping_poll() {
+            let pipe = Arc::new(WakePipe::new().unwrap());
+            let waker = Arc::clone(&pipe);
+            let t = std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                waker.wake();
+            });
+            let mut fds = [PollFd::new(pipe.read_fd(), POLLIN)];
+            let started = std::time::Instant::now();
+            // 10 s timeout: the wake, not the timeout, must end the wait.
+            assert_eq!(poll(&mut fds, 10_000).unwrap(), 1);
+            assert!(started.elapsed() < std::time::Duration::from_secs(5));
+            t.join().unwrap();
+        }
+
+        #[test]
+        fn wake_never_blocks_even_when_the_pipe_is_full() {
+            let pipe = WakePipe::new().unwrap();
+            // A pipe holds ~64 KiB; far more wakes must all return.
+            for _ in 0..100_000 {
+                pipe.wake();
+            }
+            pipe.drain();
+            let mut fds = [PollFd::new(pipe.read_fd(), POLLIN)];
+            assert_eq!(poll(&mut fds, 0).unwrap(), 0, "drain must empty the pipe");
+        }
+
+        #[test]
+        fn poll_reports_readiness_on_sockets() {
+            use std::io::Write;
+            use std::os::unix::io::AsRawFd;
+            let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            let port = listener.local_addr().unwrap().port();
+            let mut client = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+            let (server, _) = listener.accept().unwrap();
+
+            // Nothing sent yet: server side is not readable.
+            let mut fds = [PollFd::new(server.as_raw_fd(), POLLIN | POLLOUT)];
+            assert!(poll(&mut fds, 0).unwrap() >= 1, "fresh socket should be writable");
+            assert!(fds[0].writable());
+            assert!(!fds[0].readable());
+
+            client.write_all(b"x").unwrap();
+            client.flush().unwrap();
+            let mut fds = [PollFd::new(server.as_raw_fd(), POLLIN)];
+            assert_eq!(poll(&mut fds, 2000).unwrap(), 1);
+            assert!(fds[0].readable());
+
+            // Peer close surfaces as readable (read returns 0) and/or HUP.
+            drop(client);
+            let mut fds = [PollFd::new(server.as_raw_fd(), POLLIN)];
+            assert_eq!(poll(&mut fds, 2000).unwrap(), 1);
+            assert!(fds[0].readable() || fds[0].hangup());
+        }
+    }
+}

@@ -100,6 +100,22 @@ pub struct WorkerTeam {
 impl WorkerTeam {
     /// Spawn a team of `threads` persistent workers (0 is clamped to 1).
     pub fn new(threads: usize) -> WorkerTeam {
+        WorkerTeam::spawn(threads, true)
+    }
+
+    /// A team whose threads are *not* flagged as team threads: a batch
+    /// started from one of its jobs fans out on the [`global_team`]
+    /// normally instead of running inline. For request-hosting pools
+    /// (the TCP service's connection workers) whose jobs contain nested
+    /// compute fan-outs of their own — the hosting pool blocks, the
+    /// compute team works, and the two sets of threads never wait on
+    /// each other's queues, so the inline-nesting deadlock guard does
+    /// not apply.
+    pub fn host_pool(threads: usize) -> WorkerTeam {
+        WorkerTeam::spawn(threads, false)
+    }
+
+    fn spawn(threads: usize, team_flag: bool) -> WorkerTeam {
         let threads = threads.max(1);
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
@@ -107,7 +123,7 @@ impl WorkerTeam {
             .map(|_| {
                 let rx = Arc::clone(&rx);
                 std::thread::spawn(move || {
-                    ON_TEAM_THREAD.with(|f| f.set(true));
+                    ON_TEAM_THREAD.with(|f| f.set(team_flag));
                     loop {
                         // The receiver guard is a temporary: held while
                         // popping, released before the job runs.
@@ -121,6 +137,21 @@ impl WorkerTeam {
             })
             .collect();
         WorkerTeam { tx: Mutex::new(Some(tx)), handles: Mutex::new(handles), threads }
+    }
+
+    /// Submit one detached fire-and-forget job: it runs on some worker
+    /// as soon as one is free, and `execute` returns immediately. This
+    /// is the event-loop handoff — the loop thread deposits a parsed
+    /// request and goes straight back to `poll`. A panicking job is
+    /// caught and discarded (it can neither kill its worker nor
+    /// propagate anywhere — detached jobs have no caller to resume on),
+    /// so callers needing failure signalling must catch inside the job.
+    /// During shutdown (channel closed) the job runs inline instead of
+    /// being lost.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.submit(Box::new(move || {
+            let _ = catch_unwind(AssertUnwindSafe(job));
+        }));
     }
 
     /// Worker threads in the team.
@@ -586,6 +617,49 @@ mod tests {
                 h.join().unwrap();
             }
         });
+    }
+
+    #[test]
+    fn execute_runs_detached_jobs() {
+        let pool = WorkerTeam::host_pool(2);
+        let (tx, rx) = std::sync::mpsc::channel::<usize>();
+        for i in 0..10 {
+            let tx = tx.clone();
+            pool.execute(move || tx.send(i).unwrap());
+        }
+        let mut got: Vec<usize> = (0..10)
+            .map(|_| rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap())
+            .collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn execute_survives_a_panicking_job() {
+        let pool = WorkerTeam::host_pool(1);
+        let (tx, rx) = std::sync::mpsc::channel::<&'static str>();
+        pool.execute(|| panic!("detached boom"));
+        let tx2 = tx.clone();
+        pool.execute(move || tx2.send("alive").unwrap());
+        // The single worker must survive the panic and run the next job.
+        assert_eq!(rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap(), "alive");
+    }
+
+    /// Host-pool threads are not team threads: a nested batch started
+    /// from a hosted job fans out on the global team (and completes)
+    /// instead of tripping the run-inline rule.
+    #[test]
+    fn host_pool_jobs_fan_nested_batches_onto_the_global_team() {
+        let pool = WorkerTeam::host_pool(2);
+        let (tx, rx) = std::sync::mpsc::channel::<(bool, Vec<usize>)>();
+        pool.execute(move || {
+            let flagged = on_team_thread();
+            let out = parallel_map_owned((0..50).collect::<Vec<usize>>(), 4, |x| x * 2);
+            tx.send((flagged, out)).unwrap();
+        });
+        let (flagged, out) = rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+        assert!(!flagged, "host-pool threads must not be flagged as team threads");
+        assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
     }
 
     #[test]
