@@ -11,10 +11,15 @@
 //!   vs. the old spawn-scoped-threads-per-sweep path
 //!   (`parallel_map_owned_spawn`), with a bit-identity check;
 //! * **connection scaling**: TCP round-trip latency of one active
-//!   client while 0 / 64 / 256 idle keep-alive connections are parked
-//!   on the poll event loop (4 connection workers) — the readiness
-//!   design's whole point is that this column stays flat — plus the
-//!   thread-per-connection fallback at 0 idle for reference.
+//!   client while an idle keep-alive herd is parked on the server —
+//!   epoll swept to 100k sockets (interest is registered once, so each
+//!   wakeup costs O(ready events) and the column should stay flat),
+//!   the poll fallback to 10k (every wakeup rescans the whole fd set,
+//!   so it degrades linearly), and the thread-per-connection fallback
+//!   at 0 idle for reference. Herds are clamped to `RLIMIT_NOFILE`
+//!   (raised toward the hard limit first — two fds per in-process
+//!   connection), and client destinations rotate across `127.0.0.x`
+//!   to dodge the ~28k ephemeral-port ceiling per address pair.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -23,7 +28,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use multicloud::benchkit::{black_box, Suite};
-use multicloud::coordinator::service::Service;
+use multicloud::coordinator::service::{Service, Transport};
 use multicloud::dataset::OfflineDataset;
 use multicloud::surrogate::NativeBackend;
 use multicloud::util::net;
@@ -118,25 +123,61 @@ fn main() {
     //
     // Round-trip a cached deterministic request (so the measurement is
     // transport, not trial, time) while N idle keep-alive connections
-    // are parked on the server. Under the event loop the idle herd costs
-    // fds, not workers, so latency should stay flat across the sweep.
+    // are parked on the server. Registered interest is the point:
+    // epoll's column should stay flat to 100k parked sockets while the
+    // poll fallback, which rescans every fd per wakeup, degrades
+    // linearly — that crossover is the curve BENCH_service.json exists
+    // to pin.
+    //
+    // Each in-process connection burns two fds (client + server end),
+    // so herds are clamped to the soft RLIMIT_NOFILE after trying to
+    // raise it toward the hard limit. Clamped duplicates collapse to a
+    // single measurement and the label reports the real herd size.
+    #[cfg(unix)]
+    let herd_cap: usize = {
+        let (soft, hard) = net::raise_nofile_limit(210_000).unwrap_or((4096, 4096));
+        let cap = (soft.saturating_sub(128) / 2).min(100_000) as usize;
+        println!("\nfd budget: soft {soft}, hard {hard} -> idle-herd cap {cap}");
+        cap
+    };
+    #[cfg(not(unix))]
+    let herd_cap: usize = 256;
+
     let active_req = br#"{"op":"optimize","workload":"kmeans:buzz","target":"cost","method":"rs","budget":6,"seed":1,"measure_mode":"mean"}"#;
-    let rtt = |suite: &mut Suite, label: &str, event_loop: bool, idle_conns: usize| {
+    let rtt = |suite: &mut Suite, label: &str, transport: Transport, idle_conns: usize| {
         let svc = Arc::new(
             Service::new(Arc::clone(&ds), Arc::new(NativeBackend))
                 .with_conn_workers(4)
-                .with_event_loop(event_loop),
+                .with_transport(transport)
+                .with_max_conns(idle_conns + 32),
         );
         let stop = Arc::new(AtomicBool::new(false));
-        let (port, handle) =
-            Arc::clone(&svc).serve("127.0.0.1:0", Arc::clone(&stop)).expect("bind");
-        let connect = || {
-            let c = TcpStream::connect(("127.0.0.1", port)).expect("connect");
-            c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
-            c
+        // Bind the wildcard address so rotated loopback destinations
+        // (127.0.0.2, ...) all land on the same listener.
+        let (port, handle) = Arc::clone(&svc).serve("0.0.0.0:0", Arc::clone(&stop)).expect("bind");
+        let connect = |i: usize| -> TcpStream {
+            // A fresh destination address every 20k connections keeps
+            // each (src, dst) pair under the ephemeral-port ceiling.
+            let dst = format!("127.0.0.{}", 1 + (i / 20_000) % 254);
+            let mut tries = 0;
+            loop {
+                match TcpStream::connect((dst.as_str(), port)) {
+                    Ok(c) => {
+                        c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+                        break c;
+                    }
+                    Err(_) if tries < 50 => {
+                        // Transient accept-backlog overflow while the
+                        // loop drains a connect burst: back off briefly.
+                        tries += 1;
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    Err(e) => panic!("connect {i} to {dst}:{port}: {e}"),
+                }
+            }
         };
-        let idle: Vec<TcpStream> = (0..idle_conns).map(|_| connect()).collect();
-        let mut conn = connect();
+        let idle: Vec<TcpStream> = (0..idle_conns).map(&connect).collect();
+        let mut conn = connect(idle_conns);
         let mut reader = BufReader::new(conn.try_clone().unwrap());
         {
             let mut roundtrip = || {
@@ -159,12 +200,25 @@ fn main() {
         handle.join().unwrap();
     };
     if net::supported() {
-        for idle_conns in [0usize, 64, 256] {
-            let label = format!("event-loop rtt, {idle_conns} idle conns");
-            rtt(&mut suite, &label, true, idle_conns);
+        let mut sweeps: Vec<(Transport, usize)> = Vec::new();
+        if net::epoll_supported() {
+            for n in [0usize, 1_000, 10_000, 100_000] {
+                sweeps.push((Transport::Epoll, n.min(herd_cap)));
+            }
+        }
+        // The poll fallback's O(open conns) wakeups make building a
+        // 100k herd through it quadratic; 10k suffices to show the
+        // linear degradation against epoll's flat column.
+        for n in [0usize, 1_000, 10_000] {
+            sweeps.push((Transport::Poll, n.min(herd_cap)));
+        }
+        sweeps.dedup();
+        for (transport, idle_conns) in sweeps {
+            let label = format!("{} rtt, {idle_conns} idle conns", transport.name());
+            rtt(&mut suite, &label, transport, idle_conns);
         }
     }
-    rtt(&mut suite, "fallback rtt, 0 idle conns", false, 0);
+    rtt(&mut suite, "threaded rtt, 0 idle conns", Transport::Threaded, 0);
 
     suite.finish();
     std::fs::create_dir_all("results").ok();

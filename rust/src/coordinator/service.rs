@@ -25,21 +25,33 @@
 //!   [`global_team`](crate::util::threadpool::global_team) — no thread is
 //!   spawned per request or per bandit sweep.
 //! * **Readiness-driven connections (default on Unix).** One event-loop
-//!   thread owns the listener and every connection socket
-//!   (`poll(2)` via [`crate::util::net`]): it does nonblocking framed
-//!   reads into per-connection buffers, hands only *complete* request
-//!   lines to the connection-worker pool
+//!   thread owns the listener and every connection socket via the
+//!   [`Readiness`](crate::util::net::Readiness) registration API: it
+//!   does nonblocking framed reads into per-connection buffers, hands
+//!   only *complete* request lines to the connection-worker pool
 //!   ([`Service::with_conn_workers`]), and writes responses back
 //!   nonblockingly. Idle keep-alive connections therefore cost one fd
 //!   each — never a pinned worker — so `64` idle clients on a
 //!   two-worker pool cannot starve a new arrival. Per connection at
 //!   most one request executes at a time, so pipelined requests are
 //!   answered strictly in order, byte-identical to the threaded path.
-//! * **Thread-per-connection fallback.** [`Service::with_event_loop`]
-//!   (CLI `--event-loop on|off|auto`) switches to the classic bounded
-//!   accept queue + fixed worker pool, kept for non-Unix platforms and
-//!   for differential testing; both transports produce byte-identical
-//!   response streams.
+//! * **Three transports, one contract.** [`Service::with_transport`]
+//!   (CLI `--transport epoll|poll|threaded|auto`) picks the backend:
+//!   [`Transport::Epoll`] registers sockets once and pays O(ready
+//!   events) per wakeup (Linux default — what holds 100k idle
+//!   connections for the price of the active few); [`Transport::Poll`]
+//!   drives the same loop over a persistent `poll(2)` set (portable
+//!   Unix, O(open) kernel scan per wakeup); [`Transport::Threaded`] is
+//!   the classic bounded accept queue + fixed worker pool, kept for
+//!   non-Unix platforms and differential testing. All three produce
+//!   byte-identical response streams by contract — the suite asserts
+//!   it.
+//! * **Runtime-tunable limits.** Every serving limit that used to be a
+//!   compile-time constant — connection cap, idle reap timeout, write
+//!   backpressure, pipelining depth, shutdown drain — is a
+//!   [`ServiceLimits`] field with a `Service` builder method and a CLI
+//!   flag, and the effective values (after the connection cap is
+//!   clamped to `RLIMIT_NOFILE`) are reported by the `stats` op.
 //! * **Adaptive arm workers.** A request that leaves `trial_workers`
 //!   unset (or 0) gets `max(1, cores / in-flight requests)` arm workers —
 //!   a lone request fans its bandit arms across the machine, a busy
@@ -82,6 +94,7 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, TrySendError};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::coordinator::experiment::{run_trial, TrialSpec, PREDICTORS};
 use crate::coordinator::spec::MAX_TRIAL_WORKERS;
@@ -319,8 +332,13 @@ struct NetStats {
     /// Open connections with nothing buffered and no request in flight
     /// (event loop only: the idle keep-alive herd being held for free).
     idle_connections: AtomicUsize,
-    /// Event-loop `poll` returns that reported at least one ready fd.
+    /// Event-loop wait returns that reported at least one ready fd.
     loop_wakeups: AtomicU64,
+    /// Total readiness events delivered to the event loop. The scaling
+    /// story in one counter: divided by `loop_wakeups` it is the mean
+    /// per-wakeup work, which stays proportional to *active* (not open)
+    /// connections under the epoll transport.
+    ready_events: AtomicU64,
 }
 
 impl NetStats {
@@ -329,7 +347,124 @@ impl NetStats {
             open_connections: AtomicUsize::new(0),
             idle_connections: AtomicUsize::new(0),
             loop_wakeups: AtomicU64::new(0),
+            ready_events: AtomicU64::new(0),
         }
+    }
+}
+
+/// How client sockets are served. All three produce byte-identical
+/// response streams; they differ only in what a wakeup costs and where
+/// they run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transport {
+    /// Readiness registration via `epoll(7)` (Linux): sockets register
+    /// once, each wakeup costs O(ready events) regardless of how many
+    /// connections are open. The default where available.
+    Epoll,
+    /// Readiness via a persistent `poll(2)` set (portable Unix): same
+    /// event loop, but every wakeup is an O(open connections) kernel
+    /// scan.
+    Poll,
+    /// Thread-per-connection over a bounded accept queue (everywhere):
+    /// concurrency = worker count, idle connections pin workers.
+    Threaded,
+}
+
+impl Transport {
+    /// Short name used by the CLI, `stats` op, and benches.
+    pub fn name(self) -> &'static str {
+        match self {
+            Transport::Epoll => "epoll",
+            Transport::Poll => "poll",
+            Transport::Threaded => "threaded",
+        }
+    }
+
+    /// The best transport this platform supports: epoll on Linux, poll
+    /// on other Unixes, threaded elsewhere.
+    pub fn best() -> Transport {
+        if crate::util::net::epoll_supported() {
+            Transport::Epoll
+        } else if crate::util::net::supported() {
+            Transport::Poll
+        } else {
+            Transport::Threaded
+        }
+    }
+
+    /// Degrade an unavailable choice to the nearest supported transport
+    /// (epoll → poll off Linux, poll → threaded off Unix).
+    fn available(self) -> Transport {
+        match self {
+            Transport::Epoll if !crate::util::net::epoll_supported() => Transport::Poll.available(),
+            Transport::Poll if !crate::util::net::supported() => Transport::Threaded,
+            t => t,
+        }
+    }
+}
+
+/// Serving limits, all runtime-tunable (`Service` builder + CLI flags)
+/// and reported by the `stats` op. Compile-time constants until PR 6;
+/// a fleet-scale deployment tunes them per box instead of recompiling.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceLimits {
+    /// Open-connection cap for the event-loop transports: past it the
+    /// loop parks the listener and the kernel backlog takes the
+    /// overflow (deferred, not dropped). Clamped at serve time to
+    /// `RLIMIT_NOFILE` minus a reserve — see
+    /// [`Service::effective_max_conns`].
+    pub max_conns: usize,
+    /// Reap a connection after this long with no socket progress and no
+    /// request in flight. The event loop sweeps on a fraction of this
+    /// period; the threaded transport applies it as the socket read
+    /// timeout. Covers silently-dead peers (no FIN/RST ever arrives)
+    /// and peers that stopped reading responses, so stale sockets
+    /// cannot pin fds (or, at the cap, wedge the acceptor) forever.
+    pub idle_timeout: Duration,
+    /// Unflushed response bytes buffered per connection before the loop
+    /// stops reading from and dispatching for it (write-side
+    /// backpressure: a client that pipelines requests but never reads
+    /// its responses cannot balloon server memory — the threaded path
+    /// gets this for free from its blocking writes).
+    pub max_wbuf: usize,
+    /// Complete-but-undispatched frames buffered per connection before
+    /// the loop stops reading from it (pipelining backpressure).
+    pub max_pending: usize,
+    /// Bounded post-stop drain: connections with a request in flight,
+    /// pending frames, or unflushed response bytes get this long to
+    /// finish before the loop closes them — a request that raced the
+    /// shutdown still gets its reply. Bounded so a never-reading peer
+    /// cannot stall shutdown.
+    pub shutdown_drain: Duration,
+}
+
+impl Default for ServiceLimits {
+    fn default() -> ServiceLimits {
+        ServiceLimits {
+            max_conns: 4096,
+            idle_timeout: Duration::from_secs(300),
+            max_wbuf: MAX_FRAME,
+            max_pending: 64,
+            shutdown_drain: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Fds reserved out of `RLIMIT_NOFILE` for everything that is not a
+/// client connection: listener, wake pipe, stdio, dataset files, and
+/// slack for worker plumbing.
+const FD_RESERVE: u64 = 64;
+
+/// The soft `RLIMIT_NOFILE` where probeable (`None` off Unix or on
+/// probe failure — no clamp is applied then).
+fn nofile_soft_limit() -> Option<u64> {
+    #[cfg(unix)]
+    {
+        crate::util::net::nofile_limit().map(|(soft, _)| soft)
+    }
+    #[cfg(not(unix))]
+    {
+        None
     }
 }
 
@@ -338,9 +473,11 @@ pub struct Service {
     backend: Arc<dyn Backend + Send + Sync>,
     scheduler: Scheduler,
     conn_workers: usize,
-    /// Serve with the poll-based event loop (default where supported);
-    /// `false` = thread-per-connection fallback.
-    event_loop: bool,
+    /// How client sockets are served (best available by default).
+    transport: Transport,
+    /// Runtime-tunable serving limits (defaults match the former
+    /// compile-time constants).
+    limits: ServiceLimits,
     net: NetStats,
 }
 
@@ -389,7 +526,8 @@ impl Service {
             backend,
             scheduler: Scheduler::new(DEFAULT_CACHE_CAP),
             conn_workers: default_workers().clamp(2, 32),
-            event_loop: crate::util::net::supported(),
+            transport: Transport::best(),
+            limits: ServiceLimits::default(),
             net: NetStats::new(),
         }
     }
@@ -404,19 +542,90 @@ impl Service {
         self
     }
 
-    /// Choose the serving transport: `true` = poll-based event loop
-    /// (silently unavailable off-Unix, where the fallback always runs),
-    /// `false` = thread-per-connection fallback. Responses are
-    /// byte-identical either way; only idle-connection scalability
-    /// differs.
-    pub fn with_event_loop(mut self, on: bool) -> Service {
-        self.event_loop = on && crate::util::net::supported();
+    /// Choose the serving transport explicitly. An unavailable choice
+    /// degrades to the nearest supported one (epoll → poll off Linux,
+    /// poll → threaded off Unix) rather than failing: responses are
+    /// byte-identical across all three, only scalability differs.
+    pub fn with_transport(mut self, transport: Transport) -> Service {
+        self.transport = transport.available();
         self
     }
 
-    /// Whether the poll-based event loop transport is active.
+    /// Compatibility switch predating [`with_transport`]
+    /// (Self::with_transport): `true` = best readiness transport,
+    /// `false` = thread-per-connection fallback.
+    pub fn with_event_loop(mut self, on: bool) -> Service {
+        self.transport = if on { Transport::best() } else { Transport::Threaded };
+        self
+    }
+
+    /// The active serving transport.
+    pub fn transport(&self) -> Transport {
+        self.transport
+    }
+
+    /// Whether a readiness-driven (non-threaded) transport is active.
     pub fn event_loop_enabled(&self) -> bool {
-        self.event_loop
+        self.transport != Transport::Threaded
+    }
+
+    /// Cap simultaneously open connections on the event-loop transports
+    /// (min 1; the threaded transport bounds concurrency by its worker
+    /// pool instead). Further clamped to `RLIMIT_NOFILE` at serve time —
+    /// see [`effective_max_conns`](Self::effective_max_conns).
+    pub fn with_max_conns(mut self, cap: usize) -> Service {
+        self.limits.max_conns = cap.max(1);
+        self
+    }
+
+    /// Reap connections idle for this long (min 1 ms; also the threaded
+    /// transport's socket read timeout).
+    pub fn with_idle_timeout(mut self, timeout: Duration) -> Service {
+        self.limits.idle_timeout = timeout.max(Duration::from_millis(1));
+        self
+    }
+
+    /// Per-connection unflushed-response-byte cap before the loop stops
+    /// reading from and dispatching for that connection (min 1).
+    pub fn with_max_wbuf(mut self, bytes: usize) -> Service {
+        self.limits.max_wbuf = bytes.max(1);
+        self
+    }
+
+    /// Per-connection cap on buffered complete-but-undispatched frames
+    /// (min 1): pipelining backpressure.
+    pub fn with_max_pending(mut self, frames: usize) -> Service {
+        self.limits.max_pending = frames.max(1);
+        self
+    }
+
+    /// How long a stopping event loop keeps draining owed responses
+    /// before closing the stragglers.
+    pub fn with_shutdown_drain(mut self, drain: Duration) -> Service {
+        self.limits.shutdown_drain = drain;
+        self
+    }
+
+    /// The configured serving limits (as requested; the connection cap
+    /// may be further clamped at serve time).
+    pub fn limits(&self) -> &ServiceLimits {
+        &self.limits
+    }
+
+    /// The connection cap actually enforced: the configured
+    /// [`with_max_conns`](Self::with_max_conns) clamped to the
+    /// `RLIMIT_NOFILE` soft limit minus a small fd reserve — so hitting the
+    /// fd table shows up as one startup warning and a lower cap, not as
+    /// opaque accept failures under load.
+    pub fn effective_max_conns(&self) -> usize {
+        let requested = self.limits.max_conns.max(1);
+        match nofile_soft_limit() {
+            Some(soft) => {
+                let avail = soft.saturating_sub(FD_RESERVE).min(usize::MAX as u64) as usize;
+                requested.min(avail.max(1))
+            }
+            None => requested,
+        }
     }
 
     /// Bound the cross-request response cache (entries, min 1): beyond
@@ -476,10 +685,22 @@ impl Service {
                     ("cache_cap", s.cache.lock().unwrap().cap.into()),
                     ("team_threads", s.team_threads().into()),
                     ("conn_workers", self.conn_workers.into()),
-                    ("event_loop", self.event_loop.into()),
+                    ("transport", Value::str(self.transport.name())),
+                    ("event_loop", self.event_loop_enabled().into()),
+                    ("max_conns", self.effective_max_conns().into()),
+                    ("max_conns_requested", self.limits.max_conns.into()),
+                    ("idle_timeout_s", self.limits.idle_timeout.as_secs_f64().into()),
+                    ("max_wbuf", self.limits.max_wbuf.into()),
+                    ("max_pending", self.limits.max_pending.into()),
+                    ("shutdown_drain_s", self.limits.shutdown_drain.as_secs_f64().into()),
+                    (
+                        "rlimit_nofile",
+                        (nofile_soft_limit().unwrap_or(0).min(usize::MAX as u64) as usize).into(),
+                    ),
                     ("open_connections", net.open_connections.load(Ordering::Relaxed).into()),
                     ("idle_connections", net.idle_connections.load(Ordering::Relaxed).into()),
                     ("loop_wakeups", (net.loop_wakeups.load(Ordering::Relaxed) as usize).into()),
+                    ("ready_events", (net.ready_events.load(Ordering::Relaxed) as usize).into()),
                 ]))
             }
             "clear_cache" => {
@@ -705,13 +926,13 @@ impl Service {
 
     /// Serve until `stop` is set. Returns the bound local port.
     ///
-    /// Transport is chosen by [`with_event_loop`](Self::with_event_loop):
+    /// Transport is chosen by [`with_transport`](Self::with_transport):
     ///
-    /// * **Event loop (default on Unix)** — one readiness-driven thread
-    ///   owns every socket; complete request frames are handed to a
-    ///   fixed pool of connection workers and responses written back
-    ///   nonblockingly. Idle keep-alive connections never occupy a
-    ///   worker.
+    /// * **Event loop (epoll or poll; default on Unix)** — one
+    ///   readiness-driven thread owns every socket; complete request
+    ///   frames are handed to a fixed pool of connection workers and
+    ///   responses written back nonblockingly. Idle keep-alive
+    ///   connections never occupy a worker.
     /// * **Threaded fallback** — bounded accept queue (capacity 2× the
     ///   pool) drained by a fixed pool of persistent connection workers;
     ///   when the queue is full the acceptor stops draining the TCP
@@ -726,7 +947,17 @@ impl Service {
         listener.set_nonblocking(true)?;
         let svc = self;
         #[cfg(unix)]
-        if svc.event_loop {
+        if svc.transport != Transport::Threaded {
+            let effective = svc.effective_max_conns();
+            if effective < svc.limits.max_conns {
+                eprintln!(
+                    "service: max_conns {} exceeds RLIMIT_NOFILE soft limit {} minus reserve; \
+                     capping open connections at {}",
+                    svc.limits.max_conns,
+                    nofile_soft_limit().unwrap_or(0),
+                    effective,
+                );
+            }
             let handle = std::thread::spawn(move || event_loop::run(svc, listener, stop));
             return Ok((port, handle));
         }
@@ -861,7 +1092,9 @@ fn read_frame(reader: &mut BufReader<TcpStream>, buf: &mut Vec<u8>) -> std::io::
 }
 
 fn handle_conn(svc: &Service, stream: TcpStream) -> std::io::Result<()> {
-    stream.set_read_timeout(Some(std::time::Duration::from_secs(300)))?;
+    // The idle limit doubles as the read timeout here: an idle peer
+    // trips it and the connection is reaped, matching the event loop.
+    stream.set_read_timeout(Some(svc.limits.idle_timeout))?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     let mut buf = Vec::new();
@@ -888,26 +1121,42 @@ fn handle_conn(svc: &Service, stream: TcpStream) -> std::io::Result<()> {
     }
 }
 
-/// The readiness-driven transport: one thread, all sockets, `poll(2)`.
+/// The readiness-driven transport: one thread, all sockets, registered
+/// with a [`Readiness`](crate::util::net::Readiness) backend (epoll or
+/// a persistent poll set — [`Transport`] picks).
 ///
-/// The loop owns the listener and every connection. Per iteration it
-/// polls (50 ms timeout to observe `stop`), then:
+/// The loop owns the listener and every connection. Sockets register
+/// **once** on accept; interest changes only on state transitions
+/// (read-paused under backpressure, write-armed while a response is
+/// unflushed), so steady-state iterations touch only ready fds. Per
+/// wakeup it:
 ///
-/// 1. drains the worker outbox (finished responses → per-connection
-///    write buffers, next pending request dispatched),
-/// 2. accepts new connections while under [`MAX_CONNS`],
+/// 1. waits for readiness (50 ms timeout to observe `stop`),
+/// 2. accepts new connections while under the effective
+///    [`ServiceLimits::max_conns`] (at the cap the listener is parked —
+///    an interest transition — and the kernel backlog defers, never
+///    drops, the overflow),
 /// 3. does nonblocking reads on readable connections, slicing complete
 ///    newline frames into per-connection pending queues,
-/// 4. dispatches at most **one** in-flight request per connection to
+/// 4. drains the worker outbox (finished responses → per-connection
+///    write buffers),
+/// 5. dispatches at most **one** in-flight request per connection to
 ///    the connection-worker pool (strict per-connection FIFO — the
 ///    ordering contract of the threaded transport), and
-/// 5. flushes write buffers nonblockingly, closing connections that
+/// 6. flushes write buffers nonblockingly, closing connections that
 ///    finished (`closing`/EOF with everything drained).
+///
+/// Steps 3–6 run only over connections an event touched, so a wakeup
+/// costs O(ready events + accepts) — under epoll, independent of how
+/// many idle connections are open. Idle reaping
+/// ([`ServiceLimits::idle_timeout`]) runs as a periodic sweep on a
+/// fraction of the timeout, not per wakeup, keeping the O(open) scan
+/// amortized away.
 ///
 /// Workers never touch sockets; the loop never runs requests. The two
 /// meet only at the outbox (a mutex-guarded vec + a [`WakePipe`]), so a
-/// slow trial can never stall reads, and 64 idle keep-alive connections
-/// cost 64 fds — not 64 pinned threads.
+/// slow trial can never stall reads, and 100k idle keep-alive
+/// connections cost 100k fds — not 100k pinned threads.
 #[cfg(unix)]
 mod event_loop {
     use std::collections::{BTreeMap, VecDeque};
@@ -918,40 +1167,20 @@ mod event_loop {
     use std::sync::{Arc, Mutex};
     use std::time::{Duration, Instant};
 
-    use super::{error_line, handle_guarded, Service, MAX_FRAME};
-    use crate::util::net::{poll, PollFd, WakePipe, POLLIN, POLLOUT};
+    use super::{error_line, handle_guarded, Service, ServiceLimits, Transport, MAX_FRAME};
+    use crate::util::net::{poll, Event, PollFd, Readiness, WakePipe, POLLIN, POLLOUT};
     use crate::util::threadpool::WorkerTeam;
 
-    /// Bytes pulled per readiness notification (level-triggered poll
-    /// re-reports leftover data, so one chunk per wakeup keeps the loop
-    /// fair across connections).
+    /// Bytes pulled per readiness notification (level-triggered
+    /// backends re-report leftover data, so one chunk per wakeup keeps
+    /// the loop fair across connections).
     const READ_CHUNK: usize = 16 * 1024;
-    /// Complete-but-undispatched frames buffered per connection before
-    /// the loop stops reading from it (pipelining backpressure).
-    const MAX_PENDING: usize = 64;
-    /// Unflushed response bytes buffered per connection before the loop
-    /// stops reading from and dispatching for it (write-side
-    /// backpressure: a client that pipelines requests but never reads
-    /// its responses cannot balloon server memory — the threaded path
-    /// gets this for free from its blocking writes).
-    const MAX_WBUF: usize = MAX_FRAME;
-    /// Open-connection cap: past it the loop stops accepting and the
-    /// kernel backlog takes the overflow.
-    const MAX_CONNS: usize = 4096;
-    /// Reap a connection after this long with no socket progress and no
-    /// request in flight — parity with the threaded transport's 300 s
-    /// read timeout. Covers both silently-dead peers (no FIN/RST ever
-    /// arrives) and peers that stopped reading their responses, so
-    /// stale sockets cannot pin fds (or, at [`MAX_CONNS`], wedge the
-    /// acceptor) forever.
-    const IDLE_TIMEOUT: Duration = Duration::from_secs(300);
-    /// Bounded post-stop drain: connections with a request in flight,
-    /// pending frames, or unflushed response bytes get this long to
-    /// finish before the loop closes them — a request that raced the
-    /// shutdown still gets its reply, like the threaded fallback whose
-    /// workers finish their current connection. Bounded so a
-    /// never-reading peer cannot stall shutdown.
-    const SHUTDOWN_DRAIN: Duration = Duration::from_secs(5);
+    /// Registration token of the worker-outbox wake pipe.
+    const TOKEN_WAKE: u64 = 0;
+    /// Registration token of the listener.
+    const TOKEN_LISTENER: u64 = 1;
+    /// First connection token (monotonic from here, never reused).
+    const FIRST_CONN_TOKEN: u64 = 2;
 
     /// Per-connection state (the event loop's replacement for a pinned
     /// worker thread's stack).
@@ -974,8 +1203,17 @@ mod event_loop {
         /// responses, preserving order) and close.
         oversized: bool,
         /// Last socket progress (bytes read or written, or a response
-        /// queued); drives the [`IDLE_TIMEOUT`] reap.
+        /// queued); drives the [`ServiceLimits::idle_timeout`] reap.
         last_activity: Instant,
+        /// Interest bits currently registered with the readiness
+        /// backend; [`sync_conn`] issues a `modify` only when the
+        /// desired interest departs from this (state transitions, not
+        /// every iteration).
+        interest: i16,
+        /// Whether this connection is counted in the idle gauge —
+        /// maintained incrementally by [`sync_conn`] so the gauge never
+        /// needs an O(open connections) recount.
+        counted_idle: bool,
     }
 
     impl Conn {
@@ -991,6 +1229,8 @@ mod event_loop {
                 peer_closed: false,
                 oversized: false,
                 last_activity: Instant::now(),
+                interest: 0,
+                counted_idle: false,
             }
         }
 
@@ -1041,67 +1281,93 @@ mod event_loop {
     }
 
     pub(super) fn run(svc: Arc<Service>, listener: TcpListener, stop: Arc<AtomicBool>) {
+        let limits = svc.limits;
+        let max_conns = svc.effective_max_conns();
         let pool = WorkerTeam::host_pool(svc.conn_workers.max(1));
         let outbox = Arc::new(Outbox {
             queue: Mutex::new(Vec::new()),
             wake: WakePipe::new().expect("event loop: wake pipe"),
         });
+        // The requested backend, degrading to the portable poll set if
+        // epoll creation fails at runtime (e.g. fd exhaustion).
+        let mut reg = if svc.transport == Transport::Epoll {
+            match Readiness::epoll() {
+                Some(Ok(r)) => r,
+                _ => Readiness::poll_set().expect("event loop: poll set"),
+            }
+        } else {
+            Readiness::poll_set().expect("event loop: poll set")
+        };
+        reg.register(outbox.wake.read_fd(), TOKEN_WAKE, POLLIN)
+            .expect("event loop: register wake pipe");
+        reg.register(listener.as_raw_fd(), TOKEN_LISTENER, POLLIN)
+            .expect("event loop: register listener");
+        let mut accepting = true;
+
         let mut conns: BTreeMap<u64, Conn> = BTreeMap::new();
-        let mut next_token: u64 = 1;
+        let mut next_token: u64 = FIRST_CONN_TOKEN;
+        // Incremental idle gauge (see `Conn::counted_idle`).
+        let mut idle_count: usize = 0;
+        // Scratch buffers reused across iterations: readiness events,
+        // tokens an event touched this iteration, tokens to close.
+        let mut events: Vec<Event> = Vec::new();
+        let mut touched: Vec<u64> = Vec::new();
+        let mut dead: Vec<u64> = Vec::new();
+
+        // Stale connections are reaped by a periodic sweep — the only
+        // remaining O(open connections) work, amortized to a fraction
+        // of the timeout instead of paid per wakeup.
+        let reap_every =
+            (limits.idle_timeout / 4).clamp(Duration::from_millis(25), Duration::from_secs(5));
+        let mut next_reap = Instant::now() + reap_every;
 
         while !stop.load(Ordering::Relaxed) {
-            // (Re)build the poll set: wake pipe, listener, connections.
-            let accepting = conns.len() < MAX_CONNS;
-            let mut fds = Vec::with_capacity(conns.len() + 2);
-            let mut tokens = Vec::with_capacity(conns.len() + 2);
-            fds.push(PollFd::new(outbox.wake.read_fd(), POLLIN));
-            tokens.push(0u64);
-            if accepting {
-                fds.push(PollFd::new(listener.as_raw_fd(), POLLIN));
-                tokens.push(0);
+            if reg.wait(&mut events, 50).is_err() {
+                // A persistent wait failure (e.g. ENOMEM) must not
+                // busy-spin the loop: back off for one wait period and
+                // retry, still observing `stop`.
+                std::thread::sleep(Duration::from_millis(50));
+                continue;
             }
-            let conn_start = fds.len();
-            for (tok, c) in &conns {
-                let mut events = 0i16;
-                let readable_wanted = !c.peer_closed
-                    && !c.closing
-                    && !c.oversized
-                    && c.pending.len() < MAX_PENDING
-                    && c.rbuf.len() <= MAX_FRAME
-                    && c.wbuf_backlog() <= MAX_WBUF;
-                if readable_wanted {
-                    events |= POLLIN;
-                }
-                if !c.write_drained() {
-                    events |= POLLOUT;
-                }
-                fds.push(PollFd::new(c.stream.as_raw_fd(), events));
-                tokens.push(*tok);
-            }
-
-            let ready = match poll(&mut fds, 50) {
-                Ok(n) => n,
-                Err(_) => {
-                    // A persistent poll failure (e.g. ENOMEM) must not
-                    // busy-spin the loop: back off for one poll period
-                    // and retry, still observing `stop`.
-                    std::thread::sleep(std::time::Duration::from_millis(50));
-                    continue;
-                }
-            };
             if stop.load(Ordering::Relaxed) {
                 break;
             }
-            if ready > 0 {
+            if !events.is_empty() {
                 svc.net.loop_wakeups.fetch_add(1, Ordering::Relaxed);
+                svc.net.ready_events.fetch_add(events.len() as u64, Ordering::Relaxed);
             }
 
-            // 1. Worker responses. Drain the outbox unconditionally —
+            touched.clear();
+            dead.clear();
+            let mut accept_ready = false;
+
+            // 1. Classify events; read from readable connections.
+            for ev in &events {
+                match ev.token {
+                    TOKEN_WAKE => outbox.wake.drain(),
+                    TOKEN_LISTENER => accept_ready = true,
+                    tok => {
+                        let Some(c) = conns.get_mut(&tok) else { continue };
+                        if ev.error() {
+                            dead.push(tok);
+                            continue;
+                        }
+                        if ev.readable() {
+                            if !read_ready(c) {
+                                dead.push(tok);
+                                continue;
+                            }
+                        } else if ev.hangup() {
+                            c.peer_closed = true;
+                        }
+                        touched.push(tok);
+                    }
+                }
+            }
+
+            // 2. Worker responses. Drain the outbox unconditionally —
             // it is one uncontended lock when empty, and doing so makes
             // a missed wake merely a latency blip, never a stall.
-            if fds[0].readable() {
-                outbox.wake.drain();
-            }
             let finished: Vec<(u64, String)> = std::mem::take(&mut *outbox.queue.lock().unwrap());
             for (tok, resp) in finished {
                 // The connection may have died while its request ran;
@@ -1109,73 +1375,102 @@ mod event_loop {
                 if let Some(c) = conns.get_mut(&tok) {
                     c.queue_response(&resp);
                     c.busy = false;
+                    touched.push(tok);
                 }
             }
 
-            // 2. New connections.
-            if accepting && fds[conn_start - 1].readable() {
-                while conns.len() < MAX_CONNS {
+            // 3. New connections: register once, watch for requests.
+            if accept_ready && accepting {
+                while conns.len() < max_conns {
                     match listener.accept() {
                         Ok((stream, _)) => {
                             if stream.set_nonblocking(true).is_err() {
                                 continue;
                             }
-                            conns.insert(next_token, Conn::new(stream));
+                            let tok = next_token;
                             next_token += 1;
+                            let mut c = Conn::new(stream);
+                            if reg.register(c.stream.as_raw_fd(), tok, POLLIN).is_err() {
+                                continue; // drop the socket, keep serving
+                            }
+                            c.interest = POLLIN;
+                            conns.insert(tok, c);
+                            touched.push(tok);
                         }
                         Err(_) => break, // WouldBlock or transient error
                     }
                 }
             }
 
-            // 3. Socket readiness per connection.
-            let mut dead: Vec<u64> = Vec::new();
-            for (i, fd) in fds.iter().enumerate().skip(conn_start) {
-                let tok = tokens[i];
-                let Some(c) = conns.get_mut(&tok) else { continue };
-                if fd.error() {
-                    dead.push(tok);
-                    continue;
-                }
-                if fd.readable() {
-                    if !read_ready(c) {
-                        dead.push(tok);
-                        continue;
-                    }
-                } else if fd.hangup() {
-                    c.peer_closed = true;
-                }
-            }
             // Remove unrecoverable connections before dispatching, so no
             // request is handed to workers on behalf of a gone client.
             for tok in dead.drain(..) {
-                conns.remove(&tok);
+                drop_conn(&mut conns, tok, &mut reg, &mut idle_count);
             }
 
-            // 4 + 5. Dispatch pending work, flush writes, reap stale
-            // connections (no progress and nothing running for
-            // IDLE_TIMEOUT: dead peers and never-reading peers alike).
-            for (tok, c) in conns.iter_mut() {
-                dispatch(c, *tok, &svc, &pool, &outbox);
-                let stale = !c.busy && c.last_activity.elapsed() >= IDLE_TIMEOUT;
-                if !flush(c) || c.done() || stale {
-                    dead.push(*tok);
+            // 4–6. Dispatch, flush, and re-sync interest — but only for
+            // connections something actually happened to. Untouched
+            // connections cannot have become dispatchable (their state
+            // is unchanged), so skipping them is what makes a wakeup
+            // O(ready events).
+            touched.sort_unstable();
+            touched.dedup();
+            for &tok in &touched {
+                let Some(c) = conns.get_mut(&tok) else { continue };
+                dispatch(c, tok, &svc, &pool, &outbox);
+                let alive = flush(c);
+                if alive {
+                    // Flushing may have drained the write backlog below
+                    // the dispatch gate: admit the next pending frame
+                    // now rather than waiting for another event.
+                    dispatch(c, tok, &svc, &pool, &outbox);
+                }
+                if !alive || c.done() {
+                    dead.push(tok);
+                } else {
+                    sync_conn(c, tok, &mut reg, &limits, &mut idle_count);
                 }
             }
-            for tok in dead {
-                conns.remove(&tok);
+            for tok in dead.drain(..) {
+                drop_conn(&mut conns, tok, &mut reg, &mut idle_count);
+            }
+
+            // Periodic stale sweep (no progress and nothing running for
+            // idle_timeout: dead peers and never-reading peers alike).
+            let now = Instant::now();
+            if now >= next_reap {
+                next_reap = now + reap_every;
+                for (tok, c) in conns.iter() {
+                    if !c.busy && c.last_activity.elapsed() >= limits.idle_timeout {
+                        dead.push(*tok);
+                    }
+                }
+                for tok in dead.drain(..) {
+                    drop_conn(&mut conns, tok, &mut reg, &mut idle_count);
+                }
+            }
+
+            // Park/unpark the listener on cap transitions, so a full
+            // house costs no accept wakeups and a freed slot re-admits
+            // the kernel backlog (deferred, not dropped).
+            let want_accept = conns.len() < max_conns;
+            if want_accept != accepting {
+                let flags = if want_accept { POLLIN } else { 0 };
+                let _ = reg.modify(listener.as_raw_fd(), TOKEN_LISTENER, flags);
+                accepting = want_accept;
             }
 
             // Transport gauges for the `stats` op.
             svc.net.open_connections.store(conns.len(), Ordering::Relaxed);
-            let idle = conns.values().filter(|c| c.idle()).count();
-            svc.net.idle_connections.store(idle, Ordering::Relaxed);
+            svc.net.idle_connections.store(idle_count, Ordering::Relaxed);
         }
 
         // Post-stop drain (bounded): deliver what is owed — responses
         // for requests already running or queued, unflushed bytes —
-        // then close. Idle keep-alives are shed immediately.
-        let deadline = Instant::now() + SHUTDOWN_DRAIN;
+        // then close. Idle keep-alives are shed immediately. Uses a
+        // throwaway poll set per iteration (the survivor set is tiny
+        // and shrinking; registration bookkeeping buys nothing here).
+        let deadline = Instant::now() + limits.shutdown_drain;
         while Instant::now() < deadline {
             conns.retain(|_, c| c.busy || !c.pending.is_empty() || c.wbuf_backlog() > 0);
             if conns.is_empty() {
@@ -1267,6 +1562,70 @@ mod event_loop {
         }
     }
 
+    /// The interest bits this connection's state calls for right now:
+    /// read while the peer may send more and no backpressure gate is
+    /// tripped (pipelining depth, frame size, write backlog); write
+    /// while response bytes await the socket.
+    fn desired_interest(c: &Conn, limits: &ServiceLimits) -> i16 {
+        let mut want = 0i16;
+        let readable_wanted = !c.peer_closed
+            && !c.closing
+            && !c.oversized
+            && c.pending.len() < limits.max_pending
+            && c.rbuf.len() <= MAX_FRAME
+            && c.wbuf_backlog() <= limits.max_wbuf;
+        if readable_wanted {
+            want |= POLLIN;
+        }
+        if !c.write_drained() {
+            want |= POLLOUT;
+        }
+        want
+    }
+
+    /// Re-sync a just-touched connection with the readiness backend and
+    /// the idle gauge. Interest is modified only on an actual transition
+    /// (registration is the point of the epoll backend; for the poll
+    /// set it is one in-place slot write), and the idle gauge moves
+    /// only when the connection's idleness flips.
+    fn sync_conn(
+        c: &mut Conn,
+        token: u64,
+        reg: &mut Readiness,
+        limits: &ServiceLimits,
+        idle_count: &mut usize,
+    ) {
+        let want = desired_interest(c, limits);
+        if want != c.interest && reg.modify(c.stream.as_raw_fd(), token, want).is_ok() {
+            c.interest = want;
+        }
+        let is_idle = c.idle();
+        if is_idle != c.counted_idle {
+            if is_idle {
+                *idle_count += 1;
+            } else {
+                *idle_count -= 1;
+            }
+            c.counted_idle = is_idle;
+        }
+    }
+
+    /// Close a connection: deregister from the backend, correct the
+    /// idle gauge, drop the socket.
+    fn drop_conn(
+        conns: &mut BTreeMap<u64, Conn>,
+        token: u64,
+        reg: &mut Readiness,
+        idle_count: &mut usize,
+    ) {
+        if let Some(c) = conns.remove(&token) {
+            let _ = reg.deregister(c.stream.as_raw_fd(), token);
+            if c.counted_idle {
+                *idle_count -= 1;
+            }
+        }
+    }
+
     /// Hand the next pending frame (if any, and none is in flight) to
     /// the worker pool; emit the deferred oversize error once the queue
     /// drains so responses keep request order.
@@ -1277,7 +1636,7 @@ mod event_loop {
         pool: &WorkerTeam,
         outbox: &Arc<Outbox>,
     ) {
-        while !c.busy && !c.closing && c.wbuf_backlog() <= MAX_WBUF {
+        while !c.busy && !c.closing && c.wbuf_backlog() <= svc.limits.max_wbuf {
             let Some(raw) = c.pending.pop_front() else {
                 if c.oversized {
                     c.queue_response(&error_line(&format!("frame larger than {MAX_FRAME} bytes")));
@@ -1752,10 +2111,11 @@ mod tests {
     #[test]
     fn tcp_end_to_end() {
         use std::io::{BufRead, BufReader, Write};
-        // Default transport (event loop where supported) and the
-        // threaded fallback both answer over a real socket.
-        for event_loop in [true, false] {
-            let svc = Arc::new(service().with_event_loop(event_loop));
+        // Every transport answers over a real socket (unavailable ones
+        // degrade to the nearest supported backend, so the loop is safe
+        // on any platform).
+        for transport in [Transport::Epoll, Transport::Poll, Transport::Threaded] {
+            let svc = Arc::new(service().with_transport(transport));
             let stop = Arc::new(AtomicBool::new(false));
             let (port, handle) = svc.serve("127.0.0.1:0", stop.clone()).unwrap();
             {
@@ -1764,33 +2124,86 @@ mod tests {
                 conn.write_all(b"{\"op\":\"ping\"}\n").unwrap();
                 let mut line = String::new();
                 BufReader::new(conn.try_clone().unwrap()).read_line(&mut line).unwrap();
-                assert!(line.contains("pong"), "event_loop={event_loop}: {line}");
+                assert!(line.contains("pong"), "{}: {line}", transport.name());
             }
             stop.store(true, Ordering::Relaxed);
             handle.join().unwrap();
         }
     }
 
-    /// The stats op surfaces the transport fields on both transports.
+    /// The stats op surfaces the transport and every effective limit.
     #[test]
     fn stats_reports_transport_fields() {
         let svc = service();
         let v = parse(&svc.handle(r#"{"op":"stats"}"#)).unwrap();
         assert_eq!(v.get("event_loop").unwrap().as_bool(), Some(crate::util::net::supported()));
+        assert_eq!(v.get("transport").unwrap().as_str(), Some(Transport::best().name()));
         let fields = [
             "open_connections",
             "idle_connections",
             "loop_wakeups",
+            "ready_events",
+            "max_conns",
+            "max_conns_requested",
+            "max_wbuf",
+            "max_pending",
+            "rlimit_nofile",
             "cache_misses",
             "cache_inserts",
         ];
         for field in fields {
             assert!(v.get(field).and_then(Value::as_usize).is_some(), "missing {field}");
         }
+        for field in ["idle_timeout_s", "shutdown_drain_s"] {
+            assert!(v.get(field).is_some(), "missing {field}");
+        }
+
         let off = service().with_event_loop(false);
         assert!(!off.event_loop_enabled());
         let v = parse(&off.handle(r#"{"op":"stats"}"#)).unwrap();
         assert_eq!(v.get("event_loop").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("transport").unwrap().as_str(), Some("threaded"));
+    }
+
+    /// Builder-set limits land in stats verbatim (modulo the rlimit
+    /// clamp on the connection cap).
+    #[test]
+    fn limits_are_tunable_and_reported() {
+        let svc = service()
+            .with_max_conns(7)
+            .with_idle_timeout(Duration::from_secs(12))
+            .with_max_wbuf(2048)
+            .with_max_pending(3)
+            .with_shutdown_drain(Duration::from_secs(1));
+        assert_eq!(svc.limits().max_pending, 3);
+        assert_eq!(svc.effective_max_conns(), 7, "small caps are below any sane rlimit");
+        let v = parse(&svc.handle(r#"{"op":"stats"}"#)).unwrap();
+        assert_eq!(v.get("max_conns").and_then(Value::as_usize), Some(7));
+        assert_eq!(v.get("max_conns_requested").and_then(Value::as_usize), Some(7));
+        assert_eq!(v.get("max_wbuf").and_then(Value::as_usize), Some(2048));
+        assert_eq!(v.get("max_pending").and_then(Value::as_usize), Some(3));
+        assert_eq!(v.get("idle_timeout_s").and_then(Value::as_usize), Some(12));
+        assert_eq!(v.get("shutdown_drain_s").and_then(Value::as_usize), Some(1));
+
+        // Zero-ish requests clamp up instead of wedging the loop.
+        let floor = service().with_max_conns(0).with_max_pending(0).with_max_wbuf(0);
+        assert_eq!(floor.limits().max_conns, 1);
+        assert_eq!(floor.limits().max_pending, 1);
+        assert_eq!(floor.limits().max_wbuf, 1);
+    }
+
+    /// An absurd connection-cap request is clamped to the fd rlimit
+    /// (minus the reserve) instead of failing at accept time.
+    #[cfg(unix)]
+    #[test]
+    fn effective_max_conns_respects_rlimit() {
+        let svc = service().with_max_conns(usize::MAX);
+        let effective = svc.effective_max_conns();
+        assert!(effective >= 1);
+        assert!(
+            effective < usize::MAX,
+            "RLIMIT_NOFILE is always finite on Unix, so the cap must clamp"
+        );
     }
 
     /// More concurrent connections than connection workers: the bounded

@@ -15,7 +15,7 @@ use std::sync::Arc;
 
 use multicloud::coordinator::experiment::RegretGrid;
 use multicloud::coordinator::savings::{savings_analysis, SavingsConfig};
-use multicloud::coordinator::service::Service;
+use multicloud::coordinator::service::{Service, Transport};
 use multicloud::dataset::{OfflineDataset, Target, BOTH_TARGETS};
 use multicloud::optimizers::ALL_OPTIMIZERS;
 use multicloud::report::figures;
@@ -411,10 +411,22 @@ fn cmd_serve(args: &[String]) -> i32 {
         .opt("addr", "127.0.0.1:7077", "bind address")
         .opt("conn-workers", "0", "connection worker pool size (0 = auto)")
         .opt(
+            "transport",
+            "auto",
+            "serving transport: epoll (O(ready) readiness, Linux) | poll (portable readiness) \
+             | threaded (thread per connection) | auto (best available)",
+        )
+        .opt(
             "event-loop",
             "auto",
-            "transport: on (poll-based readiness loop) | off (thread per connection) | auto",
+            "legacy transport switch, superseded by --transport: on (readiness loop) | \
+             off (thread per connection) | auto",
         )
+        .opt("max-conns", "0", "open-connection cap, clamped to the fd rlimit (0 = default 4096)")
+        .opt("idle-timeout", "0", "reap idle connections after this many seconds (0 = default 300)")
+        .opt("max-wbuf", "0", "per-connection unflushed response byte cap (0 = default 1 MiB)")
+        .opt("max-pending", "0", "per-connection pipelined frame cap (0 = default 64)")
+        .opt("shutdown-drain", "-1", "post-stop drain seconds (-1 = default 5)")
         .opt("cache-cap", "0", "response cache entries (0 = default)")
         .opt("dataset", "", "offline dataset CSV (empty = regenerate)")
         .flag("native", "use native surrogates");
@@ -431,24 +443,70 @@ fn cmd_serve(args: &[String]) -> i32 {
     if cache_cap > 0 {
         svc = svc.with_cache_cap(cache_cap);
     }
-    let mode = a.choice("event-loop", &["on", "off", "auto"]).unwrap_or_else(|e| fail(&e));
-    match mode.as_str() {
-        "on" => {
-            if !multicloud::util::net::supported() {
-                fail("--event-loop on: not supported on this platform (use off or auto)");
+    let max_conns = a.usize("max-conns").unwrap_or_else(|e| fail(&e));
+    if max_conns > 0 {
+        svc = svc.with_max_conns(max_conns);
+    }
+    let idle_timeout = a.f64("idle-timeout").unwrap_or_else(|e| fail(&e));
+    if idle_timeout > 0.0 {
+        svc = svc.with_idle_timeout(std::time::Duration::from_secs_f64(idle_timeout));
+    }
+    let max_wbuf = a.usize("max-wbuf").unwrap_or_else(|e| fail(&e));
+    if max_wbuf > 0 {
+        svc = svc.with_max_wbuf(max_wbuf);
+    }
+    let max_pending = a.usize("max-pending").unwrap_or_else(|e| fail(&e));
+    if max_pending > 0 {
+        svc = svc.with_max_pending(max_pending);
+    }
+    let shutdown_drain = a.f64("shutdown-drain").unwrap_or_else(|e| fail(&e));
+    if shutdown_drain >= 0.0 {
+        svc = svc.with_shutdown_drain(std::time::Duration::from_secs_f64(shutdown_drain));
+    }
+
+    // --transport wins; the legacy --event-loop switch still works for
+    // scripts that predate it.
+    let choice = a
+        .choice("transport", &["epoll", "poll", "threaded", "auto"])
+        .unwrap_or_else(|e| fail(&e));
+    match choice.as_str() {
+        "epoll" => {
+            if !multicloud::util::net::epoll_supported() {
+                fail("--transport epoll: not supported on this platform (use poll or auto)");
             }
-            svc = svc.with_event_loop(true);
+            svc = svc.with_transport(Transport::Epoll);
         }
-        "off" => svc = svc.with_event_loop(false),
-        _ => {} // auto: event loop where supported
+        "poll" => {
+            if !multicloud::util::net::supported() {
+                fail("--transport poll: not supported on this platform (use threaded or auto)");
+            }
+            svc = svc.with_transport(Transport::Poll);
+        }
+        "threaded" => svc = svc.with_transport(Transport::Threaded),
+        _ => {
+            // auto: defer to --event-loop, then to the platform default.
+            let mode = a.choice("event-loop", &["on", "off", "auto"]).unwrap_or_else(|e| fail(&e));
+            match mode.as_str() {
+                "on" => {
+                    if !multicloud::util::net::supported() {
+                        fail("--event-loop on: not supported on this platform (use off or auto)");
+                    }
+                    svc = svc.with_event_loop(true);
+                }
+                "off" => svc = svc.with_event_loop(false),
+                _ => {} // best transport where supported
+            }
+        }
     }
     let svc = Arc::new(svc);
     let stop = Arc::new(AtomicBool::new(false));
-    let transport =
-        if svc.event_loop_enabled() { "poll event loop" } else { "thread per connection" };
+    let transport = svc.transport().name();
+    let max_conns = svc.effective_max_conns();
     let (port, handle) = svc.serve(a.get("addr"), stop).unwrap_or_else(|e| fail(&e.to_string()));
     println!(
-        "listening on port {port} ({transport}; line-delimited JSON; op: optimize | batch | list_workloads | list_methods | stats | clear_cache | ping)"
+        "listening on port {port} (transport {transport}, max {max_conns} connections; \
+         line-delimited JSON; op: optimize | batch | list_workloads | list_methods | stats | \
+         clear_cache | ping)"
     );
     handle.join().ok();
     0

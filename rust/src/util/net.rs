@@ -1,24 +1,52 @@
 //! Readiness primitives for the TCP service's event loop (substrate:
 //! no mio/tokio offline).
 //!
-//! Thin safe wrappers over raw `extern "C"` libc calls — `poll(2)` for
-//! readiness multiplexing and `pipe(2)`/`fcntl(2)` for a nonblocking
-//! self-wake channel — so one thread can own every connection socket and
-//! sleep until *something* (a readable socket, a writable socket, or a
-//! worker finishing a response) needs it. Zero new crates: the only
-//! platform surface used is the stable POSIX ABI, declared inline.
+//! Thin safe wrappers over raw `extern "C"` libc calls — `epoll(7)` on
+//! Linux and `poll(2)` everywhere else for readiness multiplexing, plus
+//! `pipe(2)`/`fcntl(2)` for a nonblocking self-wake channel — so one
+//! thread can own every connection socket and sleep until *something*
+//! (a readable socket, a writable socket, or a worker finishing a
+//! response) needs it. Zero new crates: the only platform surface used
+//! is the stable POSIX/Linux ABI, declared inline.
 //!
-//! Only compiled on Unix. [`supported`] reports availability at runtime
-//! so callers (the service's `--event-loop auto` switch) can fall back
-//! to thread-per-connection elsewhere.
+//! Two registration-based backends sit behind one [`Readiness`] facade:
+//!
+//! * [`Epoll`] (Linux): sockets are registered **once**
+//!   (`epoll_ctl(ADD)`) and their interest updated only on state
+//!   transitions (`MOD`); a wakeup costs O(ready events) no matter how
+//!   many sockets are open. This is what lets one loop hold 10k–100k
+//!   idle keep-alive connections for the price of the active few.
+//! * [`PollSet`] (portable Unix): the same register/modify/deregister
+//!   API over a **persistent** `pollfd` array — entries are updated in
+//!   place on interest transitions instead of the array being rebuilt
+//!   every iteration, so the per-wakeup cost is one O(open) kernel scan
+//!   with zero allocation, not an O(open) rebuild *plus* the scan.
+//!
+//! Both deliver readiness as portable [`Event`]s into a caller-owned
+//! scratch vec, so the serving loop is written once and differentially
+//! tested across backends. [`supported`]/[`epoll_supported`] report
+//! availability at runtime; [`nofile_limit`] exposes
+//! `getrlimit(RLIMIT_NOFILE)` so callers can clamp connection caps to
+//! what the fd table actually allows.
 
-/// Whether the poll-based event loop can run on this platform.
+/// Whether any readiness backend (poll at minimum) can run here.
 pub fn supported() -> bool {
     cfg!(unix)
 }
 
+/// Whether the epoll backend can run on this platform.
+pub fn epoll_supported() -> bool {
+    cfg!(any(target_os = "linux", target_os = "android"))
+}
+
 #[cfg(unix)]
-pub use imp::{poll, PollFd, WakePipe, POLLERR, POLLHUP, POLLIN, POLLNVAL, POLLOUT};
+pub use imp::{
+    nofile_limit, poll, raise_nofile_limit, Event, PollFd, PollSet, Readiness, WakePipe, POLLERR,
+    POLLHUP, POLLIN, POLLNVAL, POLLOUT,
+};
+
+#[cfg(any(target_os = "linux", target_os = "android"))]
+pub use imp::Epoll;
 
 #[cfg(unix)]
 mod imp {
@@ -27,6 +55,9 @@ mod imp {
     use std::os::unix::io::RawFd;
 
     /// Readiness bits (identical values across the Unixes we target).
+    /// Also the portable *interest* language of [`Readiness`]: callers
+    /// ask for `POLLIN`/`POLLOUT` and receive [`Event`]s carrying the
+    /// same bits, whichever backend produced them.
     pub const POLLIN: i16 = 0x001;
     pub const POLLOUT: i16 = 0x004;
     pub const POLLERR: i16 = 0x008;
@@ -44,6 +75,11 @@ mod imp {
     type NfdsT = std::os::raw::c_ulong;
     #[cfg(not(any(target_os = "linux", target_os = "android")))]
     type NfdsT = std::os::raw::c_uint;
+
+    #[cfg(any(target_os = "linux", target_os = "android"))]
+    const RLIMIT_NOFILE: c_int = 7;
+    #[cfg(not(any(target_os = "linux", target_os = "android")))]
+    const RLIMIT_NOFILE: c_int = 8;
 
     /// One entry of a `poll(2)` set. `#[repr(C)]`-identical to the libc
     /// `struct pollfd`, so a `&mut [PollFd]` is passed straight through.
@@ -81,9 +117,29 @@ mod imp {
         }
     }
 
-    /// The raw POSIX surface, declared inline (no libc crate offline).
+    /// `getrlimit(2)`'s `struct rlimit` (both fields `rlim_t`, 64-bit on
+    /// every 64-bit Unix we target).
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+
+    /// `epoll_event` — packed on x86-64 (kernel ABI), natural alignment
+    /// elsewhere.
+    #[cfg(any(target_os = "linux", target_os = "android"))]
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    /// The raw POSIX/Linux surface, declared inline (no libc crate
+    /// offline).
     mod ffi {
-        use super::{c_int, c_void, NfdsT, PollFd};
+        use super::{c_int, c_void, NfdsT, PollFd, RLimit};
         extern "C" {
             pub fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: c_int) -> c_int;
             pub fn pipe(fds: *mut c_int) -> c_int;
@@ -91,6 +147,56 @@ mod imp {
             pub fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
             pub fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
             pub fn close(fd: c_int) -> c_int;
+            pub fn getrlimit(resource: c_int, rlim: *mut RLimit) -> c_int;
+            pub fn setrlimit(resource: c_int, rlim: *const RLimit) -> c_int;
+        }
+
+        #[cfg(any(target_os = "linux", target_os = "android"))]
+        extern "C" {
+            pub fn epoll_create1(flags: c_int) -> c_int;
+            pub fn epoll_ctl(
+                epfd: c_int,
+                op: c_int,
+                fd: c_int,
+                event: *mut super::EpollEvent,
+            ) -> c_int;
+            pub fn epoll_wait(
+                epfd: c_int,
+                events: *mut super::EpollEvent,
+                maxevents: c_int,
+                timeout: c_int,
+            ) -> c_int;
+        }
+    }
+
+    /// The process's open-file-descriptor limit as `(soft, hard)`.
+    /// `u64::MAX`-ish values mean "unlimited"; callers that clamp with
+    /// `min()` need no special case.
+    pub fn nofile_limit() -> Option<(u64, u64)> {
+        let mut r = RLimit { cur: 0, max: 0 };
+        if unsafe { ffi::getrlimit(RLIMIT_NOFILE, &mut r) } == 0 {
+            Some((r.cur, r.max))
+        } else {
+            None
+        }
+    }
+
+    /// Raise the soft `RLIMIT_NOFILE` toward `target` (never past the
+    /// hard limit) and return the resulting `(soft, hard)` pair. Meant
+    /// for socket-heavy benches that park tens of thousands of
+    /// connections in one process; the service itself only probes. A
+    /// refused `setrlimit` is not an error — the unchanged limits come
+    /// back and the caller clamps to them as usual.
+    pub fn raise_nofile_limit(target: u64) -> Option<(u64, u64)> {
+        let (soft, hard) = nofile_limit()?;
+        if soft >= target {
+            return Some((soft, hard));
+        }
+        let lifted = RLimit { cur: target.min(hard), max: hard };
+        if unsafe { ffi::setrlimit(RLIMIT_NOFILE, &lifted) } == 0 {
+            Some((lifted.cur, hard))
+        } else {
+            Some((soft, hard))
         }
     }
 
@@ -119,6 +225,306 @@ mod imp {
             return Err(io::Error::last_os_error());
         }
         Ok(())
+    }
+
+    /// One readiness report from a [`Readiness`] backend: the token the
+    /// fd was registered under plus its ready bits (in [`POLLIN`]-family
+    /// encoding regardless of backend).
+    #[derive(Clone, Copy, Debug)]
+    pub struct Event {
+        pub token: u64,
+        pub flags: i16,
+    }
+
+    impl Event {
+        pub fn readable(&self) -> bool {
+            self.flags & POLLIN != 0
+        }
+
+        pub fn writable(&self) -> bool {
+            self.flags & POLLOUT != 0
+        }
+
+        pub fn hangup(&self) -> bool {
+            self.flags & POLLHUP != 0
+        }
+
+        pub fn error(&self) -> bool {
+            self.flags & (POLLERR | POLLNVAL) != 0
+        }
+    }
+
+    /// Registration-based readiness over a **persistent** `poll(2)` set:
+    /// the portable fallback behind [`Readiness`].
+    ///
+    /// The `pollfd` array and its token mirror live across wakeups;
+    /// interest transitions update one entry in place and deregistration
+    /// swap-removes, so the steady state allocates nothing and touches
+    /// only the entries whose interest actually changed. The kernel scan
+    /// itself is still O(registered) per wakeup — that linear cost is
+    /// the backend's documented limitation (and what the epoll backend
+    /// removes), not an implementation artifact.
+    pub struct PollSet {
+        fds: Vec<PollFd>,
+        tokens: Vec<u64>,
+        slot_of: std::collections::HashMap<u64, usize>,
+    }
+
+    impl PollSet {
+        pub fn new() -> io::Result<PollSet> {
+            Ok(PollSet {
+                fds: Vec::new(),
+                tokens: Vec::new(),
+                slot_of: std::collections::HashMap::new(),
+            })
+        }
+
+        fn slot(&self, token: u64) -> io::Result<usize> {
+            self.slot_of
+                .get(&token)
+                .copied()
+                .ok_or_else(|| io::Error::new(io::ErrorKind::NotFound, "token not registered"))
+        }
+
+        pub fn register(&mut self, fd: RawFd, token: u64, interest: i16) -> io::Result<()> {
+            if self.slot_of.contains_key(&token) {
+                return Err(io::Error::new(io::ErrorKind::AlreadyExists, "token registered"));
+            }
+            self.slot_of.insert(token, self.fds.len());
+            self.fds.push(PollFd::new(fd, interest));
+            self.tokens.push(token);
+            Ok(())
+        }
+
+        pub fn modify(&mut self, _fd: RawFd, token: u64, interest: i16) -> io::Result<()> {
+            let slot = self.slot(token)?;
+            self.fds[slot].events = interest;
+            Ok(())
+        }
+
+        pub fn deregister(&mut self, _fd: RawFd, token: u64) -> io::Result<()> {
+            let slot = self.slot(token)?;
+            self.slot_of.remove(&token);
+            self.fds.swap_remove(slot);
+            self.tokens.swap_remove(slot);
+            if slot < self.tokens.len() {
+                self.slot_of.insert(self.tokens[slot], slot);
+            }
+            Ok(())
+        }
+
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+            out.clear();
+            let mut ready = poll(&mut self.fds, timeout_ms)?;
+            for (i, fd) in self.fds.iter_mut().enumerate() {
+                if ready == 0 {
+                    break;
+                }
+                if fd.revents != 0 {
+                    out.push(Event { token: self.tokens[i], flags: fd.revents });
+                    fd.revents = 0;
+                    ready -= 1;
+                }
+            }
+            Ok(())
+        }
+    }
+
+    /// Registration-based readiness over `epoll(7)`: sockets are added
+    /// once and interest is updated only on state transitions, so a
+    /// wakeup costs O(ready events) instead of O(open sockets).
+    /// Level-triggered (the default), matching `poll(2)` semantics so
+    /// the two backends are behaviorally interchangeable.
+    #[cfg(any(target_os = "linux", target_os = "android"))]
+    pub struct Epoll {
+        epfd: RawFd,
+        /// Kernel-filled scratch, reused across wakeups.
+        buf: Vec<EpollEvent>,
+    }
+
+    #[cfg(any(target_os = "linux", target_os = "android"))]
+    impl Epoll {
+        const EPOLL_CLOEXEC: c_int = 0o2000000;
+        const CTL_ADD: c_int = 1;
+        const CTL_DEL: c_int = 2;
+        const CTL_MOD: c_int = 3;
+        const EPOLLIN: u32 = 0x001;
+        const EPOLLOUT: u32 = 0x004;
+        const EPOLLERR: u32 = 0x008;
+        const EPOLLHUP: u32 = 0x010;
+        /// Ready events drained per `epoll_wait`; more stay queued for
+        /// the next wakeup (level-triggered), so this bounds per-wakeup
+        /// work without ever losing readiness.
+        const WAIT_BATCH: usize = 1024;
+
+        pub fn new() -> io::Result<Epoll> {
+            let epfd = unsafe { ffi::epoll_create1(Self::EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Epoll { epfd, buf: vec![EpollEvent { events: 0, data: 0 }; Self::WAIT_BATCH] })
+        }
+
+        fn interest_bits(interest: i16) -> u32 {
+            let mut ev = 0;
+            if interest & POLLIN != 0 {
+                ev |= Self::EPOLLIN;
+            }
+            if interest & POLLOUT != 0 {
+                ev |= Self::EPOLLOUT;
+            }
+            ev
+        }
+
+        fn ctl(&self, op: c_int, fd: RawFd, token: u64, interest: i16) -> io::Result<()> {
+            let mut ev = EpollEvent { events: Self::interest_bits(interest), data: token };
+            let rc = unsafe { ffi::epoll_ctl(self.epfd, op, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn register(&mut self, fd: RawFd, token: u64, interest: i16) -> io::Result<()> {
+            self.ctl(Self::CTL_ADD, fd, token, interest)
+        }
+
+        pub fn modify(&mut self, fd: RawFd, token: u64, interest: i16) -> io::Result<()> {
+            self.ctl(Self::CTL_MOD, fd, token, interest)
+        }
+
+        pub fn deregister(&mut self, fd: RawFd, token: u64) -> io::Result<()> {
+            self.ctl(Self::CTL_DEL, fd, token, 0)
+        }
+
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+            out.clear();
+            let n = loop {
+                let n = unsafe {
+                    ffi::epoll_wait(
+                        self.epfd,
+                        self.buf.as_mut_ptr(),
+                        self.buf.len() as c_int,
+                        timeout_ms,
+                    )
+                };
+                if n >= 0 {
+                    break n as usize;
+                }
+                let e = io::Error::last_os_error();
+                if e.kind() != io::ErrorKind::Interrupted {
+                    return Err(e);
+                }
+            };
+            for ev in &self.buf[..n] {
+                // Copy out of the (possibly packed) struct before use.
+                let (bits, token) = (ev.events, ev.data);
+                let mut flags = 0i16;
+                if bits & Self::EPOLLIN != 0 {
+                    flags |= POLLIN;
+                }
+                if bits & Self::EPOLLOUT != 0 {
+                    flags |= POLLOUT;
+                }
+                if bits & Self::EPOLLERR != 0 {
+                    flags |= POLLERR;
+                }
+                if bits & Self::EPOLLHUP != 0 {
+                    flags |= POLLHUP;
+                }
+                out.push(Event { token, flags });
+            }
+            Ok(())
+        }
+    }
+
+    #[cfg(any(target_os = "linux", target_os = "android"))]
+    impl Drop for Epoll {
+        fn drop(&mut self) {
+            unsafe {
+                ffi::close(self.epfd);
+            }
+        }
+    }
+
+    /// The serving loop's readiness facade: one registration API, two
+    /// interchangeable backends. Construction order of preference is the
+    /// caller's business ([`Readiness::epoll`] where supported,
+    /// [`Readiness::poll_set`] as the portable fallback); everything
+    /// after construction is backend-agnostic, which is what makes the
+    /// epoll/poll transports differentially testable byte-for-byte.
+    pub enum Readiness {
+        #[cfg(any(target_os = "linux", target_os = "android"))]
+        Epoll(Epoll),
+        Poll(PollSet),
+    }
+
+    impl Readiness {
+        /// The O(ready)-per-wakeup backend; `None` off Linux.
+        pub fn epoll() -> Option<io::Result<Readiness>> {
+            #[cfg(any(target_os = "linux", target_os = "android"))]
+            {
+                Some(Epoll::new().map(Readiness::Epoll))
+            }
+            #[cfg(not(any(target_os = "linux", target_os = "android")))]
+            {
+                None
+            }
+        }
+
+        /// The portable poll(2) backend.
+        pub fn poll_set() -> io::Result<Readiness> {
+            PollSet::new().map(Readiness::Poll)
+        }
+
+        /// Short name for logs/stats ("epoll" | "poll").
+        pub fn name(&self) -> &'static str {
+            match self {
+                #[cfg(any(target_os = "linux", target_os = "android"))]
+                Readiness::Epoll(_) => "epoll",
+                Readiness::Poll(_) => "poll",
+            }
+        }
+
+        /// Start watching `fd` under `token` with the given interest
+        /// bits ([`POLLIN`] | [`POLLOUT`]; 0 = errors/hangup only).
+        pub fn register(&mut self, fd: RawFd, token: u64, interest: i16) -> io::Result<()> {
+            match self {
+                #[cfg(any(target_os = "linux", target_os = "android"))]
+                Readiness::Epoll(e) => e.register(fd, token, interest),
+                Readiness::Poll(p) => p.register(fd, token, interest),
+            }
+        }
+
+        /// Change the interest of a registered fd (call only on actual
+        /// transitions — that is the whole point of registration).
+        pub fn modify(&mut self, fd: RawFd, token: u64, interest: i16) -> io::Result<()> {
+            match self {
+                #[cfg(any(target_os = "linux", target_os = "android"))]
+                Readiness::Epoll(e) => e.modify(fd, token, interest),
+                Readiness::Poll(p) => p.modify(fd, token, interest),
+            }
+        }
+
+        /// Stop watching a registered fd (before closing it).
+        pub fn deregister(&mut self, fd: RawFd, token: u64) -> io::Result<()> {
+            match self {
+                #[cfg(any(target_os = "linux", target_os = "android"))]
+                Readiness::Epoll(e) => e.deregister(fd, token),
+                Readiness::Poll(p) => p.deregister(fd, token),
+            }
+        }
+
+        /// Collect ready events into `out` (cleared first; the caller
+        /// owns and reuses the scratch), waiting at most `timeout_ms`
+        /// (-1 = forever). Retries transparently on `EINTR`.
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+            match self {
+                #[cfg(any(target_os = "linux", target_os = "android"))]
+                Readiness::Epoll(e) => e.wait(out, timeout_ms),
+                Readiness::Poll(p) => p.wait(out, timeout_ms),
+            }
+        }
     }
 
     /// Self-wake channel for the event loop: worker threads call
@@ -254,6 +660,116 @@ mod imp {
             let mut fds = [PollFd::new(server.as_raw_fd(), POLLIN)];
             assert_eq!(poll(&mut fds, 2000).unwrap(), 1);
             assert!(fds[0].readable() || fds[0].hangup());
+        }
+
+        #[test]
+        fn nofile_limit_is_probed() {
+            let (soft, hard) = nofile_limit().expect("getrlimit(RLIMIT_NOFILE)");
+            assert!(soft >= 64, "implausibly small fd limit: {soft}");
+            assert!(hard >= soft);
+        }
+
+        /// Every available backend reports the same readiness story for
+        /// the same socket choreography: registration, interest
+        /// transitions, peer data, deregistration.
+        #[test]
+        fn readiness_backends_report_identical_transitions() {
+            use std::io::Write;
+            use std::os::unix::io::AsRawFd;
+
+            let mut backends: Vec<Readiness> = vec![Readiness::poll_set().unwrap()];
+            if let Some(e) = Readiness::epoll() {
+                backends.push(e.unwrap());
+            }
+            #[cfg(any(target_os = "linux", target_os = "android"))]
+            assert_eq!(backends.len(), 2, "epoll must be available on Linux");
+
+            for mut r in backends {
+                let name = r.name();
+                let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+                let port = listener.local_addr().unwrap().port();
+                let mut client = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+                let (server, _) = listener.accept().unwrap();
+                server.set_nonblocking(true).unwrap();
+                let fd = server.as_raw_fd();
+                let mut events = Vec::new();
+
+                // Read-only interest on a quiet socket: silence.
+                r.register(fd, 7, POLLIN).unwrap();
+                r.wait(&mut events, 0).unwrap();
+                assert!(events.is_empty(), "{name}: quiet socket reported {events:?}");
+
+                // Peer data arrives: readable under the right token.
+                client.write_all(b"x").unwrap();
+                client.flush().unwrap();
+                r.wait(&mut events, 2000).unwrap();
+                assert_eq!(events.len(), 1, "{name}: {events:?}");
+                assert_eq!(events[0].token, 7);
+                assert!(events[0].readable());
+                assert!(!events[0].writable(), "{name}: writable not requested");
+
+                // Interest transition to write-armed: immediately
+                // writable (and still readable — unread data pends).
+                r.modify(fd, 7, POLLIN | POLLOUT).unwrap();
+                r.wait(&mut events, 2000).unwrap();
+                assert_eq!(events.len(), 1, "{name}: {events:?}");
+                assert!(events[0].writable(), "{name}");
+                assert!(events[0].readable(), "{name}: level-triggered data must re-report");
+
+                // Interest 0: data still unread, but nothing requested.
+                r.modify(fd, 7, 0).unwrap();
+                r.wait(&mut events, 0).unwrap();
+                assert!(
+                    events.iter().all(|e| e.flags & (POLLIN | POLLOUT) == 0),
+                    "{name}: paused socket reported requested bits: {events:?}"
+                );
+
+                // Peer close surfaces even at interest 0 (HUP class) or
+                // once read interest is restored.
+                drop(client);
+                r.modify(fd, 7, POLLIN).unwrap();
+                r.wait(&mut events, 2000).unwrap();
+                assert_eq!(events.len(), 1, "{name}: {events:?}");
+                assert!(events[0].readable() || events[0].hangup(), "{name}");
+
+                // Deregistered: silent again, and re-registration works.
+                r.deregister(fd, 7).unwrap();
+                r.wait(&mut events, 0).unwrap();
+                assert!(events.is_empty(), "{name}: deregistered fd reported {events:?}");
+                r.register(fd, 9, POLLIN).unwrap();
+                r.wait(&mut events, 2000).unwrap();
+                assert_eq!(events.len(), 1, "{name}");
+                assert_eq!(events[0].token, 9, "{name}");
+            }
+        }
+
+        /// PollSet keeps its token map consistent across swap-removes.
+        #[test]
+        fn poll_set_deregister_swaps_tokens_correctly() {
+            use std::os::unix::io::AsRawFd;
+            let pipes: Vec<WakePipe> = (0..4).map(|_| WakePipe::new().unwrap()).collect();
+            let mut set = PollSet::new().unwrap();
+            for (i, p) in pipes.iter().enumerate() {
+                set.register(p.read_fd(), i as u64, POLLIN).unwrap();
+            }
+            // Remove the first entry: the last one swaps into its slot.
+            set.deregister(pipes[0].read_fd(), 0).unwrap();
+            // The swapped entry must still be reachable by token.
+            pipes[3].wake();
+            let mut events = Vec::new();
+            set.wait(&mut events, 1000).unwrap();
+            assert_eq!(events.len(), 1);
+            assert_eq!(events[0].token, 3);
+            assert!(events[0].readable());
+            // And modifying it by token touches the right fd.
+            set.modify(pipes[3].read_fd(), 3, 0).unwrap();
+            pipes[3].wake();
+            set.wait(&mut events, 0).unwrap();
+            assert!(events.is_empty(), "interest 0 must silence the swapped entry");
+            // Double-registering a live token errors; unknown tokens err.
+            assert!(set.register(pipes[1].read_fd(), 1, POLLIN).is_err());
+            assert!(set.modify(0, 99, POLLIN).is_err());
+            assert!(set.deregister(0, 99).is_err());
         }
     }
 }
