@@ -5,7 +5,9 @@
 //! * **requests/sec** through `Service::handle` for deterministic-mode
 //!   requests, cold (every request a distinct cache key, full trial) vs.
 //!   response-cached (repeat keys answered from the scheduler's
-//!   cross-request cache with zero new measurements);
+//!   cross-request cache with zero new measurements), plus the same
+//!   sweeps through the shared `FrameScanner` + `Service::serve_frame`
+//!   wire path once per codec (`[codec=json]` / `[codec=binary]`);
 //! * **per-sweep fan-out latency**: the Rising-Bandits-shaped pattern
 //!   (many small K-way fan-outs per trial) on the persistent worker team
 //!   vs. the old spawn-scoped-threads-per-sweep path
@@ -28,6 +30,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use multicloud::benchkit::{black_box, Suite};
+use multicloud::coordinator::codec;
 use multicloud::coordinator::service::{Service, Transport};
 use multicloud::dataset::OfflineDataset;
 use multicloud::surrogate::NativeBackend;
@@ -69,6 +72,63 @@ fn main() {
         "\nrequests/sec   cold {cold_rps:>10.1}   cached {cached_rps:>12.1}   ({:.0}x)",
         cached_rps / cold_rps.max(1e-12)
     );
+
+    // -- per-codec wire path: framing + decode + dispatch + encode ----------
+    //
+    // The same cold/cached sweeps pushed through the shared FrameScanner
+    // and `Service::serve_frame` — everything a request costs above the
+    // socket read, per codec. The `Service::handle` labels above are the
+    // PR 6 regression guard; these pin the codec seam itself. The binary
+    // codec's cached-hit edge (no newline scan, no UTF-8 validation,
+    // length-prefixed writes straight from the cache string) is recorded
+    // here, not asserted: the JSON payload parse dominates both.
+    let mut cached_by_codec: Vec<(&str, f64)> = Vec::new();
+    for (codec_name, codec) in [
+        ("json", &codec::JSON_LINES as &'static dyn codec::Codec),
+        ("binary", &codec::BINARY),
+    ] {
+        let svc = Service::new(Arc::clone(&ds), Arc::new(NativeBackend));
+        // Pre-negotiated scanner (no magic sniff): exactly a connection
+        // that already completed its hello.
+        let mut scanner = codec::FrameScanner::new();
+        scanner.set_codec(codec);
+        let mut wire = Vec::new();
+        let serve = |line: &str, scanner: &mut codec::FrameScanner, wire: &mut Vec<u8>| {
+            wire.clear();
+            codec.encode_frame(line, wire);
+            scanner.push(wire);
+            let frame = scanner.next_frame().expect("under cap").expect("whole frame");
+            svc.serve_frame(&frame, codec)
+        };
+
+        let mut seed = 0usize;
+        suite.bench(&format!("optimize: cold [codec={codec_name}]"), || {
+            seed += 1;
+            black_box(serve(&req(seed), &mut scanner, &mut wire))
+        });
+
+        let warm_line = req(1);
+        assert!(
+            !serve(&warm_line, &mut scanner, &mut wire).is_empty(),
+            "warm request must produce a response frame"
+        );
+        let reads_before = ds.measurement_reads();
+        let warm = suite.bench(&format!("optimize: response-cached [codec={codec_name}]"), || {
+            black_box(serve(&warm_line, &mut scanner, &mut wire))
+        });
+        assert_eq!(
+            ds.measurement_reads(),
+            reads_before,
+            "[codec={codec_name}] cached requests must perform zero new source measurements"
+        );
+        cached_by_codec.push((codec_name, 1e9 / warm.mean_ns));
+    }
+    if let [(_, json_rps), (_, bin_rps)] = cached_by_codec[..] {
+        println!(
+            "wire cached    json {json_rps:>10.1}   binary {bin_rps:>12.1}   ({:.2}x)",
+            bin_rps / json_rps.max(1e-12)
+        );
+    }
 
     // -- per-sweep fan-out: spawn-per-sweep vs persistent team --------------
     //

@@ -1,0 +1,572 @@
+//! Wire framing and codecs: the one place the service's byte-level
+//! protocol rules live.
+//!
+//! Until PR 7 the framing contract (1 MiB frame cap, newline split,
+//! non-UTF-8 close, blank-line skip) was implemented twice — once in the
+//! threaded transport's `read_frame`, once in the event loop's
+//! `extract_frames` — with parity pinned only by tests. Both transports
+//! now consume one incremental [`FrameScanner`], so divergence is
+//! structurally impossible, and the scanner carries a codec seam:
+//!
+//! * [`JsonLinesCodec`] — the default wire format since PR 3:
+//!   newline-delimited JSON objects. Frames are split by scanning for
+//!   `\n`; blank (all-ASCII-whitespace) frames are skipped.
+//! * [`BinaryCodec`] — a compact length-prefixed format for high-volume
+//!   clients: each frame is a 4-byte little-endian payload length
+//!   followed by that many bytes of JSON. Splitting is O(1) — no
+//!   byte-by-byte newline scan — and the frame cap is enforced from the
+//!   length prefix alone, *before* any payload is buffered. Zero-length
+//!   frames are skipped (the blank-frame rule's binary analogue).
+//!
+//! A connection selects its codec per the `AnyCodec::from_name` shape
+//! (see SNIPPETS.md: turbomcp-wire / remoc / malachite):
+//!
+//! * **Magic-byte sniff** — a first byte of [`BINARY_MAGIC`] (`0xB1`,
+//!   an invalid UTF-8 lead byte, so it can never open a JSON-lines
+//!   frame) switches the scanner to the binary codec and is consumed.
+//! * **First-frame hello** — `{"op":"hello","codec":"json"|"binary"}`
+//!   as the first frame answers `{"ok":true,"codec":<name>}` encoded in
+//!   the *current* codec, then switches. An unknown name answers one
+//!   JSON error and the connection closes ([`Greeting::Reject`]).
+//!
+//! Everything transports need is here: [`FrameScanner`] (framing),
+//! [`from_name`] (negotiation), [`greet`] (first-frame hello
+//! handling), and [`oversize_message`] (the single definition of the
+//! frame-cap error, so the PR 5 class of per-transport divergence in
+//! oversize handling cannot recur).
+
+use crate::util::json::{parse_bytes, Value};
+
+/// Largest accepted request frame in bytes. For JSON lines this is one
+/// line, newline excluded; for the binary codec it caps the declared
+/// payload length. A connection that exceeds it gets one error response
+/// and a close — on every transport — so a garbage client cannot
+/// balloon server memory through an endless unterminated frame.
+pub const MAX_FRAME: usize = 1 << 20;
+
+/// First byte of a binary-codec connection. An invalid UTF-8 lead byte,
+/// so no JSON-lines client can ever send it first by accident.
+pub const BINARY_MAGIC: u8 = 0xB1;
+
+/// Codec wire names, in negotiation-advertisement order.
+pub const CODEC_NAMES: [&str; 2] = ["json", "binary"];
+
+/// The frame-cap violation, defined once for every transport and codec.
+pub fn oversize_message() -> String {
+    format!("frame larger than {MAX_FRAME} bytes")
+}
+
+/// Fatal framing failure: the frame (or its declared length) exceeds
+/// [`MAX_FRAME`]. The connection owes one error response, then closes.
+#[derive(Debug, PartialEq, Eq)]
+pub struct Oversize;
+
+/// Why a frame failed to decode into a request.
+pub enum DecodeError {
+    /// Valid UTF-8 but not valid JSON: answer an error response and
+    /// keep the connection alive (a client bug, not a protocol break).
+    Malformed(String),
+    /// Not UTF-8 at all: close cleanly without a response (the peer is
+    /// not speaking this protocol; bytes written back could confuse it
+    /// further).
+    Fatal,
+}
+
+/// One complete frame located inside a scan buffer: the payload lies at
+/// `buf[start..end]`, and `consumed` bytes (payload plus framing) are
+/// finished once the payload is taken.
+pub struct RawFrame {
+    pub start: usize,
+    pub end: usize,
+    pub consumed: usize,
+}
+
+/// One wire format: how frames are split off the byte stream, decoded
+/// into requests, and how response payloads are framed back. Static
+/// instances only ([`JSON_LINES`], [`BINARY`]) — a connection holds a
+/// `&'static dyn Codec`, so switching codecs is a pointer swap.
+pub trait Codec: Send + Sync {
+    /// Wire name used by negotiation, `stats`, and the test matrix.
+    fn name(&self) -> &'static str;
+
+    /// Try to split one frame off the front of `buf`. `Ok(None)` means
+    /// more bytes are needed; `Err(Oversize)` means the frame (complete
+    /// or not) already violates [`MAX_FRAME`].
+    fn split_frame(&self, buf: &[u8]) -> Result<Option<RawFrame>, Oversize>;
+
+    /// Whether a split-off payload carries no request and is skipped
+    /// (blank line / zero-length binary frame).
+    fn is_blank(&self, payload: &[u8]) -> bool {
+        payload.is_empty()
+    }
+
+    /// Decode one frame payload into a request value.
+    fn decode_request(&self, payload: &[u8]) -> Result<Value, DecodeError>;
+
+    /// Frame a JSON payload for the wire. Used for responses on the
+    /// server and requests on clients — both directions frame alike.
+    fn encode_frame(&self, payload: &str, out: &mut Vec<u8>);
+}
+
+/// Decode a JSON payload, classifying failures per the shared contract:
+/// non-UTF-8 is fatal (close), anything else is a malformed request
+/// (error response). Both codecs carry JSON payloads, so both use this.
+fn decode_json(payload: &[u8]) -> Result<Value, DecodeError> {
+    parse_bytes(payload).map_err(|e| {
+        if std::str::from_utf8(payload).is_err() {
+            DecodeError::Fatal
+        } else {
+            DecodeError::Malformed(e)
+        }
+    })
+}
+
+/// Newline-delimited JSON (the default codec).
+pub struct JsonLinesCodec;
+
+/// Length-prefixed JSON: 4-byte little-endian payload length, then the
+/// payload bytes.
+pub struct BinaryCodec;
+
+/// The static JSON-lines codec instance.
+pub static JSON_LINES: JsonLinesCodec = JsonLinesCodec;
+
+/// The static binary codec instance.
+pub static BINARY: BinaryCodec = BinaryCodec;
+
+/// Resolve a negotiated codec name (`AnyCodec::from_name` shape).
+pub fn from_name(name: &str) -> Option<&'static dyn Codec> {
+    match name {
+        "json" => Some(&JSON_LINES),
+        "binary" => Some(&BINARY),
+        _ => None,
+    }
+}
+
+impl Codec for JsonLinesCodec {
+    fn name(&self) -> &'static str {
+        "json"
+    }
+
+    fn split_frame(&self, buf: &[u8]) -> Result<Option<RawFrame>, Oversize> {
+        match buf.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                if pos > MAX_FRAME {
+                    return Err(Oversize);
+                }
+                Ok(Some(RawFrame { start: 0, end: pos, consumed: pos + 1 }))
+            }
+            None => {
+                // Unterminated data past the cap is oversize *now*, not
+                // whenever the newline finally lands (or never does).
+                if buf.len() > MAX_FRAME {
+                    return Err(Oversize);
+                }
+                Ok(None)
+            }
+        }
+    }
+
+    fn is_blank(&self, payload: &[u8]) -> bool {
+        payload.iter().all(u8::is_ascii_whitespace)
+    }
+
+    fn decode_request(&self, payload: &[u8]) -> Result<Value, DecodeError> {
+        decode_json(payload)
+    }
+
+    fn encode_frame(&self, payload: &str, out: &mut Vec<u8>) {
+        out.extend_from_slice(payload.as_bytes());
+        out.push(b'\n');
+    }
+}
+
+impl Codec for BinaryCodec {
+    fn name(&self) -> &'static str {
+        "binary"
+    }
+
+    fn split_frame(&self, buf: &[u8]) -> Result<Option<RawFrame>, Oversize> {
+        if buf.len() < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+        // The cap is enforced from the prefix alone: an oversized frame
+        // is rejected before a single payload byte is buffered.
+        if len > MAX_FRAME {
+            return Err(Oversize);
+        }
+        if buf.len() < 4 + len {
+            return Ok(None);
+        }
+        Ok(Some(RawFrame { start: 4, end: 4 + len, consumed: 4 + len }))
+    }
+
+    fn decode_request(&self, payload: &[u8]) -> Result<Value, DecodeError> {
+        decode_json(payload)
+    }
+
+    fn encode_frame(&self, payload: &str, out: &mut Vec<u8>) {
+        // Responses are written straight from the payload string (a
+        // cached hit's pre-serialized entry): one length prefix, one
+        // copy, no newline scan and no UTF-8 validation pass.
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(payload.as_bytes());
+    }
+}
+
+/// The shared incremental frame scanner: both transports feed raw
+/// socket bytes in with [`push`](FrameScanner::push) and pull complete
+/// frame payloads out with [`next_frame`](FrameScanner::next_frame).
+/// Owns the connection's active codec — the magic-byte sniff happens
+/// here, and a hello-negotiated switch ([`set_codec`]
+/// (FrameScanner::set_codec)) re-scans any bytes already buffered under
+/// the new codec, so a pipelined `hello` + binary burst in one TCP
+/// segment parses correctly.
+pub struct FrameScanner {
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf` (compacted on the next push).
+    pos: usize,
+    codec: &'static dyn Codec,
+    /// First byte of the connection not yet seen: the magic sniff is
+    /// still pending.
+    sniff: bool,
+}
+
+impl Default for FrameScanner {
+    fn default() -> FrameScanner {
+        FrameScanner::new()
+    }
+}
+
+impl FrameScanner {
+    /// A scanner in the default state: JSON lines, magic sniff armed.
+    pub fn new() -> FrameScanner {
+        FrameScanner { buf: Vec::new(), pos: 0, codec: &JSON_LINES, sniff: true }
+    }
+
+    /// The connection's active codec.
+    pub fn codec(&self) -> &'static dyn Codec {
+        self.codec
+    }
+
+    /// Switch codecs (hello negotiation). Bytes already buffered are
+    /// re-scanned under the new codec; the magic sniff is disarmed.
+    pub fn set_codec(&mut self, codec: &'static dyn Codec) {
+        self.codec = codec;
+        self.sniff = false;
+    }
+
+    /// Bytes buffered but not yet consumed (unterminated partial frame
+    /// plus anything not yet pulled).
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Discard everything buffered (the oversize path: the connection
+    /// is closing, leftover bytes must not balloon memory).
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.pos = 0;
+    }
+
+    /// Feed raw bytes off the socket.
+    pub fn push(&mut self, bytes: &[u8]) {
+        if self.pos > 0 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pull the next complete, non-blank frame payload, if one is
+    /// buffered. `Err(Oversize)` is terminal for the connection: the
+    /// caller answers [`oversize_message`] once and closes.
+    pub fn next_frame(&mut self) -> Result<Option<Vec<u8>>, Oversize> {
+        loop {
+            if self.sniff {
+                match self.buf.get(self.pos) {
+                    None => return Ok(None),
+                    Some(&BINARY_MAGIC) => {
+                        self.pos += 1;
+                        self.codec = &BINARY;
+                        self.sniff = false;
+                    }
+                    Some(_) => self.sniff = false,
+                }
+            }
+            let rest = &self.buf[self.pos..];
+            match self.codec.split_frame(rest)? {
+                None => return Ok(None),
+                Some(raw) => {
+                    let payload = rest[raw.start..raw.end].to_vec();
+                    self.pos += raw.consumed;
+                    if self.codec.is_blank(&payload) {
+                        continue;
+                    }
+                    return Ok(Some(payload));
+                }
+            }
+        }
+    }
+}
+
+/// How to treat the first frame of a connection (hello negotiation).
+pub enum Greeting {
+    /// A normal request: serve it under the scanner's current codec.
+    Request,
+    /// A valid hello: send `reply` (already framed in the pre-switch
+    /// codec), then continue under `next`.
+    Switch { reply: Vec<u8>, next: &'static dyn Codec },
+    /// A hello naming an unknown codec: send `reply` (one JSON error),
+    /// then close.
+    Reject { reply: Vec<u8> },
+}
+
+/// Classify the first frame of a connection. Anything that is not a
+/// well-formed `{"op":"hello",...}` — including unparseable garbage —
+/// is a [`Greeting::Request`] and takes the normal request path (which
+/// owns the error/close behavior for malformed frames). Only the first
+/// frame is greeted; a later `hello` reaches the request handler and is
+/// answered with an error there.
+pub fn greet(payload: &[u8], current: &'static dyn Codec) -> Greeting {
+    // Cheap pre-filter: a hello necessarily contains the word "hello",
+    // so the overwhelmingly common non-hello first frame skips the
+    // synchronous parse entirely.
+    if !payload.windows(5).any(|w| w == b"hello") {
+        return Greeting::Request;
+    }
+    let Ok(req) = current.decode_request(payload) else {
+        return Greeting::Request;
+    };
+    if req.get("op").and_then(Value::as_str) != Some("hello") {
+        return Greeting::Request;
+    }
+    let name = match req.get("codec") {
+        // A bare hello acknowledges the codec already in effect.
+        None => current.name(),
+        Some(v) => v.as_str().unwrap_or(""),
+    };
+    match from_name(name) {
+        Some(next) => {
+            let ack = Value::obj(vec![
+                ("ok", true.into()),
+                ("codec", Value::str(next.name())),
+            ])
+            .to_string_compact();
+            let mut reply = Vec::new();
+            current.encode_frame(&ack, &mut reply);
+            Greeting::Switch { reply, next }
+        }
+        None => {
+            let err = Value::obj(vec![
+                ("ok", false.into()),
+                (
+                    "error",
+                    format!("unknown codec '{name}' (available: {})", CODEC_NAMES.join(", "))
+                        .into(),
+                ),
+            ])
+            .to_string_compact();
+            let mut reply = Vec::new();
+            current.encode_frame(&err, &mut reply);
+            Greeting::Reject { reply }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frames(scanner: &mut FrameScanner) -> Vec<String> {
+        let mut out = Vec::new();
+        while let Ok(Some(f)) = scanner.next_frame() {
+            out.push(String::from_utf8(f).unwrap());
+        }
+        out
+    }
+
+    #[test]
+    fn json_lines_split_blank_skip_and_partial() {
+        let mut s = FrameScanner::new();
+        s.push(b"{\"op\":\"ping\"}\n\n  \t\r\n{\"a\":1}\n{\"tail");
+        assert_eq!(frames(&mut s), vec!["{\"op\":\"ping\"}", "{\"a\":1}"]);
+        assert_eq!(s.buffered(), 6, "partial frame stays buffered");
+        s.push(b"\":2}\n");
+        assert_eq!(frames(&mut s), vec!["{\"tail\":2}"]);
+        assert_eq!(s.buffered(), 0);
+    }
+
+    #[test]
+    fn byte_by_byte_trickle_assembles_one_frame() {
+        let mut s = FrameScanner::new();
+        for &b in b"{\"op\":\"ping\"}" {
+            s.push(&[b]);
+            assert!(matches!(s.next_frame(), Ok(None)));
+        }
+        s.push(b"\n");
+        assert_eq!(frames(&mut s), vec!["{\"op\":\"ping\"}"]);
+    }
+
+    #[test]
+    fn json_oversize_terminated_and_unterminated() {
+        // Terminated frame one past the cap.
+        let mut s = FrameScanner::new();
+        let mut big = vec![b'x'; MAX_FRAME + 1];
+        big.push(b'\n');
+        s.push(&big);
+        assert!(s.next_frame().is_err());
+        // Unterminated data past the cap trips without any newline.
+        let mut s = FrameScanner::new();
+        s.push(&vec![b'x'; MAX_FRAME + 1]);
+        assert!(s.next_frame().is_err());
+        // Exactly at the cap is fine.
+        let mut s = FrameScanner::new();
+        let mut ok = vec![b'x'; MAX_FRAME];
+        ok.push(b'\n');
+        s.push(&ok);
+        assert_eq!(s.next_frame().unwrap().unwrap().len(), MAX_FRAME);
+    }
+
+    #[test]
+    fn magic_sniff_switches_to_binary() {
+        let mut s = FrameScanner::new();
+        assert_eq!(s.codec().name(), "json");
+        let payload = br#"{"op":"ping"}"#;
+        let mut wire = vec![BINARY_MAGIC];
+        wire.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        wire.extend_from_slice(payload);
+        s.push(&wire);
+        assert_eq!(frames(&mut s), vec![r#"{"op":"ping"}"#]);
+        assert_eq!(s.codec().name(), "binary");
+    }
+
+    #[test]
+    fn binary_length_prefix_split_across_pushes() {
+        let payload = br#"{"op":"stats"}"#;
+        let mut wire = vec![BINARY_MAGIC];
+        wire.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        wire.extend_from_slice(payload);
+        // Trickle the whole thing one byte at a time: the frame must
+        // appear exactly once, exactly when the last byte lands.
+        let mut s = FrameScanner::new();
+        for &b in &wire[..wire.len() - 1] {
+            s.push(&[b]);
+            assert!(s.next_frame().unwrap().is_none(), "no frame before the last byte");
+        }
+        s.push(&wire[wire.len() - 1..]);
+        assert_eq!(frames(&mut s), vec![r#"{"op":"stats"}"#]);
+    }
+
+    #[test]
+    fn binary_zero_length_frames_are_skipped() {
+        let payload = br#"{"op":"ping"}"#;
+        let mut s = FrameScanner::new();
+        let mut wire = vec![BINARY_MAGIC];
+        wire.extend_from_slice(&0u32.to_le_bytes());
+        wire.extend_from_slice(&0u32.to_le_bytes());
+        wire.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        wire.extend_from_slice(payload);
+        s.push(&wire);
+        assert_eq!(frames(&mut s), vec![r#"{"op":"ping"}"#]);
+    }
+
+    #[test]
+    fn binary_oversize_rejected_from_the_prefix_alone() {
+        let mut s = FrameScanner::new();
+        let mut wire = vec![BINARY_MAGIC];
+        wire.extend_from_slice(&((MAX_FRAME + 1) as u32).to_le_bytes());
+        wire.extend_from_slice(b"only a few payload bytes");
+        s.push(&wire);
+        assert!(s.next_frame().is_err(), "cap must trip before the payload arrives");
+        // A declared length of exactly MAX_FRAME is accepted.
+        let mut s = FrameScanner::new();
+        let mut wire = vec![BINARY_MAGIC];
+        wire.extend_from_slice(&(MAX_FRAME as u32).to_le_bytes());
+        wire.extend_from_slice(&vec![b'z'; MAX_FRAME]);
+        s.push(&wire);
+        assert_eq!(s.next_frame().unwrap().unwrap().len(), MAX_FRAME);
+    }
+
+    #[test]
+    fn set_codec_rescans_buffered_bytes() {
+        // A pipelined hello + binary frame in one push: after the
+        // caller switches codecs, the already-buffered binary frame
+        // parses under the new rules.
+        let payload = br#"{"op":"ping"}"#;
+        let mut s = FrameScanner::new();
+        let mut wire = Vec::new();
+        wire.extend_from_slice(b"{\"op\":\"hello\",\"codec\":\"binary\"}\n");
+        wire.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        wire.extend_from_slice(payload);
+        s.push(&wire);
+        let hello = s.next_frame().unwrap().unwrap();
+        match greet(&hello, s.codec()) {
+            Greeting::Switch { next, .. } => s.set_codec(next),
+            _ => panic!("hello must negotiate"),
+        }
+        assert_eq!(frames(&mut s), vec![r#"{"op":"ping"}"#]);
+    }
+
+    #[test]
+    fn greet_outcomes() {
+        let cur: &'static dyn Codec = &JSON_LINES;
+        // Normal requests, garbage, and non-first-position shapes pass
+        // through untouched.
+        assert!(matches!(greet(br#"{"op":"ping"}"#, cur), Greeting::Request));
+        assert!(matches!(greet(b"!! not json with hello in it !!", cur), Greeting::Request));
+        assert!(matches!(greet(br#"{"note":"say hello"}"#, cur), Greeting::Request));
+        // A valid switch acks in the current (json) framing.
+        match greet(br#"{"op":"hello","codec":"binary"}"#, cur) {
+            Greeting::Switch { reply, next } => {
+                assert_eq!(next.name(), "binary");
+                assert_eq!(reply, b"{\"ok\":true,\"codec\":\"binary\"}\n");
+            }
+            _ => panic!("expected a switch"),
+        }
+        // A bare hello acks the codec already in effect.
+        match greet(br#"{"op":"hello"}"#, cur) {
+            Greeting::Switch { next, .. } => assert_eq!(next.name(), "json"),
+            _ => panic!("expected an ack"),
+        }
+        // Unknown names are rejected with one JSON error.
+        match greet(br#"{"op":"hello","codec":"msgpack"}"#, cur) {
+            Greeting::Reject { reply } => {
+                let text = String::from_utf8(reply).unwrap();
+                assert!(text.contains("unknown codec 'msgpack'"), "{text}");
+                assert!(text.contains("json"), "{text}");
+            }
+            _ => panic!("expected a reject"),
+        }
+    }
+
+    #[test]
+    fn decode_classifies_failures() {
+        assert!(matches!(decode_json(br#"{"op":"ping"}"#), Ok(_)));
+        assert!(matches!(decode_json(b"not json"), Err(DecodeError::Malformed(_))));
+        assert!(matches!(decode_json(&[0xff, 0xfe, 0x80]), Err(DecodeError::Fatal)));
+    }
+
+    #[test]
+    fn from_name_resolves_exactly_the_advertised_set() {
+        for name in CODEC_NAMES {
+            assert_eq!(from_name(name).unwrap().name(), name);
+        }
+        assert!(from_name("msgpack").is_none());
+        assert!(from_name("").is_none());
+    }
+
+    #[test]
+    fn encode_frame_roundtrips_through_split() {
+        for codec in [&JSON_LINES as &'static dyn Codec, &BINARY] {
+            let mut wire = Vec::new();
+            codec.encode_frame(r#"{"ok":true}"#, &mut wire);
+            codec.encode_frame(r#"{"ok":false}"#, &mut wire);
+            let mut s = FrameScanner::new();
+            s.set_codec(codec);
+            s.push(&wire);
+            assert_eq!(frames(&mut s), vec![r#"{"ok":true}"#, r#"{"ok":false}"#], "{}", codec.name());
+        }
+    }
+}

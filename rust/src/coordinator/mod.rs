@@ -1,5 +1,7 @@
 //! L3 coordinator: the experiment launcher and runtime.
 //!
+//! * [`codec`]      — the service's wire layer: one shared frame
+//!   scanner plus pluggable per-connection codecs (JSON lines, binary).
 //! * [`experiment`] — declarative experiment grids (method x workload x
 //!   budget x seed x target) executed on the work-queue thread pool; the
 //!   engine behind every figure and the CLI.
@@ -8,6 +10,7 @@
 //!   optimizer suite (the "request path": rust only, artifacts loaded
 //!   once, python never involved).
 
+pub mod codec;
 pub mod experiment;
 pub mod savings;
 pub mod service;

@@ -1,8 +1,11 @@
 //! TCP optimization service: the long-running "request path" deployment.
 //!
-//! Line-delimited JSON over TCP. The server loads the offline dataset and
-//! the PJRT artifacts once at startup; each request runs one optimization
-//! and returns the recommended deployment. Python is never involved.
+//! JSON requests over TCP, framed by a per-connection codec (newline-
+//! delimited by default, length-prefixed binary by negotiation — see
+//! [`crate::coordinator::codec`]). The server loads the offline dataset
+//! and the PJRT artifacts once at startup; each request runs one
+//! optimization and returns the recommended deployment. Python is never
+//! involved.
 //!
 //! Request:
 //!   {"op": "optimize", "workload": "kmeans:santander", "target": "cost",
@@ -89,13 +92,14 @@
 //! too (even when the cold request didn't ask for it).
 
 use std::collections::{BTreeMap, HashMap};
-use std::io::{BufRead, BufReader, Write};
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use crate::coordinator::codec::{self, Codec, DecodeError, FrameScanner, Greeting};
 use crate::coordinator::experiment::{run_trial, TrialSpec, PREDICTORS};
 use crate::coordinator::spec::MAX_TRIAL_WORKERS;
 use crate::dataset::objective::MeasureMode;
@@ -108,11 +112,11 @@ use crate::util::threadpool::{default_workers, global_team, parallel_map_owned, 
 /// Largest request list one batch op accepts.
 pub const MAX_BATCH: usize = 256;
 
-/// Largest accepted request frame in bytes (one line, newline excluded).
-/// A connection that exceeds it gets one error response and a close —
-/// on both transports — so a garbage client cannot balloon server
-/// memory through an endless unterminated line.
-pub const MAX_FRAME: usize = 1 << 20;
+/// Largest accepted request frame in bytes — defined once in the codec
+/// module and re-exported here for existing users. A connection that
+/// exceeds it gets one error response and a close, on every transport
+/// and codec.
+pub use crate::coordinator::codec::MAX_FRAME;
 
 /// Default bound on cached deterministic-mode responses (LRU beyond it).
 pub const DEFAULT_CACHE_CAP: usize = 1024;
@@ -132,10 +136,14 @@ struct ResponseKey {
 
 /// What the response cache holds per key: the response body plus the
 /// ledger's convergence trace, so a cached hit can honor
-/// `include_trace` even when the cold request never asked for it.
+/// `include_trace` even when the cold request never asked for it. The
+/// body is also stored pre-serialized (`resp_str`), so the common
+/// cached hit (no trace requested) is answered by one string clone —
+/// no `Value` tree clone, no re-serialization.
 #[derive(Clone)]
 struct CachedResponse {
     resp: Value,
+    resp_str: String,
     trace: Value,
 }
 
@@ -157,11 +165,22 @@ impl ResponseCache {
 
     /// Look up and mark as most-recently-used.
     fn get(&mut self, key: &ResponseKey) -> Option<CachedResponse> {
+        self.touch(key).map(|entry| entry.clone())
+    }
+
+    /// Like [`get`](Self::get), but clone only the pre-serialized
+    /// response string — the cached-hit fast path for requests that
+    /// want no trace.
+    fn get_str(&mut self, key: &ResponseKey) -> Option<String> {
+        self.touch(key).map(|entry| entry.resp_str.clone())
+    }
+
+    /// Find an entry and refresh its recency.
+    fn touch(&mut self, key: &ResponseKey) -> Option<&CachedResponse> {
         self.tick += 1;
         let tick = self.tick;
         let (resp, last) = self.map.get_mut(key)?;
         let stale = std::mem::replace(last, tick);
-        let resp = resp.clone();
         self.order.remove(&stale);
         self.order.insert(tick, key.clone());
         Some(resp)
@@ -309,6 +328,19 @@ impl Scheduler {
         hit
     }
 
+    /// Pre-serialized fast-path lookup. Counts a hit only when it
+    /// serves one; a miss counts nothing here, because the request then
+    /// falls through to [`run_optimize_data`](Service::run_optimize_data)
+    /// whose own lookup records it — so `hits + misses` still equals
+    /// deterministic requests served.
+    fn cache_lookup_str(&self, key: &ResponseKey) -> Option<String> {
+        let hit = self.cache.lock().unwrap().get_str(key);
+        if hit.is_some() {
+            self.cache_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
     fn cache_store(&self, key: ResponseKey, resp: CachedResponse) {
         let (inserted, evicted) = self.cache.lock().unwrap().insert(key, resp);
         if inserted {
@@ -339,6 +371,17 @@ struct NetStats {
     /// per-wakeup work, which stays proportional to *active* (not open)
     /// connections under the epoll transport.
     ready_events: AtomicU64,
+    /// Connections whose codec resolved to JSON lines (counted once per
+    /// connection, when its first frame settles negotiation).
+    json_connections: AtomicU64,
+    /// Connections whose codec resolved to binary (magic byte or hello).
+    binary_connections: AtomicU64,
+    /// Request frames decoded (or answered with a decode error) under
+    /// the JSON-lines codec. Negotiation hellos are not requests.
+    json_requests: AtomicU64,
+    /// Request frames decoded (or answered with a decode error) under
+    /// the binary codec.
+    binary_requests: AtomicU64,
 }
 
 impl NetStats {
@@ -348,7 +391,29 @@ impl NetStats {
             idle_connections: AtomicUsize::new(0),
             loop_wakeups: AtomicU64::new(0),
             ready_events: AtomicU64::new(0),
+            json_connections: AtomicU64::new(0),
+            binary_connections: AtomicU64::new(0),
+            json_requests: AtomicU64::new(0),
+            binary_requests: AtomicU64::new(0),
         }
+    }
+
+    /// Record a connection whose codec negotiation just settled.
+    fn count_conn(&self, codec: &'static dyn Codec) {
+        let counter = match codec.name() {
+            "binary" => &self.binary_connections,
+            _ => &self.json_connections,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one request frame served under `codec`.
+    fn count_request(&self, codec: &'static dyn Codec) {
+        let counter = match codec.name() {
+            "binary" => &self.binary_requests,
+            _ => &self.json_requests,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -644,13 +709,57 @@ impl Service {
 
     /// Handle one request line; always returns a JSON response line.
     pub fn handle(&self, line: &str) -> String {
-        match parse(line)
-            .map_err(|e| format!("bad json: {e}"))
-            .and_then(|req| self.handle_request(&req, 0))
-        {
+        match parse(line) {
+            Ok(req) => self.handle_value(&req),
+            Err(e) => error_line(&format!("bad json: {e}")),
+        }
+    }
+
+    /// Wire-level entry point: decode one extracted frame payload under
+    /// `codec`, serve it, and return the encoded response frame. A
+    /// protocol-fatal frame (e.g. non-UTF-8 under JSON lines) returns
+    /// an empty buffer — transports answer those by closing. Both
+    /// transports serve requests through this exact path; it is public
+    /// so benches and differential tests can measure the codec seam
+    /// without a socket.
+    pub fn serve_frame(&self, frame: &[u8], codec: &'static dyn Codec) -> Vec<u8> {
+        handle_wire(self, frame, codec).bytes
+    }
+
+    /// Dispatch one decoded request to a compact JSON response payload
+    /// (the codec layer frames it for the wire). Top-level optimize
+    /// requests are special-cased so deterministic repeats can be
+    /// answered from the cache's pre-serialized string — no response
+    /// `Value` is cloned or re-serialized on the hot path.
+    fn handle_value(&self, req: &Value) -> String {
+        let op = req.get("op").and_then(|v| v.as_str()).unwrap_or("optimize");
+        if op == "optimize" {
+            return match self.parse_optimize(req) {
+                Ok(p) => self.run_optimize_wire(p),
+                Err(e) => error_line(&e),
+            };
+        }
+        match self.handle_request(req, 0) {
             Ok(v) => v.to_string_compact(),
-            Err(e) => Value::obj(vec![("ok", false.into()), ("error", e.into())])
-                .to_string_compact(),
+            Err(e) => error_line(&e),
+        }
+    }
+
+    /// Serve a parsed optimize request as wire text. Deterministic
+    /// requests that want no trace take the pre-serialized cache fast
+    /// path: one LRU touch, one string clone, zero JSON work.
+    fn run_optimize_wire(&self, p: OptimizeParams) -> String {
+        if p.measure_mode.deterministic() && !p.include_trace {
+            if let Some(hit) = self.scheduler.cache_lookup_str(&p.key()) {
+                return hit;
+            }
+        }
+        let include_trace = p.include_trace;
+        let (resp, trace) = self.run_optimize_data(p);
+        if include_trace {
+            with_trace(&resp, &trace).to_string_compact()
+        } else {
+            resp.to_string_compact()
         }
     }
 
@@ -660,6 +769,11 @@ impl Service {
         let op = req.get("op").and_then(|v| v.as_str()).unwrap_or("optimize");
         match op {
             "ping" => Ok(Value::obj(vec![("ok", true.into()), ("pong", true.into())])),
+            // Codec negotiation happens at the transport layer, and only
+            // on a connection's first frame; a hello that reaches the
+            // dispatcher arrived too late (or over `Service::handle`,
+            // which has no connection to negotiate for).
+            "hello" => Err("hello must be the first frame on a connection".into()),
             "list_workloads" => {
                 let names: Vec<Value> =
                     self.ds.workloads.iter().map(|w| Value::str(w.id())).collect();
@@ -701,6 +815,22 @@ impl Service {
                     ("idle_connections", net.idle_connections.load(Ordering::Relaxed).into()),
                     ("loop_wakeups", (net.loop_wakeups.load(Ordering::Relaxed) as usize).into()),
                     ("ready_events", (net.ready_events.load(Ordering::Relaxed) as usize).into()),
+                    (
+                        "json_connections",
+                        (net.json_connections.load(Ordering::Relaxed) as usize).into(),
+                    ),
+                    (
+                        "binary_connections",
+                        (net.binary_connections.load(Ordering::Relaxed) as usize).into(),
+                    ),
+                    (
+                        "json_requests",
+                        (net.json_requests.load(Ordering::Relaxed) as usize).into(),
+                    ),
+                    (
+                        "binary_requests",
+                        (net.binary_requests.load(Ordering::Relaxed) as usize).into(),
+                    ),
                 ]))
             }
             "clear_cache" => {
@@ -918,7 +1048,11 @@ impl Service {
         ]);
         let trace = Value::Arr(r.trace.iter().map(|&v| Value::Num(v)).collect());
         if p.measure_mode.deterministic() {
-            let entry = CachedResponse { resp: resp.clone(), trace: trace.clone() };
+            let entry = CachedResponse {
+                resp: resp.clone(),
+                resp_str: resp.to_string_compact(),
+                trace: trace.clone(),
+            };
             self.scheduler.cache_store(key, entry);
         }
         (resp, trace)
@@ -983,12 +1117,45 @@ fn with_trace(resp: &Value, trace: &Value) -> Value {
     }
 }
 
-/// Run one request line through the service, containing panics: the
-/// serving pools are fixed-size, so a panic escaping a request would
-/// permanently shrink them — it degrades to an error response instead.
-fn handle_guarded(svc: &Service, line: &str) -> String {
-    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| svc.handle(line)))
-        .unwrap_or_else(|_| error_line("internal error handling request"))
+/// One framed reply travelling back to a connection: the bytes to write
+/// and whether the connection closes once they are flushed. Empty bytes
+/// with `close` set is the silent close (non-UTF-8 peer).
+struct WireReply {
+    bytes: Vec<u8>,
+    close: bool,
+}
+
+/// Decode, dispatch, and re-frame one wire frame under `codec` — the
+/// single request path both transports hand complete frames to.
+fn handle_wire(svc: &Service, frame: &[u8], codec: &'static dyn Codec) -> WireReply {
+    let text = match codec.decode_request(frame) {
+        Ok(req) => {
+            svc.net.count_request(codec);
+            svc.handle_value(&req)
+        }
+        Err(DecodeError::Malformed(e)) => {
+            svc.net.count_request(codec);
+            error_line(&format!("bad json: {e}"))
+        }
+        // The peer is not speaking this protocol: close cleanly without
+        // a response (the pre-codec contract on both transports).
+        Err(DecodeError::Fatal) => return WireReply { bytes: Vec::new(), close: true },
+    };
+    let mut bytes = Vec::with_capacity(text.len() + 8);
+    codec.encode_frame(&text, &mut bytes);
+    WireReply { bytes, close: false }
+}
+
+/// [`handle_wire`] with panics contained: the serving pools are
+/// fixed-size, so a panic escaping a request would permanently shrink
+/// them — it degrades to an error response instead.
+fn handle_wire_guarded(svc: &Service, frame: &[u8], codec: &'static dyn Codec) -> WireReply {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| handle_wire(svc, frame, codec)))
+        .unwrap_or_else(|_| {
+            let mut bytes = Vec::new();
+            codec.encode_frame(&error_line("internal error handling request"), &mut bytes);
+            WireReply { bytes, close: false }
+        })
 }
 
 /// The thread-per-connection fallback acceptor (see [`Service::serve`]).
@@ -1045,78 +1212,67 @@ fn serve_threaded(svc: Arc<Service>, listener: TcpListener, stop: Arc<AtomicBool
     }
 }
 
-/// Outcome of reading one frame off a blocking connection.
-enum Frame {
-    /// A complete newline-terminated line (newline stripped).
-    Line(String),
-    /// EOF, or a non-UTF-8 frame: close the connection cleanly. A
-    /// trailing partial frame at EOF is discarded — its sender is gone
-    /// (mid-request disconnect), matching the event loop.
-    Closed,
-    /// The frame exceeded [`MAX_FRAME`]: report once, then close.
-    Oversize,
-}
-
-/// Read one newline-terminated frame with the [`MAX_FRAME`] size cap
-/// (the threaded transport's framing; the event loop applies the same
-/// rules to its nonblocking buffers).
-fn read_frame(reader: &mut BufReader<TcpStream>, buf: &mut Vec<u8>) -> std::io::Result<Frame> {
-    buf.clear();
-    loop {
-        let chunk = reader.fill_buf()?;
-        if chunk.is_empty() {
-            return Ok(Frame::Closed);
-        }
-        match chunk.iter().position(|&b| b == b'\n') {
-            Some(pos) => {
-                buf.extend_from_slice(&chunk[..pos]);
-                reader.consume(pos + 1);
-                if buf.len() > MAX_FRAME {
-                    return Ok(Frame::Oversize);
-                }
-                return Ok(match String::from_utf8(std::mem::take(buf)) {
-                    Ok(s) => Frame::Line(s),
-                    Err(_) => Frame::Closed,
-                });
-            }
-            None => {
-                let n = chunk.len();
-                buf.extend_from_slice(chunk);
-                reader.consume(n);
-                if buf.len() > MAX_FRAME {
-                    return Ok(Frame::Oversize);
-                }
-            }
-        }
-    }
-}
-
+/// Serve one blocking connection on the shared [`FrameScanner`]: the
+/// same framing, codec negotiation, and request path as the event loop,
+/// with blocking reads/writes instead of readiness.
 fn handle_conn(svc: &Service, stream: TcpStream) -> std::io::Result<()> {
     // The idle limit doubles as the read timeout here: an idle peer
     // trips it and the connection is reaped, matching the event loop.
     stream.set_read_timeout(Some(svc.limits.idle_timeout))?;
     let mut writer = stream.try_clone()?;
-    let mut reader = BufReader::new(stream);
-    let mut buf = Vec::new();
+    let mut reader = stream;
+    let mut scanner = FrameScanner::new();
+    let mut greeted = false;
+    let mut chunk = [0u8; 16 * 1024];
     loop {
-        match read_frame(&mut reader, &mut buf)? {
-            Frame::Closed => return Ok(()),
-            Frame::Oversize => {
-                let resp = error_line(&format!("frame larger than {MAX_FRAME} bytes"));
-                writer.write_all(resp.as_bytes())?;
-                writer.write_all(b"\n")?;
-                writer.flush()?;
+        // Drain every complete frame before blocking on the socket.
+        loop {
+            let frame = match scanner.next_frame() {
+                Ok(Some(frame)) => frame,
+                Ok(None) => break,
+                Err(_) => {
+                    let mut out = Vec::new();
+                    scanner
+                        .codec()
+                        .encode_frame(&error_line(&codec::oversize_message()), &mut out);
+                    writer.write_all(&out)?;
+                    writer.flush()?;
+                    return Ok(());
+                }
+            };
+            if !greeted {
+                greeted = true;
+                match codec::greet(&frame, scanner.codec()) {
+                    Greeting::Request => svc.net.count_conn(scanner.codec()),
+                    Greeting::Switch { reply, next } => {
+                        writer.write_all(&reply)?;
+                        writer.flush()?;
+                        scanner.set_codec(next);
+                        svc.net.count_conn(next);
+                        continue;
+                    }
+                    Greeting::Reject { reply } => {
+                        writer.write_all(&reply)?;
+                        writer.flush()?;
+                        return Ok(());
+                    }
+                }
+            }
+            let reply = handle_wire_guarded(svc, &frame, scanner.codec());
+            writer.write_all(&reply.bytes)?;
+            writer.flush()?;
+            if reply.close {
                 return Ok(());
             }
-            Frame::Line(line) => {
-                if line.trim().is_empty() {
-                    continue;
-                }
-                let resp = handle_guarded(svc, &line);
-                writer.write_all(resp.as_bytes())?;
-                writer.write_all(b"\n")?;
-                writer.flush()?;
-            }
+        }
+        match reader.read(&mut chunk) {
+            // EOF: a trailing partial frame is discarded — its sender is
+            // gone (mid-request disconnect), matching the event loop.
+            Ok(0) => return Ok(()),
+            Ok(n) => scanner.push(&chunk[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            // Read timeout (idle reap) or a dead peer: close.
+            Err(_) => return Ok(()),
         }
     }
 }
@@ -1136,8 +1292,10 @@ fn handle_conn(svc: &Service, stream: TcpStream) -> std::io::Result<()> {
 ///    [`ServiceLimits::max_conns`] (at the cap the listener is parked —
 ///    an interest transition — and the kernel backlog defers, never
 ///    drops, the overflow),
-/// 3. does nonblocking reads on readable connections, slicing complete
-///    newline frames into per-connection pending queues,
+/// 3. does nonblocking reads on readable connections, feeding each
+///    one's shared [`FrameScanner`] and moving complete frames into
+///    per-connection pending queues (codec negotiation resolves here,
+///    on the first frame),
 /// 4. drains the worker outbox (finished responses → per-connection
 ///    write buffers),
 /// 5. dispatches at most **one** in-flight request per connection to
@@ -1149,9 +1307,9 @@ fn handle_conn(svc: &Service, stream: TcpStream) -> std::io::Result<()> {
 /// Steps 3–6 run only over connections an event touched, so a wakeup
 /// costs O(ready events + accepts) — under epoll, independent of how
 /// many idle connections are open. Idle reaping
-/// ([`ServiceLimits::idle_timeout`]) runs as a periodic sweep on a
-/// fraction of the timeout, not per wakeup, keeping the O(open) scan
-/// amortized away.
+/// ([`ServiceLimits::idle_timeout`]) pops a deadline-ordered queue, so
+/// it costs O(expired connections) per iteration — never a sweep over
+/// the open set.
 ///
 /// Workers never touch sockets; the loop never runs requests. The two
 /// meet only at the outbox (a mutex-guarded vec + a [`WakePipe`]), so a
@@ -1159,7 +1317,7 @@ fn handle_conn(svc: &Service, stream: TcpStream) -> std::io::Result<()> {
 /// connections cost 100k fds — not 100k pinned threads.
 #[cfg(unix)]
 mod event_loop {
-    use std::collections::{BTreeMap, VecDeque};
+    use std::collections::{BTreeMap, BTreeSet, VecDeque};
     use std::io::{Read, Write};
     use std::net::{TcpListener, TcpStream};
     use std::os::unix::io::AsRawFd;
@@ -1167,7 +1325,10 @@ mod event_loop {
     use std::sync::{Arc, Mutex};
     use std::time::{Duration, Instant};
 
-    use super::{error_line, handle_guarded, Service, ServiceLimits, Transport, MAX_FRAME};
+    use super::{
+        error_line, handle_wire_guarded, Service, ServiceLimits, Transport, WireReply, MAX_FRAME,
+    };
+    use crate::coordinator::codec::{self, FrameScanner, Greeting};
     use crate::util::net::{poll, Event, PollFd, Readiness, WakePipe, POLLIN, POLLOUT};
     use crate::util::threadpool::WorkerTeam;
 
@@ -1186,8 +1347,11 @@ mod event_loop {
     /// worker thread's stack).
     struct Conn {
         stream: TcpStream,
-        /// Partial-frame accumulation (bytes read, no newline yet).
-        rbuf: Vec<u8>,
+        /// The shared incremental framer; owns partial-frame bytes and
+        /// the connection's negotiated codec.
+        scanner: FrameScanner,
+        /// First frame already classified by [`codec::greet`].
+        greeted: bool,
         /// Response bytes not yet accepted by the socket.
         wbuf: Vec<u8>,
         wpos: usize,
@@ -1205,6 +1369,9 @@ mod event_loop {
         /// Last socket progress (bytes read or written, or a response
         /// queued); drives the [`ServiceLimits::idle_timeout`] reap.
         last_activity: Instant,
+        /// The deadline this connection is filed under in the reap
+        /// queue (its entry is exactly `(reap_due, token)`).
+        reap_due: Instant,
         /// Interest bits currently registered with the readiness
         /// backend; [`sync_conn`] issues a `modify` only when the
         /// desired interest departs from this (state transitions, not
@@ -1218,9 +1385,11 @@ mod event_loop {
 
     impl Conn {
         fn new(stream: TcpStream) -> Conn {
+            let now = Instant::now();
             Conn {
                 stream,
-                rbuf: Vec::new(),
+                scanner: FrameScanner::new(),
+                greeted: false,
                 wbuf: Vec::new(),
                 wpos: 0,
                 pending: VecDeque::new(),
@@ -1228,7 +1397,8 @@ mod event_loop {
                 closing: false,
                 peer_closed: false,
                 oversized: false,
-                last_activity: Instant::now(),
+                last_activity: now,
+                reap_due: now,
                 interest: 0,
                 counted_idle: false,
             }
@@ -1239,7 +1409,7 @@ mod event_loop {
         fn idle(&self) -> bool {
             !self.busy
                 && self.pending.is_empty()
-                && self.rbuf.is_empty()
+                && self.scanner.buffered() == 0
                 && self.wpos >= self.wbuf.len()
         }
 
@@ -1259,23 +1429,27 @@ mod event_loop {
             self.wbuf.len() - self.wpos
         }
 
-        fn queue_response(&mut self, resp: &str) {
-            self.wbuf.extend_from_slice(resp.as_bytes());
-            self.wbuf.push(b'\n');
+        /// Stage one framed reply for the socket; a `close` reply also
+        /// marks the connection closing (it still drains first).
+        fn queue_reply(&mut self, reply: WireReply) {
+            self.wbuf.extend_from_slice(&reply.bytes);
+            if reply.close {
+                self.closing = true;
+            }
             self.last_activity = Instant::now();
         }
     }
 
-    /// Finished responses travelling worker → loop. Workers push and
+    /// Finished replies travelling worker → loop. Workers push and
     /// wake; the loop drains under one lock acquisition per iteration.
     struct Outbox {
-        queue: Mutex<Vec<(u64, String)>>,
+        queue: Mutex<Vec<(u64, WireReply)>>,
         wake: WakePipe,
     }
 
     impl Outbox {
-        fn push(&self, token: u64, resp: String) {
-            self.queue.lock().unwrap().push((token, resp));
+        fn push(&self, token: u64, reply: WireReply) {
+            self.queue.lock().unwrap().push((token, reply));
             self.wake.wake();
         }
     }
@@ -1289,9 +1463,12 @@ mod event_loop {
             wake: WakePipe::new().expect("event loop: wake pipe"),
         });
         // The requested backend, degrading to the portable poll set if
-        // epoll creation fails at runtime (e.g. fd exhaustion).
+        // epoll creation fails at runtime (e.g. fd exhaustion). The
+        // epoll wait batch is sized to the connection cap (plus the
+        // listener and wake pipe), so a fully-active house drains in
+        // one syscall instead of 1024-event slices.
         let mut reg = if svc.transport == Transport::Epoll {
-            match Readiness::epoll() {
+            match Readiness::epoll_with_batch(max_conns + 2) {
                 Some(Ok(r)) => r,
                 _ => Readiness::poll_set().expect("event loop: poll set"),
             }
@@ -1314,12 +1491,12 @@ mod event_loop {
         let mut touched: Vec<u64> = Vec::new();
         let mut dead: Vec<u64> = Vec::new();
 
-        // Stale connections are reaped by a periodic sweep — the only
-        // remaining O(open connections) work, amortized to a fraction
-        // of the timeout instead of paid per wakeup.
-        let reap_every =
-            (limits.idle_timeout / 4).clamp(Duration::from_millis(25), Duration::from_secs(5));
-        let mut next_reap = Instant::now() + reap_every;
+        // Stale connections are reaped from a deadline-ordered queue:
+        // each connection is filed under the earliest instant it could
+        // expire, and every iteration pops only entries whose deadline
+        // passed — re-arming those that made progress since. Reaping is
+        // O(expired), never a sweep over 100k open sockets.
+        let mut reap_queue: BTreeSet<(Instant, u64)> = BTreeSet::new();
 
         while !stop.load(Ordering::Relaxed) {
             if reg.wait(&mut events, 50).is_err() {
@@ -1353,7 +1530,7 @@ mod event_loop {
                             continue;
                         }
                         if ev.readable() {
-                            if !read_ready(c) {
+                            if !read_ready(c, &svc) {
                                 dead.push(tok);
                                 continue;
                             }
@@ -1365,15 +1542,16 @@ mod event_loop {
                 }
             }
 
-            // 2. Worker responses. Drain the outbox unconditionally —
+            // 2. Worker replies. Drain the outbox unconditionally —
             // it is one uncontended lock when empty, and doing so makes
             // a missed wake merely a latency blip, never a stall.
-            let finished: Vec<(u64, String)> = std::mem::take(&mut *outbox.queue.lock().unwrap());
-            for (tok, resp) in finished {
+            let finished: Vec<(u64, WireReply)> =
+                std::mem::take(&mut *outbox.queue.lock().unwrap());
+            for (tok, reply) in finished {
                 // The connection may have died while its request ran;
-                // the response is then simply dropped.
+                // the reply is then simply dropped.
                 if let Some(c) = conns.get_mut(&tok) {
-                    c.queue_response(&resp);
+                    c.queue_reply(reply);
                     c.busy = false;
                     touched.push(tok);
                 }
@@ -1394,6 +1572,8 @@ mod event_loop {
                                 continue; // drop the socket, keep serving
                             }
                             c.interest = POLLIN;
+                            c.reap_due = Instant::now() + limits.idle_timeout;
+                            reap_queue.insert((c.reap_due, tok));
                             conns.insert(tok, c);
                             touched.push(tok);
                         }
@@ -1405,7 +1585,7 @@ mod event_loop {
             // Remove unrecoverable connections before dispatching, so no
             // request is handed to workers on behalf of a gone client.
             for tok in dead.drain(..) {
-                drop_conn(&mut conns, tok, &mut reg, &mut idle_count);
+                drop_conn(&mut conns, tok, &mut reg, &mut idle_count, &mut reap_queue);
             }
 
             // 4–6. Dispatch, flush, and re-sync interest — but only for
@@ -1432,22 +1612,32 @@ mod event_loop {
                 }
             }
             for tok in dead.drain(..) {
-                drop_conn(&mut conns, tok, &mut reg, &mut idle_count);
+                drop_conn(&mut conns, tok, &mut reg, &mut idle_count, &mut reap_queue);
             }
 
-            // Periodic stale sweep (no progress and nothing running for
-            // idle_timeout: dead peers and never-reading peers alike).
+            // Reap expired connections: pop due deadlines off the front
+            // of the queue. A connection that made progress (or has a
+            // request running) since its deadline was filed is re-armed
+            // at the next instant it could actually expire, so each
+            // connection costs O(log n) per idle_timeout of lifetime —
+            // and an idle herd costs nothing until it expires.
             let now = Instant::now();
-            if now >= next_reap {
-                next_reap = now + reap_every;
-                for (tok, c) in conns.iter() {
-                    if !c.busy && c.last_activity.elapsed() >= limits.idle_timeout {
-                        dead.push(*tok);
-                    }
+            while let Some(&(due, tok)) = reap_queue.iter().next() {
+                if due > now {
+                    break;
                 }
-                for tok in dead.drain(..) {
-                    drop_conn(&mut conns, tok, &mut reg, &mut idle_count);
+                reap_queue.remove(&(due, tok));
+                let Some(c) = conns.get_mut(&tok) else { continue };
+                let deadline = c.last_activity + limits.idle_timeout;
+                if c.busy || deadline > now {
+                    c.reap_due = if c.busy { now + limits.idle_timeout } else { deadline };
+                    reap_queue.insert((c.reap_due, tok));
+                } else {
+                    dead.push(tok);
                 }
+            }
+            for tok in dead.drain(..) {
+                drop_conn(&mut conns, tok, &mut reg, &mut idle_count, &mut reap_queue);
             }
 
             // Park/unpark the listener on cap transitions, so a full
@@ -1488,10 +1678,11 @@ mod event_loop {
             if fds[0].readable() {
                 outbox.wake.drain();
             }
-            let finished: Vec<(u64, String)> = std::mem::take(&mut *outbox.queue.lock().unwrap());
-            for (tok, resp) in finished {
+            let finished: Vec<(u64, WireReply)> =
+                std::mem::take(&mut *outbox.queue.lock().unwrap());
+            for (tok, reply) in finished {
                 if let Some(c) = conns.get_mut(&tok) {
-                    c.queue_response(&resp);
+                    c.queue_reply(reply);
                     c.busy = false;
                 }
             }
@@ -1515,7 +1706,7 @@ mod event_loop {
 
     /// Pull readable bytes and slice complete frames into `pending`.
     /// Returns `false` when the connection is unrecoverable.
-    fn read_ready(c: &mut Conn) -> bool {
+    fn read_ready(c: &mut Conn, svc: &Service) -> bool {
         let mut chunk = [0u8; READ_CHUNK];
         loop {
             match c.stream.read(&mut chunk) {
@@ -1524,9 +1715,9 @@ mod event_loop {
                     break;
                 }
                 Ok(n) => {
-                    c.rbuf.extend_from_slice(&chunk[..n]);
+                    c.scanner.push(&chunk[..n]);
                     c.last_activity = Instant::now();
-                    extract_frames(c);
+                    extract_frames(c, svc);
                     // One chunk per readiness keeps the loop fair;
                     // level-triggered poll re-reports leftovers.
                     break;
@@ -1539,26 +1730,47 @@ mod event_loop {
         true
     }
 
-    /// Move complete newline-terminated frames from `rbuf` to `pending`;
-    /// flag the connection oversized when a frame exceeds [`MAX_FRAME`] —
-    /// terminated or not — matching the threaded transport's
-    /// `read_frame`, so both reject exactly the same inputs.
-    fn extract_frames(c: &mut Conn) {
-        let mut start = 0;
-        while let Some(pos) = c.rbuf[start..].iter().position(|&b| b == b'\n') {
-            if pos > MAX_FRAME {
-                c.oversized = true;
-                break;
+    /// Move complete frames out of the shared scanner into `pending`,
+    /// resolving codec negotiation on the first frame — it must happen
+    /// here, not at dispatch, because the scanner eagerly drains
+    /// everything buffered: a pipelined `hello` + binary burst in one
+    /// segment must switch codecs before the remaining bytes are
+    /// scanned. An oversize flags the connection; `dispatch` emits the
+    /// one shared error message after earlier responses, in order.
+    fn extract_frames(c: &mut Conn, svc: &Service) {
+        if c.oversized || c.closing {
+            c.scanner.clear();
+            return;
+        }
+        loop {
+            match c.scanner.next_frame() {
+                Ok(None) => break,
+                Ok(Some(frame)) => {
+                    if !c.greeted {
+                        c.greeted = true;
+                        match codec::greet(&frame, c.scanner.codec()) {
+                            Greeting::Request => svc.net.count_conn(c.scanner.codec()),
+                            Greeting::Switch { reply, next } => {
+                                c.queue_reply(WireReply { bytes: reply, close: false });
+                                c.scanner.set_codec(next);
+                                svc.net.count_conn(next);
+                                continue;
+                            }
+                            Greeting::Reject { reply } => {
+                                c.queue_reply(WireReply { bytes: reply, close: true });
+                                c.scanner.clear();
+                                return;
+                            }
+                        }
+                    }
+                    c.pending.push_back(frame);
+                }
+                Err(_) => {
+                    c.oversized = true;
+                    c.scanner.clear();
+                    return;
+                }
             }
-            c.pending.push_back(c.rbuf[start..start + pos].to_vec());
-            start += pos + 1;
-        }
-        if start > 0 {
-            c.rbuf.drain(..start);
-        }
-        if c.oversized || c.rbuf.len() > MAX_FRAME {
-            c.oversized = true;
-            c.rbuf.clear();
         }
     }
 
@@ -1572,7 +1784,7 @@ mod event_loop {
             && !c.closing
             && !c.oversized
             && c.pending.len() < limits.max_pending
-            && c.rbuf.len() <= MAX_FRAME
+            && c.scanner.buffered() <= MAX_FRAME
             && c.wbuf_backlog() <= limits.max_wbuf;
         if readable_wanted {
             want |= POLLIN;
@@ -1611,15 +1823,17 @@ mod event_loop {
     }
 
     /// Close a connection: deregister from the backend, correct the
-    /// idle gauge, drop the socket.
+    /// idle gauge and reap queue, drop the socket.
     fn drop_conn(
         conns: &mut BTreeMap<u64, Conn>,
         token: u64,
         reg: &mut Readiness,
         idle_count: &mut usize,
+        reap_queue: &mut BTreeSet<(Instant, u64)>,
     ) {
         if let Some(c) = conns.remove(&token) {
             let _ = reg.deregister(c.stream.as_raw_fd(), token);
+            reap_queue.remove(&(c.reap_due, token));
             if c.counted_idle {
                 *idle_count -= 1;
             }
@@ -1628,7 +1842,8 @@ mod event_loop {
 
     /// Hand the next pending frame (if any, and none is in flight) to
     /// the worker pool; emit the deferred oversize error once the queue
-    /// drains so responses keep request order.
+    /// drains so responses keep request order. Decoding happens on the
+    /// worker ([`handle_wire_guarded`]), never on the loop thread.
     fn dispatch(
         c: &mut Conn,
         token: u64,
@@ -1636,30 +1851,25 @@ mod event_loop {
         pool: &WorkerTeam,
         outbox: &Arc<Outbox>,
     ) {
-        while !c.busy && !c.closing && c.wbuf_backlog() <= svc.limits.max_wbuf {
-            let Some(raw) = c.pending.pop_front() else {
+        if !c.busy && !c.closing && c.wbuf_backlog() <= svc.limits.max_wbuf {
+            let Some(frame) = c.pending.pop_front() else {
                 if c.oversized {
-                    c.queue_response(&error_line(&format!("frame larger than {MAX_FRAME} bytes")));
+                    let mut bytes = Vec::new();
+                    c.scanner
+                        .codec()
+                        .encode_frame(&error_line(&codec::oversize_message()), &mut bytes);
+                    c.queue_reply(WireReply { bytes, close: true });
                     c.oversized = false;
-                    c.closing = true;
                 }
-                break;
+                return;
             };
-            let Ok(line) = String::from_utf8(raw) else {
-                // Non-UTF-8 frame: close cleanly (threaded path parity).
-                c.pending.clear();
-                c.closing = true;
-                break;
-            };
-            if line.trim().is_empty() {
-                continue;
-            }
             c.busy = true;
+            let conn_codec = c.scanner.codec();
             let svc = Arc::clone(svc);
             let outbox = Arc::clone(outbox);
             pool.execute(move || {
-                let resp = handle_guarded(&svc, &line);
-                outbox.push(token, resp);
+                let reply = handle_wire_guarded(&svc, &frame, conn_codec);
+                outbox.push(token, reply);
             });
         }
     }
@@ -2108,6 +2318,65 @@ mod tests {
         }
     }
 
+    /// A hello that reaches the dispatcher (not a connection's first
+    /// frame) is an error, not a renegotiation.
+    #[test]
+    fn late_hello_is_an_error() {
+        let svc = service();
+        for req in [r#"{"op":"hello"}"#, r#"{"op":"hello","codec":"binary"}"#] {
+            let resp = svc.handle(req);
+            let v = parse(&resp).unwrap();
+            assert_eq!(v.get("ok").unwrap().as_bool(), Some(false), "{resp}");
+            assert!(resp.contains("first frame"), "{resp}");
+        }
+    }
+
+    /// `handle_wire` under either codec carries exactly the payload
+    /// `handle` produces, framed by that codec — the transports share
+    /// one request path.
+    #[test]
+    fn handle_wire_matches_handle_on_both_codecs() {
+        use crate::coordinator::codec::{BINARY, JSON_LINES};
+        let svc = service();
+        for req in [
+            r#"{"op":"ping"}"#,
+            r#"{"op":"optimize","workload":"kmeans:buzz","method":"rs","budget":5,"seed":1,"measure_mode":"mean"}"#,
+            r#"not json"#,
+        ] {
+            let expected = svc.handle(req);
+            for c in [&JSON_LINES as &'static dyn Codec, &BINARY] {
+                let reply = handle_wire(&svc, req.as_bytes(), c);
+                assert!(!reply.close, "{req} must not close under {}", c.name());
+                let mut framed = Vec::new();
+                c.encode_frame(&expected, &mut framed);
+                assert_eq!(reply.bytes, framed, "{req} diverged under {}", c.name());
+            }
+        }
+        // Non-UTF-8 payloads close silently under both codecs.
+        for c in [&JSON_LINES as &'static dyn Codec, &BINARY] {
+            let reply = handle_wire(&svc, &[0xff, 0xfe, 0x80], c);
+            assert!(reply.close && reply.bytes.is_empty(), "codec {}", c.name());
+        }
+        // The per-codec request counters moved with the traffic (the
+        // non-UTF-8 frames are protocol breaks, not requests).
+        let v = parse(&svc.handle(r#"{"op":"stats"}"#)).unwrap();
+        assert_eq!(v.get("json_requests").and_then(Value::as_usize), Some(3));
+        assert_eq!(v.get("binary_requests").and_then(Value::as_usize), Some(3));
+    }
+
+    /// The pre-serialized cached fast path answers byte-identically to
+    /// the cold response and still counts hits/misses coherently.
+    #[test]
+    fn cached_fast_path_is_byte_identical_and_counts_once() {
+        let svc = service();
+        let req = r#"{"op":"optimize","workload":"kmeans:buzz","method":"rs","budget":6,"seed":9,"measure_mode":"p90"}"#;
+        let cold = svc.handle(req);
+        let hit = svc.handle(req);
+        assert_eq!(cold, hit);
+        assert_eq!(svc.scheduler().cache_hits(), 1);
+        assert_eq!(svc.scheduler().cache_misses(), 1, "hits + misses = requests served");
+    }
+
     #[test]
     fn tcp_end_to_end() {
         use std::io::{BufRead, BufReader, Write};
@@ -2150,6 +2419,10 @@ mod tests {
             "rlimit_nofile",
             "cache_misses",
             "cache_inserts",
+            "json_connections",
+            "binary_connections",
+            "json_requests",
+            "binary_requests",
         ];
         for field in fields {
             assert!(v.get(field).and_then(Value::as_usize).is_some(), "missing {field}");

@@ -505,8 +505,9 @@ fn cmd_serve(args: &[String]) -> i32 {
     let (port, handle) = svc.serve(a.get("addr"), stop).unwrap_or_else(|e| fail(&e.to_string()));
     println!(
         "listening on port {port} (transport {transport}, max {max_conns} connections; \
-         line-delimited JSON; op: optimize | batch | list_workloads | list_methods | stats | \
-         clear_cache | ping)"
+         codecs: json lines [default] | length-prefixed binary, negotiated per connection via \
+         {{\"op\":\"hello\",\"codec\":...}} or a 0xB1 first byte; \
+         op: optimize | batch | list_workloads | list_methods | stats | clear_cache | ping)"
     );
     handle.join().ok();
     0

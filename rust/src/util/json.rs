@@ -204,7 +204,14 @@ impl fmt::Display for Value {
 // Parser
 
 pub fn parse(input: &str) -> Result<Value, String> {
-    let mut p = Parser { b: input.as_bytes(), i: 0 };
+    parse_bytes(input.as_bytes())
+}
+
+/// Parse straight from bytes (the wire path's entry point): UTF-8 is
+/// validated lazily, only inside string contents, so a frame never pays
+/// a separate whole-buffer validation pass before parsing.
+pub fn parse_bytes(input: &[u8]) -> Result<Value, String> {
+    let mut p = Parser { b: input, i: 0 };
     p.skip_ws();
     let v = p.value()?;
     p.skip_ws();
@@ -319,12 +326,22 @@ impl<'a> Parser<'a> {
                     }
                 }
                 Some(_) => {
-                    // Consume one UTF-8 scalar.
-                    let rest = std::str::from_utf8(&self.b[self.i..])
+                    // Unescaped run: scan to the next quote or escape
+                    // and push the whole run at once, validated as
+                    // UTF-8 in one pass (scanning per character used to
+                    // re-validate the entire remaining input each time,
+                    // making long strings quadratic).
+                    let start = self.i;
+                    while self
+                        .peek()
+                        .map(|c| c != b'"' && c != b'\\')
+                        .unwrap_or(false)
+                    {
+                        self.i += 1;
+                    }
+                    let run = std::str::from_utf8(&self.b[start..self.i])
                         .map_err(|_| "invalid utf-8 in string")?;
-                    let ch = rest.chars().next().unwrap();
-                    s.push(ch);
-                    self.i += ch.len_utf8();
+                    s.push_str(run);
                 }
             }
         }
@@ -447,5 +464,35 @@ mod tests {
     #[test]
     fn nonfinite_encodes_null() {
         assert_eq!(Value::Num(f64::NAN).to_string_compact(), "null");
+    }
+
+    /// `parse_bytes` is `parse` without the up-front UTF-8 pass: same
+    /// values, same error strings on valid UTF-8, and a dedicated error
+    /// when string contents are not UTF-8.
+    #[test]
+    fn parse_bytes_matches_parse() {
+        for s in [
+            r#"{"op":"ping","n":3,"arr":[1,2],"s":"café ☕ \n"}"#,
+            "not json",
+            r#"{"a" 1}"#,
+            "",
+        ] {
+            assert_eq!(parse_bytes(s.as_bytes()), parse(s), "{s}");
+        }
+        assert_eq!(
+            parse_bytes(b"{\"k\":\"a\xff\xfeb\"}"),
+            Err("invalid utf-8 in string".to_string())
+        );
+    }
+
+    /// Long strings parse in linear time (the run scanner); a smoke
+    /// check that a 1 MiB string parses at all and roundtrips.
+    #[test]
+    fn long_strings_parse_and_roundtrip() {
+        let body: String = std::iter::repeat("abcdefgh").take(128 * 1024).collect();
+        let input = format!(r#"{{"k":"{body}"}}"#);
+        let v = parse_bytes(input.as_bytes()).unwrap();
+        assert_eq!(v.get("k").unwrap().as_str(), Some(body.as_str()));
+        assert_eq!(parse(&v.to_string_compact()).unwrap(), v);
     }
 }

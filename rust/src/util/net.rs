@@ -352,17 +352,39 @@ mod imp {
         const EPOLLOUT: u32 = 0x004;
         const EPOLLERR: u32 = 0x008;
         const EPOLLHUP: u32 = 0x010;
-        /// Ready events drained per `epoll_wait`; more stay queued for
-        /// the next wakeup (level-triggered), so this bounds per-wakeup
-        /// work without ever losing readiness.
+        /// Default ready events drained per `epoll_wait`; more stay
+        /// queued for the next wakeup (level-triggered), so this bounds
+        /// per-wakeup work without ever losing readiness.
         const WAIT_BATCH: usize = 1024;
+        /// Floor and ceiling for [`with_batch`](Self::with_batch): the
+        /// batch never shrinks below a useful burst nor balloons the
+        /// scratch buffer past ~1 MiB (12 bytes/event packed).
+        const MIN_BATCH: usize = 64;
+        const MAX_BATCH: usize = 65_536;
 
         pub fn new() -> io::Result<Epoll> {
+            Self::with_batch(Self::WAIT_BATCH)
+        }
+
+        /// An epoll instance whose per-wait event batch is sized to the
+        /// caller's expected fd population (clamped to
+        /// [`MIN_BATCH`](Self::MIN_BATCH)..=[`MAX_BATCH`]
+        /// (Self::MAX_BATCH)). A loop serving 100k registered sockets
+        /// under sustained high-active load drains a full readiness
+        /// burst in one syscall instead of 1024-event slices, each of
+        /// which is a separate wakeup.
+        pub fn with_batch(batch: usize) -> io::Result<Epoll> {
             let epfd = unsafe { ffi::epoll_create1(Self::EPOLL_CLOEXEC) };
             if epfd < 0 {
                 return Err(io::Error::last_os_error());
             }
-            Ok(Epoll { epfd, buf: vec![EpollEvent { events: 0, data: 0 }; Self::WAIT_BATCH] })
+            let batch = batch.clamp(Self::MIN_BATCH, Self::MAX_BATCH);
+            Ok(Epoll { epfd, buf: vec![EpollEvent { events: 0, data: 0 }; batch] })
+        }
+
+        /// Events one `wait` call can return (the scratch buffer size).
+        pub fn batch(&self) -> usize {
+            self.buf.len()
         }
 
         fn interest_bits(interest: i16) -> u32 {
@@ -468,6 +490,21 @@ mod imp {
             }
             #[cfg(not(any(target_os = "linux", target_os = "android")))]
             {
+                None
+            }
+        }
+
+        /// [`epoll`](Self::epoll) with the per-wait event batch sized to
+        /// the caller's expected fd population (see
+        /// [`Epoll::with_batch`]); `None` off Linux.
+        pub fn epoll_with_batch(batch: usize) -> Option<io::Result<Readiness>> {
+            #[cfg(any(target_os = "linux", target_os = "android"))]
+            {
+                Some(Epoll::with_batch(batch).map(Readiness::Epoll))
+            }
+            #[cfg(not(any(target_os = "linux", target_os = "android")))]
+            {
+                let _ = batch;
                 None
             }
         }

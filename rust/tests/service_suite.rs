@@ -17,10 +17,14 @@
 //!   larger than the cache cap.
 //!
 //! CI runs this file under a hang guard (`timeout 300 cargo test --test
-//! service_suite`), once per transport via `SERVICE_TRANSPORT=epoll |
-//! poll | threaded` — the env var narrows [`transports`] so a
-//! regression in any one backend fails its own matrix leg. Unset, every
-//! supported transport runs.
+//! service_suite`), once per transport × codec cell via
+//! `SERVICE_TRANSPORT=epoll | poll | threaded` and
+//! `SERVICE_CODEC=json | binary` — the env vars narrow [`transports`]
+//! and [`codecs`] so a regression in any one cell fails its own matrix
+//! leg. Unset, every supported transport and both codecs run.
+//! Transport-shape tests (starvation, reaping, caps, pipelining) run
+//! once, in the json leg, so the binary legs add codec coverage without
+//! rerunning transport properties.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
@@ -28,6 +32,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use multicloud::coordinator::codec::BINARY_MAGIC;
 use multicloud::coordinator::service::{Service, Transport, MAX_BATCH, MAX_FRAME};
 use multicloud::dataset::OfflineDataset;
 use multicloud::surrogate::NativeBackend;
@@ -70,6 +75,51 @@ fn transports() -> Vec<Transport> {
 /// needs socket registration — connection caps, idle herds).
 fn readiness_transports() -> Vec<Transport> {
     transports().into_iter().filter(|t| *t != Transport::Threaded).collect()
+}
+
+/// The wire codecs under test, narrowed to one by the `SERVICE_CODEC`
+/// env var when set (the CI matrix).
+fn codecs() -> Vec<&'static str> {
+    let mut out = vec!["json", "binary"];
+    if let Ok(only) = std::env::var("SERVICE_CODEC") {
+        if !only.is_empty() {
+            out.retain(|c| *c == only);
+        }
+    }
+    out
+}
+
+/// Whether transport-shape tests run in this matrix leg (once, under
+/// the json codec — the properties they pin are codec-independent).
+fn json_leg() -> bool {
+    codecs().contains(&"json")
+}
+
+/// Write one binary-codec frame: 4-byte little-endian length + payload.
+fn write_binary_frame(conn: &mut TcpStream, payload: &[u8]) {
+    conn.write_all(&(payload.len() as u32).to_le_bytes()).unwrap();
+    conn.write_all(payload).unwrap();
+    conn.flush().unwrap();
+}
+
+/// Read one binary-codec frame, returning its JSON payload as text.
+fn read_binary_frame(conn: &mut TcpStream) -> String {
+    let mut len = [0u8; 4];
+    conn.read_exact(&mut len).expect("read frame length");
+    let mut payload = vec![0u8; u32::from_le_bytes(len) as usize];
+    conn.read_exact(&mut payload).expect("read frame payload");
+    String::from_utf8(payload).expect("response payload is JSON text")
+}
+
+/// One request/response round-trip under a named codec: JSON lines or
+/// length-prefixed binary, same payloads either way.
+fn roundtrip_codec(conn: &mut TcpStream, codec: &str, line: &str) -> String {
+    if codec == "binary" {
+        write_binary_frame(conn, line.as_bytes());
+        read_binary_frame(conn)
+    } else {
+        roundtrip(conn, line)
+    }
 }
 
 /// A served instance that stops and joins on drop (so a failing test
@@ -132,6 +182,9 @@ const OPTIMIZE: &str = r#"{"op":"optimize","workload":"kmeans:buzz","target":"co
 /// workers would be pinned to the first two idle connections forever.)
 #[test]
 fn keep_alive_starvation_hammer() {
+    if !json_leg() {
+        return;
+    }
     // Reference answer from the thread-per-connection fallback, served
     // with no idle herd in the way.
     let reference = Server::start(service().with_conn_workers(2).with_event_loop(false));
@@ -179,6 +232,9 @@ fn keep_alive_starvation_hammer() {
 /// every transport.
 #[test]
 fn partial_frames_trickled_byte_by_byte() {
+    if !json_leg() {
+        return;
+    }
     let reference = service();
     let expected_pong = reference.handle(r#"{"op":"ping"}"#);
     for transport in transports() {
@@ -203,6 +259,9 @@ fn partial_frames_trickled_byte_by_byte() {
 /// served promptly.
 #[test]
 fn mid_request_disconnect_leaves_the_server_healthy() {
+    if !json_leg() {
+        return;
+    }
     for transport in transports() {
         let server = Server::start(service().with_conn_workers(2).with_transport(transport));
         for _ in 0..4 {
@@ -228,6 +287,9 @@ fn mid_request_disconnect_leaves_the_server_healthy() {
 /// serving fresh arrivals.
 #[test]
 fn short_idle_timeout_reaps_parked_connections() {
+    if !json_leg() {
+        return;
+    }
     for transport in transports() {
         let name = transport.name();
         let server = Server::start(
@@ -271,6 +333,9 @@ fn short_idle_timeout_reaps_parked_connections() {
 /// — not dropped — and gets served the moment a slot frees.
 #[test]
 fn small_max_conns_defers_but_never_drops_the_over_cap_client() {
+    if !json_leg() {
+        return;
+    }
     for transport in readiness_transports() {
         let name = transport.name();
         let server = Server::start(
@@ -320,6 +385,9 @@ fn small_max_conns_defers_but_never_drops_the_over_cap_client() {
 /// error and a clean close — and the server keeps serving either way.
 #[test]
 fn garbage_and_oversized_frames() {
+    if !json_leg() {
+        return;
+    }
     for transport in transports() {
         let name = transport.name();
         let server = Server::start(service().with_conn_workers(2).with_transport(transport));
@@ -395,6 +463,9 @@ fn garbage_and_oversized_frames() {
 /// in order, byte-identical to individually issued ones.
 #[test]
 fn batch_limits_and_pipelining() {
+    if !json_leg() {
+        return;
+    }
     let reference = service();
     let lines = [
         r#"{"op":"ping"}"#.to_string(),
@@ -438,6 +509,9 @@ fn batch_limits_and_pipelining() {
 /// cross-transport property, so all supported backends always run.
 #[test]
 fn all_transports_produce_byte_identical_transcripts() {
+    if !json_leg() {
+        return;
+    }
     let script = [
         r#"{"op":"ping"}"#.to_string(),
         r#"{"op":"list_workloads"}"#.to_string(),
@@ -474,6 +548,9 @@ fn all_transports_produce_byte_identical_transcripts() {
 /// requests, inserts ≤ misses, evictions ≤ inserts, size ≤ cap).
 #[test]
 fn concurrent_response_cache_properties() {
+    if !json_leg() {
+        return;
+    }
     const THREADS: usize = 8;
     const KEYS: usize = 8;
     const ROUNDS: usize = 3;
@@ -541,4 +618,264 @@ fn concurrent_response_cache_properties() {
     assert_eq!(svc.scheduler().trials_run(), trials, "refreshed key must still be cached");
     svc.handle(&req(1));
     assert_eq!(svc.scheduler().trials_run(), trials + 1, "unrefreshed key must have been evicted");
+}
+
+/// Codec negotiation on every transport: an explicit hello (ack framed
+/// in the pre-switch codec), a bare hello (acks the codec in effect),
+/// and the magic-byte open all land on a working connection whose
+/// payloads match `Service::handle` exactly.
+#[test]
+fn codec_negotiation_hello_and_magic() {
+    let reference = service();
+    let expected_pong = reference.handle(r#"{"op":"ping"}"#);
+    let expected_opt = reference.handle(OPTIMIZE);
+    for transport in transports() {
+        let name = transport.name();
+        for codec in codecs() {
+            let server = Server::start(service().with_conn_workers(2).with_transport(transport));
+
+            // Explicit hello: ack arrives framed in the codec in effect
+            // *before* the switch (JSON lines), then traffic switches.
+            let mut conn = server.connect();
+            let hello = format!(r#"{{"op":"hello","codec":"{codec}"}}"#);
+            let ack = roundtrip(&mut conn, &hello);
+            assert_eq!(
+                ack,
+                format!(r#"{{"ok":true,"codec":"{codec}"}}"#),
+                "{name}/{codec}: bad hello ack"
+            );
+            assert_eq!(roundtrip_codec(&mut conn, codec, r#"{"op":"ping"}"#), expected_pong);
+            assert_eq!(roundtrip_codec(&mut conn, codec, OPTIMIZE), expected_opt);
+
+            // The per-codec stats counters saw this connection.
+            let stats = roundtrip_codec(&mut conn, codec, r#"{"op":"stats"}"#);
+            let v = parse(&stats).unwrap();
+            let conns_field = format!("{codec}_connections");
+            let reqs_field = format!("{codec}_requests");
+            assert!(
+                v.get(&conns_field).unwrap().as_usize().unwrap() >= 1,
+                "{name}/{codec}: {stats}"
+            );
+            assert!(
+                v.get(&reqs_field).unwrap().as_usize().unwrap() >= 3,
+                "{name}/{codec}: {stats}"
+            );
+            // Free the threaded transport's worker before the next
+            // scenario opens its own connection.
+            drop(conn);
+
+            if codec == "binary" {
+                // Magic-byte open: no hello at all.
+                {
+                    let mut conn = server.connect();
+                    conn.write_all(&[BINARY_MAGIC]).unwrap();
+                    write_binary_frame(&mut conn, br#"{"op":"ping"}"#);
+                    assert_eq!(read_binary_frame(&mut conn), expected_pong, "{name}: magic open");
+                }
+                // A pipelined hello + binary burst in one write: the
+                // codec must switch before the buffered bytes are
+                // scanned.
+                let mut conn = server.connect();
+                let mut burst = Vec::new();
+                burst.extend_from_slice(b"{\"op\":\"hello\",\"codec\":\"binary\"}\n");
+                let ping = br#"{"op":"ping"}"#;
+                burst.extend_from_slice(&(ping.len() as u32).to_le_bytes());
+                burst.extend_from_slice(ping);
+                conn.write_all(&burst).unwrap();
+                conn.flush().unwrap();
+                // Read the ack byte-wise: a BufReader here could slurp
+                // the pipelined binary response into its buffer and
+                // drop it.
+                let mut ack = Vec::new();
+                loop {
+                    let mut b = [0u8; 1];
+                    conn.read_exact(&mut b).unwrap();
+                    if b[0] == b'\n' {
+                        break;
+                    }
+                    ack.push(b[0]);
+                }
+                assert_eq!(ack, br#"{"ok":true,"codec":"binary"}"#, "{name}");
+                assert_eq!(read_binary_frame(&mut conn), expected_pong, "{name}: burst");
+            } else {
+                // A bare hello acks the default codec and changes
+                // nothing.
+                let mut conn = server.connect();
+                let ack = roundtrip(&mut conn, r#"{"op":"hello"}"#);
+                assert_eq!(ack, r#"{"ok":true,"codec":"json"}"#, "{name}");
+                assert_eq!(roundtrip(&mut conn, r#"{"op":"ping"}"#), expected_pong, "{name}");
+            }
+        }
+    }
+}
+
+/// Negotiation robustness: an unknown codec name gets exactly one JSON
+/// error and a close; garbage or truncated hellos never wedge the
+/// server; a hello after the first frame is an in-band error.
+#[test]
+fn codec_negotiation_rejects_and_survives_hostile_hellos() {
+    if !json_leg() {
+        return;
+    }
+    for transport in transports() {
+        let name = transport.name();
+        let server = Server::start(service().with_conn_workers(2).with_transport(transport));
+
+        // Each scenario scopes its connection so the threaded
+        // transport's two workers are never pinned by finished clients.
+
+        // Unknown codec: one JSON error naming the choices, then close.
+        {
+            let mut conn = server.connect();
+            let err = roundtrip(&mut conn, r#"{"op":"hello","codec":"msgpack"}"#);
+            assert!(err.contains("unknown codec 'msgpack'"), "{name}: {err}");
+            assert!(err.contains("json") && err.contains("binary"), "{name}: {err}");
+            let mut byte = [0u8; 1];
+            match conn.read(&mut byte) {
+                Ok(0) => {}
+                Ok(_) => panic!("{name}: data after a codec reject"),
+                Err(e) => {
+                    use std::io::ErrorKind;
+                    assert!(
+                        matches!(e.kind(), ErrorKind::ConnectionReset | ErrorKind::BrokenPipe),
+                        "{name}: expected a close after reject, got {e}"
+                    );
+                }
+            }
+        }
+
+        // Garbage mentioning hello is a (malformed) request, not a
+        // negotiation; the connection stays usable.
+        {
+            let mut conn = server.connect();
+            let bad = roundtrip(&mut conn, "!! hello garbage !!");
+            assert!(bad.contains("bad json"), "{name}: {bad}");
+            assert!(roundtrip(&mut conn, r#"{"op":"ping"}"#).contains("pong"), "{name}");
+        }
+
+        // A truncated hello followed by a disconnect must not wedge
+        // anything.
+        {
+            let mut conn = server.connect();
+            conn.write_all(br#"{"op":"hello","codec":"bin"#).unwrap();
+            conn.flush().unwrap();
+        }
+        {
+            let mut conn = server.connect();
+            assert!(roundtrip(&mut conn, r#"{"op":"ping"}"#).contains("pong"), "{name}");
+        }
+
+        // A hello that is not the connection's first frame is answered
+        // in-band with an error, not renegotiated.
+        {
+            let mut conn = server.connect();
+            assert!(roundtrip(&mut conn, r#"{"op":"ping"}"#).contains("pong"), "{name}");
+            let late = roundtrip(&mut conn, r#"{"op":"hello","codec":"binary"}"#);
+            assert!(late.contains("first frame"), "{name}: {late}");
+            assert!(roundtrip(&mut conn, r#"{"op":"ping"}"#).contains("pong"), "{name}");
+        }
+    }
+}
+
+/// Binary-framing robustness: the frame cap trips on the declared
+/// length alone (one error, close), and disconnects inside a length
+/// prefix or payload leave the server healthy.
+#[test]
+fn binary_frame_cap_and_partial_prefix_disconnects() {
+    if !codecs().contains(&"binary") {
+        return;
+    }
+    for transport in transports() {
+        let name = transport.name();
+        let server = Server::start(service().with_conn_workers(2).with_transport(transport));
+
+        // Oversized declared length: rejected before any payload
+        // arrives — only the magic, the prefix, and a few bytes are
+        // ever sent.
+        let mut conn = server.connect();
+        conn.write_all(&[BINARY_MAGIC]).unwrap();
+        conn.write_all(&((MAX_FRAME as u32) + 1).to_le_bytes()).unwrap();
+        conn.write_all(b"tiny").unwrap();
+        conn.flush().unwrap();
+        let err = read_binary_frame(&mut conn);
+        assert!(err.contains("frame larger than"), "{name}: {err}");
+        let mut sink = Vec::new();
+        let _ = conn.read_to_end(&mut sink);
+        assert!(sink.is_empty(), "{name}: data after the oversize error");
+
+        // Disconnect mid-length-prefix and mid-payload: no worker ever
+        // saw a frame, the server serves the next client promptly.
+        let partials: [&[u8]; 2] =
+            [&[BINARY_MAGIC, 0x09], &[BINARY_MAGIC, 0x09, 0x00, 0x00, 0x00, b'{']];
+        for partial in partials {
+            let mut conn = server.connect();
+            conn.write_all(partial).unwrap();
+            conn.flush().unwrap();
+            drop(conn);
+        }
+        let started = Instant::now();
+        let mut conn = server.connect();
+        conn.write_all(&[BINARY_MAGIC]).unwrap();
+        write_binary_frame(&mut conn, br#"{"op":"ping"}"#);
+        assert!(read_binary_frame(&mut conn).contains("pong"), "{name}");
+        assert!(
+            started.elapsed() < Duration::from_secs(10),
+            "{name}: partial-prefix disconnects delayed the next client"
+        );
+    }
+}
+
+/// Mixed-codec concurrency: JSON-lines and binary clients hammering one
+/// server concurrently each receive payloads identical to a serial
+/// JSON-lines replay on a fresh service. Runs in every leg (the
+/// property is cross-codec by construction).
+#[test]
+fn mixed_codec_concurrent_clients_match_serial_replay() {
+    let script: Vec<String> = vec![
+        r#"{"op":"ping"}"#.to_string(),
+        OPTIMIZE.to_string(),
+        r#"{"op":"optimize","workload":"nope"}"#.to_string(),
+        r#"{"op":"list_methods"}"#.to_string(),
+        OPTIMIZE.to_string(), // cached repeat under contention
+    ];
+    let reference = service();
+    let expected: Vec<String> = script.iter().map(|l| reference.handle(l)).collect();
+
+    for transport in transports() {
+        let name = transport.name();
+        let server = Server::start(service().with_conn_workers(3).with_transport(transport));
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..6)
+                .map(|t| {
+                    let server = &server;
+                    let script = &script;
+                    let expected = &expected;
+                    scope.spawn(move || {
+                        let codec = if t % 2 == 0 { "json" } else { "binary" };
+                        let mut conn = server.connect();
+                        if codec == "binary" {
+                            conn.write_all(&[BINARY_MAGIC]).unwrap();
+                        }
+                        for i in 0..script.len() {
+                            let j = (i + t) % script.len();
+                            let got = roundtrip_codec(&mut conn, codec, &script[j]);
+                            assert_eq!(
+                                got, expected[j],
+                                "{name}: client {t} ({codec}) request {j} diverged"
+                            );
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+
+        // Both codec populations are visible in the stats.
+        let mut conn = server.connect();
+        let v = parse(&roundtrip(&mut conn, r#"{"op":"stats"}"#)).unwrap();
+        assert!(v.get("json_connections").unwrap().as_usize().unwrap() >= 3, "{name}");
+        assert!(v.get("binary_connections").unwrap().as_usize().unwrap() >= 3, "{name}");
+    }
 }
