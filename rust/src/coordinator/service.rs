@@ -27,17 +27,22 @@
 //!   fan-out, batch fan-out) runs on the persistent
 //!   [`global_team`](crate::util::threadpool::global_team) — no thread is
 //!   spawned per request or per bandit sweep.
-//! * **Readiness-driven connections (default on Unix).** One event-loop
-//!   thread owns the listener and every connection socket via the
-//!   [`Readiness`](crate::util::net::Readiness) registration API: it
-//!   does nonblocking framed reads into per-connection buffers, hands
-//!   only *complete* request lines to the connection-worker pool
+//! * **Sharded readiness-driven connections (default on Unix).** One
+//!   acceptor thread owns the listener and distributes accepted sockets
+//!   round-robin-by-load to [`Service::with_reactors`] reactor threads
+//!   (default `min(cores, 4)`). Each reactor owns its own
+//!   [`Readiness`](crate::util::net::Readiness) instance, wake pipe,
+//!   outbox, and a disjoint subset of connections: it does nonblocking
+//!   framed reads into per-connection buffers, hands only *complete*
+//!   request lines to the shared connection-worker pool
 //!   ([`Service::with_conn_workers`]), and writes responses back
 //!   nonblockingly. Idle keep-alive connections therefore cost one fd
 //!   each — never a pinned worker — so `64` idle clients on a
 //!   two-worker pool cannot starve a new arrival. Per connection at
-//!   most one request executes at a time, so pipelined requests are
-//!   answered strictly in order, byte-identical to the threaded path.
+//!   most one request executes at a time and a connection never
+//!   migrates between reactors, so pipelined requests are answered
+//!   strictly in order, byte-identical to the threaded path at any
+//!   reactor count.
 //! * **Three transports, one contract.** [`Service::with_transport`]
 //!   (CLI `--transport epoll|poll|threaded|auto`) picks the backend:
 //!   [`Transport::Epoll`] registers sockets once and pays O(ready
@@ -61,13 +66,17 @@
 //!   server leans on request-level parallelism instead. Explicit values
 //!   are honored as before. Either way results are bit-identical; the
 //!   knob only moves latency.
-//! * **Cross-request response cache (bounded LRU).** Deterministic-mode
-//!   requests (`measure_mode` of `mean`/`p90`) are answered from a cache
-//!   keyed by (workload, target, method, budget, seed, measure_mode): a
-//!   repeat request returns the byte-identical response with zero new
-//!   source measurements. The cache holds at most
-//!   [`Service::with_cache_cap`] entries (default [`DEFAULT_CACHE_CAP`])
-//!   and evicts least-recently-used, so a long-lived server stays
+//! * **Cross-request response cache (bounded, lock-striped LRU).**
+//!   Deterministic-mode requests (`measure_mode` of `mean`/`p90`) are
+//!   answered from a cache keyed by (workload, target, method, budget,
+//!   seed, measure_mode): a repeat request returns the byte-identical
+//!   response with zero new source measurements. Keys hash to one of
+//!   [`Service::with_cache_shards`] independent stripes (default
+//!   [`DEFAULT_CACHE_SHARDS`]), each with its own lock and LRU order,
+//!   so concurrent reactors and workers rarely contend. The cache holds
+//!   at most [`Service::with_cache_cap`] entries globally (default
+//!   [`DEFAULT_CACHE_CAP`], split across stripes) and evicts
+//!   least-recently-used per stripe, so a long-lived server stays
 //!   bounded under adversarial key churn; `{"op":"clear_cache"}` drops
 //!   it wholesale. `single_draw` requests are never cached (repeat
 //!   evaluations legitimately re-draw).
@@ -221,6 +230,118 @@ impl ResponseCache {
     }
 }
 
+/// Default stripe count for the response cache. Eight shards keep the
+/// per-shard mutex hold times short enough that four reactors plus the
+/// connection-worker pool rarely collide on the same stripe, while each
+/// stripe still holds enough entries (cap / shards) for LRU to behave.
+pub const DEFAULT_CACHE_SHARDS: usize = 8;
+
+/// One stripe of the lock-striped response cache: an independent
+/// [`ResponseCache`] plus its own counters, so concurrent reactors
+/// touching different stripes share no lock and no contended cache
+/// line. `stats` sums the counters across stripes.
+struct CacheShard {
+    store: Mutex<ResponseCache>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inserts: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl CacheShard {
+    fn new(cap: usize) -> CacheShard {
+        CacheShard {
+            store: Mutex::new(ResponseCache::new(cap)),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Lock-striped LRU response cache: `ResponseKey`s hash to one of S
+/// independent shards, each with its own mutex, LRU order, and
+/// counters. The global cap is split across shards (remainder spread
+/// one-per-shard from the front), so total residency never exceeds the
+/// configured cap; eviction recency is per-shard, which is exact global
+/// LRU at one shard and an S-way approximation otherwise.
+struct StripedCache {
+    /// Global entry cap (what `with_cache_cap` set; per-shard caps sum
+    /// to exactly this).
+    cap: usize,
+    /// Stripe count as requested by the builder; the effective count is
+    /// capped by `cap` so every shard keeps a cap of at least one.
+    requested_shards: usize,
+    shards: Vec<CacheShard>,
+}
+
+impl StripedCache {
+    fn new(cap: usize, requested_shards: usize) -> StripedCache {
+        let cap = cap.max(1);
+        let n = requested_shards.max(1).min(cap);
+        let (base, extra) = (cap / n, cap % n);
+        let shards =
+            (0..n).map(|i| CacheShard::new(base + usize::from(i < extra))).collect();
+        StripedCache { cap, requested_shards: requested_shards.max(1), shards }
+    }
+
+    fn shard(&self, key: &ResponseKey) -> &CacheShard {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
+    }
+
+    /// Look up, marking the entry most-recently-used in its shard and
+    /// counting a hit or a miss on that shard.
+    fn lookup(&self, key: &ResponseKey) -> Option<CachedResponse> {
+        let shard = self.shard(key);
+        let hit = shard.store.lock().unwrap().get(key);
+        if hit.is_some() {
+            shard.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            shard.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Pre-serialized fast-path lookup: counts a hit only when it
+    /// serves one (the miss is recorded by the [`lookup`](Self::lookup)
+    /// the request then falls through to).
+    fn lookup_str(&self, key: &ResponseKey) -> Option<String> {
+        let shard = self.shard(key);
+        let hit = shard.store.lock().unwrap().get_str(key);
+        if hit.is_some() {
+            shard.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    fn store(&self, key: ResponseKey, resp: CachedResponse) {
+        let shard = self.shard(&key);
+        let (inserted, evicted) = shard.store.lock().unwrap().insert(key, resp);
+        if inserted {
+            shard.inserts.fetch_add(1, Ordering::Relaxed);
+        }
+        if evicted > 0 {
+            shard.evictions.fetch_add(evicted as u64, Ordering::Relaxed);
+        }
+    }
+
+    fn sum(&self, field: impl Fn(&CacheShard) -> &AtomicU64) -> u64 {
+        self.shards.iter().map(|s| field(s).load(Ordering::Relaxed)).sum()
+    }
+
+    fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.store.lock().unwrap().len()).sum()
+    }
+
+    fn clear(&self) -> usize {
+        self.shards.iter().map(|s| s.store.lock().unwrap().clear()).sum()
+    }
+}
+
 /// Process-wide request scheduler: owns the admission count, the
 /// adaptive arm-worker sizing, and the cross-request response cache.
 /// One per [`Service`]; all connections and batch entries share it.
@@ -228,11 +349,7 @@ pub struct Scheduler {
     /// The process compute team all request parallelism lands on.
     team: &'static WorkerTeam,
     in_flight: AtomicUsize,
-    cache: Mutex<ResponseCache>,
-    cache_hits: AtomicU64,
-    cache_misses: AtomicU64,
-    cache_inserts: AtomicU64,
-    cache_evictions: AtomicU64,
+    cache: StripedCache,
     trials_run: AtomicU64,
 }
 
@@ -246,15 +363,11 @@ impl Drop for Admission<'_> {
 }
 
 impl Scheduler {
-    fn new(cache_cap: usize) -> Scheduler {
+    fn new(cache_cap: usize, cache_shards: usize) -> Scheduler {
         Scheduler {
             team: global_team(),
             in_flight: AtomicUsize::new(0),
-            cache: Mutex::new(ResponseCache::new(cache_cap)),
-            cache_hits: AtomicU64::new(0),
-            cache_misses: AtomicU64::new(0),
-            cache_inserts: AtomicU64::new(0),
-            cache_evictions: AtomicU64::new(0),
+            cache: StripedCache::new(cache_cap, cache_shards),
             trials_run: AtomicU64::new(0),
         }
     }
@@ -281,26 +394,28 @@ impl Scheduler {
         self.team.threads()
     }
 
-    /// Responses served straight from the cross-request cache so far.
+    /// Responses served straight from the cross-request cache so far
+    /// (summed across stripes).
     pub fn cache_hits(&self) -> u64 {
-        self.cache_hits.load(Ordering::Relaxed)
+        self.cache.sum(|s| &s.hits)
     }
 
     /// Deterministic-mode requests that missed the cache (every one runs
     /// a trial, so `hits + misses` = deterministic requests served).
     pub fn cache_misses(&self) -> u64 {
-        self.cache_misses.load(Ordering::Relaxed)
+        self.cache.sum(|s| &s.misses)
     }
 
     /// Entries actually inserted into the cache (misses minus racing
     /// duplicates whose key was already present at store time).
     pub fn cache_inserts(&self) -> u64 {
-        self.cache_inserts.load(Ordering::Relaxed)
+        self.cache.sum(|s| &s.inserts)
     }
 
-    /// Entries evicted from the response cache so far (LRU past the cap).
+    /// Entries evicted from the response cache so far (LRU past each
+    /// stripe's share of the cap).
     pub fn cache_evictions(&self) -> u64 {
-        self.cache_evictions.load(Ordering::Relaxed)
+        self.cache.sum(|s| &s.evictions)
     }
 
     /// Optimization trials actually executed (cache misses + uncacheable).
@@ -308,24 +423,23 @@ impl Scheduler {
         self.trials_run.load(Ordering::Relaxed)
     }
 
-    /// Deterministic-mode responses currently cached.
+    /// Deterministic-mode responses currently cached (all stripes).
     pub fn cached_responses(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.cache.len()
     }
 
     /// Drop every cached response; returns how many were held.
     pub fn clear_cache(&self) -> usize {
-        self.cache.lock().unwrap().clear()
+        self.cache.clear()
+    }
+
+    /// Stripes in the response cache (effective count, ≤ the cap).
+    pub fn cache_shards(&self) -> usize {
+        self.cache.shards.len()
     }
 
     fn cache_lookup(&self, key: &ResponseKey) -> Option<CachedResponse> {
-        let hit = self.cache.lock().unwrap().get(key);
-        if hit.is_some() {
-            self.cache_hits.fetch_add(1, Ordering::Relaxed);
-        } else {
-            self.cache_misses.fetch_add(1, Ordering::Relaxed);
-        }
-        hit
+        self.cache.lookup(key)
     }
 
     /// Pre-serialized fast-path lookup. Counts a hit only when it
@@ -334,26 +448,44 @@ impl Scheduler {
     /// whose own lookup records it — so `hits + misses` still equals
     /// deterministic requests served.
     fn cache_lookup_str(&self, key: &ResponseKey) -> Option<String> {
-        let hit = self.cache.lock().unwrap().get_str(key);
-        if hit.is_some() {
-            self.cache_hits.fetch_add(1, Ordering::Relaxed);
-        }
-        hit
+        self.cache.lookup_str(key)
     }
 
     fn cache_store(&self, key: ResponseKey, resp: CachedResponse) {
-        let (inserted, evicted) = self.cache.lock().unwrap().insert(key, resp);
-        if inserted {
-            self.cache_inserts.fetch_add(1, Ordering::Relaxed);
-        }
-        if evicted > 0 {
-            self.cache_evictions.fetch_add(evicted as u64, Ordering::Relaxed);
+        self.cache.store(key, resp);
+    }
+}
+
+/// Per-reactor gauges published while a multi-reactor serve is live:
+/// one `Arc` per reactor thread, registered in
+/// [`NetStats::reactor_gauges`] at startup and read by the `stats` op
+/// to report `per_reactor_open` / `per_reactor_wakeups` for skew
+/// diagnosis. `open` is also the acceptor's load signal for
+/// least-loaded distribution.
+struct ReactorGauges {
+    /// Connections this reactor currently owns (incremented by the
+    /// acceptor at hand-off, decremented by the reactor at close).
+    open: AtomicUsize,
+    /// Of those, connections with nothing buffered and no request in
+    /// flight.
+    idle: AtomicUsize,
+    /// Readiness waits on this reactor that reported at least one ready
+    /// fd.
+    wakeups: AtomicU64,
+}
+
+impl ReactorGauges {
+    fn new() -> ReactorGauges {
+        ReactorGauges {
+            open: AtomicUsize::new(0),
+            idle: AtomicUsize::new(0),
+            wakeups: AtomicU64::new(0),
         }
     }
 }
 
 /// Transport-level gauges surfaced by the `stats` op. Written by the
-/// event loop (or the threaded workers, which only track
+/// reactor threads (or the threaded workers, which only track
 /// `open_connections`), read by any request handler.
 struct NetStats {
     /// Open client connections. Under the event loop: every accepted
@@ -382,6 +514,10 @@ struct NetStats {
     /// Request frames decoded (or answered with a decode error) under
     /// the binary codec.
     binary_requests: AtomicU64,
+    /// Per-reactor gauge blocks, published when a readiness-driven
+    /// serve starts and cleared when it drains. Empty while not serving
+    /// or under the threaded fallback.
+    reactor_gauges: Mutex<Vec<Arc<ReactorGauges>>>,
 }
 
 impl NetStats {
@@ -395,6 +531,7 @@ impl NetStats {
             binary_connections: AtomicU64::new(0),
             json_requests: AtomicU64::new(0),
             binary_requests: AtomicU64::new(0),
+            reactor_gauges: Mutex::new(Vec::new()),
         }
     }
 
@@ -538,6 +675,9 @@ pub struct Service {
     backend: Arc<dyn Backend + Send + Sync>,
     scheduler: Scheduler,
     conn_workers: usize,
+    /// Reactor (event-loop) threads for the readiness transports; 0 =
+    /// adaptive (`min(cores, 4)`).
+    reactors: usize,
     /// How client sockets are served (best available by default).
     transport: Transport,
     /// Runtime-tunable serving limits (defaults match the former
@@ -589,8 +729,9 @@ impl Service {
         Service {
             ds,
             backend,
-            scheduler: Scheduler::new(DEFAULT_CACHE_CAP),
+            scheduler: Scheduler::new(DEFAULT_CACHE_CAP, DEFAULT_CACHE_SHARDS),
             conn_workers: default_workers().clamp(2, 32),
+            reactors: 0,
             transport: Transport::best(),
             limits: ServiceLimits::default(),
             net: NetStats::new(),
@@ -605,6 +746,27 @@ impl Service {
     pub fn with_conn_workers(mut self, workers: usize) -> Service {
         self.conn_workers = workers.max(1);
         self
+    }
+
+    /// Reactor threads for the readiness transports (`0` = adaptive:
+    /// `min(cores, 4)`, explicit values clamped to 1..=256). Each
+    /// reactor owns its own readiness instance, wake pipe, outbox, and
+    /// a disjoint subset of connections handed off at accept; the
+    /// threaded transport ignores this knob.
+    pub fn with_reactors(mut self, reactors: usize) -> Service {
+        self.reactors = reactors.min(256);
+        self
+    }
+
+    /// Reactor threads a readiness-driven serve will start: the
+    /// explicit [`with_reactors`](Self::with_reactors) value, or
+    /// `min(cores, 4)` when left adaptive.
+    pub fn reactor_count(&self) -> usize {
+        if self.reactors == 0 {
+            default_workers().min(4).max(1)
+        } else {
+            self.reactors
+        }
     }
 
     /// Choose the serving transport explicitly. An unavailable choice
@@ -694,11 +856,26 @@ impl Service {
     }
 
     /// Bound the cross-request response cache (entries, min 1): beyond
-    /// it the least-recently-used response is evicted. Long-lived
-    /// servers stay memory-bounded no matter how many distinct
-    /// deterministic keys clients churn through.
+    /// it the least-recently-used response in the affected stripe is
+    /// evicted. Long-lived servers stay memory-bounded no matter how
+    /// many distinct deterministic keys clients churn through. Rebuilds
+    /// the stripes (dropping any cached entries), so set it before
+    /// serving.
     pub fn with_cache_cap(mut self, cap: usize) -> Service {
-        self.scheduler.cache.lock().unwrap().cap = cap.max(1);
+        let shards = self.scheduler.cache.requested_shards;
+        self.scheduler.cache = StripedCache::new(cap, shards);
+        self
+    }
+
+    /// Stripe the response cache across `shards` independent LRU shards
+    /// (default [`DEFAULT_CACHE_SHARDS`]; min 1, and never more than
+    /// the cap so every stripe caps at ≥ 1 entry). One shard restores
+    /// exact global LRU order; more shards trade that for uncontended
+    /// concurrent lookups across reactors. Rebuilds the stripes
+    /// (dropping any cached entries), so set it before serving.
+    pub fn with_cache_shards(mut self, shards: usize) -> Service {
+        let cap = self.scheduler.cache.cap;
+        self.scheduler.cache = StripedCache::new(cap, shards);
         self
     }
 
@@ -787,6 +964,29 @@ impl Service {
             "stats" => {
                 let s = &self.scheduler;
                 let net = &self.net;
+                // Per-reactor gauge snapshot: non-empty exactly while a
+                // readiness-driven serve is live. `idle_connections` is
+                // summed from the live gauges then (each reactor counts
+                // only its own herd); open_connections stays a global
+                // atomic because the acceptor maintains it for cap
+                // enforcement.
+                let gauges = net.reactor_gauges.lock().unwrap();
+                let per_open: Vec<Value> = gauges
+                    .iter()
+                    .map(|g| g.open.load(Ordering::Relaxed).into())
+                    .collect();
+                let per_wakeups: Vec<Value> = gauges
+                    .iter()
+                    .map(|g| (g.wakeups.load(Ordering::Relaxed) as usize).into())
+                    .collect();
+                let idle = if gauges.is_empty() {
+                    net.idle_connections.load(Ordering::Relaxed)
+                } else {
+                    gauges.iter().map(|g| g.idle.load(Ordering::Relaxed)).sum()
+                };
+                drop(gauges);
+                let reactors =
+                    if self.event_loop_enabled() { self.reactor_count() } else { 0 };
                 Ok(Value::obj(vec![
                     ("ok", true.into()),
                     ("in_flight", s.in_flight().into()),
@@ -796,9 +996,13 @@ impl Service {
                     ("cache_inserts", (s.cache_inserts() as usize).into()),
                     ("cache_evictions", (s.cache_evictions() as usize).into()),
                     ("cached_responses", s.cached_responses().into()),
-                    ("cache_cap", s.cache.lock().unwrap().cap.into()),
+                    ("cache_cap", s.cache.cap.into()),
+                    ("cache_shards", s.cache_shards().into()),
                     ("team_threads", s.team_threads().into()),
                     ("conn_workers", self.conn_workers.into()),
+                    ("reactors", reactors.into()),
+                    ("per_reactor_open", Value::Arr(per_open)),
+                    ("per_reactor_wakeups", Value::Arr(per_wakeups)),
                     ("transport", Value::str(self.transport.name())),
                     ("event_loop", self.event_loop_enabled().into()),
                     ("max_conns", self.effective_max_conns().into()),
@@ -812,7 +1016,7 @@ impl Service {
                         (nofile_soft_limit().unwrap_or(0).min(usize::MAX as u64) as usize).into(),
                     ),
                     ("open_connections", net.open_connections.load(Ordering::Relaxed).into()),
-                    ("idle_connections", net.idle_connections.load(Ordering::Relaxed).into()),
+                    ("idle_connections", idle.into()),
                     ("loop_wakeups", (net.loop_wakeups.load(Ordering::Relaxed) as usize).into()),
                     ("ready_events", (net.ready_events.load(Ordering::Relaxed) as usize).into()),
                     (
@@ -1062,9 +1266,11 @@ impl Service {
     ///
     /// Transport is chosen by [`with_transport`](Self::with_transport):
     ///
-    /// * **Event loop (epoll or poll; default on Unix)** — one
-    ///   readiness-driven thread owns every socket; complete request
-    ///   frames are handed to a fixed pool of connection workers and
+    /// * **Event loop (epoll or poll; default on Unix)** — an acceptor
+    ///   thread distributes sockets across
+    ///   [`reactor_count`](Self::reactor_count) readiness-driven
+    ///   reactor threads; complete request frames are handed to a
+    ///   fixed pool of connection workers shared by all reactors and
     ///   responses written back nonblockingly. Idle keep-alive
     ///   connections never occupy a worker.
     /// * **Threaded fallback** — bounded accept queue (capacity 2× the
@@ -1277,44 +1483,55 @@ fn handle_conn(svc: &Service, stream: TcpStream) -> std::io::Result<()> {
     }
 }
 
-/// The readiness-driven transport: one thread, all sockets, registered
-/// with a [`Readiness`](crate::util::net::Readiness) backend (epoll or
-/// a persistent poll set — [`Transport`] picks).
+/// The readiness-driven transport, sharded into
+/// [`Service::reactor_count`] reactor threads behind one
+/// acceptor/distributor.
 ///
-/// The loop owns the listener and every connection. Sockets register
-/// **once** on accept; interest changes only on state transitions
-/// (read-paused under backpressure, write-armed while a response is
-/// unflushed), so steady-state iterations touch only ready fds. Per
-/// wakeup it:
+/// **Topology.** The acceptor is the only thread that touches the
+/// listener: it accepts while the *global* open count is under the
+/// effective [`ServiceLimits::max_conns`] (at the cap the listener is
+/// parked — an interest transition — and the kernel backlog defers,
+/// never drops, the overflow), makes each socket nonblocking, and hands
+/// it to the least-loaded reactor's ingress queue (rotating tie-break,
+/// so equal loads round-robin). Each reactor owns its own
+/// [`Readiness`](crate::util::net::Readiness) instance (epoll or a
+/// persistent poll set — [`Transport`] picks), its own wake pipe, its
+/// own outbox, and the disjoint subset of connections it adopted — a
+/// connection never migrates between reactors, which is what preserves
+/// per-connection FIFO ordering and byte-identical transcripts across
+/// reactor counts.
+///
+/// **Per reactor wakeup** (sockets register **once** at adoption;
+/// interest changes only on state transitions, so steady-state
+/// iterations touch only ready fds):
 ///
 /// 1. waits for readiness (50 ms timeout to observe `stop`),
-/// 2. accepts new connections while under the effective
-///    [`ServiceLimits::max_conns`] (at the cap the listener is parked —
-///    an interest transition — and the kernel backlog defers, never
-///    drops, the overflow),
+/// 2. drains the worker outbox (finished responses → per-connection
+///    write buffers) and adopts sockets from its ingress queue,
 /// 3. does nonblocking reads on readable connections, feeding each
 ///    one's shared [`FrameScanner`] and moving complete frames into
 ///    per-connection pending queues (codec negotiation resolves here,
 ///    on the first frame),
-/// 4. drains the worker outbox (finished responses → per-connection
-///    write buffers),
-/// 5. dispatches at most **one** in-flight request per connection to
-///    the connection-worker pool (strict per-connection FIFO — the
-///    ordering contract of the threaded transport), and
-/// 6. flushes write buffers nonblockingly, closing connections that
-///    finished (`closing`/EOF with everything drained).
+/// 4. dispatches at most **one** in-flight request per connection to
+///    the shared connection-worker pool (strict per-connection FIFO —
+///    the ordering contract of the threaded transport), and
+/// 5. flushes write buffers nonblockingly, closing connections that
+///    finished (`closing`/EOF with everything drained) and releasing
+///    their global slot (waking a parked acceptor).
 ///
-/// Steps 3–6 run only over connections an event touched, so a wakeup
-/// costs O(ready events + accepts) — under epoll, independent of how
-/// many idle connections are open. Idle reaping
-/// ([`ServiceLimits::idle_timeout`]) pops a deadline-ordered queue, so
-/// it costs O(expired connections) per iteration — never a sweep over
-/// the open set.
+/// A wakeup costs O(ready events + adoptions) — under epoll,
+/// independent of how many idle connections are open. Idle reaping
+/// ([`ServiceLimits::idle_timeout`]) pops a per-reactor
+/// deadline-ordered queue, so it costs O(expired connections) per
+/// iteration — never a sweep over the open set.
 ///
-/// Workers never touch sockets; the loop never runs requests. The two
-/// meet only at the outbox (a mutex-guarded vec + a [`WakePipe`]), so a
-/// slow trial can never stall reads, and 100k idle keep-alive
-/// connections cost 100k fds — not 100k pinned threads.
+/// Workers never touch sockets; reactors never run requests. They meet
+/// only at each reactor's outbox (a mutex-guarded vec + a
+/// [`WakePipe`]), so a slow trial can never stall reads, and 100k idle
+/// keep-alive connections cost 100k fds — not 100k pinned threads.
+/// Cross-reactor shared state is limited to the striped response
+/// cache (lock per stripe), the worker pool's job queue, and a few
+/// stats atomics.
 #[cfg(unix)]
 mod event_loop {
     use std::collections::{BTreeMap, BTreeSet, VecDeque};
@@ -1326,7 +1543,8 @@ mod event_loop {
     use std::time::{Duration, Instant};
 
     use super::{
-        error_line, handle_wire_guarded, Service, ServiceLimits, Transport, WireReply, MAX_FRAME,
+        error_line, handle_wire_guarded, NetStats, ReactorGauges, Service, ServiceLimits,
+        Transport, WireReply, MAX_FRAME,
     };
     use crate::coordinator::codec::{self, FrameScanner, Greeting};
     use crate::util::net::{poll, Event, PollFd, Readiness, WakePipe, POLLIN, POLLOUT};
@@ -1440,8 +1658,10 @@ mod event_loop {
         }
     }
 
-    /// Finished replies travelling worker → loop. Workers push and
-    /// wake; the loop drains under one lock acquisition per iteration.
+    /// Finished replies travelling worker → reactor. Workers push and
+    /// wake; the owning reactor drains under one lock acquisition per
+    /// iteration. The wake pipe doubles as the reactor's hand-off
+    /// doorbell: the acceptor rings it after queueing a socket.
     struct Outbox {
         queue: Mutex<Vec<(u64, WireReply)>>,
         wake: WakePipe,
@@ -1454,32 +1674,216 @@ mod event_loop {
         }
     }
 
+    /// Everything the acceptor shares with one reactor thread.
+    struct ReactorShared {
+        /// Accepted sockets handed off by the acceptor, adopted by the
+        /// reactor at its next wakeup. A socket never moves again: the
+        /// adopting reactor owns it until close, which is what keeps
+        /// per-connection FIFO ordering and transcripts byte-identical
+        /// to the single-reactor and threaded paths.
+        ingress: Mutex<Vec<TcpStream>>,
+        outbox: Arc<Outbox>,
+        gauges: Arc<ReactorGauges>,
+    }
+
+    /// The reactors' channel back to the acceptor: while the listener
+    /// is parked at the global connection cap, the reactor closing a
+    /// connection rings this so the freed slot re-admits the kernel
+    /// backlog promptly instead of waiting out the acceptor's 50 ms
+    /// wait timeout.
+    struct AcceptorLink {
+        parked: AtomicBool,
+        wake: WakePipe,
+    }
+
+    /// Close-time slot bookkeeping shared by every path that releases
+    /// a connection: the per-reactor load gauge and the global open
+    /// count move down together, and a parked acceptor is woken
+    /// because the freed slot lets it accept again.
+    struct SlotRelease<'a> {
+        net: &'a NetStats,
+        gauges: &'a ReactorGauges,
+        link: &'a AcceptorLink,
+    }
+
+    impl SlotRelease<'_> {
+        fn release(&self) {
+            self.gauges.open.fetch_sub(1, Ordering::Relaxed);
+            self.net.open_connections.fetch_sub(1, Ordering::Relaxed);
+            if self.link.parked.load(Ordering::Relaxed) {
+                self.link.wake.wake();
+            }
+        }
+    }
+
+    /// Start [`Service::reactor_count`] reactor threads, then run the
+    /// acceptor/distributor on this thread until `stop`; joining the
+    /// reactors (each runs its own bounded shutdown drain) and the
+    /// shared worker pool on the way out.
     pub(super) fn run(svc: Arc<Service>, listener: TcpListener, stop: Arc<AtomicBool>) {
-        let limits = svc.limits;
+        let n = svc.reactor_count().max(1);
         let max_conns = svc.effective_max_conns();
-        let pool = WorkerTeam::host_pool(svc.conn_workers.max(1));
-        let outbox = Arc::new(Outbox {
-            queue: Mutex::new(Vec::new()),
-            wake: WakePipe::new().expect("event loop: wake pipe"),
+        // One connection-worker pool shared by every reactor: request
+        // concurrency stays bounded by `conn_workers` no matter how
+        // many reactors dispatch into it.
+        let pool = Arc::new(WorkerTeam::host_pool(svc.conn_workers.max(1)));
+        let link = Arc::new(AcceptorLink {
+            parked: AtomicBool::new(false),
+            wake: WakePipe::new().expect("acceptor: wake pipe"),
         });
+        let reactors: Vec<Arc<ReactorShared>> = (0..n)
+            .map(|_| {
+                Arc::new(ReactorShared {
+                    ingress: Mutex::new(Vec::new()),
+                    outbox: Arc::new(Outbox {
+                        queue: Mutex::new(Vec::new()),
+                        wake: WakePipe::new().expect("reactor: wake pipe"),
+                    }),
+                    gauges: Arc::new(ReactorGauges::new()),
+                })
+            })
+            .collect();
+        // Publish the per-reactor gauges so `stats` can report
+        // `per_reactor_open` / `per_reactor_wakeups` while live.
+        *svc.net.reactor_gauges.lock().unwrap() =
+            reactors.iter().map(|r| Arc::clone(&r.gauges)).collect();
+
+        let threads: Vec<_> = reactors
+            .iter()
+            .map(|shared| {
+                let svc = Arc::clone(&svc);
+                let shared = Arc::clone(shared);
+                let link = Arc::clone(&link);
+                let pool = Arc::clone(&pool);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    reactor_loop(&svc, &shared, &link, &pool, &stop, max_conns)
+                })
+            })
+            .collect();
+
+        accept_loop(&svc, &listener, &reactors, &link, &stop, max_conns);
+
+        // Stop observed: ring every reactor so none sits out its wait
+        // timeout, then join them.
+        for shared in &reactors {
+            shared.outbox.wake.wake();
+        }
+        for t in threads {
+            let _ = t.join();
+        }
+        drop(pool); // last ref: join workers (in-flight requests finish)
+        svc.net.reactor_gauges.lock().unwrap().clear();
+        svc.net.open_connections.store(0, Ordering::Relaxed);
+        svc.net.idle_connections.store(0, Ordering::Relaxed);
+    }
+
+    /// The acceptor/distributor: the only thread that touches the
+    /// listener. It accepts while the *global* open count is under the
+    /// effective cap — `RLIMIT_NOFILE` clamping and the at-cap
+    /// listener-parking semantics are exactly the single-loop ones —
+    /// and hands each socket to the least-loaded reactor's ingress
+    /// queue (a rotating cursor breaks ties, so an idle server still
+    /// round-robins instead of piling onto reactor 0).
+    fn accept_loop(
+        svc: &Service,
+        listener: &TcpListener,
+        reactors: &[Arc<ReactorShared>],
+        link: &AcceptorLink,
+        stop: &AtomicBool,
+        max_conns: usize,
+    ) {
+        let mut reg = Readiness::poll_set().expect("acceptor: poll set");
+        reg.register(link.wake.read_fd(), TOKEN_WAKE, POLLIN)
+            .expect("acceptor: register wake pipe");
+        reg.register(listener.as_raw_fd(), TOKEN_LISTENER, POLLIN)
+            .expect("acceptor: register listener");
+        let mut accepting = true;
+        let mut events: Vec<Event> = Vec::new();
+        let mut cursor = 0usize;
+        while !stop.load(Ordering::Relaxed) {
+            if reg.wait(&mut events, 50).is_err() {
+                // A persistent wait failure (e.g. ENOMEM) must not
+                // busy-spin the loop: back off for one wait period and
+                // retry, still observing `stop`.
+                std::thread::sleep(Duration::from_millis(50));
+                continue;
+            }
+            link.wake.drain();
+            loop {
+                if svc.net.open_connections.load(Ordering::Relaxed) >= max_conns {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if stream.set_nonblocking(true).is_err() {
+                            continue;
+                        }
+                        // Round-robin-by-load: the hand-off is counted
+                        // against the reactor's gauge *here*, so
+                        // in-flight (not yet adopted) sockets already
+                        // weigh in the next pick.
+                        let pick = (0..reactors.len())
+                            .map(|i| (cursor + i) % reactors.len())
+                            .min_by_key(|&i| reactors[i].gauges.open.load(Ordering::Relaxed))
+                            .unwrap_or(0);
+                        cursor = (pick + 1) % reactors.len();
+                        let shard = &reactors[pick];
+                        svc.net.open_connections.fetch_add(1, Ordering::Relaxed);
+                        shard.gauges.open.fetch_add(1, Ordering::Relaxed);
+                        shard.ingress.lock().unwrap().push(stream);
+                        shard.outbox.wake.wake();
+                    }
+                    Err(_) => break, // WouldBlock or transient error
+                }
+            }
+            // Park/unpark the listener on cap transitions, so a full
+            // house costs no accept wakeups and a freed slot re-admits
+            // the kernel backlog (deferred, not dropped). `parked` is
+            // what tells closing reactors to ring the wake pipe.
+            let want_accept = svc.net.open_connections.load(Ordering::Relaxed) < max_conns;
+            if want_accept != accepting {
+                let flags = if want_accept { POLLIN } else { 0 };
+                let _ = reg.modify(listener.as_raw_fd(), TOKEN_LISTENER, flags);
+                accepting = want_accept;
+            }
+            link.parked.store(!accepting, Ordering::Relaxed);
+        }
+    }
+
+    /// One reactor: owns its readiness instance, wake pipe, outbox, and
+    /// a disjoint subset of connections (adopted from its ingress
+    /// queue, never migrated). The body is the single-loop transport
+    /// minus accepting — hand-off pickup replaces the listener — so
+    /// every per-connection contract (FIFO dispatch, backpressure,
+    /// idle reap, bounded drain) is verbatim.
+    fn reactor_loop(
+        svc: &Arc<Service>,
+        shared: &ReactorShared,
+        link: &AcceptorLink,
+        pool: &Arc<WorkerTeam>,
+        stop: &AtomicBool,
+        max_conns: usize,
+    ) {
+        let limits = svc.limits;
+        let outbox = &shared.outbox;
+        let gauges = &*shared.gauges;
+        let slot = SlotRelease { net: &svc.net, gauges, link };
         // The requested backend, degrading to the portable poll set if
         // epoll creation fails at runtime (e.g. fd exhaustion). The
         // epoll wait batch is sized to the connection cap (plus the
-        // listener and wake pipe), so a fully-active house drains in
-        // one syscall instead of 1024-event slices.
+        // wake pipe), so a fully-active house drains in one syscall
+        // instead of 1024-event slices.
         let mut reg = if svc.transport == Transport::Epoll {
             match Readiness::epoll_with_batch(max_conns + 2) {
                 Some(Ok(r)) => r,
-                _ => Readiness::poll_set().expect("event loop: poll set"),
+                _ => Readiness::poll_set().expect("reactor: poll set"),
             }
         } else {
-            Readiness::poll_set().expect("event loop: poll set")
+            Readiness::poll_set().expect("reactor: poll set")
         };
         reg.register(outbox.wake.read_fd(), TOKEN_WAKE, POLLIN)
-            .expect("event loop: register wake pipe");
-        reg.register(listener.as_raw_fd(), TOKEN_LISTENER, POLLIN)
-            .expect("event loop: register listener");
-        let mut accepting = true;
+            .expect("reactor: register wake pipe");
 
         let mut conns: BTreeMap<u64, Conn> = BTreeMap::new();
         let mut next_token: u64 = FIRST_CONN_TOKEN;
@@ -1500,9 +1904,6 @@ mod event_loop {
 
         while !stop.load(Ordering::Relaxed) {
             if reg.wait(&mut events, 50).is_err() {
-                // A persistent wait failure (e.g. ENOMEM) must not
-                // busy-spin the loop: back off for one wait period and
-                // retry, still observing `stop`.
                 std::thread::sleep(Duration::from_millis(50));
                 continue;
             }
@@ -1512,17 +1913,16 @@ mod event_loop {
             if !events.is_empty() {
                 svc.net.loop_wakeups.fetch_add(1, Ordering::Relaxed);
                 svc.net.ready_events.fetch_add(events.len() as u64, Ordering::Relaxed);
+                gauges.wakeups.fetch_add(1, Ordering::Relaxed);
             }
 
             touched.clear();
             dead.clear();
-            let mut accept_ready = false;
 
             // 1. Classify events; read from readable connections.
             for ev in &events {
                 match ev.token {
                     TOKEN_WAKE => outbox.wake.drain(),
-                    TOKEN_LISTENER => accept_ready = true,
                     tok => {
                         let Some(c) = conns.get_mut(&tok) else { continue };
                         if ev.error() {
@@ -1530,7 +1930,7 @@ mod event_loop {
                             continue;
                         }
                         if ev.readable() {
-                            if !read_ready(c, &svc) {
+                            if !read_ready(c, svc) {
                                 dead.push(tok);
                                 continue;
                             }
@@ -1557,35 +1957,32 @@ mod event_loop {
                 }
             }
 
-            // 3. New connections: register once, watch for requests.
-            if accept_ready && accepting {
-                while conns.len() < max_conns {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            if stream.set_nonblocking(true).is_err() {
-                                continue;
-                            }
-                            let tok = next_token;
-                            next_token += 1;
-                            let mut c = Conn::new(stream);
-                            if reg.register(c.stream.as_raw_fd(), tok, POLLIN).is_err() {
-                                continue; // drop the socket, keep serving
-                            }
-                            c.interest = POLLIN;
-                            c.reap_due = Instant::now() + limits.idle_timeout;
-                            reap_queue.insert((c.reap_due, tok));
-                            conns.insert(tok, c);
-                            touched.push(tok);
-                        }
-                        Err(_) => break, // WouldBlock or transient error
-                    }
+            // 3. Adopt handed-off sockets: register once, watch for
+            // requests. The acceptor already counted each against the
+            // global cap and this reactor's load gauge (and made it
+            // nonblocking), so a registration failure must release the
+            // slot it holds.
+            let arrivals: Vec<TcpStream> =
+                std::mem::take(&mut *shared.ingress.lock().unwrap());
+            for stream in arrivals {
+                let tok = next_token;
+                next_token += 1;
+                let mut c = Conn::new(stream);
+                if reg.register(c.stream.as_raw_fd(), tok, POLLIN).is_err() {
+                    slot.release(); // drop the socket, keep serving
+                    continue;
                 }
+                c.interest = POLLIN;
+                c.reap_due = Instant::now() + limits.idle_timeout;
+                reap_queue.insert((c.reap_due, tok));
+                conns.insert(tok, c);
+                touched.push(tok);
             }
 
             // Remove unrecoverable connections before dispatching, so no
             // request is handed to workers on behalf of a gone client.
             for tok in dead.drain(..) {
-                drop_conn(&mut conns, tok, &mut reg, &mut idle_count, &mut reap_queue);
+                drop_conn(&mut conns, tok, &mut reg, &mut idle_count, &mut reap_queue, &slot);
             }
 
             // 4–6. Dispatch, flush, and re-sync interest — but only for
@@ -1597,13 +1994,13 @@ mod event_loop {
             touched.dedup();
             for &tok in &touched {
                 let Some(c) = conns.get_mut(&tok) else { continue };
-                dispatch(c, tok, &svc, &pool, &outbox);
+                dispatch(c, tok, svc, pool, outbox);
                 let alive = flush(c);
                 if alive {
                     // Flushing may have drained the write backlog below
                     // the dispatch gate: admit the next pending frame
                     // now rather than waiting for another event.
-                    dispatch(c, tok, &svc, &pool, &outbox);
+                    dispatch(c, tok, svc, pool, outbox);
                 }
                 if !alive || c.done() {
                     dead.push(tok);
@@ -1612,7 +2009,7 @@ mod event_loop {
                 }
             }
             for tok in dead.drain(..) {
-                drop_conn(&mut conns, tok, &mut reg, &mut idle_count, &mut reap_queue);
+                drop_conn(&mut conns, tok, &mut reg, &mut idle_count, &mut reap_queue, &slot);
             }
 
             // Reap expired connections: pop due deadlines off the front
@@ -1637,22 +2034,12 @@ mod event_loop {
                 }
             }
             for tok in dead.drain(..) {
-                drop_conn(&mut conns, tok, &mut reg, &mut idle_count, &mut reap_queue);
+                drop_conn(&mut conns, tok, &mut reg, &mut idle_count, &mut reap_queue, &slot);
             }
 
-            // Park/unpark the listener on cap transitions, so a full
-            // house costs no accept wakeups and a freed slot re-admits
-            // the kernel backlog (deferred, not dropped).
-            let want_accept = conns.len() < max_conns;
-            if want_accept != accepting {
-                let flags = if want_accept { POLLIN } else { 0 };
-                let _ = reg.modify(listener.as_raw_fd(), TOKEN_LISTENER, flags);
-                accepting = want_accept;
-            }
-
-            // Transport gauges for the `stats` op.
-            svc.net.open_connections.store(conns.len(), Ordering::Relaxed);
-            svc.net.idle_connections.store(idle_count, Ordering::Relaxed);
+            // This reactor's idle gauge for the `stats` op (`open`
+            // moves incrementally at hand-off and close).
+            gauges.idle.store(idle_count, Ordering::Relaxed);
         }
 
         // Post-stop drain (bounded): deliver what is owed — responses
@@ -1660,6 +2047,8 @@ mod event_loop {
         // then close. Idle keep-alives are shed immediately. Uses a
         // throwaway poll set per iteration (the survivor set is tiny
         // and shrinking; registration bookkeeping buys nothing here).
+        // Slot bookkeeping is skipped: the coordinator zeroes every
+        // gauge once all reactors have joined.
         let deadline = Instant::now() + limits.shutdown_drain;
         while Instant::now() < deadline {
             conns.retain(|_, c| c.busy || !c.pending.is_empty() || c.wbuf_backlog() > 0);
@@ -1688,7 +2077,7 @@ mod event_loop {
             }
             let mut dead: Vec<u64> = Vec::new();
             for (tok, c) in conns.iter_mut() {
-                dispatch(c, *tok, &svc, &pool, &outbox);
+                dispatch(c, *tok, svc, pool, outbox);
                 if !flush(c) {
                     dead.push(*tok);
                 }
@@ -1699,9 +2088,7 @@ mod event_loop {
         }
 
         drop(conns); // close any socket still unfinished at the deadline
-        drop(pool); // join workers (in-flight requests finish first)
-        svc.net.open_connections.store(0, Ordering::Relaxed);
-        svc.net.idle_connections.store(0, Ordering::Relaxed);
+        gauges.idle.store(0, Ordering::Relaxed);
     }
 
     /// Pull readable bytes and slice complete frames into `pending`.
@@ -1823,13 +2210,15 @@ mod event_loop {
     }
 
     /// Close a connection: deregister from the backend, correct the
-    /// idle gauge and reap queue, drop the socket.
+    /// idle gauge and reap queue, release its global/per-reactor slot
+    /// (waking a parked acceptor), drop the socket.
     fn drop_conn(
         conns: &mut BTreeMap<u64, Conn>,
         token: u64,
         reg: &mut Readiness,
         idle_count: &mut usize,
         reap_queue: &mut BTreeSet<(Instant, u64)>,
+        slot: &SlotRelease<'_>,
     ) {
         if let Some(c) = conns.remove(&token) {
             let _ = reg.deregister(c.stream.as_raw_fd(), token);
@@ -1837,6 +2226,7 @@ mod event_loop {
             if c.counted_idle {
                 *idle_count -= 1;
             }
+            slot.release();
         }
     }
 
@@ -2001,9 +2391,11 @@ mod tests {
 
     /// The LRU cap: the cache never exceeds it, evicts the stalest key,
     /// and a hit refreshes recency (so the hot key survives churn).
+    /// One stripe makes eviction order exact global LRU, which is what
+    /// the step-by-step assertions below pin.
     #[test]
     fn response_cache_evicts_least_recently_used_at_cap() {
-        let svc = service().with_cache_cap(2);
+        let svc = service().with_cache_cap(2).with_cache_shards(1);
         let req = |seed: usize| {
             format!(
                 r#"{{"op":"optimize","workload":"kmeans:buzz","target":"cost","method":"rs","budget":6,"seed":{seed},"measure_mode":"mean"}}"#
@@ -2400,6 +2792,18 @@ mod tests {
         }
     }
 
+    /// `with_reactors(0)` is adaptive (`min(cores, 4)`), explicit
+    /// values are honored, and absurd ones clamp.
+    #[test]
+    fn reactor_count_is_adaptive_and_clamped() {
+        let adaptive = service().reactor_count();
+        assert!((1..=4).contains(&adaptive), "{adaptive}");
+        assert_eq!(service().with_reactors(0).reactor_count(), adaptive);
+        assert_eq!(service().with_reactors(1).reactor_count(), 1);
+        assert_eq!(service().with_reactors(9).reactor_count(), 9);
+        assert_eq!(service().with_reactors(usize::MAX).reactor_count(), 256);
+    }
+
     /// The stats op surfaces the transport and every effective limit.
     #[test]
     fn stats_reports_transport_fields() {
@@ -2423,6 +2827,8 @@ mod tests {
             "binary_connections",
             "json_requests",
             "binary_requests",
+            "cache_shards",
+            "reactors",
         ];
         for field in fields {
             assert!(v.get(field).and_then(Value::as_usize).is_some(), "missing {field}");
@@ -2430,12 +2836,65 @@ mod tests {
         for field in ["idle_timeout_s", "shutdown_drain_s"] {
             assert!(v.get(field).is_some(), "missing {field}");
         }
+        // Per-reactor arrays exist (empty: nothing is serving here).
+        for field in ["per_reactor_open", "per_reactor_wakeups"] {
+            assert!(v.get(field).and_then(Value::as_arr).is_some(), "missing {field}");
+        }
 
         let off = service().with_event_loop(false);
         assert!(!off.event_loop_enabled());
         let v = parse(&off.handle(r#"{"op":"stats"}"#)).unwrap();
         assert_eq!(v.get("event_loop").unwrap().as_bool(), Some(false));
         assert_eq!(v.get("transport").unwrap().as_str(), Some("threaded"));
+        assert_eq!(
+            v.get("reactors").and_then(Value::as_usize),
+            Some(0),
+            "the threaded transport runs no reactors"
+        );
+    }
+
+    /// Striping invariants: effective stripe count never exceeds the
+    /// cap, per-stripe caps sum exactly to the global cap, residency
+    /// respects the global cap under churn, and one stripe restores
+    /// exact global semantics.
+    #[test]
+    fn striped_cache_splits_the_cap_and_stays_bounded() {
+        let svc = service().with_cache_cap(5).with_cache_shards(3);
+        assert_eq!(svc.scheduler().cache_shards(), 3);
+        let per_shard: Vec<usize> = svc
+            .scheduler
+            .cache
+            .shards
+            .iter()
+            .map(|s| s.store.lock().unwrap().cap)
+            .collect();
+        assert_eq!(per_shard.iter().sum::<usize>(), 5, "{per_shard:?}");
+        assert!(per_shard.iter().all(|&c| c >= 1), "{per_shard:?}");
+
+        // More stripes than cap: clamp so every stripe caps at >= 1.
+        let tiny = service().with_cache_cap(2).with_cache_shards(64);
+        assert_eq!(tiny.scheduler().cache_shards(), 2);
+
+        // Churn 12 distinct keys through cap 5: residency never
+        // exceeds the global cap and the counters balance.
+        let req = |seed: usize| {
+            format!(
+                r#"{{"op":"optimize","workload":"kmeans:buzz","target":"cost","method":"rs","budget":6,"seed":{seed},"measure_mode":"mean"}}"#
+            )
+        };
+        for seed in 0..12 {
+            svc.handle(&req(seed));
+            assert!(svc.scheduler().cached_responses() <= 5);
+        }
+        let s = svc.scheduler();
+        assert_eq!(s.cache_misses(), 12);
+        assert_eq!(s.cache_inserts(), 12);
+        assert!(s.cache_evictions() <= s.cache_inserts());
+        assert_eq!(
+            s.cached_responses() as u64,
+            s.cache_inserts() - s.cache_evictions(),
+            "inserts minus evictions must equal residency"
+        );
     }
 
     /// Builder-set limits land in stats verbatim (modulo the rlimit

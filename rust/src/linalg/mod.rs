@@ -332,7 +332,9 @@ pub fn solve_general(a: &Matrix, b: &[f64]) -> Option<Vec<f64>> {
 }
 
 /// Ridge least squares: argmin ||X w - y||^2 + ridge ||w||^2, via normal
-/// equations + SPD solve. X: [n, p], y: [n].
+/// equations + SPD solve. X: [n, p], y: [n]. The normal matrix is
+/// symmetric, so only the upper triangle is accumulated over the n
+/// rows (halving the O(n·p²) build) and mirrored once at the end.
 pub fn lstsq_ridge(x: &Matrix, y: &[f64], ridge: f64) -> Option<Vec<f64>> {
     assert_eq!(x.rows, y.len());
     let p = x.cols;
@@ -340,13 +342,17 @@ pub fn lstsq_ridge(x: &Matrix, y: &[f64], ridge: f64) -> Option<Vec<f64>> {
     for r in 0..x.rows {
         let row = x.row(r);
         for i in 0..p {
-            for j in 0..p {
-                xtx[(i, j)] += row[i] * row[j];
+            let ri = row[i];
+            for j in i..p {
+                xtx[(i, j)] += ri * row[j];
             }
         }
     }
     for i in 0..p {
         xtx[(i, i)] += ridge;
+        for j in i + 1..p {
+            xtx[(j, i)] = xtx[(i, j)];
+        }
     }
     let xty = x.matvec_t(y);
     solve_spd(&xtx, &xty)

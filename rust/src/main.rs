@@ -422,6 +422,13 @@ fn cmd_serve(args: &[String]) -> i32 {
             "legacy transport switch, superseded by --transport: on (readiness loop) | \
              off (thread per connection) | auto",
         )
+        .opt(
+            "reactors",
+            "0",
+            "reactor (event-loop) threads for the readiness transports (0 = adaptive: \
+             min(cores, 4))",
+        )
+        .opt("cache-shards", "0", "response cache stripes (0 = default 8, capped by cache-cap)")
         .opt("max-conns", "0", "open-connection cap, clamped to the fd rlimit (0 = default 4096)")
         .opt("idle-timeout", "0", "reap idle connections after this many seconds (0 = default 300)")
         .opt("max-wbuf", "0", "per-connection unflushed response byte cap (0 = default 1 MiB)")
@@ -443,6 +450,13 @@ fn cmd_serve(args: &[String]) -> i32 {
     if cache_cap > 0 {
         svc = svc.with_cache_cap(cache_cap);
     }
+    let cache_shards = a.usize("cache-shards").unwrap_or_else(|e| fail(&e));
+    if cache_shards > 0 {
+        svc = svc.with_cache_shards(cache_shards);
+    }
+    // 0 = adaptive is the builder's own default, so pass it through.
+    let reactors = a.usize("reactors").unwrap_or_else(|e| fail(&e));
+    svc = svc.with_reactors(reactors);
     let max_conns = a.usize("max-conns").unwrap_or_else(|e| fail(&e));
     if max_conns > 0 {
         svc = svc.with_max_conns(max_conns);
@@ -502,9 +516,11 @@ fn cmd_serve(args: &[String]) -> i32 {
     let stop = Arc::new(AtomicBool::new(false));
     let transport = svc.transport().name();
     let max_conns = svc.effective_max_conns();
+    let reactors = if svc.event_loop_enabled() { svc.reactor_count() } else { 0 };
     let (port, handle) = svc.serve(a.get("addr"), stop).unwrap_or_else(|e| fail(&e.to_string()));
     println!(
-        "listening on port {port} (transport {transport}, max {max_conns} connections; \
+        "listening on port {port} (transport {transport}, {reactors} reactors, \
+         max {max_conns} connections; \
          codecs: json lines [default] | length-prefixed binary, negotiated per connection via \
          {{\"op\":\"hello\",\"codec\":...}} or a 0xB1 first byte; \
          op: optimize | batch | list_workloads | list_methods | stats | clear_cache | ping)"

@@ -534,6 +534,16 @@ impl IncrementalGp {
 
     /// Posterior from precomputed observation-candidate squared
     /// distances (`d2[(i, j)] = d²(x_i, cand_j)`, `m` candidates).
+    ///
+    /// Candidate-rich calls (`m > n`) whiten the kernel block on the
+    /// fly: one `solve_lower_multi` over the n×m block replaces m
+    /// per-candidate `solve_lower` back-substitutions (and `alpha` is
+    /// never materialized) — the `predict_pinned` economics without
+    /// requiring the caller to pin its ad-hoc candidate set first.
+    /// Candidate-poor calls keep the per-candidate loop, where
+    /// building the block would cost more than it saves. Means agree
+    /// with the per-candidate path to summation order (the parity test
+    /// pins 1e-6); stds run the identical per-column math.
     fn posterior_from_d2(&mut self, m: usize, d2: &Matrix) -> Prediction {
         assert!(self.x.rows > 0, "GP predict with no observations");
         let (z, ym, ys) = standardize(&self.y);
@@ -541,10 +551,35 @@ impl IncrementalGp {
         let ls = LS_GRID[li];
         self.last_lengthscale = ls;
         let l = self.chol[li].as_ref().unwrap();
-        let alpha = alpha.unwrap_or_else(|| solve_upper_t(l, &w));
 
         let sv = self.signal_var;
         let n = self.x.rows;
+        if m > n {
+            let mut k = Matrix::zeros(n, m);
+            for i in 0..n {
+                for j in 0..m {
+                    k[(i, j)] = matern52(d2[(i, j)], ls, sv);
+                }
+            }
+            let wh = Self::whiten(l, &k);
+            // mean_j = V_jᵀ w (≡ kxcᵀ K⁻¹ z), accumulated row-major —
+            // the same contiguous scan predict_pinned runs.
+            let mut mean = vec![0.0; m];
+            for i in 0..n {
+                let wi = w[i];
+                for (acc, &vij) in mean.iter_mut().zip(wh.v.row(i)) {
+                    *acc += vij * wi;
+                }
+            }
+            let std: Vec<f64> =
+                wh.colsq.iter().map(|&sq| (sv - sq).max(1e-12).sqrt() * ys).collect();
+            for mj in mean.iter_mut() {
+                *mj = *mj * ys + ym;
+            }
+            return Prediction { mean, std };
+        }
+
+        let alpha = alpha.unwrap_or_else(|| solve_upper_t(l, &w));
         posterior_over(l, &alpha, sv, ym, ys, m, |j, kxc| {
             for i in 0..n {
                 kxc[i] = matern52(d2[(i, j)], ls, sv);
@@ -1114,11 +1149,59 @@ mod tests {
             "predict_pinned must solve once per lengthscale (model selection), \
              never per candidate"
         );
-        // The unpinned path by contrast pays one solve per candidate.
+        // The unpinned path whitens candidate-rich calls (m > n) on
+        // the fly: one uncounted `solve_lower_multi` over the block,
+        // so the counted solves are the model-selection ones only.
         let before = solve_lower_calls();
         let _ = sess.predict(&cands);
         let unpinned = solve_lower_calls() - before;
-        assert_eq!(unpinned, (LS_GRID.len() + m) as u64);
+        assert_eq!(
+            unpinned,
+            LS_GRID.len() as u64,
+            "unpinned predict with m > n must whiten wholesale, never solve per candidate"
+        );
+        // A candidate-poor call (m <= n) keeps the per-candidate loop.
+        let few = toy_data(5, 3, 23).0;
+        let before = solve_lower_calls();
+        let _ = sess.predict(&few);
+        let poor = solve_lower_calls() - before;
+        assert_eq!(poor, (LS_GRID.len() + 5) as u64);
+    }
+
+    /// The whitened unpinned path (m > n) and the per-candidate loop
+    /// are the same posterior: force both over the identical session
+    /// and candidate set, and pin means/stds within 1e-6.
+    #[test]
+    fn unpinned_whitened_path_matches_per_candidate_posterior() {
+        let (x, y) = toy_data(12, 3, 21);
+        let cands = toy_data(60, 3, 22).0;
+        let mut sess = IncrementalGp::default();
+        for (i, &yi) in y.iter().enumerate() {
+            sess.observe(x.row(i).to_vec(), yi);
+        }
+        // Whitened: one call over the full candidate-rich set.
+        let whitened = sess.predict(&cands);
+        // Per-candidate reference: the same candidates one at a time
+        // (m = 1 <= n keeps each call on the per-candidate loop).
+        for j in 0..cands.rows {
+            let mut one = Matrix::zeros(1, cands.cols);
+            for c in 0..cands.cols {
+                one[(0, c)] = cands[(j, c)];
+            }
+            let reference = sess.predict(&one);
+            assert!(
+                (whitened.mean[j] - reference.mean[0]).abs() < 1e-6,
+                "mean[{j}]: {} vs {}",
+                whitened.mean[j],
+                reference.mean[0]
+            );
+            assert!(
+                (whitened.std[j] - reference.std[0]).abs() < 1e-6,
+                "std[{j}]: {} vs {}",
+                whitened.std[j],
+                reference.std[0]
+            );
+        }
     }
 
     #[test]

@@ -3,11 +3,15 @@
 //!
 //! Thin safe wrappers over raw `extern "C"` libc calls — `epoll(7)` on
 //! Linux and `poll(2)` everywhere else for readiness multiplexing, plus
-//! `pipe(2)`/`fcntl(2)` for a nonblocking self-wake channel — so one
-//! thread can own every connection socket and sleep until *something*
-//! (a readable socket, a writable socket, or a worker finishing a
-//! response) needs it. Zero new crates: the only platform surface used
-//! is the stable POSIX/Linux ABI, declared inline.
+//! `pipe(2)`/`fcntl(2)` for a nonblocking self-wake channel — so each
+//! reactor thread can own its disjoint subset of connection sockets and
+//! sleep until *something* (a readable socket, a writable socket, a
+//! worker finishing a response, or the acceptor handing off a new
+//! connection) needs it. Every [`Readiness`] instance and [`WakePipe`]
+//! is independent — the sharded service creates one of each per
+//! reactor, plus a wake pipe the reactors ring to unpark the acceptor.
+//! Zero new crates: the only platform surface used is the stable
+//! POSIX/Linux ABI, declared inline.
 //!
 //! Two registration-based backends sit behind one [`Readiness`] facade:
 //!
@@ -564,15 +568,27 @@ mod imp {
         }
     }
 
-    /// Self-wake channel for the event loop: worker threads call
-    /// [`wake`](WakePipe::wake) after depositing a response, making the
-    /// loop's `poll` return immediately instead of waiting out its
-    /// timeout. Both ends are nonblocking — a full pipe means a wake is
-    /// already pending, so dropping the byte is correct.
+    /// Self-wake channel for a readiness loop: worker threads call
+    /// [`wake`](WakePipe::wake) after depositing a response (and the
+    /// acceptor after handing off a socket), making the owning
+    /// reactor's `poll` return immediately instead of waiting out its
+    /// timeout. Each reactor owns exactly one; the acceptor owns one
+    /// more that reactors ring when a closed connection frees a slot.
+    /// Both ends are nonblocking — a full pipe means a wake is already
+    /// pending, so dropping the byte is correct.
     pub struct WakePipe {
         read_fd: RawFd,
         write_fd: RawFd,
     }
+
+    // Wake pipes cross thread boundaries by design (workers → reactor,
+    // acceptor → reactor, reactors → acceptor). The fds are plain
+    // integers so the auto traits hold today; this assertion keeps a
+    // future field addition from silently revoking them.
+    const _: () = {
+        const fn require_send_sync<T: Send + Sync>() {}
+        require_send_sync::<WakePipe>()
+    };
 
     impl WakePipe {
         pub fn new() -> io::Result<WakePipe> {

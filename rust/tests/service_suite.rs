@@ -14,14 +14,20 @@
 //! * transcript parity: all transports answer a scripted conversation
 //!   byte-identically;
 //! * response-cache properties under an N-thread hammer over a key set
-//!   larger than the cache cap.
+//!   larger than the cache cap — with one stripe (exact global LRU) and
+//!   with several (the lock-striped default);
+//! * multi-reactor sharding: N-client socket hammers and scripted
+//!   transcripts byte-identical across threaded, 1-reactor, and
+//!   4-reactor servers, and global `--max-conns` accounting conserved
+//!   across reactor shards.
 //!
 //! CI runs this file under a hang guard (`timeout 300 cargo test --test
-//! service_suite`), once per transport × codec cell via
-//! `SERVICE_TRANSPORT=epoll | poll | threaded` and
-//! `SERVICE_CODEC=json | binary` — the env vars narrow [`transports`]
-//! and [`codecs`] so a regression in any one cell fails its own matrix
-//! leg. Unset, every supported transport and both codecs run.
+//! service_suite`), once per transport × codec × reactor cell via
+//! `SERVICE_TRANSPORT=epoll | poll | threaded`,
+//! `SERVICE_CODEC=json | binary`, and `SERVICE_REACTORS=1 | 4` — the
+//! env vars narrow [`transports`], [`codecs`], and [`reactors`] so a
+//! regression in any one cell fails its own matrix leg. Unset, every
+//! supported transport, both codecs, and both reactor counts run.
 //! Transport-shape tests (starvation, reaping, caps, pipelining) run
 //! once, in the json leg, so the binary legs add codec coverage without
 //! rerunning transport properties.
@@ -84,6 +90,21 @@ fn codecs() -> Vec<&'static str> {
     if let Ok(only) = std::env::var("SERVICE_CODEC") {
         if !only.is_empty() {
             out.retain(|c| *c == only);
+        }
+    }
+    out
+}
+
+/// The reactor counts under test for the sharded readiness transports:
+/// single-reactor (the differential reference) and four-way sharding.
+/// Narrowed to one by the `SERVICE_REACTORS` env var when set (the CI
+/// matrix's third axis); an unknown value yields an empty list and the
+/// reactor-shape tests pass trivially in that leg.
+fn reactors() -> Vec<usize> {
+    let mut out = vec![1usize, 4];
+    if let Ok(only) = std::env::var("SERVICE_REACTORS") {
+        if let Ok(n) = only.trim().parse::<usize>() {
+            out.retain(|r| *r == n);
         }
     }
     out
@@ -545,7 +566,10 @@ fn all_transports_produce_byte_identical_transcripts() {
 /// N client threads hammer one service over a key set larger than the
 /// cache cap: every response byte-identical to a serial replay, and the
 /// LRU stats hold their invariants (hits + misses = deterministic
-/// requests, inserts ≤ misses, evictions ≤ inserts, size ≤ cap).
+/// requests, inserts ≤ misses, evictions ≤ inserts, size ≤ cap). The
+/// hammer runs on the default striping (the counters asserted here are
+/// sums over per-stripe atomics); the deterministic recency tail pins
+/// itself to one stripe, where the cache is an exact global LRU.
 #[test]
 fn concurrent_response_cache_properties() {
     if !json_leg() {
@@ -607,8 +631,9 @@ fn concurrent_response_cache_properties() {
 
     // Recency refresh on hit, deterministically (single-threaded tail):
     // touch a key, insert new keys up to the cap, and the touched key
-    // must still be cached while the untouched one was evicted.
-    let svc = service().with_cache_cap(2);
+    // must still be cached while the untouched one was evicted. One
+    // stripe, so eviction order is the exact global LRU order.
+    let svc = service().with_cache_cap(2).with_cache_shards(1);
     svc.handle(&req(0)); // cache: [0]
     svc.handle(&req(1)); // cache: [0, 1]
     svc.handle(&req(0)); // refresh 0 -> victim order is [1, 0]
@@ -877,5 +902,245 @@ fn mixed_codec_concurrent_clients_match_serial_replay() {
         let v = parse(&roundtrip(&mut conn, r#"{"op":"stats"}"#)).unwrap();
         assert!(v.get("json_connections").unwrap().as_usize().unwrap() >= 3, "{name}");
         assert!(v.get("binary_connections").unwrap().as_usize().unwrap() >= 3, "{name}");
+    }
+}
+
+/// The lock-striped cache under an N-thread hammer with an explicit
+/// multi-stripe config: the summed per-stripe counters hold the global
+/// invariants (hits + misses = deterministic requests, inserts ≤
+/// misses, evictions ≤ inserts), and the global cap is respected even
+/// though each stripe evicts on its own.
+#[test]
+fn striped_cache_hammer_holds_global_invariants() {
+    if !json_leg() {
+        return;
+    }
+    const THREADS: usize = 8;
+    const KEYS: usize = 10;
+    const ROUNDS: usize = 3;
+    const CAP: usize = 4;
+    const SHARDS: usize = 3;
+    let req = |seed: usize| {
+        format!(
+            r#"{{"op":"optimize","workload":"kmeans:buzz","target":"cost","method":"rs","budget":5,"seed":{seed},"measure_mode":"mean"}}"#
+        )
+    };
+    let reference = service();
+    let expected: Vec<String> = (0..KEYS).map(|k| reference.handle(&req(k))).collect();
+
+    let svc = Arc::new(service().with_cache_cap(CAP).with_cache_shards(SHARDS));
+    assert_eq!(svc.scheduler().cache_shards(), SHARDS, "cap {CAP} admits all {SHARDS} stripes");
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let svc = Arc::clone(&svc);
+                let expected = &expected;
+                let req = &req;
+                scope.spawn(move || {
+                    for round in 0..ROUNDS {
+                        for i in 0..KEYS {
+                            let k = (i + t + round) % KEYS;
+                            let got = svc.handle(&req(k));
+                            assert_eq!(
+                                got, expected[k],
+                                "thread {t} round {round} key {k} diverged from serial replay"
+                            );
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+
+    let s = svc.scheduler();
+    let requests = (THREADS * KEYS * ROUNDS) as u64;
+    assert_eq!(
+        s.cache_hits() + s.cache_misses(),
+        requests,
+        "per-stripe hit/miss counters must sum to the request count"
+    );
+    assert_eq!(s.cache_misses(), s.trials_run(), "each miss runs exactly one trial");
+    assert!(s.cache_inserts() <= s.cache_misses(), "inserts cannot exceed misses");
+    assert!(s.cache_evictions() <= s.cache_inserts(), "evictions cannot exceed inserts");
+    assert!(s.cached_responses() <= CAP, "residency must respect the global cap across stripes");
+    // Every distinct key is inserted at least once into stripes whose
+    // caps sum to CAP, so at least KEYS - CAP evictions are forced.
+    assert!(
+        s.cache_evictions() >= (KEYS - CAP) as u64,
+        "expected churn: {} evictions for {KEYS} keys over global cap {CAP}",
+        s.cache_evictions()
+    );
+    // The stripe count is operator-visible.
+    let v = parse(&svc.handle(r#"{"op":"stats"}"#)).unwrap();
+    assert_eq!(v.get("cache_shards").unwrap().as_usize(), Some(SHARDS));
+    assert_eq!(v.get("cache_cap").unwrap().as_usize(), Some(CAP));
+}
+
+/// N socket clients hammer a sharded server at every reactor count
+/// under test: every response byte-identical to a serial replay on a
+/// fresh service, and the stats op reports the reactor topology that
+/// served the hammer.
+#[test]
+fn multi_reactor_hammer_matches_serial_replay() {
+    if !json_leg() {
+        return;
+    }
+    let script: Vec<String> = vec![
+        r#"{"op":"ping"}"#.to_string(),
+        OPTIMIZE.to_string(),
+        r#"{"op":"optimize","workload":"nope"}"#.to_string(),
+        r#"{"op":"list_methods"}"#.to_string(),
+        OPTIMIZE.to_string(), // cached repeat under contention
+    ];
+    let reference = service();
+    let expected: Vec<String> = script.iter().map(|l| reference.handle(l)).collect();
+
+    for transport in readiness_transports() {
+        for r in reactors() {
+            let name = format!("{}/reactors={r}", transport.name());
+            let server = Server::start(
+                service().with_conn_workers(3).with_transport(transport).with_reactors(r),
+            );
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..8)
+                    .map(|t| {
+                        let server = &server;
+                        let script = &script;
+                        let expected = &expected;
+                        let name = &name;
+                        scope.spawn(move || {
+                            let mut conn = server.connect();
+                            for round in 0..2 {
+                                for i in 0..script.len() {
+                                    let j = (i + t + round) % script.len();
+                                    let got = roundtrip(&mut conn, &script[j]);
+                                    assert_eq!(
+                                        got, expected[j],
+                                        "{name}: client {t} round {round} request {j} diverged"
+                                    );
+                                }
+                            }
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    h.join().unwrap();
+                }
+            });
+
+            // The topology the hammer ran on is visible in the stats.
+            let mut conn = server.connect();
+            let v = parse(&roundtrip(&mut conn, r#"{"op":"stats"}"#)).unwrap();
+            assert_eq!(v.get("reactors").unwrap().as_usize(), Some(r), "{name}");
+            let per_open = v.get("per_reactor_open").unwrap().as_arr().unwrap();
+            assert_eq!(per_open.len(), r, "{name}: one open-gauge per reactor");
+            let per_wake = v.get("per_reactor_wakeups").unwrap().as_arr().unwrap();
+            assert_eq!(per_wake.len(), r, "{name}: one wakeup counter per reactor");
+        }
+    }
+}
+
+/// Threaded, 1-reactor, and 4-reactor servers answer one scripted
+/// conversation (cold, cached, batch, trace, clear) with identical
+/// bytes — the sharded loop's differential references. Deliberately
+/// ignores the `SERVICE_REACTORS` and `SERVICE_TRANSPORT` narrowing:
+/// parity is a cross-topology property, so all supported shapes always
+/// run.
+#[test]
+fn reactor_counts_produce_byte_identical_transcripts() {
+    if !json_leg() {
+        return;
+    }
+    let script = [
+        r#"{"op":"ping"}"#.to_string(),
+        OPTIMIZE.to_string(),
+        OPTIMIZE.to_string(), // repeat: served from the response cache
+        format!(
+            r#"{{"op":"batch","requests":[{OPTIMIZE},{{"op":"optimize","workload":"kmeans:buzz","method":"warp-drive"}}]}}"#
+        ),
+        r#"{"op":"optimize","workload":"kmeans:buzz","method":"rs","budget":5,"seed":9,"include_trace":true}"#.to_string(),
+        r#"{"op":"clear_cache"}"#.to_string(),
+        OPTIMIZE.to_string(), // cold again after the clear
+    ];
+    let transcript = |svc: Service| -> Vec<String> {
+        let server = Server::start(svc.with_conn_workers(3));
+        let mut conn = server.connect();
+        script.iter().map(|line| roundtrip(&mut conn, line)).collect()
+    };
+    let baseline = transcript(service().with_event_loop(false));
+    for transport in all_transports().into_iter().filter(|t| *t != Transport::Threaded) {
+        for r in [1usize, 4] {
+            assert_eq!(
+                transcript(service().with_transport(transport).with_reactors(r)),
+                baseline,
+                "{}/reactors={r}: sharded transcript must match the threaded fallback",
+                transport.name()
+            );
+        }
+    }
+}
+
+/// Global `--max-conns` accounting is conserved across reactor shards:
+/// with 4 reactors and a cap of 2, the per-reactor open gauges sum to
+/// the global count, the cap still defers (never drops) the over-cap
+/// client, and a freed slot is reusable no matter which reactor owned
+/// it.
+#[test]
+fn connection_slots_are_conserved_across_reactor_shards() {
+    if !json_leg() {
+        return;
+    }
+    for transport in readiness_transports() {
+        let name = transport.name();
+        let server = Server::start(
+            service()
+                .with_conn_workers(2)
+                .with_transport(transport)
+                .with_max_conns(2)
+                .with_reactors(4),
+        );
+        let mut a = server.connect();
+        let mut b = server.connect();
+        assert!(roundtrip(&mut a, r#"{"op":"ping"}"#).contains("pong"), "{name}");
+        assert!(roundtrip(&mut b, r#"{"op":"ping"}"#).contains("pong"), "{name}");
+
+        // Conservation: the shard gauges sum to the global gauge, which
+        // sits exactly at the cap while both clients hold their slots.
+        let v = parse(&roundtrip(&mut a, r#"{"op":"stats"}"#)).unwrap();
+        let open = v.get("open_connections").unwrap().as_usize().unwrap();
+        assert_eq!(open, 2, "{name}: both clients hold slots");
+        assert_eq!(v.get("reactors").unwrap().as_usize(), Some(4), "{name}");
+        let per_open = v.get("per_reactor_open").unwrap().as_arr().unwrap();
+        assert_eq!(per_open.len(), 4, "{name}");
+        let sum: usize = per_open.iter().map(|g| g.as_usize().unwrap()).sum();
+        assert_eq!(sum, open, "{name}: shard gauges must sum to the global count");
+
+        // The cap itself stays global: a third client is deferred...
+        let mut c = server.connect();
+        c.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+        c.flush().unwrap();
+        c.set_read_timeout(Some(Duration::from_millis(500))).unwrap();
+        let mut byte = [0u8; 1];
+        match c.read(&mut byte) {
+            Ok(0) => panic!("{name}: over-cap client was dropped"),
+            Ok(_) => panic!("{name}: over-cap client was served past the cap"),
+            Err(e) => {
+                use std::io::ErrorKind;
+                assert!(
+                    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut),
+                    "{name}: expected deferral, got {e}"
+                );
+            }
+        }
+
+        // ...and served the moment a slot frees, whichever reactor
+        // owned the freed connection.
+        drop(b);
+        c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let late = read_line(&mut c);
+        assert!(late.contains("pong"), "{name}: deferred client finally served: {late}");
     }
 }
