@@ -1,6 +1,6 @@
 //! Serving-path bench: what the persistent scheduler buys per request.
 //!
-//! Four measurements:
+//! Six measurements:
 //!
 //! * **requests/sec** through `Service::handle` for deterministic-mode
 //!   requests, cold (every request a distinct cache key, full trial) vs.
@@ -27,7 +27,16 @@
 //!   1 → 2 → 4. Cached hits cost no trial work, so the single-reactor
 //!   column measures the serial event-loop ceiling and the 4-reactor
 //!   column the sharded one — the ≥2x-at-4-reactors claim
-//!   `BENCH_service.json` records.
+//!   `BENCH_service.json` records;
+//! * **deadline partials**: latency of an `deadline_ms: 0` request —
+//!   the trial exits after its guaranteed first pull, so the column
+//!   records how much of a cold trial the early exit saves (and the
+//!   scheduler's `pulls_saved` tally confirms the budget went unspent);
+//! * **priority lane under saturation**: `stats` round-trip latency
+//!   over a real socket while every normal-lane worker is pinned by a
+//!   10k-budget trial — the frame sniff routes control-plane ops to the
+//!   team's dedicated priority worker, keeping the column interactive
+//!   where the old single-lane queue would park it behind the trials.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -365,6 +374,102 @@ fn main() {
             col(4),
             col(4) / col(1).max(1e-12)
         );
+    }
+
+    // -- cancellation: deadline partials ------------------------------------
+    //
+    // An already-expired deadline exits after the guaranteed first pull;
+    // the latency gap to the cold column is the work cancellation saves.
+    // Seeds rotate so no iteration could be answered from the cache even
+    // if partials were cached (they are not — that's a suite invariant).
+    {
+        let svc = Service::new(Arc::clone(&ds), Arc::new(NativeBackend));
+        let dl_req = |seed: usize| {
+            format!(
+                r#"{{"op":"optimize","workload":"kmeans:buzz","target":"cost","method":"cb-rbfopt","budget":22,"seed":{seed},"measure_mode":"mean","deadline_ms":0}}"#
+            )
+        };
+        let mut seed = 0usize;
+        let partial_ns = suite
+            .bench("optimize: deadline-cancelled partial", || {
+                seed += 1;
+                black_box(svc.handle(&dl_req(seed)))
+            })
+            .mean_ns;
+        let sched = svc.scheduler();
+        assert!(sched.cancelled_deadline() >= 1, "every iteration must cancel");
+        let cold_ns = 1e9 / cold_rps.max(1e-12);
+        println!(
+            "\ndeadline partial {:>8.1} us   vs cold {:>8.1} us   ({:.1}x less, {} pulls saved)",
+            partial_ns / 1e3,
+            cold_ns / 1e3,
+            cold_ns / partial_ns.max(1e-12),
+            sched.pulls_saved(),
+        );
+    }
+
+    // -- cancellation: priority lane under worker saturation ----------------
+    //
+    // Both normal-lane workers pinned by slow uncacheable trials (Bilal
+    // BO on the time target refits a random forest on every pull — slow
+    // with linear memory, so they outlast the bench window harmlessly);
+    // the stats round-trip must stay interactive through the priority
+    // lane. Disconnecting the busy clients afterwards fires their
+    // connection tokens, so teardown cancels the trials instead of
+    // waiting out two 10k-pull searches.
+    if net::supported() {
+        let transport = if net::epoll_supported() { Transport::Epoll } else { Transport::Poll };
+        let svc = Arc::new(
+            Service::new(Arc::clone(&ds), Arc::new(NativeBackend))
+                .with_conn_workers(2)
+                .with_transport(transport),
+        );
+        let stop = Arc::new(AtomicBool::new(false));
+        let (port, handle) =
+            Arc::clone(&svc).serve("127.0.0.1:0", Arc::clone(&stop)).expect("bind");
+        let connect = || {
+            let c = TcpStream::connect(("127.0.0.1", port)).expect("connect");
+            c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+            c
+        };
+        let busy: Vec<TcpStream> = (0..2u64)
+            .map(|s| {
+                let mut c = connect();
+                c.write_all(
+                    format!(
+                        r#"{{"op":"optimize","workload":"kmeans:buzz","target":"time","method":"bilal-x1","budget":10000,"seed":{s},"trial_workers":1}}"#
+                    )
+                    .as_bytes(),
+                )
+                .unwrap();
+                c.write_all(b"\n").unwrap();
+                c
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(200));
+
+        let mut conn = connect();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut stats_rtt = || {
+            conn.write_all(b"{\"op\":\"stats\"}\n").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("priority_served"), "{line}");
+            line
+        };
+        stats_rtt(); // warm, off the clock
+        let loaded_ns = suite
+            .bench("stats rtt, saturated workers (priority lane)", || black_box(stats_rtt()))
+            .mean_ns;
+        println!(
+            "priority lane    stats rtt {:>8.1} us with every normal worker pinned",
+            loaded_ns / 1e3
+        );
+        drop(busy); // EOF fires the trials' tokens: bounded teardown
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        drop(reader);
+        drop(conn);
+        handle.join().unwrap();
     }
 
     suite.finish();

@@ -9,6 +9,7 @@ use crate::optimizers::{by_name, SearchContext};
 use crate::predictors::ernest::LinearPredictor;
 use crate::predictors::paris::ParisPredictor;
 use crate::surrogate::Backend;
+use crate::util::cancel::CancelToken;
 use crate::util::rng::Rng;
 use crate::util::threadpool::{
     default_workers, parallel_map_progress, parallel_map_progress_spawn,
@@ -65,6 +66,13 @@ pub struct TrialResult {
     /// Best-so-far observed value after each evaluation (the ledger's
     /// convergence curve; the service returns it under `include_trace`).
     pub trace: Vec<f64>,
+    /// Why the search stopped early (`"disconnect"` / `"deadline"` /
+    /// `"shutdown"`), or `None` for a complete run. A cancelled result is
+    /// the exact prefix of the uncancelled run: completed evaluations are
+    /// never altered (the token is only checked between pulls).
+    pub cancelled: Option<&'static str>,
+    /// Budget pulls cancellation saved (0 for complete runs).
+    pub pulls_saved: usize,
 }
 
 /// Size a trial ledger, memoized when the measure mode is deterministic.
@@ -82,6 +90,28 @@ fn new_ledger<'a>(
 /// and `measure_mode` are deliberately not mixed in (workers never
 /// change results; the mode changes the measurement itself).
 pub fn run_trial(ds: &OfflineDataset, backend: &dyn Backend, spec: &TrialSpec) -> TrialResult {
+    run_trial_with(ds, backend, spec, None)
+}
+
+/// [`run_trial`] with an optional cooperative cancellation token.
+///
+/// The token is threaded into the trial's [`EvalLedger`] (and from there
+/// into every shard the optimizer splits off), where it is checked
+/// **between pulls**: completed evaluations are never altered, merge
+/// order is untouched, and the first pull is always honored so the
+/// result is non-empty. The token is deliberately excluded from seed
+/// derivation — a cancelled trial's history is the bit-identical prefix
+/// of the uncancelled trial's.
+///
+/// Predictive baselines (`predict-linear` / `predict-rf`) ignore the
+/// token: their online cost is fixed and tiny, and they drive the ledger
+/// through `must_eval`, which treats a refused pull as a bug.
+pub fn run_trial_with(
+    ds: &OfflineDataset,
+    backend: &dyn Backend,
+    spec: &TrialSpec,
+    cancel: Option<&CancelToken>,
+) -> TrialResult {
     let mut label = Rng::new(spec.seed);
     // Mix the spec into the stream label deterministically.
     let mut h: u64 = 0x9E3779B97F4A7C15;
@@ -107,28 +137,40 @@ pub fn run_trial(ds: &OfflineDataset, backend: &dyn Backend, spec: &TrialSpec) -
     // from it uniformly instead of being re-derived from source internals.
     // Predictive baselines have no budget axis: their ledger is sized to
     // their fixed, known online cost (still landing in the accounting).
-    let (chosen, search_expense, evals, trace) = match spec.method.as_str() {
-        "predict-linear" => {
-            let mut ledger = new_ledger(&source, ds.domain.size(), memoize);
-            let chosen = LinearPredictor.run(&ds.domain, &mut ledger).chosen;
-            (chosen, ledger.total_expense(), ledger.evals(), ledger.trace().to_vec())
-        }
-        "predict-rf" => {
-            let mut ledger = new_ledger(&source, 2 * ds.domain.provider_count(), memoize);
-            let chosen =
-                ParisPredictor::default().run(ds, spec.workload, spec.target, &mut ledger).chosen;
-            (chosen, ledger.total_expense(), ledger.evals(), ledger.trace().to_vec())
-        }
-        name => {
-            let opt = by_name(name).unwrap_or_else(|| panic!("unknown method {name}"));
-            let ctx = SearchContext::new(&ds.domain, spec.target, backend)
-                .with_arm_workers(spec.trial_workers);
-            let mut ledger =
-                new_ledger(&source, opt.provisioned_budget(&ctx, spec.budget), memoize);
-            let chosen = opt.run(&ctx, &mut ledger, &mut rng).best_config;
-            (chosen, ledger.total_expense(), ledger.evals(), ledger.trace().to_vec())
-        }
-    };
+    let (chosen, search_expense, evals, trace, cancelled, pulls_saved) =
+        match spec.method.as_str() {
+            "predict-linear" => {
+                let mut ledger = new_ledger(&source, ds.domain.size(), memoize);
+                let chosen = LinearPredictor.run(&ds.domain, &mut ledger).chosen;
+                (chosen, ledger.total_expense(), ledger.evals(), ledger.trace().to_vec(), None, 0)
+            }
+            "predict-rf" => {
+                let mut ledger = new_ledger(&source, 2 * ds.domain.provider_count(), memoize);
+                let chosen = ParisPredictor::default()
+                    .run(ds, spec.workload, spec.target, &mut ledger)
+                    .chosen;
+                (chosen, ledger.total_expense(), ledger.evals(), ledger.trace().to_vec(), None, 0)
+            }
+            name => {
+                let opt = by_name(name).unwrap_or_else(|| panic!("unknown method {name}"));
+                let ctx = SearchContext::new(&ds.domain, spec.target, backend)
+                    .with_arm_workers(spec.trial_workers);
+                let mut ledger =
+                    new_ledger(&source, opt.provisioned_budget(&ctx, spec.budget), memoize);
+                if let Some(token) = cancel {
+                    ledger = ledger.with_cancel(token.clone());
+                }
+                let chosen = opt.run(&ctx, &mut ledger, &mut rng).best_config;
+                (
+                    chosen,
+                    ledger.total_expense(),
+                    ledger.evals(),
+                    ledger.trace().to_vec(),
+                    ledger.cancelled(),
+                    ledger.pulls_saved(),
+                )
+            }
+        };
 
     let chosen_value = source.ground_truth(&chosen);
     let (_, true_min) = ds.true_min(spec.workload, spec.target);
@@ -139,6 +181,8 @@ pub fn run_trial(ds: &OfflineDataset, backend: &dyn Backend, spec: &TrialSpec) -
         search_expense,
         evals,
         trace,
+        cancelled,
+        pulls_saved,
     }
 }
 
@@ -392,6 +436,38 @@ mod tests {
                 single.search_expense
             );
         }
+    }
+
+    /// A pre-fired token stops the trial after its guaranteed first
+    /// pull; the truncated trace is the bit-identical prefix of the
+    /// uncancelled trial's, and the result is flagged with the reason.
+    #[test]
+    fn cancelled_trial_is_a_bit_identical_prefix() {
+        use crate::util::cancel::{CancelReason, CancelToken};
+        let ds = OfflineDataset::generate(40, 3);
+        let backend = NativeBackend;
+        let spec = TrialSpec {
+            method: "rs".into(),
+            workload: 1,
+            target: Target::Cost,
+            budget: 22,
+            seed: 7,
+            ..TrialSpec::default()
+        };
+        let full = run_trial(&ds, &backend, &spec);
+        assert_eq!(full.cancelled, None);
+        assert_eq!(full.pulls_saved, 0);
+        assert_eq!(full.evals, 22);
+
+        let token = CancelToken::new();
+        token.cancel(CancelReason::Disconnect);
+        let cut = run_trial_with(&ds, &backend, &spec, Some(&token));
+        assert_eq!(cut.cancelled, Some("disconnect"));
+        assert_eq!(cut.evals, 1, "exactly the guaranteed first pull");
+        assert_eq!(cut.pulls_saved, 21);
+        let full_prefix: Vec<u64> = full.trace[..1].iter().map(|v| v.to_bits()).collect();
+        let cut_trace: Vec<u64> = cut.trace.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(cut_trace, full_prefix, "completed prefix diverged");
     }
 
     #[test]

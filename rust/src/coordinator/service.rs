@@ -106,15 +106,16 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, TrySendError};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::codec::{self, Codec, DecodeError, FrameScanner, Greeting};
-use crate::coordinator::experiment::{run_trial, TrialSpec, PREDICTORS};
-use crate::coordinator::spec::MAX_TRIAL_WORKERS;
+use crate::coordinator::experiment::{run_trial_with, TrialSpec, PREDICTORS};
+use crate::coordinator::spec::{MAX_DEADLINE_MS, MAX_TRIAL_WORKERS};
 use crate::dataset::objective::MeasureMode;
 use crate::dataset::{OfflineDataset, Target};
 use crate::optimizers::ALL_OPTIMIZERS;
 use crate::surrogate::Backend;
+use crate::util::cancel::{CancelReason, CancelToken};
 use crate::util::json::{parse, Value};
 use crate::util::threadpool::{default_workers, global_team, parallel_map_owned, WorkerTeam};
 
@@ -351,6 +352,16 @@ pub struct Scheduler {
     in_flight: AtomicUsize,
     cache: StripedCache,
     trials_run: AtomicU64,
+    /// Trials cut short because their client vanished (disconnect
+    /// mid-trial, or server shutdown firing the live-connection tokens —
+    /// both are "the requester is gone", so they share one counter).
+    cancelled_disconnect: AtomicU64,
+    /// Trials cut short by a request deadline (`deadline_ms` or the
+    /// server's `--default-deadline`).
+    cancelled_deadline: AtomicU64,
+    /// Budget pulls that cancellation saved: source measurements a
+    /// cancelled trial was still entitled to but never performed.
+    pulls_saved: AtomicU64,
 }
 
 /// RAII in-flight marker for one admitted request.
@@ -369,6 +380,9 @@ impl Scheduler {
             in_flight: AtomicUsize::new(0),
             cache: StripedCache::new(cache_cap, cache_shards),
             trials_run: AtomicU64::new(0),
+            cancelled_disconnect: AtomicU64::new(0),
+            cancelled_deadline: AtomicU64::new(0),
+            pulls_saved: AtomicU64::new(0),
         }
     }
 
@@ -421,6 +435,22 @@ impl Scheduler {
     /// Optimization trials actually executed (cache misses + uncacheable).
     pub fn trials_run(&self) -> u64 {
         self.trials_run.load(Ordering::Relaxed)
+    }
+
+    /// Trials cut short because their requester went away (client
+    /// disconnect or server shutdown).
+    pub fn cancelled_disconnect(&self) -> u64 {
+        self.cancelled_disconnect.load(Ordering::Relaxed)
+    }
+
+    /// Trials cut short by a request deadline.
+    pub fn cancelled_deadline(&self) -> u64 {
+        self.cancelled_deadline.load(Ordering::Relaxed)
+    }
+
+    /// Budget pulls cancellation saved across all cancelled trials.
+    pub fn pulls_saved(&self) -> u64 {
+        self.pulls_saved.load(Ordering::Relaxed)
     }
 
     /// Deterministic-mode responses currently cached (all stripes).
@@ -684,6 +714,13 @@ pub struct Service {
     /// compile-time constants).
     limits: ServiceLimits,
     net: NetStats,
+    /// Deadline applied to optimize requests that carry no
+    /// `deadline_ms` of their own (`None` = unlimited).
+    default_deadline: Option<Duration>,
+    /// The live connection-worker pool while a readiness-driven serve
+    /// is running — published so `stats` can report the priority lane's
+    /// served count; `None` otherwise.
+    conn_pool: Mutex<Option<Arc<WorkerTeam>>>,
 }
 
 /// Parsed + validated fields of one optimize request (the single source
@@ -705,6 +742,11 @@ struct OptimizeParams {
     /// requests differing only in this flag share one entry (and one
     /// trial).
     include_trace: bool,
+    /// Per-request deadline in milliseconds (`None` = use the server's
+    /// `default_deadline`, which may itself be unlimited). Absent from
+    /// [`ResponseKey`]: cancelled responses are never cached, and a
+    /// deadline that doesn't fire changes nothing about the answer.
+    deadline_ms: Option<u64>,
 }
 
 impl OptimizeParams {
@@ -735,6 +777,31 @@ impl Service {
             transport: Transport::best(),
             limits: ServiceLimits::default(),
             net: NetStats::new(),
+            default_deadline: None,
+            conn_pool: Mutex::new(None),
+        }
+    }
+
+    /// Deadline applied to every optimize request that doesn't set its
+    /// own `deadline_ms`. Zero disables the default (requests run to
+    /// budget exhaustion unless they ask for a deadline themselves).
+    pub fn with_default_deadline(mut self, deadline: Duration) -> Service {
+        self.default_deadline = if deadline.is_zero() { None } else { Some(deadline) };
+        self
+    }
+
+    /// The server-wide default deadline, if one is configured.
+    pub fn default_deadline(&self) -> Option<Duration> {
+        self.default_deadline
+    }
+
+    /// Control-plane requests served by the priority lane so far (0
+    /// when no readiness-driven serve is live — the lane only exists
+    /// inside the event loop's connection-worker pool).
+    fn priority_served(&self) -> u64 {
+        match &*self.conn_pool.lock().unwrap() {
+            Some(pool) => pool.priority_served(),
+            None => 0,
         }
     }
 
@@ -885,9 +952,11 @@ impl Service {
     }
 
     /// Handle one request line; always returns a JSON response line.
+    /// No connection backs this entry point, so only deadlines (not
+    /// disconnects) can cancel work started here.
     pub fn handle(&self, line: &str) -> String {
         match parse(line) {
-            Ok(req) => self.handle_value(&req),
+            Ok(req) => self.handle_value(&req, None),
             Err(e) => error_line(&format!("bad json: {e}")),
         }
     }
@@ -900,7 +969,7 @@ impl Service {
     /// so benches and differential tests can measure the codec seam
     /// without a socket.
     pub fn serve_frame(&self, frame: &[u8], codec: &'static dyn Codec) -> Vec<u8> {
-        handle_wire(self, frame, codec).bytes
+        handle_wire(self, frame, codec, None).bytes
     }
 
     /// Dispatch one decoded request to a compact JSON response payload
@@ -908,15 +977,15 @@ impl Service {
     /// requests are special-cased so deterministic repeats can be
     /// answered from the cache's pre-serialized string — no response
     /// `Value` is cloned or re-serialized on the hot path.
-    fn handle_value(&self, req: &Value) -> String {
+    fn handle_value(&self, req: &Value, cancel: Option<&CancelToken>) -> String {
         let op = req.get("op").and_then(|v| v.as_str()).unwrap_or("optimize");
         if op == "optimize" {
             return match self.parse_optimize(req) {
-                Ok(p) => self.run_optimize_wire(p),
+                Ok(p) => self.run_optimize_wire(p, cancel),
                 Err(e) => error_line(&e),
             };
         }
-        match self.handle_request(req, 0) {
+        match self.handle_request(req, 0, cancel) {
             Ok(v) => v.to_string_compact(),
             Err(e) => error_line(&e),
         }
@@ -925,14 +994,14 @@ impl Service {
     /// Serve a parsed optimize request as wire text. Deterministic
     /// requests that want no trace take the pre-serialized cache fast
     /// path: one LRU touch, one string clone, zero JSON work.
-    fn run_optimize_wire(&self, p: OptimizeParams) -> String {
+    fn run_optimize_wire(&self, p: OptimizeParams, cancel: Option<&CancelToken>) -> String {
         if p.measure_mode.deterministic() && !p.include_trace {
             if let Some(hit) = self.scheduler.cache_lookup_str(&p.key()) {
                 return hit;
             }
         }
         let include_trace = p.include_trace;
-        let (resp, trace) = self.run_optimize_data(p);
+        let (resp, trace) = self.run_optimize_data(p, cancel);
         if include_trace {
             with_trace(&resp, &trace).to_string_compact()
         } else {
@@ -941,8 +1010,14 @@ impl Service {
     }
 
     /// Dispatch one parsed request. `depth` guards against nested batch
-    /// ops (a batch entry may not itself be a batch).
-    fn handle_request(&self, req: &Value, depth: usize) -> Result<Value, String> {
+    /// ops (a batch entry may not itself be a batch). `cancel` is the
+    /// requesting connection's token (None over `Service::handle`).
+    fn handle_request(
+        &self,
+        req: &Value,
+        depth: usize,
+        cancel: Option<&CancelToken>,
+    ) -> Result<Value, String> {
         let op = req.get("op").and_then(|v| v.as_str()).unwrap_or("optimize");
         match op {
             "ping" => Ok(Value::obj(vec![("ok", true.into()), ("pong", true.into())])),
@@ -1035,13 +1110,27 @@ impl Service {
                         "binary_requests",
                         (net.binary_requests.load(Ordering::Relaxed) as usize).into(),
                     ),
+                    (
+                        "cancelled_disconnect",
+                        (s.cancelled_disconnect() as usize).into(),
+                    ),
+                    ("cancelled_deadline", (s.cancelled_deadline() as usize).into()),
+                    ("pulls_saved", (s.pulls_saved() as usize).into()),
+                    ("priority_served", (self.priority_served() as usize).into()),
+                    (
+                        "default_deadline_ms",
+                        self.default_deadline
+                            .map(|d| d.as_millis() as usize)
+                            .unwrap_or(0)
+                            .into(),
+                    ),
                 ]))
             }
             "clear_cache" => {
                 let cleared = self.scheduler.clear_cache();
                 Ok(Value::obj(vec![("ok", true.into()), ("cleared", cleared.into())]))
             }
-            "optimize" => self.handle_optimize(req),
+            "optimize" => self.handle_optimize(req, cancel),
             "batch" => {
                 if depth > 0 {
                     return Err("batch requests cannot be nested".into());
@@ -1073,7 +1162,15 @@ impl Service {
                 let mut rep_of: Vec<usize> = Vec::with_capacity(reqs.len());
                 let mut first_seen: HashMap<ResponseKey, usize> = HashMap::new();
                 for (i, plan) in plans.iter().enumerate() {
-                    match plan.as_ref().filter(|p| p.measure_mode.deterministic()) {
+                    // A slot with its own deadline never joins a dedup
+                    // group: its cancellation must stay contained to its
+                    // slot, not poison siblings sharing a representative
+                    // (and a cancelled partial result must never be
+                    // what the group's healthy slots receive).
+                    match plan
+                        .as_ref()
+                        .filter(|p| p.measure_mode.deterministic() && p.deadline_ms.is_none())
+                    {
                         Some(p) => rep_of.push(*first_seen.entry(p.key()).or_insert(i)),
                         None => rep_of.push(i),
                     }
@@ -1099,10 +1196,12 @@ impl Service {
                         // not collapse the sibling responses.
                         std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match plan {
                             Some(p) => {
-                                let (resp, trace) = self.run_optimize_data(p);
+                                let (resp, trace) = self.run_optimize_data(p, cancel);
                                 Ok((resp, Some(trace)))
                             }
-                            None => self.handle_request(&reqs[i], depth + 1).map(|v| (v, None)),
+                            None => {
+                                self.handle_request(&reqs[i], depth + 1, cancel).map(|v| (v, None))
+                            }
                         }))
                         .unwrap_or_else(|_| Err("internal error handling request".into()))
                         .unwrap_or_else(|e| {
@@ -1185,6 +1284,19 @@ impl Service {
             None => false,
             Some(v) => v.as_bool().ok_or("include_trace must be a boolean")?,
         };
+        // 0 is allowed (an already-expired deadline): it deterministically
+        // cancels after the guaranteed first pull, which is what the
+        // deadline tests pin.
+        let deadline_ms = match req.get("deadline_ms") {
+            None => None,
+            Some(v) => {
+                let ms = v.as_usize().ok_or("deadline_ms must be a non-negative integer")? as u64;
+                if ms > MAX_DEADLINE_MS {
+                    return Err(format!("deadline_ms must be <= {MAX_DEADLINE_MS}"));
+                }
+                Some(ms)
+            }
+        };
         Ok(OptimizeParams {
             workload,
             workload_id: workload_id.to_string(),
@@ -1195,13 +1307,14 @@ impl Service {
             trial_workers,
             measure_mode,
             include_trace,
+            deadline_ms,
         })
     }
 
-    fn handle_optimize(&self, req: &Value) -> Result<Value, String> {
+    fn handle_optimize(&self, req: &Value, cancel: Option<&CancelToken>) -> Result<Value, String> {
         let p = self.parse_optimize(req)?;
         let include_trace = p.include_trace;
-        let (resp, trace) = self.run_optimize_data(p);
+        let (resp, trace) = self.run_optimize_data(p, cancel);
         Ok(if include_trace { with_trace(&resp, &trace) } else { resp })
     }
 
@@ -1210,7 +1323,13 @@ impl Service {
     /// plus the convergence trace — the caller attaches the trace only
     /// when its request asked for it, but the trace always travels with
     /// the cache entry so cached hits can answer `include_trace` too.
-    fn run_optimize_data(&self, p: OptimizeParams) -> (Value, Value) {
+    ///
+    /// `conn` is the requesting connection's cancel token (fired on
+    /// disconnect/shutdown). The trial runs under a child of it so a
+    /// per-request deadline can fire without touching the connection's
+    /// other requests; a cancelled trial returns its completed prefix
+    /// with a `cancelled` field and is never cached.
+    fn run_optimize_data(&self, p: OptimizeParams, conn: Option<&CancelToken>) -> (Value, Value) {
         // Count this request in-flight from here on: the adaptive sizing
         // below divides the machine by what is actually running.
         let _admission = self.scheduler.admit();
@@ -1223,6 +1342,25 @@ impl Service {
                 return (hit.resp, hit.trace);
             }
         }
+
+        // The request's effective deadline: its own `deadline_ms`, else
+        // the server default. No deadline and no connection = no token
+        // (the trial is uncancellable, exactly the pre-cancellation
+        // behavior).
+        let deadline = p.deadline_ms.map(Duration::from_millis).or(self.default_deadline);
+        let cancel: Option<CancelToken> = match (conn, deadline) {
+            (None, None) => None,
+            (conn, deadline) => {
+                let token = match conn {
+                    Some(parent) => parent.child(),
+                    None => CancelToken::new(),
+                };
+                Some(match deadline {
+                    Some(d) => token.with_deadline(Instant::now() + d),
+                    None => token,
+                })
+            }
+        };
 
         let trial_workers = if p.trial_workers == 0 {
             self.scheduler.effective_arm_workers()
@@ -1238,9 +1376,18 @@ impl Service {
             trial_workers,
             measure_mode: p.measure_mode,
         };
-        let r = run_trial(&self.ds, self.backend.as_ref(), &spec);
+        let r = run_trial_with(&self.ds, self.backend.as_ref(), &spec, cancel.as_ref());
         self.scheduler.trials_run.fetch_add(1, Ordering::Relaxed);
-        let resp = Value::obj(vec![
+        if let Some(reason) = r.cancelled {
+            let counter = if reason == CancelReason::Deadline.as_str() {
+                &self.scheduler.cancelled_deadline
+            } else {
+                &self.scheduler.cancelled_disconnect
+            };
+            counter.fetch_add(1, Ordering::Relaxed);
+            self.scheduler.pulls_saved.fetch_add(r.pulls_saved as u64, Ordering::Relaxed);
+        }
+        let mut fields = vec![
             ("ok", true.into()),
             ("workload", p.workload_id.into()),
             ("target", p.target.name().into()),
@@ -1249,9 +1396,16 @@ impl Service {
             ("regret", r.regret.into()),
             ("evals", r.evals.into()),
             ("search_expense", r.search_expense.into()),
-        ]);
+        ];
+        if let Some(reason) = r.cancelled {
+            fields.push(("cancelled", reason.into()));
+        }
+        let resp = Value::obj(fields);
         let trace = Value::Arr(r.trace.iter().map(|&v| Value::Num(v)).collect());
-        if p.measure_mode.deterministic() {
+        // Partial (cancelled) results never enter the cache: a later
+        // identical request must run the full trial, and cached entries
+        // stay byte-identical to complete uncancelled runs.
+        if p.measure_mode.deterministic() && r.cancelled.is_none() {
             let entry = CachedResponse {
                 resp: resp.clone(),
                 resp_str: resp.to_string_compact(),
@@ -1333,11 +1487,20 @@ struct WireReply {
 
 /// Decode, dispatch, and re-frame one wire frame under `codec` — the
 /// single request path both transports hand complete frames to.
-fn handle_wire(svc: &Service, frame: &[u8], codec: &'static dyn Codec) -> WireReply {
+/// `conn` is the owning connection's cancel token where the transport
+/// has one (the event loop does; `Service::handle` and the threaded
+/// transport, whose workers block in the request and cannot observe a
+/// mid-request disconnect, pass `None` — deadlines still apply there).
+fn handle_wire(
+    svc: &Service,
+    frame: &[u8],
+    codec: &'static dyn Codec,
+    conn: Option<&CancelToken>,
+) -> WireReply {
     let text = match codec.decode_request(frame) {
         Ok(req) => {
             svc.net.count_request(codec);
-            svc.handle_value(&req)
+            svc.handle_value(&req, conn)
         }
         Err(DecodeError::Malformed(e)) => {
             svc.net.count_request(codec);
@@ -1355,8 +1518,13 @@ fn handle_wire(svc: &Service, frame: &[u8], codec: &'static dyn Codec) -> WireRe
 /// [`handle_wire`] with panics contained: the serving pools are
 /// fixed-size, so a panic escaping a request would permanently shrink
 /// them — it degrades to an error response instead.
-fn handle_wire_guarded(svc: &Service, frame: &[u8], codec: &'static dyn Codec) -> WireReply {
-    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| handle_wire(svc, frame, codec)))
+fn handle_wire_guarded(
+    svc: &Service,
+    frame: &[u8],
+    codec: &'static dyn Codec,
+    conn: Option<&CancelToken>,
+) -> WireReply {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| handle_wire(svc, frame, codec, conn)))
         .unwrap_or_else(|_| {
             let mut bytes = Vec::new();
             codec.encode_frame(&error_line("internal error handling request"), &mut bytes);
@@ -1464,7 +1632,7 @@ fn handle_conn(svc: &Service, stream: TcpStream) -> std::io::Result<()> {
                     }
                 }
             }
-            let reply = handle_wire_guarded(svc, &frame, scanner.codec());
+            let reply = handle_wire_guarded(svc, &frame, scanner.codec(), None);
             writer.write_all(&reply.bytes)?;
             writer.flush()?;
             if reply.close {
@@ -1547,6 +1715,7 @@ mod event_loop {
         Transport, WireReply, MAX_FRAME,
     };
     use crate::coordinator::codec::{self, FrameScanner, Greeting};
+    use crate::util::cancel::{CancelReason, CancelToken};
     use crate::util::net::{poll, Event, PollFd, Readiness, WakePipe, POLLIN, POLLOUT};
     use crate::util::threadpool::WorkerTeam;
 
@@ -1599,6 +1768,12 @@ mod event_loop {
         /// maintained incrementally by [`sync_conn`] so the gauge never
         /// needs an O(open connections) recount.
         counted_idle: bool,
+        /// This connection's cancellation root: fired when the peer
+        /// vanishes (EOF, hangup, error, reap, shutdown drain), so the
+        /// request it has in flight stops pulling budget instead of
+        /// running to completion for a reader that is gone. Requests run
+        /// under a child of it.
+        cancel: CancelToken,
     }
 
     impl Conn {
@@ -1619,7 +1794,16 @@ mod event_loop {
                 reap_due: now,
                 interest: 0,
                 counted_idle: false,
+                cancel: CancelToken::new(),
             }
+        }
+
+        /// The peer is gone: remember it and fire the connection's
+        /// cancel token so any in-flight request stops consuming budget
+        /// at its next pull.
+        fn mark_peer_closed(&mut self) {
+            self.peer_closed = true;
+            self.cancel.cancel(CancelReason::Disconnect);
         }
 
         /// Nothing buffered in either direction and no request running:
@@ -1725,8 +1909,13 @@ mod event_loop {
         let max_conns = svc.effective_max_conns();
         // One connection-worker pool shared by every reactor: request
         // concurrency stays bounded by `conn_workers` no matter how
-        // many reactors dispatch into it.
-        let pool = Arc::new(WorkerTeam::host_pool(svc.conn_workers.max(1)));
+        // many reactors dispatch into it. One extra priority-only
+        // worker backs the high lane, so control-plane ops (`stats`,
+        // `clear_cache`, ...) answer in bounded time even when every
+        // normal worker is deep in a long trial. Published on the
+        // service so `stats` can report `priority_served`.
+        let pool = Arc::new(WorkerTeam::host_pool_with_priority(svc.conn_workers.max(1), 1));
+        *svc.conn_pool.lock().unwrap() = Some(Arc::clone(&pool));
         let link = Arc::new(AcceptorLink {
             parked: AtomicBool::new(false),
             wake: WakePipe::new().expect("acceptor: wake pipe"),
@@ -1772,6 +1961,7 @@ mod event_loop {
         for t in threads {
             let _ = t.join();
         }
+        *svc.conn_pool.lock().unwrap() = None;
         drop(pool); // last ref: join workers (in-flight requests finish)
         svc.net.reactor_gauges.lock().unwrap().clear();
         svc.net.open_connections.store(0, Ordering::Relaxed);
@@ -1935,7 +2125,7 @@ mod event_loop {
                                 continue;
                             }
                         } else if ev.hangup() {
-                            c.peer_closed = true;
+                            c.mark_peer_closed();
                         }
                         touched.push(tok);
                     }
@@ -2050,6 +2240,13 @@ mod event_loop {
         // Slot bookkeeping is skipped: the coordinator zeroes every
         // gauge once all reactors have joined.
         let deadline = Instant::now() + limits.shutdown_drain;
+        // Fire every live connection's token first: requests still
+        // running stop pulling budget at their next pull and come back
+        // as partial `cancelled:"shutdown"` responses — which is what
+        // makes the drain *bounded* even when trials are long.
+        for c in conns.values() {
+            c.cancel.cancel(CancelReason::Shutdown);
+        }
         while Instant::now() < deadline {
             conns.retain(|_, c| c.busy || !c.pending.is_empty() || c.wbuf_backlog() > 0);
             if conns.is_empty() {
@@ -2098,7 +2295,7 @@ mod event_loop {
         loop {
             match c.stream.read(&mut chunk) {
                 Ok(0) => {
-                    c.peer_closed = true;
+                    c.mark_peer_closed();
                     break;
                 }
                 Ok(n) => {
@@ -2221,6 +2418,9 @@ mod event_loop {
         slot: &SlotRelease<'_>,
     ) {
         if let Some(c) = conns.remove(&token) {
+            // Whatever request is still running for this connection has
+            // no reader anymore: stop it at its next pull.
+            c.cancel.cancel(CancelReason::Disconnect);
             let _ = reg.deregister(c.stream.as_raw_fd(), token);
             reap_queue.remove(&(c.reap_due, token));
             if c.counted_idle {
@@ -2234,6 +2434,9 @@ mod event_loop {
     /// the worker pool; emit the deferred oversize error once the queue
     /// drains so responses keep request order. Decoding happens on the
     /// worker ([`handle_wire_guarded`]), never on the loop thread.
+    /// Control-plane frames ride the pool's high-priority lane so
+    /// `stats`/`clear_cache` answer in bounded time while every normal
+    /// worker is deep in a long trial.
     fn dispatch(
         c: &mut Conn,
         token: u64,
@@ -2254,14 +2457,60 @@ mod event_loop {
                 return;
             };
             c.busy = true;
+            let high = is_priority_frame(&frame);
             let conn_codec = c.scanner.codec();
+            let cancel = c.cancel.clone();
             let svc = Arc::clone(svc);
             let outbox = Arc::clone(outbox);
-            pool.execute(move || {
-                let reply = handle_wire_guarded(&svc, &frame, conn_codec);
+            let job = move || {
+                let reply = handle_wire_guarded(&svc, &frame, conn_codec, Some(&cancel));
                 outbox.push(token, reply);
-            });
+            };
+            if high {
+                pool.execute_high(job);
+            } else {
+                pool.execute(job);
+            }
         }
+    }
+
+    /// Cheap byte-level sniff for control-plane ops that should jump
+    /// the queue (both codecs carry a JSON payload, so one scan covers
+    /// them). A misclassification only affects cross-connection
+    /// scheduling fairness — the frame is decoded and validated on the
+    /// worker either way — so a heuristic is safe here.
+    pub(super) fn is_priority_frame(frame: &[u8]) -> bool {
+        const FAST_OPS: [&[u8]; 6] = [
+            b"stats",
+            b"ping",
+            b"clear_cache",
+            b"hello",
+            b"list_workloads",
+            b"list_methods",
+        ];
+        let Some(key) = frame.windows(4).position(|w| w == b"\"op\"") else {
+            return false;
+        };
+        let mut i = key + 4;
+        while i < frame.len() && frame[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        if i >= frame.len() || frame[i] != b':' {
+            return false;
+        }
+        i += 1;
+        while i < frame.len() && frame[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        if i >= frame.len() || frame[i] != b'"' {
+            return false;
+        }
+        i += 1;
+        FAST_OPS.iter().any(|op| {
+            frame.len() >= i + op.len() + 1
+                && &frame[i..i + op.len()] == *op
+                && frame[i + op.len()] == b'"'
+        })
     }
 
     /// Nonblocking write of whatever the socket will take. Returns
@@ -2737,7 +2986,7 @@ mod tests {
         ] {
             let expected = svc.handle(req);
             for c in [&JSON_LINES as &'static dyn Codec, &BINARY] {
-                let reply = handle_wire(&svc, req.as_bytes(), c);
+                let reply = handle_wire(&svc, req.as_bytes(), c, None);
                 assert!(!reply.close, "{req} must not close under {}", c.name());
                 let mut framed = Vec::new();
                 c.encode_frame(&expected, &mut framed);
@@ -2746,7 +2995,7 @@ mod tests {
         }
         // Non-UTF-8 payloads close silently under both codecs.
         for c in [&JSON_LINES as &'static dyn Codec, &BINARY] {
-            let reply = handle_wire(&svc, &[0xff, 0xfe, 0x80], c);
+            let reply = handle_wire(&svc, &[0xff, 0xfe, 0x80], c, None);
             assert!(reply.close && reply.bytes.is_empty(), "codec {}", c.name());
         }
         // The per-codec request counters moved with the traffic (the
@@ -2754,6 +3003,141 @@ mod tests {
         let v = parse(&svc.handle(r#"{"op":"stats"}"#)).unwrap();
         assert_eq!(v.get("json_requests").and_then(Value::as_usize), Some(3));
         assert_eq!(v.get("binary_requests").and_then(Value::as_usize), Some(3));
+    }
+
+    /// `deadline_ms: 0` (already expired) deterministically cancels
+    /// after the guaranteed first pull: the partial response carries
+    /// `cancelled: "deadline"`, is byte-stable across repeats, never
+    /// enters the cache, and moves the cancellation counters.
+    #[test]
+    fn expired_deadline_returns_a_deterministic_partial_and_skips_the_cache() {
+        let svc = service();
+        let req = r#"{"op":"optimize","workload":"kmeans:buzz","method":"rs","budget":20,"seed":4,"measure_mode":"mean","trial_workers":1,"deadline_ms":0}"#;
+        let first = svc.handle(req);
+        let v = parse(&first).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true), "{first}");
+        assert_eq!(v.get("cancelled").unwrap().as_str(), Some("deadline"), "{first}");
+        assert_eq!(v.get("evals").unwrap().as_usize(), Some(1), "one guaranteed pull");
+        // Cache-excluded: the repeat reruns the trial, byte-identically.
+        let trials = svc.scheduler().trials_run();
+        let second = svc.handle(req);
+        assert_eq!(first, second, "cancelled partials must stay deterministic");
+        assert_eq!(svc.scheduler().trials_run(), trials + 1, "partial must not be cached");
+        assert_eq!(svc.scheduler().cache_hits(), 0);
+        assert_eq!(svc.scheduler().cancelled_deadline(), 2);
+        assert_eq!(svc.scheduler().cancelled_disconnect(), 0);
+        assert!(svc.scheduler().pulls_saved() >= 2, "19 pulls saved per run");
+        let stats = parse(&svc.handle(r#"{"op":"stats"}"#)).unwrap();
+        assert_eq!(stats.get("cancelled_deadline").and_then(Value::as_usize), Some(2));
+        assert!(stats.get("pulls_saved").and_then(Value::as_usize).unwrap() >= 2);
+        // The full uncancelled run is the cancelled run's superset: its
+        // trace starts with the partial's single point.
+        let full = svc.handle(
+            r#"{"op":"optimize","workload":"kmeans:buzz","method":"rs","budget":20,"seed":4,"measure_mode":"mean","trial_workers":1,"include_trace":true}"#,
+        );
+        let fv = parse(&full).unwrap();
+        assert!(fv.get("cancelled").is_none(), "{full}");
+        assert_eq!(fv.get("evals").unwrap().as_usize(), Some(20));
+    }
+
+    /// A server-wide default deadline applies to requests that set
+    /// none, and a request's own `deadline_ms` wins over it.
+    #[test]
+    fn default_deadline_applies_and_requests_override_it() {
+        let svc = service().with_default_deadline(Duration::from_millis(0));
+        assert_eq!(svc.default_deadline(), None, "zero disables the default");
+        let svc = service().with_default_deadline(Duration::from_secs(3600));
+        assert_eq!(svc.default_deadline(), Some(Duration::from_secs(3600)));
+        // A generous default fires on nothing; responses stay clean.
+        let resp = svc.handle(
+            r#"{"op":"optimize","workload":"kmeans:buzz","method":"rs","budget":8,"seed":1}"#,
+        );
+        assert!(parse(&resp).unwrap().get("cancelled").is_none(), "{resp}");
+        // A request's own (expired) deadline overrides the generous
+        // default.
+        let own = svc.handle(
+            r#"{"op":"optimize","workload":"kmeans:buzz","method":"rs","budget":8,"seed":1,"trial_workers":1,"deadline_ms":0}"#,
+        );
+        assert_eq!(
+            parse(&own).unwrap().get("cancelled").and_then(Value::as_str),
+            Some("deadline"),
+            "{own}"
+        );
+        let stats = parse(&svc.handle(r#"{"op":"stats"}"#)).unwrap();
+        assert_eq!(stats.get("default_deadline_ms").and_then(Value::as_usize), Some(3_600_000));
+    }
+
+    /// Deadline validation: out-of-range and non-integer values error.
+    #[test]
+    fn deadline_validation_errors() {
+        let svc = service();
+        for bad in [
+            r#"{"op":"optimize","workload":"kmeans:buzz","deadline_ms":3600001}"#,
+            r#"{"op":"optimize","workload":"kmeans:buzz","deadline_ms":"fast"}"#,
+            r#"{"op":"optimize","workload":"kmeans:buzz","deadline_ms":-5}"#,
+        ] {
+            let resp = svc.handle(bad);
+            let v = parse(&resp).unwrap();
+            assert_eq!(v.get("ok").unwrap().as_bool(), Some(false), "{bad} -> {resp}");
+        }
+    }
+
+    /// A batch slot with its own deadline runs its own trial — its
+    /// cancellation stays in its slot and never becomes the shared
+    /// result of an otherwise-identical dedup group.
+    #[test]
+    fn batch_deadline_slot_is_contained() {
+        let det = r#"{"op":"optimize","workload":"kmeans:buzz","method":"rs","budget":10,"seed":1,"measure_mode":"mean","trial_workers":1}"#;
+        let det_dl = r#"{"op":"optimize","workload":"kmeans:buzz","method":"rs","budget":10,"seed":1,"measure_mode":"mean","trial_workers":1,"deadline_ms":0}"#;
+        let svc = service();
+        let batch = format!(r#"{{"op":"batch","requests":[{det},{det_dl},{det}]}}"#);
+        let v = parse(&svc.handle(&batch)).unwrap();
+        let responses = v.get("responses").unwrap().as_arr().unwrap();
+        // Slots 0 and 2 dedup onto one complete trial; slot 1 runs its
+        // own and is cancelled.
+        assert_eq!(svc.scheduler().trials_run(), 2, "deadline slot must not join the group");
+        assert!(responses[0].get("cancelled").is_none(), "{v}");
+        assert!(responses[2].get("cancelled").is_none(), "{v}");
+        assert_eq!(responses[1].get("cancelled").and_then(Value::as_str), Some("deadline"));
+        assert_eq!(responses[0].get("evals").and_then(Value::as_usize), Some(10));
+        assert_eq!(responses[1].get("evals").and_then(Value::as_usize), Some(1));
+        // The healthy group's complete result went to the cache; the
+        // cancelled slot's partial did not displace it.
+        let cached = svc.handle(det);
+        assert_eq!(parse(&cached).unwrap().get("evals").and_then(Value::as_usize), Some(10));
+        assert_eq!(svc.scheduler().cache_hits(), 1);
+    }
+
+    /// The byte-level control-plane sniff that routes frames onto the
+    /// priority lane: ops that must answer under saturation classify as
+    /// high; optimize (and junk) frames never do.
+    #[cfg(unix)]
+    #[test]
+    fn priority_frame_sniff_classifies_control_plane_ops() {
+        use super::event_loop::is_priority_frame;
+        for fast in [
+            r#"{"op":"stats"}"#,
+            r#"{"op":"ping"}"#,
+            r#"{"op":"clear_cache"}"#,
+            r#"{ "op" : "stats" }"#,
+            r#"{"op":"list_workloads"}"#,
+            r#"{"op":"list_methods"}"#,
+            r#"{"op":"hello","codec":"binary"}"#,
+        ] {
+            assert!(is_priority_frame(fast.as_bytes()), "{fast}");
+        }
+        for slow in [
+            r#"{"op":"optimize","workload":"kmeans:buzz"}"#,
+            r#"{"op":"batch","requests":[{"op":"ping"}]}"#,
+            r#"{"op":"statsX"}"#,
+            r#"{"op":"pingpong"}"#,
+            r#"{"op":42}"#,
+            r#"{}"#,
+            "not json",
+            "",
+        ] {
+            assert!(!is_priority_frame(slow.as_bytes()), "{slow}");
+        }
     }
 
     /// The pre-serialized cached fast path answers byte-identically to
@@ -2829,6 +3213,11 @@ mod tests {
             "binary_requests",
             "cache_shards",
             "reactors",
+            "cancelled_disconnect",
+            "cancelled_deadline",
+            "pulls_saved",
+            "priority_served",
+            "default_deadline_ms",
         ];
         for field in fields {
             assert!(v.get(field).and_then(Value::as_usize).is_some(), "missing {field}");

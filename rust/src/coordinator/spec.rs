@@ -33,6 +33,12 @@ use crate::util::json::{parse, Value};
 /// workers × trial workers, so this stays small and explicit.
 pub const MAX_TRIAL_WORKERS: usize = 64;
 
+/// Upper bound on a request's `deadline_ms` (one hour). Deadlines above
+/// this are almost certainly unit confusion (seconds vs milliseconds),
+/// and rejecting them keeps the reactor's deadline math safely away from
+/// `Instant` overflow.
+pub const MAX_DEADLINE_MS: u64 = 3_600_000;
+
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExperimentSpec {
     pub name: String,

@@ -45,6 +45,7 @@ use std::sync::{Arc, Mutex};
 
 use super::{OfflineDataset, Target};
 use crate::domain::Config;
+use crate::util::cancel::CancelToken;
 use crate::util::rng::{splitmix64, Rng};
 
 /// How one evaluation aggregates the stored repetitions (paper §III-A:
@@ -178,16 +179,26 @@ impl EvalSource for LookupObjective<'_> {
 #[derive(Debug)]
 pub struct BudgetPool {
     remaining: AtomicUsize,
+    /// Reservations granted so far (monotone). Cancellation is only
+    /// honored once at least one pull has been granted, so a cancelled
+    /// trial still produces a non-empty ledger (see
+    /// [`EvalLedger::with_cancel`]).
+    granted: AtomicUsize,
 }
 
 impl BudgetPool {
     fn new(budget: usize) -> BudgetPool {
-        BudgetPool { remaining: AtomicUsize::new(budget) }
+        BudgetPool { remaining: AtomicUsize::new(budget), granted: AtomicUsize::new(0) }
     }
 
     /// Evaluations still admissible.
     pub fn remaining(&self) -> usize {
         self.remaining.load(Ordering::Acquire)
+    }
+
+    /// Evaluations granted so far across the ledger and all shards.
+    pub fn granted(&self) -> usize {
+        self.granted.load(Ordering::Acquire)
     }
 
     /// Reserve one evaluation; `false` once the pool is empty.
@@ -200,11 +211,27 @@ impl BudgetPool {
                 Ordering::AcqRel,
                 Ordering::Acquire,
             ) {
-                Ok(_) => return true,
+                Ok(_) => {
+                    self.granted.fetch_add(1, Ordering::AcqRel);
+                    return true;
+                }
                 Err(observed) => cur = observed,
             }
         }
         false
+    }
+}
+
+/// Whether a cancel token should stop the next pull. Cancellation is
+/// checked **between pulls** and honored only after at least one global
+/// grant, so (a) completed evaluations are never altered — the prefix
+/// stays bit-identical to an uncancelled run — and (b) a cancelled trial
+/// still performs its first pull, keeping every downstream consumer's
+/// non-empty-ledger invariant intact.
+fn cancel_requested(cancel: &Option<CancelToken>, pool: &BudgetPool) -> bool {
+    match cancel {
+        Some(token) => pool.granted() > 0 && token.is_cancelled(),
+        None => false,
     }
 }
 
@@ -289,6 +316,10 @@ pub struct EvalLedger<'a> {
     charged_cfgs: Option<HashSet<Config>>,
     /// Per-configuration pull counts driving [`EvalSource::measure`].
     pulls: HashMap<Config, u64>,
+    /// Optional cooperative cancellation, checked between pulls (see
+    /// [`cancel_requested`]). Shared with every shard split off this
+    /// ledger.
+    cancel: Option<CancelToken>,
 }
 
 impl<'a> EvalLedger<'a> {
@@ -309,7 +340,20 @@ impl<'a> EvalLedger<'a> {
             memo: None,
             charged_cfgs: None,
             pulls: HashMap::new(),
+            cancel: None,
         }
+    }
+
+    /// Attach a cooperative cancellation token. The ledger (and every
+    /// shard split off it) checks the token **between pulls**: once it
+    /// fires, the next `eval` returns `None` exactly as if the budget
+    /// were exhausted, so optimizer step loops stop without any new code
+    /// paths. The first pull is always honored (see [`cancel_requested`])
+    /// and completed work is never altered — a cancelled run's history is
+    /// bit-identical to the uncancelled run's prefix.
+    pub fn with_cancel(mut self, token: CancelToken) -> Self {
+        self.cancel = Some(token);
+        self
     }
 
     /// Enable memoization: repeated evaluations of one configuration
@@ -341,7 +385,30 @@ impl<'a> EvalLedger<'a> {
     }
 
     pub fn exhausted(&self) -> bool {
-        self.pool.remaining() == 0
+        self.pool.remaining() == 0 || cancel_requested(&self.cancel, &self.pool)
+    }
+
+    /// Budget pulls the attached cancel token saved: the evaluations that
+    /// were still admissible when cancellation stopped the run. Zero for
+    /// uncancelled (or budget-exhausted-first) runs.
+    pub fn pulls_saved(&self) -> usize {
+        if cancel_requested(&self.cancel, &self.pool) {
+            self.pool.remaining()
+        } else {
+            0
+        }
+    }
+
+    /// Why this run stopped early, as the wire-visible reason string —
+    /// `None` when the run completed normally. A token that fired only
+    /// *after* the budget was already exhausted does not count: the run
+    /// did all its work, so the result is the complete (cacheable) one.
+    pub fn cancelled(&self) -> Option<&'static str> {
+        if self.pool.remaining() > 0 && cancel_requested(&self.cancel, &self.pool) {
+            self.cancel.as_ref().and_then(|t| t.reason()).map(|r| r.as_str())
+        } else {
+            None
+        }
     }
 
     /// Append one evaluation outcome to history/trace/best/expense.
@@ -371,7 +438,7 @@ impl<'a> EvalLedger<'a> {
     /// `None` — performing no measurement — once the budget is exhausted;
     /// the ledger is the budget's enforcement point, not a convention.
     pub fn eval(&mut self, cfg: &Config) -> Option<f64> {
-        if !self.pool.try_reserve() {
+        if cancel_requested(&self.cancel, &self.pool) || !self.pool.try_reserve() {
             return None;
         }
         let (v, fresh) = measure_next(self.source, &mut self.pulls, &self.memo, cfg);
@@ -409,6 +476,7 @@ impl<'a> EvalLedger<'a> {
                 records: Vec::new(),
                 pulls: self.pulls.clone(),
                 memo: self.memo.clone(),
+                cancel: self.cancel.clone(),
             })
             .collect()
     }
@@ -492,6 +560,9 @@ pub struct LedgerShard<'a> {
     /// Shared with the parent ledger and sibling shards (see
     /// [`EvalLedger::shard`]).
     memo: Option<SharedMemo>,
+    /// Inherited from the parent ledger: all shards observe the same
+    /// token, so one disconnect stops every arm at its next pull.
+    cancel: Option<CancelToken>,
 }
 
 impl LedgerShard<'_> {
@@ -521,7 +592,10 @@ impl LedgerShard<'_> {
 
 impl EvalSink for LedgerShard<'_> {
     fn eval(&mut self, cfg: &Config) -> Option<f64> {
-        if self.allowance == 0 || !self.pool.try_reserve() {
+        if self.allowance == 0
+            || cancel_requested(&self.cancel, &self.pool)
+            || !self.pool.try_reserve()
+        {
             return None;
         }
         self.allowance -= 1;
@@ -531,7 +605,9 @@ impl EvalSink for LedgerShard<'_> {
     }
 
     fn exhausted(&self) -> bool {
-        self.allowance == 0 || self.pool.remaining() == 0
+        self.allowance == 0
+            || self.pool.remaining() == 0
+            || cancel_requested(&self.cancel, &self.pool)
     }
 }
 
@@ -838,6 +914,95 @@ mod tests {
         for _ in 0..4 {
             assert_eq!(seq, run(true), "parallel overlapping shards diverged");
         }
+    }
+
+    // -- cancellation -------------------------------------------------------
+
+    use crate::util::cancel::{CancelReason, CancelToken};
+
+    /// A token fired before the run starts still lets exactly one pull
+    /// through (the guaranteed-first-pull rule), then stops everything.
+    #[test]
+    fn prefired_token_allows_exactly_one_pull() {
+        let ds = ds();
+        let src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::SingleDraw, 11);
+        let token = CancelToken::new();
+        token.cancel(CancelReason::Disconnect);
+        let mut led = EvalLedger::new(&src, 20).with_cancel(token);
+        assert!(!led.exhausted(), "no grant yet: cancellation not honored before first pull");
+        assert!(led.eval(&some_cfg()).is_some());
+        for _ in 0..5 {
+            assert!(led.eval(&some_cfg()).is_none());
+        }
+        assert!(led.exhausted());
+        assert_eq!(led.evals(), 1);
+        assert_eq!(led.pulls_saved(), 19);
+        assert_eq!(led.cancelled(), Some("disconnect"));
+    }
+
+    /// Firing mid-run stops at the next pull and leaves the completed
+    /// prefix bit-identical to an uncancelled run.
+    #[test]
+    fn mid_run_cancel_keeps_prefix_bit_identical() {
+        let ds = ds();
+        let cfg = provider_cfg(0);
+        let run = |cancel_after: Option<usize>| {
+            let src = LookupObjective::new(&ds, 3, Target::Cost, MeasureMode::SingleDraw, 17);
+            let token = CancelToken::new();
+            let mut led = EvalLedger::new(&src, 8).with_cancel(token.clone());
+            let mut vals = Vec::new();
+            for i in 0..8 {
+                if cancel_after == Some(i) {
+                    token.cancel(CancelReason::Deadline);
+                }
+                match led.eval(&cfg) {
+                    Some(v) => vals.push(v.to_bits()),
+                    None => break,
+                }
+            }
+            vals
+        };
+        let full = run(None);
+        assert_eq!(full.len(), 8);
+        let cut = run(Some(3));
+        assert_eq!(cut.len(), 3);
+        assert_eq!(cut, full[..3], "completed prefix diverged from uncancelled run");
+    }
+
+    /// An uncancelled ledger reports no cancellation and saves nothing;
+    /// a token firing only after exhaustion also does not mark the run.
+    #[test]
+    fn cancelled_is_none_for_complete_runs() {
+        let ds = ds();
+        let src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 9);
+        let token = CancelToken::new();
+        let mut led = EvalLedger::new(&src, 2).with_cancel(token.clone());
+        led.eval(&some_cfg());
+        led.eval(&some_cfg());
+        assert_eq!(led.remaining(), 0);
+        token.cancel(CancelReason::Deadline);
+        assert_eq!(led.cancelled(), None, "budget ran out first: the run is complete");
+        assert_eq!(led.pulls_saved(), 0);
+    }
+
+    /// Shards inherit the parent's token: one fire stops every arm at
+    /// its next pull.
+    #[test]
+    fn shards_inherit_cancellation() {
+        let ds = ds();
+        let src = LookupObjective::new(&ds, 1, Target::Cost, MeasureMode::SingleDraw, 7);
+        let token = CancelToken::new();
+        let mut led = EvalLedger::new(&src, 20).with_cancel(token.clone());
+        let mut shards = led.shard(2, 10);
+        assert!(shards[0].eval(&provider_cfg(0)).is_some());
+        token.cancel(CancelReason::Disconnect);
+        assert!(shards[0].eval(&provider_cfg(0)).is_none());
+        assert!(shards[1].eval(&provider_cfg(1)).is_none());
+        assert!(shards.iter().all(|s| s.exhausted()));
+        led.merge_all(&mut shards);
+        assert_eq!(led.evals(), 1);
+        assert_eq!(led.cancelled(), Some("disconnect"));
+        assert_eq!(led.pulls_saved(), 19);
     }
 
     /// Concurrency stress: many shards with effectively unlimited local

@@ -434,6 +434,12 @@ fn cmd_serve(args: &[String]) -> i32 {
         .opt("max-wbuf", "0", "per-connection unflushed response byte cap (0 = default 1 MiB)")
         .opt("max-pending", "0", "per-connection pipelined frame cap (0 = default 64)")
         .opt("shutdown-drain", "-1", "post-stop drain seconds (-1 = default 5)")
+        .opt(
+            "default-deadline",
+            "0",
+            "deadline in milliseconds applied to optimize requests that set no deadline_ms \
+             of their own (0 = unlimited)",
+        )
         .opt("cache-cap", "0", "response cache entries (0 = default)")
         .opt("dataset", "", "offline dataset CSV (empty = regenerate)")
         .flag("native", "use native surrogates");
@@ -476,6 +482,16 @@ fn cmd_serve(args: &[String]) -> i32 {
     let shutdown_drain = a.f64("shutdown-drain").unwrap_or_else(|e| fail(&e));
     if shutdown_drain >= 0.0 {
         svc = svc.with_shutdown_drain(std::time::Duration::from_secs_f64(shutdown_drain));
+    }
+    let default_deadline = a.usize("default-deadline").unwrap_or_else(|e| fail(&e));
+    if default_deadline as u64 > multicloud::coordinator::spec::MAX_DEADLINE_MS {
+        fail(&format!(
+            "--default-deadline must be <= {} ms",
+            multicloud::coordinator::spec::MAX_DEADLINE_MS
+        ));
+    }
+    if default_deadline > 0 {
+        svc = svc.with_default_deadline(std::time::Duration::from_millis(default_deadline as u64));
     }
 
     // --transport wins; the legacy --event-loop switch still works for

@@ -1,0 +1,332 @@
+//! Zero-dependency cooperative cancellation tokens.
+//!
+//! A [`CancelToken`] is a cheap `Arc`-cloned handle around an atomic
+//! cancellation flag plus a *reason* (`disconnect`, `deadline`,
+//! `shutdown`). Cancellation is **cooperative**: nothing is interrupted;
+//! workers poll [`CancelToken::is_cancelled`] at safe points (the ledger
+//! checks *between pulls*) so completed work stays bit-identical.
+//!
+//! Tokens form a two-level hierarchy: a connection owns a root token and
+//! each request derives a [`CancelToken::child`]. Firing the parent
+//! (client disconnect, shutdown drain) propagates to every live child;
+//! firing a child (per-request deadline) leaves the parent and sibling
+//! requests untouched. Children hold only a `Weak` back-reference, so a
+//! finished request's token is dropped without unbounded growth.
+//!
+//! Deadlines are lazy: [`CancelToken::with_deadline`] stores an
+//! `Instant`; the first `is_cancelled()` call at or past the deadline
+//! latches the token into the cancelled state with reason `deadline`.
+//! No timer thread exists — the polling cadence (one budget pull) bounds
+//! the detection latency.
+//!
+//! First cancel wins: once a reason is latched it never changes, even if
+//! a disconnect races a deadline.
+
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::time::Instant;
+
+/// Why a token was cancelled. First cancel wins; the reason is immutable
+/// once latched.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelReason {
+    /// The client connection closed (EOF, hangup, or reaped).
+    Disconnect,
+    /// A per-request or default deadline expired.
+    Deadline,
+    /// The service is draining for shutdown.
+    Shutdown,
+}
+
+impl CancelReason {
+    /// Wire-visible string, used as the `cancelled` response field.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CancelReason::Disconnect => "disconnect",
+            CancelReason::Deadline => "deadline",
+            CancelReason::Shutdown => "shutdown",
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            CancelReason::Disconnect => 1,
+            CancelReason::Deadline => 2,
+            CancelReason::Shutdown => 3,
+        }
+    }
+
+    fn from_code(code: u8) -> Option<CancelReason> {
+        match code {
+            1 => Some(CancelReason::Disconnect),
+            2 => Some(CancelReason::Deadline),
+            3 => Some(CancelReason::Shutdown),
+            _ => None,
+        }
+    }
+}
+
+const REASON_NONE: u8 = 0;
+
+struct Inner {
+    cancelled: AtomicBool,
+    /// `REASON_NONE` until the first successful cancel CAS latches a code.
+    reason: AtomicU8,
+    deadline: Mutex<Option<Instant>>,
+    hooks: Mutex<Vec<Box<dyn Fn() + Send + Sync>>>,
+    children: Mutex<Vec<Weak<Inner>>>,
+    parent: Weak<Inner>,
+}
+
+impl Inner {
+    fn unfired(parent: Weak<Inner>) -> Inner {
+        Inner {
+            cancelled: AtomicBool::new(false),
+            reason: AtomicU8::new(REASON_NONE),
+            deadline: Mutex::new(None),
+            hooks: Mutex::new(Vec::new()),
+            children: Mutex::new(Vec::new()),
+            parent,
+        }
+    }
+}
+
+/// Latch `inner` into the cancelled state with `reason`. Returns `true`
+/// if this call won the race (the reason was not already latched).
+/// The winner runs the registered hooks and recursively fires live
+/// children with the same reason.
+fn fire(inner: &Arc<Inner>, reason: CancelReason) -> bool {
+    if inner
+        .reason
+        .compare_exchange(REASON_NONE, reason.code(), Ordering::AcqRel, Ordering::Acquire)
+        .is_err()
+    {
+        return false;
+    }
+    inner.cancelled.store(true, Ordering::Release);
+    let hooks = std::mem::take(&mut *inner.hooks.lock().unwrap());
+    for hook in &hooks {
+        hook();
+    }
+    let children = std::mem::take(&mut *inner.children.lock().unwrap());
+    for child in children {
+        if let Some(child) = child.upgrade() {
+            fire(&child, reason);
+        }
+    }
+    true
+}
+
+/// Cheap cloneable cancellation handle. See the module docs for the
+/// propagation and deadline semantics.
+#[derive(Clone)]
+pub struct CancelToken {
+    inner: Arc<Inner>,
+}
+
+impl Default for CancelToken {
+    fn default() -> Self {
+        CancelToken::new()
+    }
+}
+
+impl CancelToken {
+    /// A fresh, unfired root token.
+    pub fn new() -> CancelToken {
+        CancelToken { inner: Arc::new(Inner::unfired(Weak::new())) }
+    }
+
+    /// Attach a lazy deadline: the first `is_cancelled()` at or past
+    /// `at` latches the token with reason `Deadline`.
+    pub fn with_deadline(self, at: Instant) -> CancelToken {
+        *self.inner.deadline.lock().unwrap() = Some(at);
+        self
+    }
+
+    /// Cancel with `reason`. Returns `true` if this call latched the
+    /// token (first cancel wins), `false` if it was already cancelled.
+    pub fn cancel(&self, reason: CancelReason) -> bool {
+        fire(&self.inner, reason)
+    }
+
+    /// Poll for cancellation. Also latches a passed deadline and adopts
+    /// a fired parent's reason, so the answer is authoritative at the
+    /// moment of the call.
+    pub fn is_cancelled(&self) -> bool {
+        if self.inner.cancelled.load(Ordering::Acquire) {
+            return true;
+        }
+        let due = match *self.inner.deadline.lock().unwrap() {
+            Some(at) => Instant::now() >= at,
+            None => false,
+        };
+        if due {
+            fire(&self.inner, CancelReason::Deadline);
+            return true;
+        }
+        // A child registered before the parent fired is reached by the
+        // parent's recursive fire; this lazy check covers the window
+        // where the parent latched concurrently with child registration.
+        if let Some(parent) = self.inner.parent.upgrade() {
+            if parent.cancelled.load(Ordering::Acquire) {
+                let reason = CancelReason::from_code(parent.reason.load(Ordering::Acquire))
+                    .unwrap_or(CancelReason::Disconnect);
+                fire(&self.inner, reason);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// The latched reason, or `None` if the token has not fired.
+    pub fn reason(&self) -> Option<CancelReason> {
+        CancelReason::from_code(self.inner.reason.load(Ordering::Acquire))
+    }
+
+    /// Derive a child token: firing `self` fires the child, firing the
+    /// child leaves `self` untouched. If `self` already fired, the child
+    /// is born cancelled with the same reason.
+    pub fn child(&self) -> CancelToken {
+        let child = Arc::new(Inner::unfired(Arc::downgrade(&self.inner)));
+        self.inner.children.lock().unwrap().push(Arc::downgrade(&child));
+        let token = CancelToken { inner: child };
+        if self.inner.cancelled.load(Ordering::Acquire) {
+            let reason = CancelReason::from_code(self.inner.reason.load(Ordering::Acquire))
+                .unwrap_or(CancelReason::Disconnect);
+            fire(&token.inner, reason);
+        }
+        token
+    }
+
+    /// Register a hook run exactly once when the token fires (used to
+    /// wake sleeping workers). Runs immediately if already cancelled.
+    pub fn on_cancel<F: Fn() + Send + Sync + 'static>(&self, hook: F) {
+        if self.inner.cancelled.load(Ordering::Acquire) {
+            hook();
+            return;
+        }
+        let mut hooks = self.inner.hooks.lock().unwrap();
+        // Re-check under the lock: `fire` takes the hook list while
+        // holding it, so a hook pushed after the take would never run.
+        if self.inner.cancelled.load(Ordering::Acquire) {
+            drop(hooks);
+            hook();
+        } else {
+            hooks.push(Box::new(hook));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::time::Duration;
+
+    #[test]
+    fn fresh_token_is_not_cancelled() {
+        let t = CancelToken::new();
+        assert!(!t.is_cancelled());
+        assert_eq!(t.reason(), None);
+    }
+
+    #[test]
+    fn cancel_latches_flag_and_reason() {
+        let t = CancelToken::new();
+        assert!(t.cancel(CancelReason::Disconnect));
+        assert!(t.is_cancelled());
+        assert_eq!(t.reason(), Some(CancelReason::Disconnect));
+    }
+
+    #[test]
+    fn first_cancel_wins() {
+        let t = CancelToken::new();
+        assert!(t.cancel(CancelReason::Deadline));
+        assert!(!t.cancel(CancelReason::Disconnect));
+        assert_eq!(t.reason(), Some(CancelReason::Deadline));
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let t = CancelToken::new();
+        let c = t.clone();
+        t.cancel(CancelReason::Shutdown);
+        assert!(c.is_cancelled());
+        assert_eq!(c.reason(), Some(CancelReason::Shutdown));
+    }
+
+    #[test]
+    fn parent_fire_propagates_to_child() {
+        let parent = CancelToken::new();
+        let child = parent.child();
+        parent.cancel(CancelReason::Disconnect);
+        assert!(child.is_cancelled());
+        assert_eq!(child.reason(), Some(CancelReason::Disconnect));
+        assert!(parent.is_cancelled());
+    }
+
+    #[test]
+    fn child_fire_leaves_parent_untouched() {
+        let parent = CancelToken::new();
+        let child = parent.child();
+        child.cancel(CancelReason::Deadline);
+        assert!(child.is_cancelled());
+        assert!(!parent.is_cancelled());
+        assert_eq!(parent.reason(), None);
+    }
+
+    #[test]
+    fn child_of_fired_parent_is_born_cancelled() {
+        let parent = CancelToken::new();
+        parent.cancel(CancelReason::Shutdown);
+        let child = parent.child();
+        assert!(child.is_cancelled());
+        assert_eq!(child.reason(), Some(CancelReason::Shutdown));
+    }
+
+    #[test]
+    fn passed_deadline_latches_on_poll() {
+        let t = CancelToken::new().with_deadline(Instant::now() - Duration::from_millis(1));
+        assert!(t.is_cancelled());
+        assert_eq!(t.reason(), Some(CancelReason::Deadline));
+    }
+
+    #[test]
+    fn future_deadline_does_not_fire_early() {
+        let t = CancelToken::new().with_deadline(Instant::now() + Duration::from_secs(3600));
+        assert!(!t.is_cancelled());
+        assert_eq!(t.reason(), None);
+    }
+
+    #[test]
+    fn hooks_run_once_on_fire() {
+        let hits = Arc::new(AtomicUsize::new(0));
+        let t = CancelToken::new();
+        let h = Arc::clone(&hits);
+        t.on_cancel(move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        t.cancel(CancelReason::Disconnect);
+        t.cancel(CancelReason::Deadline);
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn hook_on_fired_token_runs_immediately() {
+        let hits = Arc::new(AtomicUsize::new(0));
+        let t = CancelToken::new();
+        t.cancel(CancelReason::Deadline);
+        let h = Arc::clone(&hits);
+        t.on_cancel(move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn reason_strings_match_wire_values() {
+        assert_eq!(CancelReason::Disconnect.as_str(), "disconnect");
+        assert_eq!(CancelReason::Deadline.as_str(), "deadline");
+        assert_eq!(CancelReason::Shutdown.as_str(), "shutdown");
+    }
+}

@@ -4,6 +4,7 @@
 //! that are unavailable in the offline build environment — see DESIGN.md
 //! §Substitutions.
 
+pub mod cancel;
 pub mod cli;
 pub mod csv;
 pub mod json;

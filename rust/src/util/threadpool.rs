@@ -3,7 +3,11 @@
 //! Two layers:
 //!
 //! * [`WorkerTeam`] — a **persistent** team of worker threads fed jobs
-//!   over a channel. One team lives for the whole process
+//!   over a two-lane (normal + high-priority) queue. Queued jobs carry
+//!   an optional [`JobCtl`] control block, so a caller that no longer
+//!   needs a queued job can *retract* it (claim/cancel CAS arbitration)
+//!   instead of waiting for a worker to pop a no-op. One team lives for
+//!   the whole process
 //!   ([`global_team`]); the coordinator's trial grids, the bandit
 //!   optimizers' per-round arm fan-outs, and the TCP service's batch op
 //!   all run on it, so a Rising-Bandits sweep (one pull per arm, dozens
@@ -22,9 +26,9 @@
 //! slotted by input index, never by completion order).
 
 use std::cell::Cell;
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Number of workers to use by default: the machine's parallelism.
@@ -45,8 +49,166 @@ pub fn on_team_thread() -> bool {
 
 /// A job enqueued on the team. Lifetimes are erased at submission
 /// ([`WorkerTeam::run_owned`] blocks until every job it submitted has
-/// finished executing, so the borrows a job captures always outlive it).
+/// finished executing or been retracted before execution, so the borrows
+/// a job captures always outlive any dereference of them).
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+const JOB_QUEUED: u8 = 0;
+const JOB_CLAIMED: u8 = 1;
+const JOB_CANCELLED: u8 = 2;
+
+/// Per-job claim/cancel control block shared between the submitter and
+/// the worker that eventually pops the job. Exactly one side wins the
+/// CAS out of `JOB_QUEUED`:
+///
+/// * the worker **claims** the job right before invoking it — a claimed
+///   job always runs to completion (cancellation cannot interrupt it);
+/// * the submitter **cancels** a still-queued job — the worker that
+///   later pops it sees `JOB_CANCELLED`, skips the call, and drops the
+///   boxed closure without dereferencing any borrow it captured.
+pub struct JobCtl {
+    state: AtomicU8,
+}
+
+impl JobCtl {
+    fn new() -> Arc<JobCtl> {
+        Arc::new(JobCtl { state: AtomicU8::new(JOB_QUEUED) })
+    }
+
+    /// Worker side: `true` if this call won the job (queued → claimed).
+    fn claim(&self) -> bool {
+        self.state
+            .compare_exchange(JOB_QUEUED, JOB_CLAIMED, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Submitter side: `true` if the job was retracted before any worker
+    /// claimed it (queued → cancelled). `false` means the job is already
+    /// running (or finished) and will complete normally.
+    pub fn cancel(&self) -> bool {
+        self.state
+            .compare_exchange(JOB_QUEUED, JOB_CANCELLED, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Reset a claimed control block to queued so a self-resubmitting
+    /// chain link can reuse it for its successor (see
+    /// [`submit_batch_job`]).
+    fn reopen(&self) {
+        self.state.store(JOB_QUEUED, Ordering::Release);
+    }
+}
+
+/// One queue entry: the closure plus its optional control block.
+struct QueuedJob {
+    ctl: Option<Arc<JobCtl>>,
+    job: Job,
+}
+
+impl QueuedJob {
+    /// Claim-CAS before deref: invoke the closure only if the job is
+    /// still ours. A cancelled entry's box is dropped unopened — drop
+    /// glue for the captures runs, but nothing behind an erased borrow
+    /// is dereferenced.
+    fn run(self) {
+        let claimed = match &self.ctl {
+            Some(ctl) => ctl.claim(),
+            None => true,
+        };
+        if claimed {
+            (self.job)();
+        }
+    }
+}
+
+/// The two job lanes plus the closed flag, all under one mutex.
+struct Lanes {
+    high: VecDeque<QueuedJob>,
+    normal: VecDeque<QueuedJob>,
+    closed: bool,
+}
+
+/// Two-condvar job queue. Normal workers (serve both lanes, high first)
+/// wait on `cv_any`; priority-only workers wait on `cv_high`. A
+/// high-lane push notifies one waiter on *each* condvar so the wakeup
+/// can never be swallowed by a worker that is not allowed to take the
+/// job; a normal push notifies `cv_any` only.
+struct JobQueue {
+    lanes: Mutex<Lanes>,
+    cv_any: Condvar,
+    cv_high: Condvar,
+    priority_served: AtomicU64,
+}
+
+impl JobQueue {
+    fn new() -> Arc<JobQueue> {
+        Arc::new(JobQueue {
+            lanes: Mutex::new(Lanes {
+                high: VecDeque::new(),
+                normal: VecDeque::new(),
+                closed: false,
+            }),
+            cv_any: Condvar::new(),
+            cv_high: Condvar::new(),
+            priority_served: AtomicU64::new(0),
+        })
+    }
+
+    /// Enqueue `entry` on the chosen lane. Returns the entry back if the
+    /// queue is closed (the caller runs it inline — matches the old
+    /// channel semantics where a send during shutdown fell back inline).
+    fn push(&self, high: bool, entry: QueuedJob) -> Option<QueuedJob> {
+        let mut lanes = self.lanes.lock().unwrap();
+        if lanes.closed {
+            return Some(entry);
+        }
+        if high {
+            lanes.high.push_back(entry);
+            drop(lanes);
+            self.cv_high.notify_one();
+            self.cv_any.notify_one();
+        } else {
+            lanes.normal.push_back(entry);
+            drop(lanes);
+            self.cv_any.notify_one();
+        }
+        None
+    }
+}
+
+/// Worker body: pop (high lane first) and run until the queue closes.
+/// Queued jobs still drain after close — exactly the old mpsc behaviour,
+/// which `run_owned`'s wait-zero contract relies on.
+fn worker_loop(queue: &JobQueue, priority_only: bool) {
+    loop {
+        let entry = {
+            let mut lanes = queue.lanes.lock().unwrap();
+            loop {
+                if let Some(e) = lanes.high.pop_front() {
+                    queue.priority_served.fetch_add(1, Ordering::Relaxed);
+                    break Some(e);
+                }
+                if !priority_only {
+                    if let Some(e) = lanes.normal.pop_front() {
+                        break Some(e);
+                    }
+                }
+                if lanes.closed {
+                    break None;
+                }
+                lanes = if priority_only {
+                    queue.cv_high.wait(lanes).unwrap()
+                } else {
+                    queue.cv_any.wait(lanes).unwrap()
+                };
+            }
+        };
+        match entry {
+            Some(e) => e.run(),
+            None => break,
+        }
+    }
+}
 
 /// Outstanding-job counter for one batch: the caller may not return
 /// while any job it submitted could still run (jobs borrow the caller's
@@ -82,25 +244,33 @@ impl Outstanding {
     }
 }
 
-/// A persistent team of worker threads fed jobs over a channel.
+/// A persistent team of worker threads fed jobs over a two-lane queue.
 ///
 /// * **Long-lived**: threads are spawned once and reused by every batch;
-///   submitting a batch costs channel sends, not thread spawns.
+///   submitting a batch costs queue pushes, not thread spawns.
+/// * **Retractable**: queued jobs carry a [`JobCtl`]; a submitter can
+///   cancel a job that no worker has claimed yet.
+/// * **Prioritized**: [`WorkerTeam::execute_high`] jumps the queue, and
+///   teams built with [`WorkerTeam::host_pool_with_priority`] reserve
+///   workers that serve *only* the high lane, so cheap control-plane
+///   ops complete in bounded time even when every normal worker is
+///   stuck in a long job.
 /// * **Panic-propagating**: a panicking job never kills its worker
 ///   thread — the payload is carried back to the batch's caller and
 ///   resumed there, after the batch fully drains.
-/// * **Drop-joins**: dropping the team closes the job channel and joins
-///   every worker.
+/// * **Drop-joins**: dropping the team closes the queue and joins every
+///   worker; already-queued jobs still drain first.
 pub struct WorkerTeam {
-    tx: Mutex<Option<Sender<Job>>>,
+    queue: Arc<JobQueue>,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
     threads: usize,
+    priority_threads: usize,
 }
 
 impl WorkerTeam {
     /// Spawn a team of `threads` persistent workers (0 is clamped to 1).
     pub fn new(threads: usize) -> WorkerTeam {
-        WorkerTeam::spawn(threads, true)
+        WorkerTeam::spawn(threads, 0, true)
     }
 
     /// A team whose threads are *not* flagged as team threads: a batch
@@ -112,31 +282,32 @@ impl WorkerTeam {
     /// each other's queues, so the inline-nesting deadlock guard does
     /// not apply.
     pub fn host_pool(threads: usize) -> WorkerTeam {
-        WorkerTeam::spawn(threads, false)
+        WorkerTeam::spawn(threads, 0, false)
     }
 
-    fn spawn(threads: usize, team_flag: bool) -> WorkerTeam {
+    /// A host pool with `priority` extra workers that serve *only* the
+    /// high lane. Normal workers also prefer the high lane when both
+    /// have work, so priority jobs are never slower than normal ones;
+    /// the reserved workers guarantee bounded latency when every normal
+    /// worker is saturated by long-running jobs.
+    pub fn host_pool_with_priority(threads: usize, priority: usize) -> WorkerTeam {
+        WorkerTeam::spawn(threads, priority, false)
+    }
+
+    fn spawn(threads: usize, priority_threads: usize, team_flag: bool) -> WorkerTeam {
         let threads = threads.max(1);
-        let (tx, rx) = channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let handles = (0..threads)
-            .map(|_| {
-                let rx = Arc::clone(&rx);
+        let queue = JobQueue::new();
+        let handles = (0..threads + priority_threads)
+            .map(|i| {
+                let queue = Arc::clone(&queue);
+                let priority_only = i >= threads;
                 std::thread::spawn(move || {
                     ON_TEAM_THREAD.with(|f| f.set(team_flag));
-                    loop {
-                        // The receiver guard is a temporary: held while
-                        // popping, released before the job runs.
-                        let job = rx.lock().unwrap().recv();
-                        match job {
-                            Ok(job) => job(),
-                            Err(_) => break, // channel closed: team dropped
-                        }
-                    }
+                    worker_loop(&queue, priority_only);
                 })
             })
             .collect();
-        WorkerTeam { tx: Mutex::new(Some(tx)), handles: Mutex::new(handles), threads }
+        WorkerTeam { queue, handles: Mutex::new(handles), threads, priority_threads }
     }
 
     /// Submit one detached fire-and-forget job: it runs on some worker
@@ -146,31 +317,53 @@ impl WorkerTeam {
     /// caught and discarded (it can neither kill its worker nor
     /// propagate anywhere — detached jobs have no caller to resume on),
     /// so callers needing failure signalling must catch inside the job.
-    /// During shutdown (channel closed) the job runs inline instead of
+    /// During shutdown (queue closed) the job runs inline instead of
     /// being lost.
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
-        self.submit(Box::new(move || {
-            let _ = catch_unwind(AssertUnwindSafe(job));
-        }));
+        self.execute_lane(false, job);
     }
 
-    /// Worker threads in the team.
+    /// Like [`WorkerTeam::execute`] but on the high-priority lane: the
+    /// job is popped before any queued normal job and is eligible for
+    /// the reserved priority-only workers.
+    pub fn execute_high(&self, job: impl FnOnce() + Send + 'static) {
+        self.execute_lane(true, job);
+    }
+
+    fn execute_lane(&self, high: bool, job: impl FnOnce() + Send + 'static) {
+        let job: Job = Box::new(move || {
+            let _ = catch_unwind(AssertUnwindSafe(job));
+        });
+        self.submit_entry(high, QueuedJob { ctl: None, job });
+    }
+
+    /// Normal worker threads in the team (excludes reserved
+    /// priority-only workers — batch fan-out sizing should not count
+    /// workers that will never take batch jobs).
     pub fn threads(&self) -> usize {
         self.threads
     }
 
-    /// Submit one job; falls back to running it inline if the team is
-    /// shutting down (the channel is closed).
+    /// Reserved priority-only workers.
+    pub fn priority_threads(&self) -> usize {
+        self.priority_threads
+    }
+
+    /// Jobs served from the high-priority lane so far (by any worker).
+    pub fn priority_served(&self) -> u64 {
+        self.queue.priority_served.load(Ordering::Relaxed)
+    }
+
+    /// Submit one plain (uncancellable) job on the normal lane; falls
+    /// back to running it inline if the team is shutting down.
     fn submit(&self, job: Job) {
-        let failed = {
-            let guard = self.tx.lock().unwrap();
-            match guard.as_ref() {
-                Some(tx) => tx.send(job).err().map(|e| e.0),
-                None => Some(job),
-            }
-        };
-        if let Some(job) = failed {
-            job();
+        self.submit_entry(false, QueuedJob { ctl: None, job });
+    }
+
+    /// Submit one queue entry; runs it inline if the queue is closed.
+    fn submit_entry(&self, high: bool, entry: QueuedJob) {
+        if let Some(entry) = self.queue.push(high, entry) {
+            entry.run();
         }
     }
 
@@ -182,14 +375,13 @@ impl WorkerTeam {
     /// independent of team size, scheduling, and completion order.
     ///
     /// Blocks until every job submitted for this batch has finished
-    /// executing (not merely until all items are done): jobs borrow the
+    /// executing **or been retracted before execution**: jobs borrow the
     /// batch state on this stack frame, so returning earlier would
-    /// dangle them — a queued job cannot be cancelled, only awaited.
-    /// Consequently, when every team worker is busy with another batch's
-    /// long items, a caller that drained its own cursor still waits for
-    /// its (by then no-op) seeded jobs to be popped — bounded by the
-    /// in-flight items' remaining runtime, since all jobs are one item
-    /// long. Worker panics are re-raised here after the drain.
+    /// dangle them. Once the caller drains the cursor it *cancels* its
+    /// still-queued seeded jobs through their [`JobCtl`]s instead of
+    /// waiting for busy workers to pop no-op chains — the only remaining
+    /// wait is for jobs actually running an item. Worker panics are
+    /// re-raised here after the drain.
     pub fn run_owned<T, R, F>(&self, items: Vec<T>, workers: usize, f: F) -> Vec<R>
     where
         T: Send,
@@ -214,6 +406,7 @@ impl WorkerTeam {
             slots: (0..n).map(|_| Mutex::new(None)).collect(),
             panic_slot: Mutex::new(None),
             outstanding: Outstanding::new(),
+            ctls: Mutex::new(Vec::new()),
             f,
         };
 
@@ -227,6 +420,16 @@ impl WorkerTeam {
         }
         // The caller drains the cursor alongside the team.
         while batch.run_one() {}
+        // Cursor drained: retract still-queued seeded chains instead of
+        // waiting for busy workers to pop no-op links. The canceller
+        // that wins the CAS owns that chain's outstanding decrement
+        // (each chain holds exactly one count for its whole life);
+        // claimed chains are running an item and decrement themselves.
+        for ctl in batch.ctls.lock().unwrap().drain(..) {
+            if ctl.cancel() {
+                batch.outstanding.dec();
+            }
+        }
         batch.outstanding.wait_zero();
 
         let Batch { slots, panic_slot, .. } = batch;
@@ -242,8 +445,11 @@ impl WorkerTeam {
 
 impl Drop for WorkerTeam {
     fn drop(&mut self) {
-        // Close the channel, then join every worker.
-        *self.tx.lock().unwrap() = None;
+        // Close the queue (queued jobs still drain), then join every
+        // worker.
+        self.queue.lanes.lock().unwrap().closed = true;
+        self.queue.cv_any.notify_all();
+        self.queue.cv_high.notify_all();
         for h in self.handles.lock().unwrap().drain(..) {
             let _ = h.join();
         }
@@ -258,6 +464,9 @@ struct Batch<T, R, F> {
     slots: Vec<Mutex<Option<R>>>,
     panic_slot: Mutex<Option<Box<dyn std::any::Any + Send>>>,
     outstanding: Outstanding,
+    /// Control blocks of the live seeded chains, retracted by the caller
+    /// once the cursor drains.
+    ctls: Mutex<Vec<Arc<JobCtl>>>,
     f: F,
 }
 
@@ -296,11 +505,12 @@ where
     }
 }
 
-/// Enqueue one one-item job for `batch` on `team`. The job processes a
-/// single item, resubmits itself while unclaimed items remain, and only
-/// then marks itself no longer outstanding (resubmit-before-decrement,
-/// so the caller's zero-wait can never fire while a successor is in
-/// flight).
+/// Seed one self-resubmitting one-item chain for `batch` on `team`. Each
+/// chain holds exactly **one** outstanding count for its whole life: a
+/// resubmitting link passes the count to its successor (no decrement),
+/// and the count is released exactly once — by the terminating link (no
+/// work left), or by the caller's retraction winning the cancel CAS on a
+/// still-queued link.
 fn submit_batch_job<T, R, F>(team: &WorkerTeam, batch: &Batch<T, R, F>)
 where
     T: Send,
@@ -308,22 +518,51 @@ where
     F: Fn(T) -> R + Sync,
 {
     batch.outstanding.inc();
+    let ctl = JobCtl::new();
+    batch.ctls.lock().unwrap().push(Arc::clone(&ctl));
+    enqueue_chain(team, batch, ctl);
+}
+
+/// Enqueue one chain link reusing `chain_ctl`. The worker claim-CASes
+/// the ctl before invoking; after running an item the link *reopens* the
+/// ctl and re-enqueues itself while unclaimed items remain. Reopening is
+/// race-free with retraction: the caller only retracts after draining
+/// the cursor, at which point `has_work()` is false and no link
+/// resubmits — so a reopened ctl is always observed by either its
+/// successor's worker (claim) or the canceller (cancel), never both.
+fn enqueue_chain<T, R, F>(team: &WorkerTeam, batch: &Batch<T, R, F>, chain_ctl: Arc<JobCtl>)
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let ctl = Arc::clone(&chain_ctl);
     let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
         batch.run_one();
         if batch.has_work() {
-            submit_batch_job(team, batch);
+            chain_ctl.reopen();
+            enqueue_chain(team, batch, chain_ctl);
+            // The successor inherits this chain's outstanding count.
+            return;
         }
         batch.outstanding.dec();
     });
     // SAFETY: `run_owned` blocks on `outstanding.wait_zero()` until
-    // every job submitted for its batch has fully finished executing
-    // (the resubmit-before-decrement order makes the count conservative),
-    // so the borrows the job captures — `batch` on the caller's stack
-    // and `team` behind the caller's `&self` — strictly outlive its
-    // execution. The transmute only erases the lifetime bound of the
-    // trait object; the layout is identical.
+    // every chain seeded for its batch has either fully finished
+    // executing or been retracted by the caller (which then performs the
+    // chain's single decrement itself), so the borrows the job captures
+    // — `batch` on the caller's stack and `team` behind the caller's
+    // `&self` — strictly outlive any dereference: a worker claim-CASes
+    // the ctl before invoking, and a cancelled link's box is dropped
+    // without being called (its captures are a `&Batch`, a `&WorkerTeam`
+    // and an `Arc<JobCtl>`; dropping them dereferences nothing borrowed,
+    // and the Arc keeps the ctl alive independently). Dropping that box
+    // may happen after `run_owned` returned, which is exactly why the
+    // drop must not — and does not — touch the erased borrows. The
+    // transmute only erases the lifetime bound of the trait object; the
+    // layout is identical.
     let job: Job = unsafe { std::mem::transmute(job) };
-    team.submit(job);
+    team.submit_entry(false, QueuedJob { ctl: Some(ctl), job });
 }
 
 /// The process-wide team every batch helper runs on, sized to the
@@ -687,6 +926,113 @@ mod tests {
         assert_eq!(calls.load(Ordering::Relaxed), 200);
         let b = parallel_map_progress(items, 4, |&x| x * 7, |_, _| {});
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn job_ctl_claim_and_cancel_arbitrate() {
+        let ctl = JobCtl::new();
+        assert!(ctl.claim());
+        assert!(!ctl.cancel(), "claimed job cannot be cancelled");
+        ctl.reopen();
+        assert!(ctl.cancel());
+        assert!(!ctl.claim(), "cancelled job cannot be claimed");
+    }
+
+    #[test]
+    fn execute_high_jumps_the_queue() {
+        // One normal worker, blocked on a gate; queue a normal job and a
+        // high job while it is busy. The high job must be popped first.
+        let pool = WorkerTeam::host_pool(1);
+        let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+        let (order_tx, order_rx) = std::sync::mpsc::channel::<&'static str>();
+        pool.execute(move || {
+            gate_rx.recv().unwrap();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let t1 = order_tx.clone();
+        pool.execute(move || t1.send("normal").unwrap());
+        let t2 = order_tx.clone();
+        pool.execute_high(move || t2.send("high").unwrap());
+        gate_tx.send(()).unwrap();
+        let first = order_rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+        assert_eq!(first, "high");
+        assert!(pool.priority_served() >= 1);
+    }
+
+    #[test]
+    fn priority_worker_answers_while_normal_lane_is_saturated() {
+        // Every normal worker is parked in a long job; a reserved
+        // priority-only worker must still serve the high lane.
+        let pool = WorkerTeam::host_pool_with_priority(2, 1);
+        assert_eq!(pool.threads(), 2);
+        assert_eq!(pool.priority_threads(), 1);
+        let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+        let gate_rx = Arc::new(Mutex::new(gate_rx));
+        for _ in 0..2 {
+            let gate_rx = Arc::clone(&gate_rx);
+            pool.execute(move || {
+                gate_rx.lock().unwrap().recv().unwrap();
+            });
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let (tx, rx) = std::sync::mpsc::channel::<&'static str>();
+        pool.execute_high(move || tx.send("served").unwrap());
+        // Bounded wait well under the gate release: the priority worker
+        // is idle and must pick the job up promptly.
+        assert_eq!(rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap(), "served");
+        assert!(pool.priority_served() >= 1);
+        gate_tx.send(()).unwrap();
+        gate_tx.send(()).unwrap();
+    }
+
+    #[test]
+    fn drained_caller_retracts_queued_seed_jobs() {
+        // One team worker, parked in a detached job. run_owned seeds one
+        // chain job that will never be popped while the worker is busy;
+        // the caller drains every item itself and must RETRACT the
+        // queued seed instead of waiting for the busy worker — before
+        // this PR, run_owned would block here until the gate released.
+        let team = WorkerTeam::new(1);
+        let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+        team.execute(move || {
+            gate_rx.recv().unwrap();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let start = std::time::Instant::now();
+        let out = team.run_owned(vec![1usize, 2, 3], 2, |x| x * 2);
+        assert_eq!(out, vec![2, 4, 6]);
+        assert!(
+            start.elapsed() < std::time::Duration::from_secs(5),
+            "caller should not wait for the busy worker to pop its no-op seed"
+        );
+        // Only now release the parked worker.
+        gate_tx.send(()).unwrap();
+    }
+
+    #[test]
+    fn retraction_under_concurrent_batches_loses_no_items() {
+        // Hammer the retraction path: many batches race on a tiny team,
+        // so seeded chains are frequently retracted after the caller
+        // drains. Every item must still be processed exactly once.
+        let team = Arc::new(WorkerTeam::new(2));
+        let counter = Arc::new(AtomicU64::new(0));
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                let team = Arc::clone(&team);
+                let counter = Arc::clone(&counter);
+                scope.spawn(move || {
+                    for _ in 0..50 {
+                        let c = Arc::clone(&counter);
+                        let out = team.run_owned((0..10).collect::<Vec<usize>>(), 3, move |x| {
+                            c.fetch_add(1, Ordering::Relaxed);
+                            x
+                        });
+                        assert_eq!(out, (0..10).collect::<Vec<_>>());
+                    }
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 8 * 50 * 10);
     }
 
     #[test]

@@ -19,7 +19,13 @@
 //! * multi-reactor sharding: N-client socket hammers and scripted
 //!   transcripts byte-identical across threaded, 1-reactor, and
 //!   4-reactor servers, and global `--max-conns` accounting conserved
-//!   across reactor shards.
+//!   across reactor shards;
+//! * cancellation: a mid-trial disconnect stops measurement-budget
+//!   consumption within one pull, control-plane ops answer through the
+//!   priority lane while every normal worker is pinned by slow trials,
+//!   and `deadline_ms` partials are byte-identical across every
+//!   transport × codec × reactor cell and never enter the response
+//!   cache.
 //!
 //! CI runs this file under a hang guard (`timeout 300 cargo test --test
 //! service_suite`), once per transport × codec × reactor cell via
@@ -1142,5 +1148,199 @@ fn connection_slots_are_conserved_across_reactor_shards() {
         c.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
         let late = read_line(&mut c);
         assert!(late.contains("pong"), "{name}: deferred client finally served: {late}");
+    }
+}
+
+/// A request slow enough to still be running when the test acts:
+/// Bilal-flavoured BO on the `time` target refits a 30-tree random
+/// forest from scratch on every pull (linear memory, unlike the GP's
+/// quadratic factor cache), so a 10k-budget trial takes far longer
+/// than the test's sleeps — without cancellation it would burn the
+/// whole budget.
+fn slow_optimize(seed: u64) -> String {
+    format!(
+        r#"{{"op":"optimize","workload":"kmeans:buzz","target":"time","method":"bilal-x1","budget":10000,"seed":{seed},"trial_workers":1}}"#
+    )
+}
+
+/// A client that disconnects mid-trial stops consuming measurement
+/// budget within one pull: the reactor fires the connection's cancel
+/// token on EOF, the trial's ledger observes it between pulls, and the
+/// dataset's read counter plateaus far below the requested budget.
+/// Readiness transports only — the thread-pinned fallback's worker is
+/// parked inside the handler and cannot observe a mid-request EOF.
+#[test]
+fn mid_trial_disconnect_stops_budget_consumption() {
+    if !json_leg() {
+        return;
+    }
+    for transport in readiness_transports() {
+        let name = transport.name();
+        // Built by hand (not via `service()`): the test keeps its own
+        // handle on the dataset to watch the read counter from outside.
+        let ds = Arc::new(OfflineDataset::generate(60, 3));
+        let svc = Service::new(Arc::clone(&ds), Arc::new(NativeBackend))
+            .with_conn_workers(2)
+            .with_transport(transport);
+        let server = Server::start(svc);
+
+        let mut doomed = server.connect();
+        doomed.write_all(slow_optimize(1).as_bytes()).unwrap();
+        doomed.write_all(b"\n").unwrap();
+        doomed.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(150));
+        drop(doomed); // EOF: the reactor fires the connection token.
+
+        // The trial winds down at its next pull; the scheduler counts
+        // the disconnect and the pulls the cancellation saved.
+        let mut probe = server.connect();
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            let stats = parse(&roundtrip(&mut probe, r#"{"op":"stats"}"#)).unwrap();
+            if stats.get("cancelled_disconnect").unwrap().as_usize().unwrap() >= 1 {
+                assert!(
+                    stats.get("pulls_saved").unwrap().as_usize().unwrap() >= 1,
+                    "{name}: cancelling a 10k-budget trial mid-flight must save pulls"
+                );
+                break;
+            }
+            assert!(Instant::now() < deadline, "{name}: disconnect never cancelled the trial");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+
+        // Consumption really stopped: the read counter plateaus, well
+        // short of what a run-to-completion trial would burn.
+        let settled = ds.measurement_reads();
+        std::thread::sleep(Duration::from_millis(300));
+        assert_eq!(
+            ds.measurement_reads(),
+            settled,
+            "{name}: reads must stop once the trial is cancelled"
+        );
+        assert!(
+            settled < 10_000,
+            "{name}: cancelled trial burned its whole budget ({settled} reads)"
+        );
+    }
+}
+
+/// With every normal-lane worker pinned by slow trials, control-plane
+/// requests still answer promptly: the dispatcher's frame sniff routes
+/// `stats` to the priority lane, where the team's dedicated priority
+/// worker serves it without queueing behind the trials.
+#[test]
+fn saturated_workers_still_answer_stats_via_priority_lane() {
+    if !json_leg() {
+        return;
+    }
+    for transport in readiness_transports() {
+        let name = transport.name();
+        let server = Server::start(service().with_conn_workers(2).with_transport(transport));
+
+        // Pin both normal-lane workers with big uncacheable trials.
+        let busy: Vec<TcpStream> = (0..2u64)
+            .map(|seed| {
+                let mut conn = server.connect();
+                conn.write_all(slow_optimize(seed).as_bytes()).unwrap();
+                conn.write_all(b"\n").unwrap();
+                conn.flush().unwrap();
+                conn
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(300));
+
+        // A fresh client's stats round-trip must not queue behind them.
+        let started = Instant::now();
+        let mut fresh = server.connect();
+        let stats = parse(&roundtrip(&mut fresh, r#"{"op":"stats"}"#)).unwrap();
+        let waited = started.elapsed();
+        assert!(waited < Duration::from_secs(10), "{name}: stats stalled {waited:?}");
+        assert!(
+            stats.get("priority_served").unwrap().as_usize().unwrap() >= 1,
+            "{name}: stats must ride the priority lane"
+        );
+        assert_eq!(
+            stats.get("trials_run").unwrap().as_usize(),
+            Some(0),
+            "{name}: both trials still in flight — the answer did not wait for them"
+        );
+
+        // Dropping the busy clients fires their tokens, so the pinned
+        // trials cancel and teardown (drain + join in Server::drop)
+        // stays bounded instead of waiting out two 10k-pull searches.
+        drop(busy);
+    }
+}
+
+/// `deadline_ms: 0` (an already-expired deadline) cancels after the
+/// guaranteed first pull in every transport × codec × reactor cell,
+/// with byte-identical partial responses carrying
+/// `"cancelled":"deadline"` — and the partial never enters the
+/// response cache: a repeat re-runs the trial. Deadlines also work on
+/// the threaded fallback (the deadline child token needs no reactor).
+#[test]
+fn deadline_cancelled_responses_are_deterministic_and_cache_excluded() {
+    let req = r#"{"op":"optimize","workload":"kmeans:buzz","target":"cost","method":"rs","budget":10,"seed":1,"measure_mode":"mean","trial_workers":1,"deadline_ms":0}"#;
+    let mut reference: Option<String> = None;
+    for codec in codecs() {
+        let mut cells: Vec<(String, Server)> = Vec::new();
+        for transport in transports() {
+            if transport == Transport::Threaded {
+                cells.push((
+                    "threaded".to_string(),
+                    Server::start(service().with_conn_workers(2).with_event_loop(false)),
+                ));
+            } else {
+                for r in reactors() {
+                    cells.push((
+                        format!("{}/reactors={r}", transport.name()),
+                        Server::start(
+                            service()
+                                .with_conn_workers(2)
+                                .with_transport(transport)
+                                .with_reactors(r),
+                        ),
+                    ));
+                }
+            }
+        }
+        for (name, server) in &cells {
+            let mut conn = server.connect();
+            if codec == "binary" {
+                let ack = roundtrip(&mut conn, r#"{"op":"hello","codec":"binary"}"#);
+                assert!(ack.contains("\"ok\":true"), "{name}: {ack}");
+            }
+            let first = roundtrip_codec(&mut conn, codec, req);
+            assert!(first.contains("\"ok\":true"), "{name}/{codec}: {first}");
+            assert!(
+                first.contains("\"cancelled\":\"deadline\""),
+                "{name}/{codec}: expired deadline must mark the partial: {first}"
+            );
+            match &reference {
+                None => reference = Some(first.clone()),
+                Some(expected) => assert_eq!(
+                    &first, expected,
+                    "{name}/{codec}: deadline partials must be byte-identical across cells"
+                ),
+            }
+
+            // Cache-excluded: the repeat re-runs the trial (trials_run
+            // reaches 2, zero cache hits) and answers identically.
+            let second = roundtrip_codec(&mut conn, codec, req);
+            assert_eq!(second, first, "{name}/{codec}: repeats must be deterministic");
+            let stats = parse(&roundtrip_codec(&mut conn, codec, r#"{"op":"stats"}"#)).unwrap();
+            assert_eq!(
+                stats.get("trials_run").unwrap().as_usize(),
+                Some(2),
+                "{name}/{codec}: a cancelled partial must never be served from cache"
+            );
+            assert_eq!(stats.get("cache_hits").unwrap().as_usize(), Some(0), "{name}/{codec}");
+            assert_eq!(
+                stats.get("cancelled_deadline").unwrap().as_usize(),
+                Some(2),
+                "{name}/{codec}"
+            );
+            assert!(stats.get("pulls_saved").unwrap().as_usize().unwrap() >= 2, "{name}/{codec}");
+        }
     }
 }
