@@ -1,6 +1,6 @@
 //! Serving-path bench: what the persistent scheduler buys per request.
 //!
-//! Six measurements:
+//! Seven measurements:
 //!
 //! * **requests/sec** through `Service::handle` for deterministic-mode
 //!   requests, cold (every request a distinct cache key, full trial) vs.
@@ -32,6 +32,9 @@
 //!   the trial exits after its guaranteed first pull, so the column
 //!   records how much of a cold trial the early exit saves (and the
 //!   scheduler's `pulls_saved` tally confirms the budget went unspent);
+//! * **online mode**: a dynamic-market regret-over-time request across
+//!   T ticks (`units_per_iter` = ticks, so `throughput_per_s` is market
+//!   ticks simulated per second, re-optimization epochs included);
 //! * **priority lane under saturation**: `stats` round-trip latency
 //!   over a real socket while every normal-lane worker is pinned by a
 //!   10k-budget trial — the frame sniff routes control-plane ops to the
@@ -405,6 +408,40 @@ fn main() {
             cold_ns / 1e3,
             cold_ns / partial_ns.max(1e-12),
             sched.pulls_saved(),
+        );
+    }
+
+    // -- dynamic market: online regret-over-time ----------------------------
+    //
+    // One online request re-scores (and on schedule re-searches) an
+    // incumbent across T market ticks — T regret points per request, so
+    // `units_per_iter` is the tick count and `throughput_per_s` reads as
+    // market ticks simulated per second. Seeds rotate to keep epochs
+    // honest; online responses bypass the response cache by design, and
+    // the scheduler counters confirm every iteration ran a real trial.
+    {
+        let svc = Service::new(Arc::clone(&ds), Arc::new(NativeBackend));
+        const TICKS: usize = 6;
+        let online_req = |seed: usize| {
+            format!(
+                r#"{{"op":"optimize","workload":"kmeans:buzz","target":"cost","method":"cb-rbfopt","budget":22,"seed":{seed},"measure_mode":"mean","online":{{"ticks":{TICKS},"reoptimize_every":2}}}}"#
+            )
+        };
+        let mut seed = 0usize;
+        let online_ns = suite
+            .bench_units("optimize: online regret-over-time (6 ticks)", TICKS as f64, &mut || {
+                seed += 1;
+                black_box(svc.handle(&online_req(seed)))
+            })
+            .mean_ns;
+        let sched = svc.scheduler();
+        assert_eq!(sched.cache_hits(), 0, "online requests must bypass the response cache");
+        assert!(sched.trials_run() >= 1, "online iterations must run real trials");
+        let cold_ns = 1e9 / cold_rps.max(1e-12);
+        println!(
+            "online mode      {TICKS}-tick trajectory {:>8.1} us   vs one cold trial {:>8.1} us",
+            online_ns / 1e3,
+            cold_ns / 1e3
         );
     }
 

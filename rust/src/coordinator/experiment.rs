@@ -2,15 +2,18 @@
 //! trials in parallel and aggregate regrets (the engine behind Figures
 //! 2-3 and the savings analysis).
 
+use crate::coordinator::spec::OnlineParams;
 use crate::dataset::objective::{EvalLedger, LookupObjective, MeasureMode};
 use crate::dataset::{OfflineDataset, Target};
+use crate::domain::Config;
 use crate::metrics;
 use crate::optimizers::{by_name, SearchContext};
 use crate::predictors::ernest::LinearPredictor;
 use crate::predictors::paris::ParisPredictor;
+use crate::simulator::market;
 use crate::surrogate::Backend;
 use crate::util::cancel::CancelToken;
-use crate::util::rng::Rng;
+use crate::util::rng::{splitmix64, Rng};
 use crate::util::threadpool::{
     default_workers, parallel_map_progress, parallel_map_progress_spawn,
 };
@@ -186,6 +189,274 @@ pub fn run_trial_with(
     }
 }
 
+/// Outcome of one online-mode trial (dynamic market). `result` is the
+/// final-tick summary shaped like a static [`TrialResult`] — except that
+/// its `trace` is the **regret-over-time** series (one point per scored
+/// tick, not a best-so-far curve) and `evals` / `search_expense` /
+/// `pulls_saved` accumulate over every re-optimization epoch.
+#[derive(Clone, Debug)]
+pub struct OnlineOutcome {
+    pub result: TrialResult,
+    /// Regret of the incumbent at each tick vs the best configuration
+    /// then *available* (revoked providers excluded) at that tick's
+    /// prices. A pure function of the spec: two runs replay the
+    /// byte-identical series.
+    pub regret_over_time: Vec<f64>,
+    /// Ticks at which the incumbent's provider was revoked; each forces
+    /// an immediate re-optimization over the surviving providers.
+    pub revocations: Vec<u64>,
+    /// Re-optimization epochs after the initial tick-0 search
+    /// (scheduled + revocation-forced).
+    pub reoptimizations: usize,
+    /// Cost/runtime Pareto front over available configs at the last
+    /// scored tick: `(config label, mean runtime s, mean cost USD at
+    /// that tick's prices)`, sorted by runtime ascending.
+    pub pareto: Vec<(String, f64, f64)>,
+}
+
+/// Market-priced ground truth of `cfg` at `tick` (mean value, cost
+/// scaled by the provider's effective price — same scaling as the
+/// measurement path).
+fn market_truth(
+    ds: &OfflineDataset,
+    workload: usize,
+    target: Target,
+    market_seed: u64,
+    tick: u64,
+    cfg: &Config,
+) -> f64 {
+    LookupObjective::new(ds, workload, target, MeasureMode::Mean, 0)
+        .with_market(market_seed, tick)
+        .ground_truth(cfg)
+}
+
+/// True minimum over the configurations *available* at `tick` (revoked
+/// providers excluded) under that tick's prices. The market layer
+/// guarantees at least one provider survives, so this is always finite.
+fn best_available(
+    ds: &OfflineDataset,
+    workload: usize,
+    target: Target,
+    market_seed: u64,
+    tick: u64,
+    revoked: &[usize],
+) -> f64 {
+    ds.domain
+        .full_grid()
+        .iter()
+        .filter(|c| !revoked.contains(&c.provider))
+        .map(|c| market_truth(ds, workload, target, market_seed, tick, c))
+        .fold(f64::INFINITY, f64::min)
+}
+
+/// Nondominated (runtime, cost) configurations among those available at
+/// `tick`, minimizing both. Sorted by runtime ascending — cost then
+/// descends along the front.
+fn pareto_front(
+    ds: &OfflineDataset,
+    workload: usize,
+    market_seed: u64,
+    tick: u64,
+    revoked: &[usize],
+) -> Vec<(String, f64, f64)> {
+    let mut pts: Vec<(String, f64, f64)> = ds
+        .domain
+        .full_grid()
+        .iter()
+        .filter(|c| !revoked.contains(&c.provider))
+        .map(|c| {
+            let cid = ds.domain.config_id(c);
+            let t = ds.mean_value(workload, cid, Target::Time);
+            let cost = ds.mean_value(workload, cid, Target::Cost)
+                * market::effective_price(market_seed, c.provider, tick);
+            (c.label(&ds.domain), t, cost)
+        })
+        .collect();
+    pts.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.2.partial_cmp(&b.2).unwrap()));
+    let mut front = Vec::new();
+    let mut best_cost = f64::INFINITY;
+    for p in pts {
+        if p.2 < best_cost {
+            best_cost = p.2;
+            front.push(p);
+        }
+    }
+    front
+}
+
+/// [`run_online_trial_with`] without a cancellation token.
+pub fn run_online_trial(
+    ds: &OfflineDataset,
+    backend: &dyn Backend,
+    spec: &TrialSpec,
+    online: &OnlineParams,
+) -> OnlineOutcome {
+    run_online_trial_with(ds, backend, spec, online, None)
+}
+
+/// The dynamic-market online mode: hold an incumbent configuration for a
+/// recurring workload while per-provider prices drift, spot discounts
+/// come and go, and capacity gets revoked — re-scoring the incumbent
+/// every logical tick and re-searching on a schedule (and immediately
+/// when the incumbent's provider is revoked).
+///
+/// Per tick `t` in `0..online.ticks`:
+/// 1. compute the tick's revoked-provider set from the market stream;
+///    if the incumbent sits on revoked capacity, record the revocation
+///    and force a re-optimization (CloudBandit re-pulls across the
+///    surviving arms via [`SearchContext::with_revoked`]; methods
+///    without provider awareness are post-placed on the best available
+///    configuration their search observed);
+/// 2. otherwise re-optimize when the schedule says so
+///    (`t % reoptimize_every == 0`, `t > 0`); each epoch runs the
+///    spec'd method with a *fresh* budget against a tick-decorrelated
+///    measurement stream priced at that tick;
+/// 3. score the incumbent's market-priced ground truth against the best
+///    available configuration and append the regret to the trace.
+///
+/// Everything — prices, revocations, epoch seeds — derives from the
+/// spec's label stream plus the logical tick, so the whole trajectory is
+/// clock-free and bit-reproducible. Cancellation (deadline/disconnect)
+/// is honored between pulls exactly as in [`run_trial_with`]: the tick
+/// being searched is scored with whatever partial search it got, the
+/// loop stops, and the outcome carries the reason plus accumulated
+/// `pulls_saved`.
+///
+/// Panics if `spec.method` is a predictive baseline (the spec and
+/// service layers reject that combination at parse time).
+pub fn run_online_trial_with(
+    ds: &OfflineDataset,
+    backend: &dyn Backend,
+    spec: &TrialSpec,
+    online: &OnlineParams,
+    cancel: Option<&CancelToken>,
+) -> OnlineOutcome {
+    // Same label derivation as `run_trial_with`, so an online trial's
+    // streams are decorrelated from the static trial of the same spec.
+    let mut label = Rng::new(spec.seed);
+    let mut h: u64 = 0x9E3779B97F4A7C15;
+    for b in spec.method.bytes() {
+        h = h.wrapping_mul(0x100000001b3) ^ b as u64;
+    }
+    h ^= (spec.workload as u64) << 32 | spec.budget as u64;
+    h ^= match spec.target {
+        Target::Time => 0x1111_1111,
+        Target::Cost => 0x2222_2222,
+    };
+    let mut rng = label.fork(h);
+    let obj_seed = rng.next_u64();
+    // The market stream is a SplitMix64 fork of the objective seed: one
+    // more pure function of the spec, shared by every epoch.
+    let mut ms = obj_seed ^ 0x6F6E_6C69_6E65_5F31;
+    let market_seed = splitmix64(&mut ms);
+    let providers = ds.domain.provider_count();
+
+    let opt = by_name(&spec.method).unwrap_or_else(|| {
+        panic!("online mode requires a search method, got '{}'", spec.method)
+    });
+    let memoize = spec.measure_mode.deterministic();
+    let mut epoch_rng_base = rng.fork(0x0E50C);
+
+    let mut regret_over_time = Vec::with_capacity(online.ticks as usize);
+    let mut revocations = Vec::new();
+    let mut reoptimizations = 0usize;
+    let mut search_expense = 0.0;
+    let mut evals = 0usize;
+    let mut pulls_saved = 0usize;
+    let mut cancelled: Option<&'static str> = None;
+    let mut incumbent: Option<Config> = None;
+    let mut last_tick = 0u64;
+
+    for tick in 0..online.ticks {
+        let revoked = market::revoked_providers(market_seed, providers, tick);
+        let incumbent_revoked = incumbent.as_ref().is_some_and(|c| revoked.contains(&c.provider));
+        if incumbent_revoked {
+            revocations.push(tick);
+        }
+        let scheduled =
+            online.reoptimize_every > 0 && tick > 0 && tick % online.reoptimize_every == 0;
+        if cancelled.is_none() && (incumbent.is_none() || incumbent_revoked || scheduled) {
+            // Each epoch draws from a tick-decorrelated measurement
+            // stream priced at this tick's market.
+            let mut es = obj_seed ^ tick.wrapping_mul(0xD1B5_4A32_D192_ED03);
+            let epoch_seed = splitmix64(&mut es);
+            let source = LookupObjective::new(
+                ds,
+                spec.workload,
+                spec.target,
+                spec.measure_mode,
+                epoch_seed,
+            )
+            .with_market(market_seed, tick);
+            let ctx = SearchContext::new(&ds.domain, spec.target, backend)
+                .with_arm_workers(spec.trial_workers)
+                .with_revoked(revoked.clone());
+            let mut ledger =
+                new_ledger(&source, opt.provisioned_budget(&ctx, spec.budget), memoize);
+            if let Some(token) = cancel {
+                ledger = ledger.with_cancel(token.clone());
+            }
+            let mut epoch_rng = epoch_rng_base.fork(tick);
+            let mut chosen = opt.run(&ctx, &mut ledger, &mut epoch_rng).best_config;
+            // Provider-oblivious methods may return a config on revoked
+            // capacity: place the workload on the best available config
+            // the search observed instead (last resort: the first
+            // available grid config — arbitrary but deterministic).
+            if revoked.contains(&chosen.provider) {
+                chosen = ledger
+                    .history()
+                    .iter()
+                    .filter(|(c, _)| !revoked.contains(&c.provider))
+                    .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                    .map(|(c, _)| c.clone())
+                    .or_else(|| {
+                        ds.domain
+                            .full_grid()
+                            .into_iter()
+                            .find(|c| !revoked.contains(&c.provider))
+                    })
+                    .expect("market layer always leaves a provider available");
+            }
+            search_expense += ledger.total_expense();
+            evals += ledger.evals();
+            pulls_saved += ledger.pulls_saved();
+            if let Some(reason) = ledger.cancelled() {
+                cancelled = Some(reason);
+            }
+            if tick > 0 {
+                reoptimizations += 1;
+            }
+            incumbent = Some(chosen);
+        }
+
+        let inc = incumbent.as_ref().expect("tick 0 always searches");
+        let value = market_truth(ds, spec.workload, spec.target, market_seed, tick, inc);
+        let best = best_available(ds, spec.workload, spec.target, market_seed, tick, &revoked);
+        regret_over_time.push(metrics::regret(value, best));
+        last_tick = tick;
+        if cancelled.is_some() {
+            break;
+        }
+    }
+
+    let final_revoked = market::revoked_providers(market_seed, providers, last_tick);
+    let pareto = pareto_front(ds, spec.workload, market_seed, last_tick, &final_revoked);
+    let incumbent = incumbent.expect("online loop always runs tick 0");
+    let chosen_value =
+        market_truth(ds, spec.workload, spec.target, market_seed, last_tick, &incumbent);
+    let result = TrialResult {
+        spec: spec.clone(),
+        chosen_value,
+        regret: *regret_over_time.last().expect("at least one tick is scored"),
+        search_expense,
+        evals,
+        trace: regret_over_time.clone(),
+        cancelled,
+        pulls_saved,
+    };
+    OnlineOutcome { result, regret_over_time, revocations, reoptimizations, pareto }
+}
+
 /// Regret curve of one method: mean regret per budget, aggregated over all
 /// workloads (seed-mean first, workload-mean second).
 #[derive(Clone, Debug)]
@@ -219,6 +490,12 @@ pub struct RegretGrid<'a> {
     pub verbose: bool,
     /// Workload indices to include (empty = all).
     pub workload_filter: Vec<usize>,
+    /// Dynamic-market online mode: when set, every search-method trial
+    /// runs [`run_online_trial`] (its summary regret is the *final-tick*
+    /// regret vs the best then-available configuration). Predictive
+    /// baselines stay static — they are market-oblivious flat lines by
+    /// construction, and the spec layer rejects the combination anyway.
+    pub online: Option<OnlineParams>,
 }
 
 impl<'a> RegretGrid<'a> {
@@ -235,6 +512,7 @@ impl<'a> RegretGrid<'a> {
             measure_mode: MeasureMode::SingleDraw,
             verbose: false,
             workload_filter: Vec::new(),
+            online: None,
         }
     }
 
@@ -286,7 +564,13 @@ impl<'a> RegretGrid<'a> {
 
         let total = specs.len();
         let verbose = self.verbose;
-        let run_one = |spec: &TrialSpec| run_trial(self.ds, self.backend, spec);
+        let online = self.online;
+        let run_one = |spec: &TrialSpec| match online {
+            Some(params) if !PREDICTORS.contains(&spec.method.as_str()) => {
+                run_online_trial(self.ds, self.backend, spec, &params).result
+            }
+            _ => run_trial(self.ds, self.backend, spec),
+        };
         let report = move |done: usize, _: usize| {
             if verbose && (done % 500 == 0 || done == total) {
                 eprintln!("  [experiment] {done}/{total} trials");
@@ -490,6 +774,129 @@ mod tests {
         // The predictor's line is flat.
         let pred = curves.iter().find(|c| c.method == "predict-linear").unwrap();
         assert_eq!(pred.mean_regret[0], pred.mean_regret[1]);
+    }
+
+    /// Acceptance criterion for the dynamic market: the same online spec
+    /// run twice replays a byte-identical regret-over-time trace,
+    /// revocation schedule, and Pareto front.
+    #[test]
+    fn online_trial_is_byte_identical_across_runs() {
+        let ds = OfflineDataset::generate(40, 3);
+        let backend = NativeBackend;
+        let spec = TrialSpec {
+            method: "cb-rbfopt".into(),
+            workload: 2,
+            target: Target::Cost,
+            budget: 22,
+            seed: 9,
+            ..TrialSpec::default()
+        };
+        let online = OnlineParams { ticks: 12, reoptimize_every: 4 };
+        let a = run_online_trial(&ds, &backend, &spec, &online);
+        let b = run_online_trial(&ds, &backend, &spec, &online);
+        let bits = |t: &[f64]| t.iter().map(|v| v.to_bits()).collect::<Vec<u64>>();
+        assert_eq!(bits(&a.regret_over_time), bits(&b.regret_over_time));
+        assert_eq!(a.revocations, b.revocations);
+        assert_eq!(a.reoptimizations, b.reoptimizations);
+        assert_eq!(a.pareto, b.pareto);
+        assert_eq!(a.result.evals, b.result.evals);
+        assert_eq!(a.result.search_expense.to_bits(), b.result.search_expense.to_bits());
+
+        assert_eq!(a.regret_over_time.len(), online.ticks as usize);
+        assert_eq!(a.result.trace, a.regret_over_time, "summary trace IS the regret series");
+        assert!(a.regret_over_time.iter().all(|r| r.is_finite() && *r >= 0.0));
+        // 12 ticks at reoptimize_every=4 schedules epochs at 4 and 8;
+        // revocations can only add more.
+        assert!(a.reoptimizations >= 2);
+        assert!(!a.pareto.is_empty());
+        assert!(a.pareto.windows(2).all(|w| w[0].1 <= w[1].1 && w[0].2 > w[1].2));
+    }
+
+    /// A revoked incumbent forces an immediate re-optimization onto
+    /// surviving capacity: whenever the market revokes the incumbent's
+    /// provider, the next incumbent never sits on a revoked provider.
+    #[test]
+    fn online_revocation_moves_the_incumbent_off_revoked_capacity() {
+        let ds = OfflineDataset::generate(40, 3);
+        let backend = NativeBackend;
+        // Long horizon with no schedule: every re-optimization after tick
+        // 0 is revocation-forced.
+        let online = OnlineParams { ticks: 48, reoptimize_every: 0 };
+        let mut saw_revocation = false;
+        for seed in 0..6 {
+            let spec = TrialSpec {
+                method: "rs".into(),
+                workload: 1,
+                target: Target::Cost,
+                budget: 11,
+                seed,
+                ..TrialSpec::default()
+            };
+            let out = run_online_trial(&ds, &backend, &spec, &online);
+            saw_revocation |= !out.revocations.is_empty();
+            assert_eq!(out.reoptimizations, out.revocations.len());
+        }
+        assert!(saw_revocation, "48 ticks x 6 seeds at 8% revocation rate must revoke");
+    }
+
+    /// Cancellation in online mode mirrors the static contract: the
+    /// completed tick prefix is bit-identical to the uncancelled run and
+    /// the saved pulls are accounted.
+    #[test]
+    fn cancelled_online_trial_keeps_a_bit_identical_tick_prefix() {
+        use crate::util::cancel::{CancelReason, CancelToken};
+        let ds = OfflineDataset::generate(40, 3);
+        let backend = NativeBackend;
+        let spec = TrialSpec {
+            method: "rs".into(),
+            workload: 3,
+            target: Target::Cost,
+            budget: 11,
+            seed: 2,
+            ..TrialSpec::default()
+        };
+        let online = OnlineParams { ticks: 8, reoptimize_every: 2 };
+        let full = run_online_trial(&ds, &backend, &spec, &online);
+        assert_eq!(full.result.cancelled, None);
+        assert_eq!(full.result.pulls_saved, 0);
+
+        let token = CancelToken::new();
+        token.cancel(CancelReason::Disconnect);
+        let cut = run_online_trial_with(&ds, &backend, &spec, &online, Some(&token));
+        assert_eq!(cut.result.cancelled, Some("disconnect"));
+        // Tick 0's search gets its guaranteed first pull, is scored, and
+        // the loop stops.
+        assert_eq!(cut.regret_over_time.len(), 1);
+        assert_eq!(cut.result.evals, 1);
+        assert_eq!(cut.result.pulls_saved, spec.budget - 1);
+        assert_eq!(
+            cut.regret_over_time[0].to_bits(),
+            full.regret_over_time[0].to_bits(),
+            "completed tick prefix diverged"
+        );
+    }
+
+    /// The grid's online switch routes search methods through the online
+    /// loop (deterministically) while predictors stay static.
+    #[test]
+    fn grid_online_mode_produces_finite_curves() {
+        let ds = OfflineDataset::generate(43, 3);
+        let backend = NativeBackend;
+        let mut grid = RegretGrid::new(&ds, &backend);
+        grid.methods = vec!["rs".into()];
+        grid.budgets = vec![11];
+        grid.seeds = 2;
+        grid.targets = vec![Target::Cost];
+        grid.workers = 2;
+        grid.online = Some(OnlineParams { ticks: 4, reoptimize_every: 2 });
+        let a = grid.run();
+        let b = grid.run();
+        assert_eq!(a.len(), 1);
+        assert!(a[0].mean_regret.iter().all(|r| r.is_finite() && *r >= 0.0));
+        assert_eq!(
+            a[0].mean_regret.iter().map(|r| r.to_bits()).collect::<Vec<u64>>(),
+            b[0].mean_regret.iter().map(|r| r.to_bits()).collect::<Vec<u64>>()
+        );
     }
 
     #[test]

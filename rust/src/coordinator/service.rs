@@ -109,8 +109,8 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::codec::{self, Codec, DecodeError, FrameScanner, Greeting};
-use crate::coordinator::experiment::{run_trial_with, TrialSpec, PREDICTORS};
-use crate::coordinator::spec::{MAX_DEADLINE_MS, MAX_TRIAL_WORKERS};
+use crate::coordinator::experiment::{run_online_trial_with, run_trial_with, TrialSpec, PREDICTORS};
+use crate::coordinator::spec::{OnlineParams, MAX_DEADLINE_MS, MAX_TRIAL_WORKERS};
 use crate::dataset::objective::MeasureMode;
 use crate::dataset::{OfflineDataset, Target};
 use crate::optimizers::ALL_OPTIMIZERS;
@@ -237,10 +237,25 @@ impl ResponseCache {
 /// stripe still holds enough entries (cap / shards) for LRU to behave.
 pub const DEFAULT_CACHE_SHARDS: usize = 8;
 
+/// One consistent view of the response-cache counters, taken stripe by
+/// stripe under each stripe's store lock. Per-stripe views are exact,
+/// so the identity `inserts - evictions == resident` holds for any
+/// snapshot even while other threads are mutating the cache — the
+/// property `stats` reports on and the chaos suite hammers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+    /// Entries currently resident across all stripes.
+    pub resident: usize,
+}
+
 /// One stripe of the lock-striped response cache: an independent
 /// [`ResponseCache`] plus its own counters, so concurrent reactors
 /// touching different stripes share no lock and no contended cache
-/// line. `stats` sums the counters across stripes.
+/// line. `stats` snapshots the counters across stripes.
 struct CacheShard {
     store: Mutex<ResponseCache>,
     hits: AtomicU64,
@@ -295,10 +310,14 @@ impl StripedCache {
     }
 
     /// Look up, marking the entry most-recently-used in its shard and
-    /// counting a hit or a miss on that shard.
+    /// counting a hit or a miss on that shard. Counters bump while the
+    /// stripe lock is held, so [`snapshot`](Self::snapshot) (which takes
+    /// the same lock) always observes counter totals consistent with
+    /// the entries it counts.
     fn lookup(&self, key: &ResponseKey) -> Option<CachedResponse> {
         let shard = self.shard(key);
-        let hit = shard.store.lock().unwrap().get(key);
+        let mut store = shard.store.lock().unwrap();
+        let hit = store.get(key);
         if hit.is_some() {
             shard.hits.fetch_add(1, Ordering::Relaxed);
         } else {
@@ -312,7 +331,8 @@ impl StripedCache {
     /// the request then falls through to).
     fn lookup_str(&self, key: &ResponseKey) -> Option<String> {
         let shard = self.shard(key);
-        let hit = shard.store.lock().unwrap().get_str(key);
+        let mut store = shard.store.lock().unwrap();
+        let hit = store.get_str(key);
         if hit.is_some() {
             shard.hits.fetch_add(1, Ordering::Relaxed);
         }
@@ -321,7 +341,8 @@ impl StripedCache {
 
     fn store(&self, key: ResponseKey, resp: CachedResponse) {
         let shard = self.shard(&key);
-        let (inserted, evicted) = shard.store.lock().unwrap().insert(key, resp);
+        let store = &mut *shard.store.lock().unwrap();
+        let (inserted, evicted) = store.insert(key, resp);
         if inserted {
             shard.inserts.fetch_add(1, Ordering::Relaxed);
         }
@@ -332,6 +353,24 @@ impl StripedCache {
 
     fn sum(&self, field: impl Fn(&CacheShard) -> &AtomicU64) -> u64 {
         self.shards.iter().map(|s| field(s).load(Ordering::Relaxed)).sum()
+    }
+
+    /// One consistent view of all cache counters: each stripe is read
+    /// under its store lock (the same lock every counter bumps under),
+    /// so per-stripe views are exact and their sum preserves the
+    /// invariant `inserts - evictions == resident` even while writers
+    /// hammer other stripes.
+    fn snapshot(&self) -> CacheStats {
+        let mut total = CacheStats::default();
+        for shard in &self.shards {
+            let store = shard.store.lock().unwrap();
+            total.resident += store.len();
+            total.hits += shard.hits.load(Ordering::Relaxed);
+            total.misses += shard.misses.load(Ordering::Relaxed);
+            total.inserts += shard.inserts.load(Ordering::Relaxed);
+            total.evictions += shard.evictions.load(Ordering::Relaxed);
+        }
+        total
     }
 
     fn len(&self) -> usize {
@@ -456,6 +495,15 @@ impl Scheduler {
     /// Deterministic-mode responses currently cached (all stripes).
     pub fn cached_responses(&self) -> usize {
         self.cache.len()
+    }
+
+    /// One consistent snapshot of every cache counter (see
+    /// [`CacheStats`]): unlike the individual accessors above — which
+    /// sum per-stripe atomics without a lock and can interleave with
+    /// writers — a snapshot reads each stripe under its store lock, so
+    /// `inserts - evictions == resident` holds exactly.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.snapshot()
     }
 
     /// Drop every cached response; returns how many were held.
@@ -747,6 +795,15 @@ struct OptimizeParams {
     /// [`ResponseKey`]: cancelled responses are never cached, and a
     /// deadline that doesn't fire changes nothing about the answer.
     deadline_ms: Option<u64>,
+    /// Dynamic-market online mode (`None` = static trial). Online
+    /// responses bypass the response cache and batch dedup entirely:
+    /// [`ResponseKey`] carries no market dimension, so an online
+    /// response must never collide with (or serve) the static response
+    /// of the same spec.
+    online: Option<OnlineParams>,
+    /// Attach the final-tick cost/runtime Pareto front to an online
+    /// response.
+    include_pareto: bool,
 }
 
 impl OptimizeParams {
@@ -995,7 +1052,7 @@ impl Service {
     /// requests that want no trace take the pre-serialized cache fast
     /// path: one LRU touch, one string clone, zero JSON work.
     fn run_optimize_wire(&self, p: OptimizeParams, cancel: Option<&CancelToken>) -> String {
-        if p.measure_mode.deterministic() && !p.include_trace {
+        if p.measure_mode.deterministic() && !p.include_trace && p.online.is_none() {
             if let Some(hit) = self.scheduler.cache_lookup_str(&p.key()) {
                 return hit;
             }
@@ -1038,6 +1095,11 @@ impl Service {
             }
             "stats" => {
                 let s = &self.scheduler;
+                // One locked snapshot backs every cache field, so the
+                // reported counters are mutually consistent
+                // (inserts - evictions == cached_responses) even under
+                // concurrent load.
+                let cache = s.cache_stats();
                 let net = &self.net;
                 // Per-reactor gauge snapshot: non-empty exactly while a
                 // readiness-driven serve is live. `idle_connections` is
@@ -1066,11 +1128,11 @@ impl Service {
                     ("ok", true.into()),
                     ("in_flight", s.in_flight().into()),
                     ("trials_run", (s.trials_run() as usize).into()),
-                    ("cache_hits", (s.cache_hits() as usize).into()),
-                    ("cache_misses", (s.cache_misses() as usize).into()),
-                    ("cache_inserts", (s.cache_inserts() as usize).into()),
-                    ("cache_evictions", (s.cache_evictions() as usize).into()),
-                    ("cached_responses", s.cached_responses().into()),
+                    ("cache_hits", (cache.hits as usize).into()),
+                    ("cache_misses", (cache.misses as usize).into()),
+                    ("cache_inserts", (cache.inserts as usize).into()),
+                    ("cache_evictions", (cache.evictions as usize).into()),
+                    ("cached_responses", cache.resident.into()),
                     ("cache_cap", s.cache.cap.into()),
                     ("cache_shards", s.cache_shards().into()),
                     ("team_threads", s.team_threads().into()),
@@ -1166,11 +1228,15 @@ impl Service {
                     // group: its cancellation must stay contained to its
                     // slot, not poison siblings sharing a representative
                     // (and a cancelled partial result must never be
-                    // what the group's healthy slots receive).
-                    match plan
-                        .as_ref()
-                        .filter(|p| p.measure_mode.deterministic() && p.deadline_ms.is_none())
-                    {
+                    // what the group's healthy slots receive). Online
+                    // slots stay solo too — their key has no market
+                    // dimension, so "identical key" does not mean
+                    // "identical response".
+                    match plan.as_ref().filter(|p| {
+                        p.measure_mode.deterministic()
+                            && p.deadline_ms.is_none()
+                            && p.online.is_none()
+                    }) {
                         Some(p) => rep_of.push(*first_seen.entry(p.key()).or_insert(i)),
                         None => rep_of.push(i),
                     }
@@ -1254,11 +1320,21 @@ impl Service {
         if !ALL_OPTIMIZERS.contains(&method.as_str()) && !PREDICTORS.contains(&method.as_str()) {
             return Err(format!("unknown method '{method}'"));
         }
-        let budget = req.get("budget").and_then(|v| v.as_usize()).unwrap_or(33);
-        let seed = req.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        // Malformed numerics (negative, fractional, non-finite, or
+        // beyond exact-integer range) are protocol errors — a request
+        // that says `budget: -5` must hear so, not silently run with
+        // the default and get its bogus value cached under it.
+        let budget = match req.get("budget") {
+            None => 33,
+            Some(v) => v.as_usize().ok_or("budget must be a positive integer")?,
+        };
         if budget == 0 || budget > 10_000 {
             return Err("budget out of range".into());
         }
+        let seed = match req.get("seed") {
+            None => 0,
+            Some(v) => v.as_usize().ok_or("seed must be a non-negative integer")? as u64,
+        };
         // 0 (or absent) = adaptive: sized at execution, after admission.
         let trial_workers = match req.get("trial_workers") {
             None => 0,
@@ -1297,6 +1373,19 @@ impl Service {
                 Some(ms)
             }
         };
+        let online = OnlineParams::parse_field(req.get("online"))?;
+        if online.is_some() && PREDICTORS.contains(&method.as_str()) {
+            return Err(format!(
+                "online mode requires search methods; '{method}' is a predictive baseline"
+            ));
+        }
+        let include_pareto = match req.get("include_pareto") {
+            None => false,
+            Some(v) => v.as_bool().ok_or("include_pareto must be a boolean")?,
+        };
+        if include_pareto && online.is_none() {
+            return Err("include_pareto requires online mode".into());
+        }
         Ok(OptimizeParams {
             workload,
             workload_id: workload_id.to_string(),
@@ -1308,6 +1397,8 @@ impl Service {
             measure_mode,
             include_trace,
             deadline_ms,
+            online,
+            include_pareto,
         })
     }
 
@@ -1316,6 +1407,22 @@ impl Service {
         let include_trace = p.include_trace;
         let (resp, trace) = self.run_optimize_data(p, cancel);
         Ok(if include_trace { with_trace(&resp, &trace) } else { resp })
+    }
+
+    /// Bump the cancellation counters for one finished trial. A
+    /// deadline is the request's own doing; every other reason
+    /// (disconnect, shutdown, revocation mid-trial) means the work's
+    /// requester or substrate went away.
+    fn count_cancelled(&self, cancelled: Option<&'static str>, pulls_saved: usize) {
+        if let Some(reason) = cancelled {
+            let counter = if reason == CancelReason::Deadline.as_str() {
+                &self.scheduler.cancelled_deadline
+            } else {
+                &self.scheduler.cancelled_disconnect
+            };
+            counter.fetch_add(1, Ordering::Relaxed);
+            self.scheduler.pulls_saved.fetch_add(pulls_saved as u64, Ordering::Relaxed);
+        }
     }
 
     /// Execute a parsed + validated optimize request (infallible past
@@ -1335,9 +1442,11 @@ impl Service {
         let _admission = self.scheduler.admit();
 
         // Deterministic modes answer repeats from the response cache —
-        // zero new measurements, byte-identical response.
+        // zero new measurements, byte-identical response. Online
+        // requests always run: the key has no market dimension, so the
+        // cache must neither serve nor store them.
         let key = p.key();
-        if p.measure_mode.deterministic() {
+        if p.measure_mode.deterministic() && p.online.is_none() {
             if let Some(hit) = self.scheduler.cache_lookup(&key) {
                 return (hit.resp, hit.trace);
             }
@@ -1376,17 +1485,61 @@ impl Service {
             trial_workers,
             measure_mode: p.measure_mode,
         };
+
+        // Online mode: run the dynamic-market loop and answer with the
+        // regret-over-time shape. Never cached (see above), so the
+        // response is built and returned directly.
+        if let Some(params) = p.online {
+            let out = run_online_trial_with(
+                &self.ds,
+                self.backend.as_ref(),
+                &spec,
+                &params,
+                cancel.as_ref(),
+            );
+            self.scheduler.trials_run.fetch_add(1, Ordering::Relaxed);
+            self.count_cancelled(out.result.cancelled, out.result.pulls_saved);
+            let revocations: Vec<Value> =
+                out.revocations.iter().map(|&t| (t as usize).into()).collect();
+            let mut fields = vec![
+                ("ok", true.into()),
+                ("workload", p.workload_id.into()),
+                ("target", p.target.name().into()),
+                ("method", spec.method.as_str().into()),
+                ("mode", Value::str("online")),
+                ("ticks", out.regret_over_time.len().into()),
+                ("value", out.result.chosen_value.into()),
+                ("regret", out.result.regret.into()),
+                ("evals", out.result.evals.into()),
+                ("search_expense", out.result.search_expense.into()),
+                ("reoptimizations", out.reoptimizations.into()),
+                ("revocations", Value::Arr(revocations)),
+            ];
+            if let Some(reason) = out.result.cancelled {
+                fields.push(("cancelled", reason.into()));
+            }
+            if p.include_pareto {
+                let front: Vec<Value> = out
+                    .pareto
+                    .iter()
+                    .map(|(label, time, cost)| {
+                        Value::obj(vec![
+                            ("config", Value::str(label)),
+                            ("time", (*time).into()),
+                            ("cost", (*cost).into()),
+                        ])
+                    })
+                    .collect();
+                fields.push(("pareto", Value::Arr(front)));
+            }
+            let resp = Value::obj(fields);
+            let trace = Value::Arr(out.regret_over_time.iter().map(|&v| Value::Num(v)).collect());
+            return (resp, trace);
+        }
+
         let r = run_trial_with(&self.ds, self.backend.as_ref(), &spec, cancel.as_ref());
         self.scheduler.trials_run.fetch_add(1, Ordering::Relaxed);
-        if let Some(reason) = r.cancelled {
-            let counter = if reason == CancelReason::Deadline.as_str() {
-                &self.scheduler.cancelled_deadline
-            } else {
-                &self.scheduler.cancelled_disconnect
-            };
-            counter.fetch_add(1, Ordering::Relaxed);
-            self.scheduler.pulls_saved.fetch_add(r.pulls_saved as u64, Ordering::Relaxed);
-        }
+        self.count_cancelled(r.cancelled, r.pulls_saved);
         let mut fields = vec![
             ("ok", true.into()),
             ("workload", p.workload_id.into()),

@@ -16,9 +16,11 @@
 //!
 //! `workloads` is optional (default: all 30). Optional knobs:
 //! `"measure_mode": "single_draw" | "mean" | "p90"` (deterministic modes
-//! run memoized ledgers) and `"trial_workers": N` (parallel arm execution
+//! run memoized ledgers), `"trial_workers": N` (parallel arm execution
 //! inside each bandit trial; results are identical at any setting —
-//! `0` sizes it adaptively as `max(1, cores / grid workers)`).
+//! `0` sizes it adaptively as `max(1, cores / grid workers)`), and
+//! `"online": true | {"ticks": T, "reoptimize_every": R}` (dynamic-market
+//! re-optimization mode: trials report final-tick regret).
 //! Methods are validated against the optimizer registry + predictive
 //! baselines at parse time so a bad spec fails before any compute is
 //! spent.
@@ -39,6 +41,63 @@ pub const MAX_TRIAL_WORKERS: usize = 64;
 /// `Instant` overflow.
 pub const MAX_DEADLINE_MS: u64 = 3_600_000;
 
+/// Upper bound on online-mode market ticks: every re-optimization epoch
+/// re-runs a full budgeted search, so this caps worst-case work per
+/// request the same way `MAX_BATCH` caps batch fan-out.
+pub const MAX_TICKS: u64 = 256;
+
+/// Knobs of the `online` re-optimization mode: a recurring workload's
+/// incumbent configuration re-scored each market tick and re-searched on
+/// a schedule (and immediately when its provider's capacity is revoked).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OnlineParams {
+    /// Logical market ticks to simulate (1..=[`MAX_TICKS`]).
+    pub ticks: u64,
+    /// Re-optimize every N ticks; 0 = only when the incumbent's
+    /// provider is revoked.
+    pub reoptimize_every: u64,
+}
+
+impl Default for OnlineParams {
+    fn default() -> Self {
+        OnlineParams { ticks: 12, reoptimize_every: 4 }
+    }
+}
+
+impl OnlineParams {
+    /// Parse an optional `"online"` field: absent or `false` → `None`,
+    /// `true` → defaults, an object → explicit knobs. Every numeric is
+    /// validated (floats, negatives, and oversize values are structured
+    /// errors, never truncation).
+    pub fn parse_field(v: Option<&Value>) -> Result<Option<OnlineParams>, String> {
+        let obj = match v {
+            None | Some(Value::Bool(false)) => return Ok(None),
+            Some(Value::Bool(true)) => return Ok(Some(OnlineParams::default())),
+            Some(o @ Value::Obj(_)) => o,
+            Some(_) => return Err("online must be a boolean or an object".into()),
+        };
+        let defaults = OnlineParams::default();
+        let ticks = match obj.get("ticks") {
+            None => defaults.ticks,
+            Some(t) => t.as_usize().ok_or("online.ticks must be a positive integer")? as u64,
+        };
+        if ticks == 0 || ticks > MAX_TICKS {
+            return Err(format!("online.ticks must be in 1..={MAX_TICKS}"));
+        }
+        let reoptimize_every = match obj.get("reoptimize_every") {
+            None => defaults.reoptimize_every,
+            Some(t) => t
+                .as_usize()
+                .ok_or("online.reoptimize_every must be a non-negative integer")?
+                as u64,
+        };
+        if reoptimize_every > MAX_TICKS {
+            return Err(format!("online.reoptimize_every must be in 0..={MAX_TICKS}"));
+        }
+        Ok(Some(OnlineParams { ticks, reoptimize_every }))
+    }
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExperimentSpec {
     pub name: String,
@@ -54,6 +113,11 @@ pub struct ExperimentSpec {
     /// the grid sizes it as `max(1, cores / grid workers)`). Results are
     /// bit-identical at any setting.
     pub trial_workers: usize,
+    /// Dynamic-market online mode: when set, every trial runs the
+    /// re-optimization loop over market ticks and its regret is the
+    /// final-tick regret (predictive baselines, which have no
+    /// re-optimization budget, are rejected at parse time).
+    pub online: Option<OnlineParams>,
 }
 
 impl ExperimentSpec {
@@ -143,6 +207,15 @@ impl ExperimentSpec {
             ));
         }
 
+        let online = OnlineParams::parse_field(v.get("online"))?;
+        if online.is_some() {
+            if let Some(m) = methods.iter().find(|m| PREDICTORS.contains(&m.as_str())) {
+                return Err(format!(
+                    "online mode requires search methods; '{m}' is a predictive baseline"
+                ));
+            }
+        }
+
         Ok(ExperimentSpec {
             name,
             methods,
@@ -152,6 +225,7 @@ impl ExperimentSpec {
             workloads: str_list("workloads")?,
             measure_mode,
             trial_workers,
+            online,
         })
     }
 
@@ -189,6 +263,34 @@ mod tests {
         assert!(s.workloads.is_empty());
         assert_eq!(s.measure_mode, MeasureMode::SingleDraw);
         assert_eq!(s.trial_workers, 1);
+        assert_eq!(s.online, None);
+    }
+
+    #[test]
+    fn online_knobs_parse_and_validate() {
+        let on = ExperimentSpec::parse(r#"{"methods":["rs"],"online":true}"#).unwrap();
+        assert_eq!(on.online, Some(OnlineParams::default()));
+        let explicit = ExperimentSpec::parse(
+            r#"{"methods":["cb-rbfopt"],"online":{"ticks":20,"reoptimize_every":0}}"#,
+        )
+        .unwrap();
+        assert_eq!(explicit.online, Some(OnlineParams { ticks: 20, reoptimize_every: 0 }));
+        let off = ExperimentSpec::parse(r#"{"methods":["rs"],"online":false}"#).unwrap();
+        assert_eq!(off.online, None);
+
+        // Malformed numerics and shapes are structured errors.
+        for bad in [
+            r#"{"methods":["rs"],"online":{"ticks":0}}"#,
+            r#"{"methods":["rs"],"online":{"ticks":-3}}"#,
+            r#"{"methods":["rs"],"online":{"ticks":1.5}}"#,
+            r#"{"methods":["rs"],"online":{"ticks":1e300}}"#,
+            r#"{"methods":["rs"],"online":{"ticks":999}}"#,
+            r#"{"methods":["rs"],"online":{"reoptimize_every":-1}}"#,
+            r#"{"methods":["rs"],"online":"yes"}"#,
+            r#"{"methods":["predict-rf"],"online":true}"#,
+        ] {
+            assert!(ExperimentSpec::parse(bad).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -111,6 +111,10 @@ pub struct LookupObjective<'a> {
     pub target: Target,
     pub mode: MeasureMode,
     seed: u64,
+    /// `(market_seed, tick)` when this source measures under a dynamic
+    /// market: cost values are scaled by the provider's effective price
+    /// at that tick. `None` (the default) is the static dataset.
+    market: Option<(u64, u64)>,
 }
 
 impl<'a> LookupObjective<'a> {
@@ -122,19 +126,42 @@ impl<'a> LookupObjective<'a> {
         seed: u64,
     ) -> Self {
         assert!(workload < ds.workload_count());
-        LookupObjective { ds, workload, target, mode, seed }
+        LookupObjective { ds, workload, target, mode, seed, market: None }
+    }
+
+    /// Measure under the dynamic market at `(market_seed, tick)`: cost
+    /// values gain the provider's price drift + spot discount at that
+    /// tick (runtimes are market-independent — a price move does not
+    /// change how fast a machine is). Still a pure function of
+    /// `(seed, cfg, pull, market_seed, tick)` — clock-free.
+    pub fn with_market(mut self, market_seed: u64, tick: u64) -> Self {
+        self.market = Some((market_seed, tick));
+        self
     }
 
     pub fn domain(&self) -> &crate::domain::Domain {
         &self.ds.domain
     }
 
+    /// Market multiplier applied to this source's values for `cfg`:
+    /// the provider's effective price when targeting cost under a
+    /// market, 1.0 otherwise.
+    fn market_factor(&self, cfg: &Config) -> f64 {
+        match self.market {
+            Some((market_seed, tick)) if self.target == Target::Cost => {
+                crate::simulator::market::effective_price(market_seed, cfg.provider, tick)
+            }
+            _ => 1.0,
+        }
+    }
+
     /// Peek at the mean value without going through a ledger (used by
     /// tests and the savings analysis to price the *returned*
-    /// configuration by its ground truth).
+    /// configuration by its ground truth). Under a market, the same
+    /// per-tick price scaling as [`EvalSource::measure`] applies.
     pub fn ground_truth(&self, cfg: &Config) -> f64 {
         let cid = self.ds.domain.config_id(cfg);
-        self.ds.mean_value(self.workload, cid, self.target)
+        self.ds.mean_value(self.workload, cid, self.target) * self.market_factor(cfg)
     }
 }
 
@@ -146,7 +173,7 @@ impl EvalSource for LookupObjective<'_> {
         self.ds.reads.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let cid = self.ds.domain.config_id(cfg);
         let ms = self.ds.measurements(self.workload, cid);
-        match self.mode {
+        let value = match self.mode {
             MeasureMode::SingleDraw => {
                 // Per-(config, pull) stream: two SplitMix64 rounds mix the
                 // config id and the pull index into the source seed, so
@@ -164,7 +191,8 @@ impl EvalSource for LookupObjective<'_> {
                 let vals: Vec<f64> = ms.iter().map(|&m| self.target.pick(m)).collect();
                 crate::util::stats::percentile(&vals, 90.0)
             }
-        }
+        };
+        value * self.market_factor(cfg)
     }
 
     fn deterministic(&self) -> bool {
@@ -663,6 +691,47 @@ mod tests {
         let b = LookupObjective::new(&ds, 3, Target::Time, MeasureMode::Mean, 999);
         assert_eq!(a.measure(&some_cfg(), 0), b.measure(&some_cfg(), 7));
         assert!(a.deterministic());
+    }
+
+    #[test]
+    fn market_scales_cost_by_effective_price_and_leaves_time_alone() {
+        let ds = ds();
+        let cost = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 9);
+        let cost_t0 = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 9)
+            .with_market(7, 0);
+        let cost_t5 = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::Mean, 9)
+            .with_market(7, 5);
+        let time = LookupObjective::new(&ds, 0, Target::Time, MeasureMode::Mean, 9);
+        let time_t5 = LookupObjective::new(&ds, 0, Target::Time, MeasureMode::Mean, 9)
+            .with_market(7, 5);
+        let mut moved = 0;
+        for cfg in ds.domain.full_grid() {
+            // Tick 0 is neutral: identical to the static dataset.
+            assert_eq!(cost_t0.measure(&cfg, 0), cost.measure(&cfg, 0));
+            let f = crate::simulator::market::effective_price(7, cfg.provider, 5);
+            assert_eq!(cost_t5.measure(&cfg, 0), cost.measure(&cfg, 0) * f);
+            assert_eq!(cost_t5.ground_truth(&cfg), cost.ground_truth(&cfg) * f);
+            // Prices move; machine speed does not.
+            assert_eq!(time_t5.measure(&cfg, 0), time.measure(&cfg, 0));
+            if f != 1.0 {
+                moved += 1;
+            }
+        }
+        assert!(moved > 0, "tick 5 must reprice at least one provider");
+    }
+
+    #[test]
+    fn market_single_draw_is_pure_in_seed_config_pull_and_tick() {
+        let ds = ds();
+        let cfg = some_cfg();
+        let a = LookupObjective::new(&ds, 2, Target::Cost, MeasureMode::SingleDraw, 5)
+            .with_market(11, 3);
+        let b = LookupObjective::new(&ds, 2, Target::Cost, MeasureMode::SingleDraw, 5)
+            .with_market(11, 3);
+        for pull in 0..4 {
+            assert_eq!(a.measure(&cfg, pull), b.measure(&cfg, pull));
+        }
+        assert!(!a.deterministic(), "single-draw stays non-memoizable under a market");
     }
 
     #[test]

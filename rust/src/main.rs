@@ -251,6 +251,7 @@ fn cmd_experiment(args: &[String]) -> i32 {
     grid.trial_workers = spec.trial_workers;
     grid.measure_mode = spec.measure_mode;
     grid.verbose = true;
+    grid.online = spec.online;
     let curves = grid.run();
 
     let ascii = figures::regret_ascii(&spec.name, &curves, &spec.targets);

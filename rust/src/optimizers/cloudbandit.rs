@@ -146,13 +146,20 @@ impl Optimizer for CloudBandit {
     }
 
     fn run(&self, ctx: &SearchContext, ledger: &mut EvalLedger, rng: &mut Rng) -> SearchResult {
-        let k = ctx.domain.provider_count();
+        // One arm per *available* provider: a revoked provider (dynamic
+        // markets) gets no arm at all, so the tournament re-pulls its
+        // budget across the survivors instead of wasting rounds on
+        // capacity that cannot host the workload. With nothing revoked
+        // this is `0..provider_count()` — the static behaviour, and the
+        // per-arm RNG forks stay keyed by provider id either way.
+        let providers = ctx.available_providers();
+        let k = providers.len();
         let b1 = b1_for_budget(ledger.remaining(), k, self.eta);
         let mut tasks: Vec<ArmTask> = ledger
             .shard(k, 0)
             .into_iter()
-            .enumerate()
-            .map(|(p, shard)| ArmTask {
+            .zip(&providers)
+            .map(|(shard, &p)| ArmTask {
                 arm: self.make_arm(ctx, p),
                 shard,
                 rng: rng.fork(p as u64),
@@ -207,11 +214,15 @@ impl Optimizer for CloudBandit {
             ledger.merge(&mut t.shard);
         }
 
-        let (best_config, best_value) =
-            tasks[winner].arm.best().expect("winner arm never pulled");
+        // A winner that never completed a pull (a budget truncated to
+        // near-nothing by cancellation/revocation) has no arm-local best;
+        // fall back to the ledger's global best instead of panicking —
+        // degradation, not a crash.
         let mut result = SearchResult::from_ledger(ledger);
-        result.best_config = best_config;
-        result.best_value = best_value;
+        if let Some((best_config, best_value)) = tasks[winner].arm.best() {
+            result.best_config = best_config;
+            result.best_value = best_value;
+        }
         result
     }
 }
@@ -319,6 +330,29 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    /// Dynamic markets: a revoked provider gets no arm, the tournament
+    /// re-pulls the whole budget across surviving providers, and the
+    /// returned config never lands on revoked capacity.
+    #[test]
+    fn revoked_providers_get_no_pulls() {
+        let ds = OfflineDataset::generate(31, 3);
+        let backend = NativeBackend;
+        for revoked in [vec![0usize], vec![2], vec![0, 2]] {
+            let ctx = SearchContext::new(&ds.domain, Target::Cost, &backend)
+                .with_revoked(revoked.clone());
+            let src = LookupObjective::new(&ds, 22, Target::Cost, MeasureMode::SingleDraw, 9);
+            let mut ledger = EvalLedger::new(&src, 22);
+            let r =
+                CloudBandit::new(Component::RbfOpt, 2.0).run(&ctx, &mut ledger, &mut Rng::new(9));
+            assert_eq!(ledger.evals(), 22, "full budget re-pulled across survivors");
+            assert!(
+                ledger.history().iter().all(|(c, _)| !revoked.contains(&c.provider)),
+                "revoked {revoked:?} must receive zero pulls"
+            );
+            assert!(!revoked.contains(&r.best_config.provider));
         }
     }
 

@@ -46,16 +46,39 @@ pub struct SearchContext<'a> {
     /// knob only trades wall-clock for cores — so it is excluded from
     /// seed derivation everywhere.
     pub arm_workers: usize,
+    /// Providers whose capacity is revoked for this search (dynamic
+    /// markets): provider-aware methods (CloudBandit) skip these arms
+    /// entirely instead of wasting pulls on capacity that cannot host
+    /// the workload. Empty (the default) = the static, all-available
+    /// world; every pre-existing behaviour is unchanged.
+    pub revoked: Vec<usize>,
 }
 
 impl<'a> SearchContext<'a> {
     pub fn new(domain: &'a Domain, target: Target, backend: &'a dyn Backend) -> SearchContext<'a> {
-        SearchContext { domain, target, backend, arm_workers: 1 }
+        SearchContext { domain, target, backend, arm_workers: 1, revoked: Vec::new() }
     }
 
     pub fn with_arm_workers(mut self, workers: usize) -> SearchContext<'a> {
         self.arm_workers = workers.max(1);
         self
+    }
+
+    /// Mark `providers` as revoked for this search.
+    pub fn with_revoked(mut self, providers: Vec<usize>) -> SearchContext<'a> {
+        self.revoked = providers;
+        self
+    }
+
+    /// Providers available to place work on, in index order. Defensive:
+    /// if every provider were marked revoked the full set is returned —
+    /// a search must always have somewhere to look (the market layer
+    /// never produces a full outage, see
+    /// `simulator::market::revoked_providers`).
+    pub fn available_providers(&self) -> Vec<usize> {
+        let all = 0..self.domain.provider_count();
+        let avail: Vec<usize> = all.clone().filter(|p| !self.revoked.contains(p)).collect();
+        if avail.is_empty() { all.collect() } else { avail }
     }
 }
 

@@ -1,0 +1,204 @@
+//! Deterministic per-provider market traces: price drift, spot
+//! discounts, and seeded revocation events.
+//!
+//! The paper's dataset is static; real multi-cloud brokering happens in
+//! a *dynamic market* (López-Pires et al., PAPERS.md) where prices move
+//! and spot capacity is yanked. This module adds the time dimension
+//! without adding a clock: market state is a pure function of
+//! `(seed, provider, tick)` hashed through the same FNV + SplitMix64
+//! idiom as [`crate::simulator::affinity`], so a trace replayed with
+//! the same seed is bit-identical — no wall time, no global state.
+//!
+//! Per `(provider, tick)`:
+//! * **price drift** — a smooth sinusoid with a provider-hashed phase
+//!   plus small per-tick jitter, normalized so tick 0 is exactly the
+//!   catalog price (`price_mult == 1.0`): the online mode's first epoch
+//!   scores identically to a static trial;
+//! * **spot discount** — with probability [`SPOT_RATE`] the provider
+//!   runs a spot window at this tick, discounting the effective price
+//!   by a hashed factor in [[`SPOT_DISCOUNT_MIN`], [`SPOT_DISCOUNT_MAX`]];
+//! * **revocation** — with probability [`REVOKE_RATE`] the provider's
+//!   capacity is revoked at this tick: an incumbent config placed there
+//!   must move, and a trial measuring there is *cancelled* (reason
+//!   `revoked`), never crashed.
+
+use crate::util::rng::splitmix64;
+
+/// Peak amplitude of the sinusoidal price drift component.
+pub const PRICE_DRIFT_AMPLITUDE: f64 = 0.18;
+/// Peak amplitude of the per-tick price jitter component.
+pub const PRICE_JITTER: f64 = 0.06;
+/// Period of the drift sinusoid, in ticks.
+pub const PRICE_PERIOD_TICKS: f64 = 16.0;
+/// Hard bounds on the price multiplier after drift + jitter.
+pub const PRICE_MULT_MIN: f64 = 0.5;
+pub const PRICE_MULT_MAX: f64 = 1.5;
+/// Probability a provider runs a spot window at a given tick (> 0).
+pub const SPOT_RATE: f64 = 0.30;
+/// Spot windows discount the effective price into this range.
+pub const SPOT_DISCOUNT_MIN: f64 = 0.4;
+pub const SPOT_DISCOUNT_MAX: f64 = 0.8;
+/// Probability a provider's capacity is revoked at a given tick (> 0).
+pub const REVOKE_RATE: f64 = 0.08;
+
+/// Market state of one provider at one logical tick.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MarketState {
+    /// Drift + jitter multiplier on the catalog price (1.0 at tick 0).
+    pub price_mult: f64,
+    /// Spot-window discount factor (1.0 outside a spot window).
+    pub spot_discount: f64,
+    /// Whether the provider's capacity is revoked at this tick.
+    pub revoked: bool,
+}
+
+impl MarketState {
+    /// Combined multiplier on the catalog price at this tick.
+    pub fn effective_price(&self) -> f64 {
+        self.price_mult * self.spot_discount
+    }
+}
+
+/// Uniform in [0, 1), pure in `(seed, provider, tick, salt)`. Same
+/// label-hashing idiom as the per-(config, pull) measurement streams in
+/// `dataset/objective.rs`: distinct odd multipliers per coordinate, one
+/// SplitMix64 finalizer.
+fn unit(seed: u64, provider: usize, tick: u64, salt: u64) -> f64 {
+    let mut s = seed
+        ^ salt
+        ^ (provider as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ tick.wrapping_mul(0xD1B5_4A32_D192_ED03);
+    splitmix64(&mut s) as f64 / u64::MAX as f64
+}
+
+const SALT_PHASE: u64 = 0x6D61_726B_6574_0001;
+const SALT_JITTER: u64 = 0x6D61_726B_6574_0002;
+const SALT_SPOT: u64 = 0x6D61_726B_6574_0003;
+const SALT_SPOT_DEPTH: u64 = 0x6D61_726B_6574_0004;
+const SALT_REVOKE: u64 = 0x6D61_726B_6574_0005;
+
+/// The market state of `provider` at logical `tick` under `seed`.
+///
+/// Tick 0 is always neutral (catalog price, no spot window, no
+/// revocation): an online run's first epoch matches the static dataset
+/// bit-for-bit, and every divergence after that is market-driven.
+pub fn market_state(seed: u64, provider: usize, tick: u64) -> MarketState {
+    if tick == 0 {
+        return MarketState { price_mult: 1.0, spot_discount: 1.0, revoked: false };
+    }
+    // Drift is anchored so the sinusoid passes through zero at tick 0;
+    // the phase only shapes where in the cycle each provider starts.
+    let phase = unit(seed, provider, 0, SALT_PHASE);
+    let angle = |t: f64| (t / PRICE_PERIOD_TICKS + phase) * std::f64::consts::TAU;
+    let drift = PRICE_DRIFT_AMPLITUDE * (angle(tick as f64).sin() - angle(0.0).sin());
+    let jitter = PRICE_JITTER * (2.0 * unit(seed, provider, tick, SALT_JITTER) - 1.0);
+    let price_mult = (1.0 + drift + jitter).clamp(PRICE_MULT_MIN, PRICE_MULT_MAX);
+
+    let spot = unit(seed, provider, tick, SALT_SPOT) < SPOT_RATE;
+    let spot_discount = if spot {
+        SPOT_DISCOUNT_MIN
+            + (SPOT_DISCOUNT_MAX - SPOT_DISCOUNT_MIN)
+                * unit(seed, provider, tick, SALT_SPOT_DEPTH)
+    } else {
+        1.0
+    };
+
+    let revoked = unit(seed, provider, tick, SALT_REVOKE) < REVOKE_RATE;
+    MarketState { price_mult, spot_discount, revoked }
+}
+
+/// Combined price multiplier of `provider` at `tick` (drift x spot).
+pub fn effective_price(seed: u64, provider: usize, tick: u64) -> f64 {
+    market_state(seed, provider, tick).effective_price()
+}
+
+/// The providers (indices in `0..providers`) revoked at `tick`, with
+/// the guarantee that at least one provider always stays available: a
+/// full-market outage would leave an online workload nowhere to run, so
+/// if every provider hashes to revoked the highest-index one is kept.
+pub fn revoked_providers(seed: u64, providers: usize, tick: u64) -> Vec<usize> {
+    let mut out: Vec<usize> =
+        (0..providers).filter(|&p| market_state(seed, p, tick).revoked).collect();
+    if out.len() == providers && providers > 0 {
+        out.pop();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tick_zero_is_neutral() {
+        for seed in [0u64, 1, 42, u64::MAX] {
+            for p in 0..3 {
+                let s = market_state(seed, p, 0);
+                assert_eq!(s, MarketState { price_mult: 1.0, spot_discount: 1.0, revoked: false });
+                assert_eq!(s.effective_price(), 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn traces_are_deterministic_and_bounded() {
+        for seed in [7u64, 60, 991] {
+            for p in 0..3 {
+                for tick in 0..200 {
+                    let a = market_state(seed, p, tick);
+                    let b = market_state(seed, p, tick);
+                    assert_eq!(a, b, "seed {seed} provider {p} tick {tick}");
+                    assert!((PRICE_MULT_MIN..=PRICE_MULT_MAX).contains(&a.price_mult));
+                    assert!(
+                        a.spot_discount == 1.0
+                            || (SPOT_DISCOUNT_MIN..=SPOT_DISCOUNT_MAX)
+                                .contains(&a.spot_discount)
+                    );
+                    assert!(a.effective_price() > 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn providers_are_decorrelated() {
+        // Some tick must separate every provider pair, else the market
+        // adds no cross-provider dynamics.
+        let differs = (1..50u64).any(|t| {
+            let s: Vec<MarketState> = (0..3).map(|p| market_state(60, p, t)).collect();
+            s[0] != s[1] && s[1] != s[2] && s[0] != s[2]
+        });
+        assert!(differs);
+    }
+
+    #[test]
+    fn spot_windows_and_revocations_occur_at_sane_rates() {
+        let mut spots = 0usize;
+        let mut revokes = 0usize;
+        let n = 3 * 400;
+        for p in 0..3 {
+            for tick in 1..=400u64 {
+                let s = market_state(60, p, tick);
+                if s.spot_discount < 1.0 {
+                    spots += 1;
+                }
+                if s.revoked {
+                    revokes += 1;
+                }
+            }
+        }
+        // Expected: 30% and 8% of 1200 draws; wide tolerance, no flake.
+        assert!((n / 6..n / 2).contains(&spots), "{spots} spot windows in {n}");
+        assert!((n / 50..n / 4).contains(&revokes), "{revokes} revocations in {n}");
+    }
+
+    #[test]
+    fn at_least_one_provider_always_survives() {
+        for seed in [0u64, 60, 12345] {
+            for tick in 0..500 {
+                assert!(revoked_providers(seed, 3, tick).len() < 3);
+            }
+        }
+        assert!(revoked_providers(9, 0, 1).is_empty());
+    }
+}

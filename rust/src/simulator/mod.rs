@@ -21,6 +21,7 @@
 //! discontinuous across categories, and cost/runtime optima disagree.
 
 pub mod machines;
+pub mod market;
 pub mod tasks;
 
 use crate::domain::{Config, Domain};

@@ -2,7 +2,8 @@
 //!
 //! A [`CancelToken`] is a cheap `Arc`-cloned handle around an atomic
 //! cancellation flag plus a *reason* (`disconnect`, `deadline`,
-//! `shutdown`). Cancellation is **cooperative**: nothing is interrupted;
+//! `shutdown`, `revoked`). Cancellation is **cooperative**: nothing is
+//! interrupted;
 //! workers poll [`CancelToken::is_cancelled`] at safe points (the ledger
 //! checks *between pulls*) so completed work stays bit-identical.
 //!
@@ -20,7 +21,12 @@
 //! the detection latency.
 //!
 //! First cancel wins: once a reason is latched it never changes, even if
-//! a disconnect races a deadline.
+//! a disconnect races a deadline. The deadline *observation* is part of
+//! that ordering: `is_cancelled` latches a due deadline under the same
+//! lock every explicit cancel serializes on, so once a poller has seen
+//! `Instant::now() >= at` the reported reason is `deadline` — a
+//! disconnect or shutdown arriving in the observation window cannot
+//! out-race the CAS and flap the reason.
 
 use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex, Weak};
@@ -36,6 +42,8 @@ pub enum CancelReason {
     Deadline,
     /// The service is draining for shutdown.
     Shutdown,
+    /// Spot capacity was revoked mid-trial (market/chaos harness).
+    Revoked,
 }
 
 impl CancelReason {
@@ -45,6 +53,7 @@ impl CancelReason {
             CancelReason::Disconnect => "disconnect",
             CancelReason::Deadline => "deadline",
             CancelReason::Shutdown => "shutdown",
+            CancelReason::Revoked => "revoked",
         }
     }
 
@@ -53,6 +62,7 @@ impl CancelReason {
             CancelReason::Disconnect => 1,
             CancelReason::Deadline => 2,
             CancelReason::Shutdown => 3,
+            CancelReason::Revoked => 4,
         }
     }
 
@@ -61,6 +71,7 @@ impl CancelReason {
             1 => Some(CancelReason::Disconnect),
             2 => Some(CancelReason::Deadline),
             3 => Some(CancelReason::Shutdown),
+            4 => Some(CancelReason::Revoked),
             _ => None,
         }
     }
@@ -91,11 +102,11 @@ impl Inner {
     }
 }
 
-/// Latch `inner` into the cancelled state with `reason`. Returns `true`
-/// if this call won the race (the reason was not already latched).
-/// The winner runs the registered hooks and recursively fires live
-/// children with the same reason.
-fn fire(inner: &Arc<Inner>, reason: CancelReason) -> bool {
+/// Latch the reason and cancelled flag. Returns `true` if this call won
+/// the race (the reason was not already latched). Runs no hooks — a
+/// caller that wins must follow up with [`notify`] after releasing any
+/// lock it holds.
+fn latch(inner: &Inner, reason: CancelReason) -> bool {
     if inner
         .reason
         .compare_exchange(REASON_NONE, reason.code(), Ordering::AcqRel, Ordering::Acquire)
@@ -104,6 +115,13 @@ fn fire(inner: &Arc<Inner>, reason: CancelReason) -> bool {
         return false;
     }
     inner.cancelled.store(true, Ordering::Release);
+    true
+}
+
+/// Winner-side follow-up to [`latch`]: run the registered hooks and
+/// recursively fire live children with the same reason. Called exactly
+/// once per token, by whichever caller won the latch, outside any lock.
+fn notify(inner: &Arc<Inner>, reason: CancelReason) {
     let hooks = std::mem::take(&mut *inner.hooks.lock().unwrap());
     for hook in &hooks {
         hook();
@@ -114,7 +132,30 @@ fn fire(inner: &Arc<Inner>, reason: CancelReason) -> bool {
             fire(&child, reason);
         }
     }
-    true
+}
+
+/// Latch `inner` into the cancelled state with `reason`. Returns `true`
+/// if this call won the race (the reason was not already latched).
+/// The winner runs the registered hooks and recursively fires live
+/// children with the same reason.
+///
+/// The latch happens under the deadline lock so an explicit cancel
+/// serializes with the deadline observation in
+/// [`CancelToken::is_cancelled`]: whichever side takes the lock first
+/// wins, and a deadline already observed due can no longer lose its
+/// reason to a disconnect racing the observer's CAS.
+fn fire(inner: &Arc<Inner>, reason: CancelReason) -> bool {
+    if inner.cancelled.load(Ordering::Acquire) {
+        return false;
+    }
+    let won = {
+        let _serialize = inner.deadline.lock().unwrap();
+        latch(inner, reason)
+    };
+    if won {
+        notify(inner, reason);
+    }
+    won
 }
 
 /// Cheap cloneable cancellation handle. See the module docs for the
@@ -156,13 +197,22 @@ impl CancelToken {
         if self.inner.cancelled.load(Ordering::Acquire) {
             return true;
         }
-        let due = match *self.inner.deadline.lock().unwrap() {
-            Some(at) => Instant::now() >= at,
-            None => false,
-        };
-        if due {
-            fire(&self.inner, CancelReason::Deadline);
-            return true;
+        {
+            let mut dl = self.inner.deadline.lock().unwrap();
+            let due = matches!(*dl, Some(at) if Instant::now() >= at);
+            if due {
+                // Latch while still holding the lock: the observation
+                // and the reason CAS are one atomic step with respect
+                // to `fire`, so the reported reason cannot flap to a
+                // disconnect/shutdown arriving in between.
+                let won = latch(&self.inner, CancelReason::Deadline);
+                *dl = None;
+                drop(dl);
+                if won {
+                    notify(&self.inner, CancelReason::Deadline);
+                }
+                return true;
+            }
         }
         // A child registered before the parent fired is reached by the
         // parent's recursive fire; this lazy check covers the window
@@ -328,5 +378,53 @@ mod tests {
         assert_eq!(CancelReason::Disconnect.as_str(), "disconnect");
         assert_eq!(CancelReason::Deadline.as_str(), "deadline");
         assert_eq!(CancelReason::Shutdown.as_str(), "shutdown");
+        assert_eq!(CancelReason::Revoked.as_str(), "revoked");
+    }
+
+    #[test]
+    fn revoked_reason_latches_like_any_other() {
+        let t = CancelToken::new();
+        assert!(t.cancel(CancelReason::Revoked));
+        assert!(t.is_cancelled());
+        assert_eq!(t.reason(), Some(CancelReason::Revoked));
+        assert!(!t.cancel(CancelReason::Disconnect));
+        assert_eq!(t.reason(), Some(CancelReason::Revoked));
+    }
+
+    #[test]
+    fn observed_deadline_beats_later_disconnect() {
+        let t = CancelToken::new().with_deadline(Instant::now() - Duration::from_millis(1));
+        assert!(t.is_cancelled());
+        // The deadline was observed due first; a disconnect arriving
+        // afterwards must lose, not flap the reported reason.
+        assert!(!t.cancel(CancelReason::Disconnect));
+        assert_eq!(t.reason(), Some(CancelReason::Deadline));
+    }
+
+    #[test]
+    fn deadline_disconnect_race_has_exactly_one_winner() {
+        // Hammer the window the latch fix closes: a due deadline being
+        // polled while a disconnect fires concurrently. Exactly one
+        // source wins, the winner matches the latched reason, and the
+        // reason a poller observes never differs from the final one.
+        for i in 0..200 {
+            let t = CancelToken::new().with_deadline(Instant::now());
+            let u = t.clone();
+            let poller = std::thread::spawn(move || {
+                while !u.is_cancelled() {
+                    std::hint::spin_loop();
+                }
+                u.reason().expect("cancelled token must expose a latched reason")
+            });
+            let disconnect_won = t.cancel(CancelReason::Disconnect);
+            let observed = poller.join().unwrap();
+            let final_reason = t.reason().unwrap();
+            assert_eq!(observed, final_reason, "iteration {i}: reason flapped");
+            assert_eq!(
+                disconnect_won,
+                final_reason == CancelReason::Disconnect,
+                "iteration {i}: winner and latched reason disagree"
+            );
+        }
     }
 }

@@ -1,0 +1,249 @@
+//! Deterministic fault injection for the serving path.
+//!
+//! A [`FaultSchedule`] scripts faults against a **logical tick** — the
+//! global measurement count of the source it wraps — so a chaos run is
+//! clock-free and replayable: the same schedule against the same trial
+//! injects the same fault at the same pull, every time. The schedule is
+//! written either with the [`at`](FaultSchedule::at) builder or in a
+//! compact grammar (one spec per CI axis):
+//!
+//! ```text
+//! "3:slow=25,7:revoke,9:panic,11:stall=50"
+//!  TICK:KIND[=ARG], comma-separated, any order
+//! ```
+//!
+//! Kinds: `slow=MS` (delayed measurement), `stall=MS` (hung source —
+//! same mechanics, longer by convention), `panic` (the measurement
+//! worker dies), `revoke` (capacity disappears: the schedule's
+//! [`CancelToken`] fires with [`CancelReason::Revoked`], so the trial
+//! winds down through ordinary cancellation — a revoked arm is a
+//! cancellation, not a crash).
+//!
+//! [`ChaosSource`] wraps any [`EvalSource`] and applies the schedule
+//! *before* delegating, never altering the measured value: everything a
+//! chaotic trial completes is bit-identical to the fault-free run, which
+//! is what the chaos suite asserts.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::dataset::objective::EvalSource;
+use crate::domain::Config;
+use crate::util::cancel::{CancelReason, CancelToken};
+
+/// One scripted fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Delay the measurement by `millis` before returning it.
+    Slow { millis: u64 },
+    /// A hung measurement source: same mechanics as [`Fault::Slow`],
+    /// kept distinct so schedules document intent (and so stall pauses
+    /// can later grow teeth without rewriting schedules).
+    Stall { millis: u64 },
+    /// The measurement worker panics mid-pull.
+    Panic,
+    /// The capacity under the trial disappears: fire the schedule's
+    /// token with [`CancelReason::Revoked`]. The pull that trips the
+    /// fault still completes — the ledger refuses the *next* one, so
+    /// the completed prefix stays bit-identical to the unrevoked run.
+    Revoke,
+}
+
+/// A fault schedule keyed by logical tick (the wrapped source's global
+/// measurement index, starting at 0).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultSchedule {
+    events: Vec<(u64, Fault)>,
+}
+
+impl FaultSchedule {
+    pub fn new() -> FaultSchedule {
+        FaultSchedule::default()
+    }
+
+    /// Script `fault` at `tick` (builder-style; first entry for a tick
+    /// wins at injection time).
+    pub fn at(mut self, tick: u64, fault: Fault) -> FaultSchedule {
+        self.events.push((tick, fault));
+        self
+    }
+
+    /// The fault scheduled at `tick`, if any.
+    pub fn get(&self, tick: u64) -> Option<Fault> {
+        self.events.iter().find(|(t, _)| *t == tick).map(|&(_, f)| f)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse the schedule grammar: comma-separated `TICK:KIND[=ARG]`
+    /// entries, e.g. `"3:slow=25,7:revoke,9:panic"`. `slow`/`stall`
+    /// take an optional millisecond argument (defaults 10/50);
+    /// `panic`/`revoke` take none. Empty entries are skipped, so a
+    /// trailing comma is harmless.
+    pub fn parse(s: &str) -> Result<FaultSchedule, String> {
+        let mut sched = FaultSchedule::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (tick, kind) = part
+                .split_once(':')
+                .ok_or_else(|| format!("fault '{part}' must be TICK:KIND[=ARG]"))?;
+            let tick: u64 = tick
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad tick in fault '{part}'"))?;
+            let (kind, arg) = match kind.split_once('=') {
+                Some((k, a)) => (k.trim(), Some(a.trim())),
+                None => (kind.trim(), None),
+            };
+            let millis = |default: u64| -> Result<u64, String> {
+                match arg {
+                    None => Ok(default),
+                    Some(a) => {
+                        a.parse().map_err(|_| format!("bad millis in fault '{part}'"))
+                    }
+                }
+            };
+            let fault = match kind {
+                "slow" => Fault::Slow { millis: millis(10)? },
+                "stall" => Fault::Stall { millis: millis(50)? },
+                "panic" | "revoke" => {
+                    if arg.is_some() {
+                        return Err(format!("'{kind}' takes no argument ('{part}')"));
+                    }
+                    if kind == "panic" {
+                        Fault::Panic
+                    } else {
+                        Fault::Revoke
+                    }
+                }
+                other => return Err(format!("unknown fault kind '{other}' ('{part}')")),
+            };
+            sched = sched.at(tick, fault);
+        }
+        Ok(sched)
+    }
+}
+
+/// An [`EvalSource`] wrapper that injects scripted faults, driven by its
+/// own atomic measurement clock. Values pass through untouched; only
+/// timing, liveness, and cancellation are perturbed.
+pub struct ChaosSource<'a> {
+    inner: &'a dyn EvalSource,
+    schedule: FaultSchedule,
+    clock: AtomicU64,
+    token: CancelToken,
+}
+
+impl<'a> ChaosSource<'a> {
+    /// Wrap `inner`, firing `token` on [`Fault::Revoke`]. Thread the
+    /// same token into the trial's ledger so a revocation cancels the
+    /// work it targets.
+    pub fn new(
+        inner: &'a dyn EvalSource,
+        schedule: FaultSchedule,
+        token: CancelToken,
+    ) -> ChaosSource<'a> {
+        ChaosSource { inner, schedule, clock: AtomicU64::new(0), token }
+    }
+
+    /// The revocation token (clone it into a ledger via `with_cancel`).
+    pub fn token(&self) -> &CancelToken {
+        &self.token
+    }
+
+    /// Measurements taken so far (the next fault tick to be consulted).
+    pub fn ticks(&self) -> u64 {
+        self.clock.load(Ordering::Acquire)
+    }
+}
+
+impl EvalSource for ChaosSource<'_> {
+    fn measure(&self, cfg: &Config, pull: u64) -> f64 {
+        let tick = self.clock.fetch_add(1, Ordering::AcqRel);
+        match self.schedule.get(tick) {
+            Some(Fault::Slow { millis }) | Some(Fault::Stall { millis }) => {
+                std::thread::sleep(Duration::from_millis(millis));
+            }
+            Some(Fault::Panic) => panic!("chaos: injected measurement panic at tick {tick}"),
+            Some(Fault::Revoke) => {
+                self.token.cancel(CancelReason::Revoked);
+            }
+            None => {}
+        }
+        self.inner.measure(cfg, pull)
+    }
+
+    fn deterministic(&self) -> bool {
+        self.inner.deterministic()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Flat;
+    impl EvalSource for Flat {
+        fn measure(&self, cfg: &Config, pull: u64) -> f64 {
+            cfg.nodes as f64 + pull as f64
+        }
+    }
+
+    fn cfg(nodes: usize) -> Config {
+        Config { provider: 0, choices: vec![0, 0], nodes }
+    }
+
+    #[test]
+    fn grammar_parses_every_kind_and_rejects_junk() {
+        let s = FaultSchedule::parse("3:slow=25, 7:revoke ,9:panic,11:stall=50,").unwrap();
+        assert_eq!(s.get(3), Some(Fault::Slow { millis: 25 }));
+        assert_eq!(s.get(7), Some(Fault::Revoke));
+        assert_eq!(s.get(9), Some(Fault::Panic));
+        assert_eq!(s.get(11), Some(Fault::Stall { millis: 50 }));
+        assert_eq!(s.get(4), None);
+        // Argument defaults.
+        let d = FaultSchedule::parse("0:slow,1:stall").unwrap();
+        assert_eq!(d.get(0), Some(Fault::Slow { millis: 10 }));
+        assert_eq!(d.get(1), Some(Fault::Stall { millis: 50 }));
+        assert!(FaultSchedule::parse("").unwrap().is_empty());
+
+        assert!(FaultSchedule::parse("slow=25").is_err());
+        assert!(FaultSchedule::parse("x:slow").is_err());
+        assert!(FaultSchedule::parse("3:melt").is_err());
+        assert!(FaultSchedule::parse("3:slow=abc").is_err());
+        assert!(FaultSchedule::parse("3:panic=5").is_err());
+        assert!(FaultSchedule::parse("3:revoke=1").is_err());
+    }
+
+    #[test]
+    fn values_pass_through_untouched_and_ticks_count_pulls() {
+        let inner = Flat;
+        let chaos =
+            ChaosSource::new(&inner, FaultSchedule::parse("1:slow=1").unwrap(), CancelToken::new());
+        for pull in 0..4u64 {
+            assert_eq!(chaos.measure(&cfg(3), pull), inner.measure(&cfg(3), pull));
+        }
+        assert_eq!(chaos.ticks(), 4);
+    }
+
+    #[test]
+    fn revoke_fires_the_token_but_completes_the_pull() {
+        let inner = Flat;
+        let token = CancelToken::new();
+        let chaos =
+            ChaosSource::new(&inner, FaultSchedule::new().at(2, Fault::Revoke), token.clone());
+        assert!(!token.is_cancelled());
+        assert_eq!(chaos.measure(&cfg(1), 0), inner.measure(&cfg(1), 0));
+        assert_eq!(chaos.measure(&cfg(1), 1), inner.measure(&cfg(1), 1));
+        assert!(!token.is_cancelled());
+        // The revoking pull still returns its true value.
+        assert_eq!(chaos.measure(&cfg(1), 2), inner.measure(&cfg(1), 2));
+        assert!(token.is_cancelled());
+        assert_eq!(token.reason(), Some(CancelReason::Revoked));
+    }
+}

@@ -26,9 +26,17 @@ impl Value {
         }
     }
 
+    /// Integer view of a number. Rejects negatives, non-integers,
+    /// non-finite values, and magnitudes above 2^53 (f64's exact-integer
+    /// ceiling): a request-supplied `1e300` must produce an error, not
+    /// silently saturate to `usize::MAX`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|n| {
-            if n >= 0.0 && n.fract() == 0.0 { Some(n as usize) } else { None }
+            if n >= 0.0 && n.fract() == 0.0 && n <= 9_007_199_254_740_992.0 {
+                Some(n as usize)
+            } else {
+                None
+            }
         })
     }
 
@@ -450,6 +458,19 @@ mod tests {
         assert_eq!(parse("-1.5e3").unwrap().as_f64(), Some(-1500.0));
         assert_eq!(parse("0").unwrap().as_usize(), Some(0));
         assert_eq!(Value::Num(1e16).to_string_compact(), "10000000000000000");
+    }
+
+    #[test]
+    fn as_usize_rejects_malformed_numerics() {
+        // Negatives, fractions, non-finite, and beyond-2^53 values all
+        // fail instead of silently truncating or saturating.
+        assert_eq!(Value::Num(-1.0).as_usize(), None);
+        assert_eq!(Value::Num(1.5).as_usize(), None);
+        assert_eq!(Value::Num(f64::NAN).as_usize(), None);
+        assert_eq!(Value::Num(f64::INFINITY).as_usize(), None);
+        assert_eq!(Value::Num(1e300).as_usize(), None);
+        assert_eq!(Value::Num(9_007_199_254_740_992.0).as_usize(), Some(9_007_199_254_740_992));
+        assert_eq!(parse("1e300").unwrap().as_usize(), None);
     }
 
     #[test]

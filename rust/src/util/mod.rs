@@ -1,10 +1,11 @@
 //! Shared substrates: deterministic RNG, statistics, JSON/CSV codecs,
-//! a work-queue thread pool, poll(2) readiness primitives and CLI
-//! parsing. These stand in for the crates (serde, rayon, clap, mio, ...)
+//! a work-queue thread pool, poll(2) readiness primitives, CLI parsing
+//! and deterministic fault injection. These stand in for the crates (serde, rayon, clap, mio, ...)
 //! that are unavailable in the offline build environment — see DESIGN.md
 //! §Substitutions.
 
 pub mod cancel;
+pub mod chaos;
 pub mod cli;
 pub mod csv;
 pub mod json;

@@ -1,0 +1,474 @@
+//! Chaos suite: scripted fault schedules against the measurement path
+//! and the dynamic-market `online` mode over real sockets.
+//!
+//! Pinned here:
+//! * a mid-trial revocation is a **cancellation, not a crash**: the
+//!   completed pull prefix is bit-identical to the unrevoked run, the
+//!   reason reads `"revoked"`, and `pulls_saved` accounts the entire
+//!   unspent budget — run twice, byte-identical both times;
+//! * first-cancel-wins under races the schedule makes deterministic:
+//!   revocation vs an expired deadline and revocation vs a disconnect,
+//!   in both orders;
+//! * an injected measurement panic is contained by `catch_unwind` and
+//!   the process worker team stays usable (the next clean trial matches
+//!   the fault-free reference exactly);
+//! * slow/stalled sources degrade gracefully: same bits, just later;
+//! * the `online` op answers byte-identically across every
+//!   transport × codec × reactor cell, repeats re-run the trial (online
+//!   responses never touch the response cache), and an expired deadline
+//!   yields a deterministic one-tick partial;
+//! * `stats` cache counters are mutually consistent under a multi-shard
+//!   write hammer: `cache_inserts - cache_evictions ==
+//!   cached_responses` in every snapshot taken mid-load.
+//!
+//! CI runs this file in the plain test job and once per transport under
+//! `SERVICE_CHAOS=1` with `SERVICE_TRANSPORT` narrowing the matrix —
+//! the same env contract as `service_suite` (helpers mirrored from
+//! there).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use multicloud::coordinator::service::{Service, Transport};
+use multicloud::dataset::objective::{EvalLedger, EvalSource, LookupObjective, MeasureMode};
+use multicloud::dataset::{OfflineDataset, Target};
+use multicloud::optimizers::{by_name, SearchContext};
+use multicloud::surrogate::NativeBackend;
+use multicloud::util::cancel::{CancelReason, CancelToken};
+use multicloud::util::chaos::{ChaosSource, Fault, FaultSchedule};
+use multicloud::util::json::parse;
+use multicloud::util::rng::Rng;
+
+fn service() -> Service {
+    let ds = Arc::new(OfflineDataset::generate(60, 3));
+    Service::new(ds, Arc::new(NativeBackend))
+}
+
+fn transports() -> Vec<Transport> {
+    let mut out = Vec::new();
+    if multicloud::util::net::epoll_supported() {
+        out.push(Transport::Epoll);
+    }
+    if multicloud::util::net::supported() {
+        out.push(Transport::Poll);
+    }
+    out.push(Transport::Threaded);
+    if let Ok(only) = std::env::var("SERVICE_TRANSPORT") {
+        if !only.is_empty() {
+            out.retain(|t| t.name() == only);
+        }
+    }
+    out
+}
+
+fn codecs() -> Vec<&'static str> {
+    let mut out = vec!["json", "binary"];
+    if let Ok(only) = std::env::var("SERVICE_CODEC") {
+        if !only.is_empty() {
+            out.retain(|c| *c == only);
+        }
+    }
+    out
+}
+
+fn reactors() -> Vec<usize> {
+    let mut out = vec![1usize, 4];
+    if let Ok(only) = std::env::var("SERVICE_REACTORS") {
+        if let Ok(n) = only.trim().parse::<usize>() {
+            out.retain(|r| *r == n);
+        }
+    }
+    out
+}
+
+struct Server {
+    svc: Arc<Service>,
+    stop: Arc<AtomicBool>,
+    port: u16,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    fn start(svc: Service) -> Server {
+        let svc = Arc::new(svc);
+        let stop = Arc::new(AtomicBool::new(false));
+        let (port, handle) =
+            Arc::clone(&svc).serve("127.0.0.1:0", Arc::clone(&stop)).expect("bind");
+        Server { svc, stop, port, handle: Some(handle) }
+    }
+
+    fn connect(&self) -> TcpStream {
+        let conn = TcpStream::connect(("127.0.0.1", self.port)).expect("connect");
+        conn.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        conn
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn roundtrip(conn: &mut TcpStream, line: &str) -> String {
+    conn.write_all(line.as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+    conn.flush().unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut out = String::new();
+    reader.read_line(&mut out).expect("read response");
+    out.trim_end().to_string()
+}
+
+fn write_binary_frame(conn: &mut TcpStream, payload: &[u8]) {
+    conn.write_all(&(payload.len() as u32).to_le_bytes()).unwrap();
+    conn.write_all(payload).unwrap();
+    conn.flush().unwrap();
+}
+
+fn read_binary_frame(conn: &mut TcpStream) -> String {
+    let mut len = [0u8; 4];
+    conn.read_exact(&mut len).expect("read frame length");
+    let mut payload = vec![0u8; u32::from_le_bytes(len) as usize];
+    conn.read_exact(&mut payload).expect("read frame payload");
+    String::from_utf8(payload).expect("response payload is JSON text")
+}
+
+fn roundtrip_codec(conn: &mut TcpStream, codec: &str, line: &str) -> String {
+    if codec == "binary" {
+        write_binary_frame(conn, line.as_bytes());
+        read_binary_frame(conn)
+    } else {
+        roundtrip(conn, line)
+    }
+}
+
+/// Run one `rs` trial against `source`, returning the ledger for
+/// inspection. Sequential (`arm_workers` 1) so panic propagation and
+/// pull order are exactly the schedule's tick order.
+fn run_rs<'a>(
+    ds: &OfflineDataset,
+    source: &'a dyn EvalSource,
+    budget: usize,
+    cancel: Option<CancelToken>,
+) -> EvalLedger<'a> {
+    let backend = NativeBackend;
+    let ctx = SearchContext::new(&ds.domain, Target::Cost, &backend);
+    let mut ledger = EvalLedger::new(source, budget);
+    if let Some(token) = cancel {
+        ledger = ledger.with_cancel(token);
+    }
+    let mut rng = Rng::new(13);
+    by_name("rs").unwrap().run(&ctx, &mut ledger, &mut rng);
+    ledger
+}
+
+/// The acceptance criterion: a revocation mid-trial terminates the arm
+/// through cancellation — completed pulls bit-identical to the
+/// unrevoked run, reason `"revoked"`, the unspent budget accounted in
+/// `pulls_saved` — and the whole chaotic run replays byte-identically.
+#[test]
+fn revoked_trial_is_a_cancellation_with_a_bit_identical_prefix() {
+    let ds = OfflineDataset::generate(60, 3);
+    let budget = 12;
+    let src = LookupObjective::new(&ds, 0, Target::Cost, MeasureMode::SingleDraw, 7);
+
+    let clean = run_rs(&ds, &src, budget, None);
+    assert_eq!(clean.cancelled(), None);
+    assert_eq!(clean.evals(), budget);
+    let clean_trace: Vec<u64> = clean.trace().iter().map(|v| v.to_bits()).collect();
+
+    let mut runs = Vec::new();
+    for _ in 0..2 {
+        let token = CancelToken::new();
+        let chaos =
+            ChaosSource::new(&src, FaultSchedule::new().at(5, Fault::Revoke), token.clone());
+        let ledger = run_rs(&ds, &chaos, budget, Some(token));
+        assert_eq!(ledger.cancelled(), Some("revoked"));
+        // The revoking pull (tick 5, the sixth measurement) completes;
+        // the ledger refuses the seventh.
+        assert_eq!(ledger.evals(), 6);
+        assert_eq!(ledger.pulls_saved(), budget - 6, "no budget leak");
+        let trace: Vec<u64> = ledger.trace().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(trace, clean_trace[..6], "completed prefix diverged from unrevoked run");
+        assert_eq!(ledger.history(), &clean.history()[..6]);
+        runs.push((trace, ledger.total_expense().to_bits()));
+    }
+    assert_eq!(runs[0], runs[1], "same schedule, same bytes");
+}
+
+/// Slow and stalled sources change latency, never results.
+#[test]
+fn slow_and_stalled_sources_degrade_gracefully() {
+    let ds = OfflineDataset::generate(60, 3);
+    let src = LookupObjective::new(&ds, 1, Target::Cost, MeasureMode::SingleDraw, 3);
+    let clean = run_rs(&ds, &src, 6, None);
+
+    let schedule = FaultSchedule::parse("1:slow=5,3:stall=10").unwrap();
+    let chaos = ChaosSource::new(&src, schedule, CancelToken::new());
+    let started = Instant::now();
+    let slow = run_rs(&ds, &chaos, 6, None);
+    assert!(started.elapsed() >= Duration::from_millis(15), "faults must actually delay");
+    assert_eq!(slow.cancelled(), None);
+    assert_eq!(slow.history(), clean.history());
+    assert_eq!(slow.total_expense().to_bits(), clean.total_expense().to_bits());
+}
+
+/// Revocation vs deadline, both orders — deterministic via the
+/// schedule. A revocation that fires before the deadline is ever
+/// observed wins even though the deadline already expired on the clock;
+/// a deadline observed between pulls before the revocation tick wins
+/// and the revocation never fires.
+#[test]
+fn revocation_under_deadline_first_cancel_wins() {
+    let ds = OfflineDataset::generate(60, 3);
+    let src = LookupObjective::new(&ds, 2, Target::Cost, MeasureMode::SingleDraw, 5);
+
+    // Revoke during the guaranteed first pull: the token latches
+    // "revoked" before any between-pull deadline check runs.
+    let token = CancelToken::new().with_deadline(Instant::now());
+    let chaos = ChaosSource::new(&src, FaultSchedule::new().at(0, Fault::Revoke), token.clone());
+    let ledger = run_rs(&ds, &chaos, 8, Some(token.clone()));
+    assert_eq!(ledger.cancelled(), Some("revoked"));
+    assert_eq!(token.reason(), Some(CancelReason::Revoked));
+    assert_eq!(ledger.evals(), 1);
+
+    // Revocation scheduled past the horizon the deadline allows: the
+    // expired deadline is observed after pull 0 and the revoke tick is
+    // never reached.
+    let token = CancelToken::new().with_deadline(Instant::now());
+    let chaos = ChaosSource::new(&src, FaultSchedule::new().at(4, Fault::Revoke), token.clone());
+    let ledger = run_rs(&ds, &chaos, 8, Some(token.clone()));
+    assert_eq!(ledger.cancelled(), Some("deadline"));
+    assert_eq!(token.reason(), Some(CancelReason::Deadline));
+    assert_eq!(ledger.evals(), 1);
+    assert_eq!(chaos.ticks(), 1, "revocation tick never reached");
+}
+
+/// Revocation vs disconnect, both orders: whichever cancels first names
+/// the reason; the loser's cancel reports `false` and changes nothing.
+#[test]
+fn revocation_under_disconnect_first_cancel_wins() {
+    let ds = OfflineDataset::generate(60, 3);
+    let src = LookupObjective::new(&ds, 3, Target::Cost, MeasureMode::SingleDraw, 9);
+
+    // Disconnect before the trial starts; the revoke at tick 0 fires
+    // during the guaranteed pull and loses.
+    let token = CancelToken::new();
+    assert!(token.cancel(CancelReason::Disconnect));
+    let chaos = ChaosSource::new(&src, FaultSchedule::new().at(0, Fault::Revoke), token.clone());
+    let ledger = run_rs(&ds, &chaos, 8, Some(token.clone()));
+    assert_eq!(ledger.cancelled(), Some("disconnect"));
+    assert_eq!(token.reason(), Some(CancelReason::Disconnect));
+    assert_eq!(ledger.evals(), 1);
+
+    // Revoke first; a disconnect arriving after the trial wound down
+    // must not rewrite history.
+    let token = CancelToken::new();
+    let chaos = ChaosSource::new(&src, FaultSchedule::new().at(2, Fault::Revoke), token.clone());
+    let ledger = run_rs(&ds, &chaos, 8, Some(token.clone()));
+    assert_eq!(ledger.cancelled(), Some("revoked"));
+    assert!(!token.cancel(CancelReason::Disconnect), "late disconnect must lose");
+    assert_eq!(token.reason(), Some(CancelReason::Revoked));
+    assert_eq!(ledger.evals(), 3);
+}
+
+/// An injected measurement panic is contained by `catch_unwind`, and
+/// the process worker team serves the next clean trial with results
+/// identical to the fault-free reference.
+#[test]
+fn injected_panic_is_contained_and_the_team_stays_usable() {
+    let ds = OfflineDataset::generate(60, 3);
+    let src = LookupObjective::new(&ds, 4, Target::Cost, MeasureMode::SingleDraw, 11);
+    let reference = run_rs(&ds, &src, 8, None);
+
+    let chaos =
+        ChaosSource::new(&src, FaultSchedule::new().at(3, Fault::Panic), CancelToken::new());
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_rs(&ds, &chaos, 8, None);
+    }));
+    assert!(outcome.is_err(), "the scripted panic must surface");
+
+    let after = run_rs(&ds, &src, 8, None);
+    assert_eq!(after.history(), reference.history(), "team unusable after contained panic");
+}
+
+/// The `online` op across the transport × codec × reactor matrix:
+/// byte-identical in every cell and on repeat, regret trace sized to
+/// the horizon, Pareto front attached on request, and the response
+/// cache never involved.
+#[test]
+fn online_mode_over_sockets_is_deterministic_across_the_matrix() {
+    let req = concat!(
+        r#"{"op":"optimize","workload":"kmeans:buzz","target":"cost","method":"cb-rbfopt","#,
+        r#""budget":8,"seed":3,"measure_mode":"mean","#,
+        r#""online":{"ticks":6,"reoptimize_every":2},"#,
+        r#""include_trace":true,"include_pareto":true}"#
+    );
+    let mut reference: Option<String> = None;
+    for codec in codecs() {
+        let mut cells: Vec<(String, Server)> = Vec::new();
+        for transport in transports() {
+            if transport == Transport::Threaded {
+                let server =
+                    Server::start(service().with_conn_workers(2).with_transport(transport));
+                cells.push((transport.name().to_string(), server));
+            } else {
+                for r in reactors() {
+                    cells.push((
+                        format!("{}/reactors={r}", transport.name()),
+                        Server::start(
+                            service()
+                                .with_conn_workers(2)
+                                .with_transport(transport)
+                                .with_reactors(r),
+                        ),
+                    ));
+                }
+            }
+        }
+        for (name, server) in &cells {
+            let mut conn = server.connect();
+            if codec == "binary" {
+                let ack = roundtrip(&mut conn, r#"{"op":"hello","codec":"binary"}"#);
+                assert!(ack.contains("\"ok\":true"), "{name}: {ack}");
+            }
+            let first = roundtrip_codec(&mut conn, codec, req);
+            assert!(first.contains("\"ok\":true"), "{name}/{codec}: {first}");
+            assert!(first.contains("\"mode\":\"online\""), "{name}/{codec}: {first}");
+            let body = parse(&first).unwrap();
+            assert_eq!(body.get("ticks").unwrap().as_usize(), Some(6), "{name}/{codec}");
+            assert_eq!(
+                body.get("trace").unwrap().as_arr().unwrap().len(),
+                6,
+                "{name}/{codec}: one regret point per tick"
+            );
+            assert!(
+                !body.get("pareto").unwrap().as_arr().unwrap().is_empty(),
+                "{name}/{codec}: Pareto front missing"
+            );
+            assert!(
+                body.get("revocations").unwrap().as_arr().is_some(),
+                "{name}/{codec}: revocation schedule missing"
+            );
+            match &reference {
+                None => reference = Some(first.clone()),
+                Some(expected) => assert_eq!(
+                    &first, expected,
+                    "{name}/{codec}: online responses must be byte-identical across cells"
+                ),
+            }
+
+            // Online is cache-excluded: the repeat re-runs the trial and
+            // still answers identically.
+            let second = roundtrip_codec(&mut conn, codec, req);
+            assert_eq!(second, first, "{name}/{codec}: online repeat diverged");
+            let stats = parse(&roundtrip_codec(&mut conn, codec, r#"{"op":"stats"}"#)).unwrap();
+            assert_eq!(stats.get("trials_run").unwrap().as_usize(), Some(2), "{name}/{codec}");
+            assert_eq!(stats.get("cache_hits").unwrap().as_usize(), Some(0), "{name}/{codec}");
+            assert_eq!(
+                stats.get("cached_responses").unwrap().as_usize(),
+                Some(0),
+                "{name}/{codec}: online responses must never be cached"
+            );
+        }
+    }
+}
+
+/// An online request under an already-expired deadline is a
+/// deterministic one-tick partial, marked `cancelled: "deadline"`.
+#[test]
+fn online_under_expired_deadline_is_a_deterministic_partial() {
+    let svc = service();
+    let req = concat!(
+        r#"{"op":"optimize","workload":"kmeans:buzz","target":"cost","method":"rs","#,
+        r#""budget":8,"seed":2,"measure_mode":"mean","deadline_ms":0,"#,
+        r#""online":{"ticks":5,"reoptimize_every":2},"include_trace":true}"#
+    );
+    let first = svc.handle(req);
+    assert!(first.contains("\"cancelled\":\"deadline\""), "{first}");
+    let body = parse(&first).unwrap();
+    assert_eq!(body.get("ticks").unwrap().as_usize(), Some(1), "stops after the scored tick");
+    assert_eq!(body.get("trace").unwrap().as_arr().unwrap().len(), 1);
+    assert_eq!(body.get("evals").unwrap().as_usize(), Some(1), "the guaranteed first pull");
+    assert_eq!(svc.handle(req), first, "expired-deadline partials must be deterministic");
+}
+
+/// Satellite: `stats` cache counters under a multi-stripe write hammer.
+/// Every snapshot taken during load must satisfy
+/// `cache_inserts - cache_evictions == cached_responses` — the
+/// lock-consistent aggregation this PR introduces (pre-fix, the sums
+/// interleaved with writers and the identity broke).
+#[test]
+fn striped_cache_stats_are_consistent_under_hammer() {
+    for shards in [2usize, 5] {
+        let svc = service().with_cache_shards(shards).with_cache_cap(12);
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            let writers: Vec<_> = (0..4u64)
+                .map(|w| {
+                    let svc = &svc;
+                    scope.spawn(move || {
+                        for i in 0..120u64 {
+                            let seed = (w * 120 + i) % 40;
+                            let req = format!(
+                                r#"{{"op":"optimize","workload":"kmeans:buzz","target":"cost","method":"rs","budget":2,"seed":{seed},"measure_mode":"mean"}}"#
+                            );
+                            let resp = svc.handle(&req);
+                            assert!(resp.contains("\"ok\":true"), "{resp}");
+                        }
+                    })
+                })
+                .collect();
+            let reader = {
+                let svc = &svc;
+                let stop = &stop;
+                scope.spawn(move || {
+                    let mut last_hits_misses = 0u64;
+                    let mut snapshots = 0u32;
+                    while !stop.load(Ordering::Acquire) {
+                        let stats = parse(&svc.handle(r#"{"op":"stats"}"#)).unwrap();
+                        let get = |k: &str| stats.get(k).unwrap().as_usize().unwrap() as u64;
+                        let (inserts, evictions) = (get("cache_inserts"), get("cache_evictions"));
+                        let resident = get("cached_responses");
+                        assert_eq!(
+                            inserts as i64 - evictions as i64,
+                            resident as i64,
+                            "shards={shards}: snapshot identity broke under load"
+                        );
+                        assert!(resident <= 12, "shards={shards}: residency above cap");
+                        let hits_misses = get("cache_hits") + get("cache_misses");
+                        assert!(
+                            hits_misses >= last_hits_misses,
+                            "shards={shards}: hit/miss counters went backwards"
+                        );
+                        last_hits_misses = hits_misses;
+                        snapshots += 1;
+                    }
+                    snapshots
+                })
+            };
+            for w in writers {
+                w.join().unwrap();
+            }
+            stop.store(true, Ordering::Release);
+            let snapshots = reader.join().unwrap();
+            assert!(snapshots > 0, "reader never snapshotted during load");
+        });
+        // The 40-key set against a 12-entry cap guarantees real
+        // evictions happened, so the identity was exercised non-trivially.
+        let end = svc.scheduler().cache_stats();
+        assert!(end.evictions > 0, "shards={shards}: hammer never evicted");
+        assert_eq!(
+            end.inserts - end.evictions,
+            end.resident as u64,
+            "shards={shards}: final snapshot inconsistent"
+        );
+    }
+}

@@ -7,8 +7,9 @@
 //!   worker pool must not delay a fresh client (the event loop's reason
 //!   to exist — the thread-pinned design fails exactly this);
 //! * protocol robustness: byte-trickled frames, mid-request
-//!   disconnects, oversized and garbage frames, over-limit batches —
-//!   per-slot errors or clean closes, never a hung worker;
+//!   disconnects, oversized and garbage frames, over-limit batches,
+//!   malformed numeric fields — per-slot errors or clean closes, never
+//!   a hung worker (and never a silently-defaulted bogus value);
 //! * runtime-tunable limits: a short `--idle-timeout` really reaps, a
 //!   small `--max-conns` defers (never drops) the over-cap client;
 //! * transcript parity: all transports answer a scripted conversation
@@ -484,6 +485,50 @@ fn garbage_and_oversized_frames() {
         let mut conn = server.connect();
         assert!(roundtrip(&mut conn, r#"{"op":"ping"}"#).contains("pong"));
     }
+}
+
+/// Request-controlled numeric fields reject malformed values (floats,
+/// negatives, non-finite, beyond-exact-integer) with one structured
+/// error each — never a silent default, a truncation, or a panic — and
+/// the service keeps serving afterwards. Validation is codec- and
+/// transport-independent, so this runs once against the dispatcher.
+#[test]
+fn malformed_numeric_fields_get_structured_errors() {
+    if !json_leg() {
+        return;
+    }
+    let svc = service();
+    let w = r#""op":"optimize","workload":"kmeans:buzz""#;
+    let bad = [
+        (format!(r#"{{{w},"budget":-5}}"#), "budget"),
+        (format!(r#"{{{w},"budget":2.5}}"#), "budget"),
+        (format!(r#"{{{w},"budget":1e300}}"#), "budget"),
+        (format!(r#"{{{w},"budget":0}}"#), "budget"),
+        (format!(r#"{{{w},"seed":-1}}"#), "seed"),
+        (format!(r#"{{{w},"seed":0.5}}"#), "seed"),
+        (format!(r#"{{{w},"seed":1e300}}"#), "seed"),
+        (format!(r#"{{{w},"deadline_ms":-3}}"#), "deadline_ms"),
+        (format!(r#"{{{w},"deadline_ms":0.25}}"#), "deadline_ms"),
+        (format!(r#"{{{w},"trial_workers":1.5}}"#), "trial_workers"),
+        (format!(r#"{{{w},"trial_workers":-2}}"#), "trial_workers"),
+        (format!(r#"{{{w},"online":{{"ticks":0}}}}"#), "online.ticks"),
+        (format!(r#"{{{w},"online":{{"ticks":-2}}}}"#), "online.ticks"),
+        (format!(r#"{{{w},"online":{{"ticks":1.5}}}}"#), "online.ticks"),
+        (format!(r#"{{{w},"online":{{"reoptimize_every":-1}}}}"#), "reoptimize_every"),
+        (format!(r#"{{{w},"online":"yes"}}"#), "online"),
+        (format!(r#"{{{w},"method":"predict-rf","online":true}}"#), "predictive baseline"),
+        (format!(r#"{{{w},"include_pareto":true}}"#), "include_pareto"),
+    ];
+    for (req, expect) in &bad {
+        let resp = svc.handle(req);
+        assert!(resp.contains("\"ok\":false"), "{req} got {resp}");
+        assert!(resp.contains("\"error\""), "{req} got {resp}");
+        assert!(resp.contains(expect), "{req}: error must name the field, got {resp}");
+    }
+    // Valid boundary values still pass, and the volley left the
+    // dispatcher healthy.
+    let ok = svc.handle(&format!(r#"{{{w},"method":"rs","budget":2,"seed":0,"deadline_ms":0}}"#));
+    assert!(ok.contains("\"ok\":true"), "{ok}");
 }
 
 /// Over-limit batches error per request; pipelined requests come back
